@@ -1,0 +1,83 @@
+//! Multicast algorithm shoot-out on the simulated Testbed1 fabric:
+//! binomial pipeline (λScale) vs binary tree (FaaSNet) vs ring (NCCL-like),
+//! with per-node completion timelines and the k-way effect.
+//!
+//! ```sh
+//! cargo run --release --example multicast_demo [model] [nodes] [blocks]
+//! ```
+
+use lambda_scale::config::NetworkConfig;
+use lambda_scale::model::ModelSpec;
+use lambda_scale::multicast::{build_plan, Algorithm, NodeId};
+use lambda_scale::pipeline::generation::{
+    generate_pipelines, pipeline_block_assignment, pipeline_ready_time,
+};
+use lambda_scale::multicast::kway::split_subgroups;
+use lambda_scale::sim::transfer::{Tier, TransferOpts};
+use lambda_scale::util::bench::Table;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args
+        .get(1)
+        .and_then(|s| ModelSpec::by_name(s))
+        .unwrap_or_else(ModelSpec::llama2_13b);
+    let n: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let b: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(16);
+
+    let net = NetworkConfig::default();
+    let part = model.partition(b);
+    let bytes = part.block_bytes();
+    let nodes: Vec<NodeId> = (0..n).collect();
+
+    println!(
+        "model {} ({:.1} GB) → {} nodes as {} blocks over {} GB/s RDMA\n",
+        model.name,
+        model.bytes as f64 / 1e9,
+        n,
+        part.n_blocks(),
+        net.rdma_gbps
+    );
+
+    let mut t = Table::new(&["algorithm", "first node done (s)", "all nodes done (s)"]);
+    for alg in [
+        Algorithm::LambdaScale { k: 1 },
+        Algorithm::FaasNet,
+        Algorithm::Nccl,
+        Algorithm::ServerlessLlm,
+    ] {
+        let plan = build_plan(alg, &nodes, 1, part.n_blocks(), Tier::Gpu, &net);
+        let log = plan.execute(&net, TransferOpts::default(), &bytes);
+        let dests = &nodes[1..];
+        let first = dests
+            .iter()
+            .filter_map(|&d| log.node_complete(d, part.n_blocks()))
+            .min()
+            .map(|t| t.as_secs())
+            .unwrap_or(f64::NAN);
+        let all = log.all_complete(&nodes, part.n_blocks()).map(|t| t.as_secs()).unwrap_or(f64::NAN);
+        t.row(&[alg.name(), format!("{first:.3}"), format!("{all:.3}")]);
+    }
+    t.print();
+
+    // Execute-while-load: when do λPipe execution pipelines come up?
+    println!("\nλPipe execution pipelines (k=2):");
+    let k = 2.min(n - 1);
+    let plan = build_plan(Algorithm::LambdaScale { k }, &nodes, k, part.n_blocks(), Tier::Gpu, &net);
+    let log = plan.execute(&net, TransferOpts::default(), &bytes);
+    let groups = split_subgroups(&nodes[k..], k);
+    let full = log.all_complete(&nodes, part.n_blocks()).unwrap();
+    for p in generate_pipelines(&groups) {
+        let asn = pipeline_block_assignment(&p, part.n_blocks(), k);
+        if let Some(ready) = pipeline_ready_time(&log, &asn) {
+            let members: Vec<String> = p.iter().map(|&(n, _)| format!("n{n}")).collect();
+            println!(
+                "  pipeline [{}] ready at {:.3}s ({:.0}% of full load {:.3}s)",
+                members.join(","),
+                ready.as_secs(),
+                100.0 * ready.as_secs() / full.as_secs(),
+                full.as_secs()
+            );
+        }
+    }
+}

@@ -1,0 +1,172 @@
+"""AOT compile path: lower every model block to HLO text + pack weights.
+
+Emits (under --out-dir, default ../artifacts):
+  hlo/block{i}_{phase}_b{batch}.hlo.txt   — one HLO module per (block, phase, batch)
+  weights/block{i}.bin                    — λScale "tensor packing": every tensor of a
+                                            block concatenated into ONE contiguous
+                                            little-endian f32 buffer (bulk-transfer unit)
+  manifest.json                           — shapes/offsets/param-order contract for Rust
+  golden.json                             — greedy-decode golden tokens for integration tests
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the Rust `xla` crate) rejects; the text parser reassigns ids.
+
+Python runs once at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_block(cfg: M.ModelConfig, block: int, batch: int, seq: int) -> str:
+    """Lower one block forward to HLO text for a fixed (batch, seq)."""
+    fn = M.make_block_fn(cfg, block, use_pallas=True)
+    specs = [jax.ShapeDtypeStruct(shape, jnp.float32)
+             for _, shape in M.block_param_specs(cfg, block)]
+    if block == 0:
+        x_spec = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    else:
+        x_spec = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.float32)
+    lo, hi = cfg.block_layer_range(block)
+    cache_shape = (hi - lo, batch, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+    kc = jax.ShapeDtypeStruct(cache_shape, jnp.float32)
+    vc = jax.ShapeDtypeStruct(cache_shape, jnp.float32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    lowered = jax.jit(fn).lower(*specs, x_spec, kc, vc, pos)
+    return to_hlo_text(lowered)
+
+
+def pack_weights(cfg: M.ModelConfig, block: int, params) -> tuple[bytes, list]:
+    """Tensor packing: concatenate all tensors of a block, record offsets."""
+    buf = bytearray()
+    tensors = []
+    for (name, shape), arr in zip(M.block_param_specs(cfg, block), params):
+        raw = np.asarray(arr, dtype="<f4").tobytes()
+        tensors.append({
+            "name": name,
+            "shape": list(shape),
+            "offset_bytes": len(buf),
+            "size_bytes": len(raw),
+        })
+        buf.extend(raw)
+    return bytes(buf), tensors
+
+
+def build(out_dir: str, preset: str, batches: list[int], seed: int,
+          golden_tokens: int, golden_batch: int) -> dict:
+    cfg = M.PRESETS[preset]
+    os.makedirs(os.path.join(out_dir, "hlo"), exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "weights"), exist_ok=True)
+
+    params = M.init_params(cfg, seed)
+    manifest = {
+        "preset": preset,
+        "seed": seed,
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "head_dim": cfg.head_dim, "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq, "n_blocks": cfg.n_blocks,
+            "prefill_len": cfg.prefill_len, "norm_eps": cfg.norm_eps,
+            "rope_theta": cfg.rope_theta,
+            "param_count": cfg.param_count(),
+        },
+        "blocks": [],
+        "artifacts": [],
+    }
+
+    for b in range(cfg.n_blocks):
+        blob, tensors = pack_weights(cfg, b, params[b])
+        wpath = f"weights/block{b}.bin"
+        with open(os.path.join(out_dir, wpath), "wb") as f:
+            f.write(blob)
+        lo, hi = cfg.block_layer_range(b)
+        manifest["blocks"].append({
+            "index": b,
+            "layer_start": lo,
+            "layer_end": hi,
+            "weights_file": wpath,
+            "weights_bytes": len(blob),
+            "cache_shape": [hi - lo, 0, cfg.max_seq, cfg.n_heads, cfg.head_dim],
+            "tensors": tensors,
+        })
+
+    for b in range(cfg.n_blocks):
+        for phase, seq in (("prefill", cfg.prefill_len), ("decode", 1)):
+            for batch in batches:
+                t0 = time.time()
+                hlo = lower_block(cfg, b, batch, seq)
+                path = f"hlo/block{b}_{phase}_b{batch}.hlo.txt"
+                with open(os.path.join(out_dir, path), "w") as f:
+                    f.write(hlo)
+                manifest["artifacts"].append({
+                    "path": path, "block": b, "phase": phase,
+                    "batch": batch, "seq": seq,
+                    "n_weight_params": len(M.block_param_specs(cfg, b)),
+                    "x_dtype": "i32" if b == 0 else "f32",
+                    "out_kind": "logits" if b == cfg.n_blocks - 1 else "hidden",
+                })
+                print(f"lowered {path} ({len(hlo)//1024} KiB, {time.time()-t0:.1f}s)",
+                      flush=True)
+
+    # Golden: greedy generation through the same pallas path the HLO encodes.
+    key = jax.random.PRNGKey(seed + 1)
+    prompt = jax.random.randint(key, (golden_batch, cfg.prefill_len), 0, cfg.vocab,
+                                dtype=jnp.int32)
+    t0 = time.time()
+    toks = M.generate(cfg, params, prompt, golden_tokens, use_pallas=True)
+    golden = {
+        "preset": preset,
+        "prompt": np.asarray(prompt).tolist(),
+        "tokens": np.asarray(toks).tolist(),
+        "n_tokens": golden_tokens,
+    }
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+    print(f"golden generated in {time.time()-t0:.1f}s: {golden['tokens']}")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", default="small", choices=sorted(M.PRESETS))
+    ap.add_argument("--batches", default="1,8",
+                    help="comma-separated batch sizes to specialize HLO for")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--golden-tokens", type=int, default=8)
+    ap.add_argument("--golden-batch", type=int, default=1)
+    args = ap.parse_args()
+    batches = [int(x) for x in args.batches.split(",")]
+    t0 = time.time()
+    build(args.out_dir, args.preset, batches, args.seed,
+          args.golden_tokens, args.golden_batch)
+    print(f"artifacts complete in {time.time()-t0:.1f}s → {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1: Pallas kernels for the transformer hot spots + pure-jnp oracle."""
+
+from .attention import attention_decode
+from .matmul import matmul
+from .rmsnorm import rmsnorm
+from . import ref
+
+__all__ = ["attention_decode", "matmul", "rmsnorm", "ref"]

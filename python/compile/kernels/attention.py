@@ -1,0 +1,97 @@
+"""Pallas flash-decode attention kernel (L1 hot spot).
+
+Hardware adaptation (paper §CUDA → TPU, see DESIGN.md §Hardware-Adaptation):
+the paper runs Llama attention on H800s where flash-attention stages KV tiles
+through shared memory per threadblock. On TPU the analogous schedule is
+expressed with a Pallas grid over (batch*heads) and an inner loop that streams
+KV cache blocks HBM→VMEM, maintaining an online-softmax accumulator in VMEM
+registers. `BlockSpec` carries the HBM↔VMEM schedule that threadblocks carry
+in CUDA.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels lower to plain HLO via the Pallas interpreter. The
+*structure* (grid, block streaming, online softmax) is the TPU design; see
+DESIGN.md / EXPERIMENTS.md for the VMEM/MXU estimates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, block_k: int, max_seq: int):
+    """One (batch, head) program: attend q (1 token) over cache[0..pos].
+
+    Ref block shapes:
+      pos_ref: [1]        (i32; last valid cache index, attend 0..pos inclusive)
+      q_ref:   [1, 1, D]
+      k_ref:   [1, S, D]  (full per-head cache buffer resident for this program)
+      v_ref:   [1, S, D]
+      o_ref:   [1, 1, D]
+    """
+    d = q_ref.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+    q = q_ref[0, :, :].astype(jnp.float32) * scale  # [1, D]
+    pos = pos_ref[0]
+    # Only visit KV blocks that contain valid entries: ceil((pos+1)/block_k).
+    n_blocks = (pos + 1 + block_k - 1) // block_k
+
+    def body(i, carry):
+        m, l, acc = carry
+        k_blk = pl.load(k_ref, (0, pl.dslice(i * block_k, block_k), slice(None)))
+        v_blk = pl.load(v_ref, (0, pl.dslice(i * block_k, block_k), slice(None)))
+        s = jnp.dot(q, k_blk.astype(jnp.float32).T)  # [1, block_k]
+        idx = i * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        s = jnp.where(idx <= pos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * alpha + jnp.dot(p, v_blk.astype(jnp.float32))
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((1, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((1, 1), jnp.float32)
+    acc0 = jnp.zeros((1, d), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_blocks, body, (m0, l0, acc0))
+    o_ref[0, :, :] = (acc / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def attention_decode(
+    q: jnp.ndarray,  # [B, H, 1, D]
+    k: jnp.ndarray,  # [B, H, S, D]
+    v: jnp.ndarray,  # [B, H, S, D]
+    pos: jnp.ndarray,  # scalar i32
+    block_k: int = 32,
+) -> jnp.ndarray:
+    """Flash-decode attention: softmax(q kᵀ/√d + causal mask) v, streamed by KV block."""
+    b, h, _, d = q.shape
+    s = k.shape[2]
+    block_k = min(block_k, s)
+    assert s % block_k == 0, f"max_seq {s} must be divisible by block_k {block_k}"
+    qf = q.reshape(b * h, 1, d)
+    kf = k.reshape(b * h, s, d)
+    vf = v.reshape(b * h, s, d)
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(1), (1,))
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, block_k=block_k, max_seq=s),
+        grid=(b * h,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1, 1, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, 1, d), q.dtype),
+        interpret=True,
+    )(pos_arr, qf, kf, vf)
+    return out.reshape(b, h, 1, d)

@@ -1,0 +1,65 @@
+"""Pallas tiled matmul kernel (L1): MXU-oriented blocked GEMM.
+
+The paper's MLP/projection GEMMs hit tensor cores on H800; the TPU analogue
+is the MXU systolic array fed from VMEM. The grid is (M/bm, N/bn, K/bk) with
+the K dimension innermost so the output tile stays resident in VMEM across
+the K reduction (revisited-output accumulation — the Pallas idiom for the
+CUDA "accumulate in registers per threadblock" pattern).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(o_ref.dtype)
+
+
+def _pick_tile(dim: int, pref: int) -> int:
+    """Largest divisor of `dim` that is <= pref (tiles must divide the shape)."""
+    t = min(pref, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(
+    x: jnp.ndarray,  # [M, K]
+    y: jnp.ndarray,  # [K, N]
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+) -> jnp.ndarray:
+    """Blocked x @ y with f32 accumulation. Tiles clamp to divisors of the shape."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm = _pick_tile(m, bm)
+    bn = _pick_tile(n, bn)
+    bk = _pick_tile(k, bk)
+
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, y)

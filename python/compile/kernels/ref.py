@@ -1,0 +1,64 @@
+"""Pure-jnp reference oracle for every Pallas kernel (L1 correctness spec).
+
+These functions define the semantics the Pallas kernels must reproduce.
+pytest (python/tests/test_kernels.py) sweeps shapes/dtypes with hypothesis and
+asserts allclose between each kernel and its oracle here.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm over the last axis: x * rsqrt(mean(x^2) + eps) * w."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(var + eps)) * w
+
+
+def matmul_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Plain matmul, f32 accumulation."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def attention_decode_ref(
+    q: jnp.ndarray,  # [B, H, 1, D]
+    k: jnp.ndarray,  # [B, H, S, D]  (full cache buffer)
+    v: jnp.ndarray,  # [B, H, S, D]
+    pos: jnp.ndarray,  # scalar i32: attend to positions 0..pos inclusive
+) -> jnp.ndarray:
+    """Single-token decode attention against a (masked) KV cache buffer."""
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    idx = jnp.arange(k.shape[2])
+    mask = idx[None, None, None, :] <= pos
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def attention_prefill_ref(
+    q: jnp.ndarray,  # [B, H, S, D]
+    k: jnp.ndarray,  # [B, H, S, D]
+    v: jnp.ndarray,  # [B, H, S, D]
+) -> jnp.ndarray:
+    """Causal self-attention over a fresh prompt of length S."""
+    d = q.shape[-1]
+    s_len = q.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    i = jnp.arange(s_len)[:, None]
+    j = jnp.arange(s_len)[None, :]
+    s = jnp.where(j <= i, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def swiglu_ref(x: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray, w3: jnp.ndarray) -> jnp.ndarray:
+    """Llama MLP: (silu(x @ w1) * (x @ w3)) @ w2."""
+    a = jnp.matmul(x, w1)
+    b = jnp.matmul(x, w3)
+    return jnp.matmul(a * (1.0 / (1.0 + jnp.exp(-a))) * b, w2)

@@ -1,0 +1,318 @@
+"""L2: block-partitioned Llama-architecture transformer in JAX.
+
+This mirrors λScale's *model block* abstraction (§4.2): the model is
+partitioned into `n_blocks` contiguous groups of layers. Each block has its
+own forward function (embedding folded into block 0, final norm + LM head
+into the last block), so λScale's Rust coordinator can run a *distributed
+execution pipeline* by chaining per-block HLO executables across nodes while
+the remaining blocks are still in flight on the multicast.
+
+Decode-path hot spots call the L1 Pallas kernels (attention_decode, matmul,
+rmsnorm); prefill attention uses the jnp reference (it runs once per request
+and is not the paper's hot spot).
+
+Everything here is build-time only: aot.py lowers each block function to HLO
+text; Python never touches the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention_decode, matmul, rmsnorm
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of the tiny Llama-style model (MHA, RoPE, SwiGLU)."""
+
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 8
+    n_heads: int = 8
+    d_ff: int = 512
+    max_seq: int = 128
+    n_blocks: int = 4
+    prefill_len: int = 16
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def layers_per_block(self) -> List[int]:
+        """Number of layers in each block (as even as possible)."""
+        base = self.n_layers // self.n_blocks
+        rem = self.n_layers % self.n_blocks
+        return [base + (1 if i < rem else 0) for i in range(self.n_blocks)]
+
+    def block_layer_range(self, block: int) -> Tuple[int, int]:
+        lpb = self.layers_per_block
+        start = sum(lpb[:block])
+        return start, start + lpb[block]
+
+    def param_count(self) -> int:
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        per_layer = 4 * d * d + 3 * d * f + 2 * d
+        return v * d + self.n_layers * per_layer + d + d * v
+
+
+PRESETS: Dict[str, ModelConfig] = {
+    # Fast unit-test config.
+    "tiny": ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=2, d_ff=64,
+                        max_seq=32, n_blocks=2, prefill_len=8),
+    # Default artifact config (~5.5M params): big enough to be a real model,
+    # small enough for Pallas-interpret HLO to compile and run quickly on CPU.
+    "small": ModelConfig(),
+    # Larger config for throughput experiments (~21M params).
+    "base": ModelConfig(vocab=1024, d_model=384, n_layers=12, n_heads=12,
+                        d_ff=1024, max_seq=256, n_blocks=4, prefill_len=32),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def _layer_param_names() -> List[str]:
+    return ["attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "w1", "w2", "w3"]
+
+
+def block_param_specs(cfg: ModelConfig, block: int) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list for one block — the AOT/manifest contract.
+
+    The order here defines both the packed .bin layout (λScale tensor packing:
+    every tensor of a block lives in one contiguous buffer) and the HLO
+    parameter order.
+    """
+    d, f = cfg.d_model, cfg.d_ff
+    specs: List[Tuple[str, Tuple[int, ...]]] = []
+    if block == 0:
+        specs.append(("tok_embed", (cfg.vocab, d)))
+    lo, hi = cfg.block_layer_range(block)
+    for layer in range(lo, hi):
+        shapes = {
+            "attn_norm": (d,), "wq": (d, d), "wk": (d, d), "wv": (d, d),
+            "wo": (d, d), "ffn_norm": (d,), "w1": (d, f), "w2": (f, d), "w3": (d, f),
+        }
+        for name in _layer_param_names():
+            specs.append((f"layer{layer}.{name}", shapes[name]))
+    if block == cfg.n_blocks - 1:
+        specs.append(("final_norm", (d,)))
+        specs.append(("lm_head", (d, cfg.vocab)))
+    return specs
+
+
+def init_block_params(cfg: ModelConfig, block: int, seed: int = 0) -> List[jnp.ndarray]:
+    """Deterministic init for one block, in block_param_specs order."""
+    params = []
+    for i, (name, shape) in enumerate(block_param_specs(cfg, block)):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), hash((block, i)) % (2**31))
+        if name.endswith("norm") or name.endswith("attn_norm") or name.endswith("ffn_norm"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            scale = 0.02 if "embed" in name or "head" in name else 1.0 / (shape[0] ** 0.5)
+            params.append(scale * jax.random.normal(key, shape, jnp.float32))
+    return params
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[List[jnp.ndarray]]:
+    return [init_block_params(cfg, b, seed) for b in range(cfg.n_blocks)]
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: [B, S, H, D], positions: [S] (absolute)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [S, half]
+    cos = jnp.cos(angles)[None, :, None, :]
+    sin = jnp.sin(angles)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float, use_pallas: bool) -> jnp.ndarray:
+    b, s, d = x.shape
+    if use_pallas:
+        return rmsnorm(x.reshape(b * s, d), w, eps=eps).reshape(b, s, d)
+    return kref.rmsnorm_ref(x, w, eps)
+
+
+def _mm(x: jnp.ndarray, w: jnp.ndarray, use_pallas: bool) -> jnp.ndarray:
+    """[B, S, d] @ [d, n] via the Pallas tiled matmul (or jnp fallback)."""
+    b, s, d = x.shape
+    if use_pallas:
+        return matmul(x.reshape(b * s, d), w).reshape(b, s, w.shape[1])
+    return jnp.matmul(x, w)
+
+
+def _attention(
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # [B, S, d] (normed)
+    wq, wk, wv, wo,
+    k_cache: jnp.ndarray,  # [B, max_seq, H, Dh]
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,  # scalar i32: first absolute position of this chunk
+    use_pallas: bool,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    q = _mm(x, wq, use_pallas).reshape(b, s, h, dh)
+    k = _mm(x, wk, use_pallas).reshape(b, s, h, dh)
+    v = _mm(x, wv, use_pallas).reshape(b, s, h, dh)
+
+    positions = pos + jnp.arange(s)
+    q = _rope(q, positions, cfg.rope_theta)
+    k = _rope(k, positions, cfg.rope_theta)
+
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, pos, 0, 0))
+
+    if s == 1:
+        # Decode: L1 Pallas flash-decode kernel over the cache buffer.
+        qt = q.transpose(0, 2, 1, 3)  # [B, H, 1, Dh]
+        kt = k_cache.transpose(0, 2, 1, 3)  # [B, H, max_seq, Dh]
+        vt = v_cache.transpose(0, 2, 1, 3)
+        if use_pallas:
+            o = attention_decode(qt, kt, vt, pos)
+        else:
+            o = kref.attention_decode_ref(qt, kt, vt, pos)
+        o = o.transpose(0, 2, 1, 3).reshape(b, 1, d)
+    else:
+        # Prefill: causal attention over the fresh chunk (pos == 0 by contract).
+        qt = q.transpose(0, 2, 1, 3)
+        kt = k.transpose(0, 2, 1, 3)
+        vt = v.transpose(0, 2, 1, 3)
+        o = kref.attention_prefill_ref(qt, kt, vt)
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+
+    return _mm(o, wo, use_pallas), k_cache, v_cache
+
+
+def _mlp(x, w1, w2, w3, use_pallas: bool) -> jnp.ndarray:
+    a = _mm(x, w1, use_pallas)
+    g = a * (1.0 / (1.0 + jnp.exp(-a)))
+    u = _mm(x, w3, use_pallas)
+    return _mm(g * u, w2, use_pallas)
+
+
+def block_forward(
+    cfg: ModelConfig,
+    block: int,
+    params: List[jnp.ndarray],
+    x: jnp.ndarray,           # block 0: tokens i32 [B, S]; else f32 [B, S, d]
+    k_cache: jnp.ndarray,     # [nl_b, B, max_seq, H, Dh]
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,         # scalar i32
+    use_pallas: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Forward one model block; returns (out, k_cache', v_cache').
+
+    `out` is hidden states [B, S, d] for inner blocks and logits
+    [B, S, vocab] for the final block.
+    """
+    names = [n for n, _ in block_param_specs(cfg, block)]
+    p = dict(zip(names, params))
+    lo, hi = cfg.block_layer_range(block)
+
+    if block == 0:
+        x = p["tok_embed"][x]  # [B, S, d]
+
+    new_k, new_v = [], []
+    for li, layer in enumerate(range(lo, hi)):
+        pre = f"layer{layer}."
+        h = _rmsnorm(x, p[pre + "attn_norm"], cfg.norm_eps, use_pallas)
+        attn, kc, vc = _attention(
+            cfg, h, p[pre + "wq"], p[pre + "wk"], p[pre + "wv"], p[pre + "wo"],
+            k_cache[li], v_cache[li], pos, use_pallas)
+        new_k.append(kc)
+        new_v.append(vc)
+        x = x + attn
+        h = _rmsnorm(x, p[pre + "ffn_norm"], cfg.norm_eps, use_pallas)
+        x = x + _mlp(h, p[pre + "w1"], p[pre + "w2"], p[pre + "w3"], use_pallas)
+
+    if block == cfg.n_blocks - 1:
+        x = _rmsnorm(x, p["final_norm"], cfg.norm_eps, use_pallas)
+        x = _mm(x, p["lm_head"], use_pallas)
+
+    return x, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def make_block_fn(cfg: ModelConfig, block: int, use_pallas: bool = True):
+    """Flat-signature closure for AOT lowering:
+    fn(*weights, x, k_cache, v_cache, pos) -> (out, k_cache', v_cache')."""
+    n_params = len(block_param_specs(cfg, block))
+
+    def fn(*args):
+        params = list(args[:n_params])
+        x, k_cache, v_cache, pos = args[n_params:]
+        return block_forward(cfg, block, params, x, k_cache, v_cache, pos, use_pallas)
+
+    return fn
+
+
+def init_caches(cfg: ModelConfig, batch: int) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Zeroed per-block KV caches: [nl_b, B, max_seq, H, Dh] each."""
+    caches = []
+    for b in range(cfg.n_blocks):
+        lo, hi = cfg.block_layer_range(b)
+        shape = (hi - lo, batch, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+        caches.append((jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)))
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Whole-model helpers (oracle / golden generation; never lowered)
+# ---------------------------------------------------------------------------
+
+def forward(
+    cfg: ModelConfig,
+    params: List[List[jnp.ndarray]],
+    x: jnp.ndarray,
+    caches: List[Tuple[jnp.ndarray, jnp.ndarray]],
+    pos: jnp.ndarray,
+    use_pallas: bool = False,
+) -> Tuple[jnp.ndarray, List[Tuple[jnp.ndarray, jnp.ndarray]]]:
+    """Chain all blocks; returns (logits, new_caches)."""
+    new_caches = []
+    out = x
+    for b in range(cfg.n_blocks):
+        kc, vc = caches[b]
+        out, kc, vc = block_forward(cfg, b, params[b], out, kc, vc, pos, use_pallas)
+        new_caches.append((kc, vc))
+    return out, new_caches
+
+
+def generate(
+    cfg: ModelConfig,
+    params: List[List[jnp.ndarray]],
+    prompt: jnp.ndarray,  # [B, P] i32
+    n_tokens: int,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Greedy decode: returns [B, n_tokens] generated token ids."""
+    batch, p_len = prompt.shape
+    caches = init_caches(cfg, batch)
+    logits, caches = forward(cfg, params, prompt, caches, jnp.int32(0), use_pallas)
+    tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+    out = [tok]
+    for step in range(1, n_tokens):
+        pos = jnp.int32(p_len + step - 1)
+        logits, caches = forward(cfg, params, tok[:, None], caches, pos, use_pallas)
+        tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

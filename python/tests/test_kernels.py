@@ -1,0 +1,161 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle (hypothesis sweeps)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention_decode, matmul, rmsnorm, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x = rand(seed, (m, k))
+    y = rand(seed + 1, (k, n))
+    np.testing.assert_allclose(matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(1, 1, 1), (128, 128, 128), (7, 13, 17), (256, 32, 64)])
+def test_matmul_shapes(shape):
+    m, k, n = shape
+    x = rand(0, (m, k))
+    y = rand(1, (k, n))
+    np.testing.assert_allclose(matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("tiles", [(8, 8, 8), (16, 32, 64), (128, 128, 128)])
+def test_matmul_tile_invariance(tiles):
+    """Result must not depend on the tile decomposition."""
+    bm, bn, bk = tiles
+    x = rand(2, (64, 64))
+    y = rand(3, (64, 64))
+    base = ref.matmul_ref(x, y)
+    np.testing.assert_allclose(matmul(x, y, bm=bm, bn=bn, bk=bk), base, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_inner_dim_mismatch_raises():
+    with pytest.raises(AssertionError):
+        matmul(rand(0, (4, 5)), rand(1, (6, 4)))
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    r=st.integers(1, 64),
+    d=st.integers(1, 256),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rmsnorm_matches_ref(r, d, seed):
+    x = rand(seed, (r, d))
+    w = rand(seed + 1, (d,))
+    np.testing.assert_allclose(rmsnorm(x, w), ref.rmsnorm_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_rmsnorm_unit_weight_normalizes():
+    x = rand(7, (4, 64)) * 10.0
+    out = np.asarray(rmsnorm(x, jnp.ones(64)))
+    rms = np.sqrt((out**2).mean(axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_rmsnorm_scale_equivariance():
+    """rmsnorm(c*x) == rmsnorm(x) for c > 0 (up to eps)."""
+    x = rand(8, (4, 32))
+    w = rand(9, (32,))
+    a = np.asarray(rmsnorm(x, w))
+    b = np.asarray(rmsnorm(x * 1000.0, w))
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# attention decode
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 4),
+    s_blocks=st.integers(1, 4),
+    d=st.sampled_from([8, 16, 32]),
+    block_k=st.sampled_from([8, 16]),
+    data=st.data(),
+)
+def test_attention_decode_matches_ref(b, h, s_blocks, d, block_k, data):
+    s = block_k * s_blocks
+    pos = data.draw(st.integers(0, s - 1))
+    q = rand(b * 7 + 1, (b, h, 1, d))
+    k = rand(h * 11 + 2, (b, h, s, d))
+    v = rand(d * 13 + 3, (b, h, s, d))
+    out = attention_decode(q, k, v, jnp.int32(pos), block_k=block_k)
+    exp = ref.attention_decode_ref(q, k, v, jnp.int32(pos))
+    np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-5)
+
+
+def test_attention_pos0_attends_only_first():
+    """With pos=0 the output is exactly v[..., 0, :]."""
+    b, h, s, d = 1, 2, 16, 8
+    q = rand(0, (b, h, 1, d))
+    k = rand(1, (b, h, s, d))
+    v = rand(2, (b, h, s, d))
+    out = attention_decode(q, k, v, jnp.int32(0), block_k=8)
+    np.testing.assert_allclose(out[:, :, 0, :], v[:, :, 0, :], rtol=1e-5, atol=1e-6)
+
+
+def test_attention_masks_future_positions():
+    """Garbage beyond pos must not change the result."""
+    b, h, s, d = 2, 2, 32, 16
+    q = rand(3, (b, h, 1, d))
+    k = rand(4, (b, h, s, d))
+    v = rand(5, (b, h, s, d))
+    pos = 10
+    out1 = attention_decode(q, k, v, jnp.int32(pos), block_k=8)
+    k2 = k.at[:, :, pos + 1 :, :].set(1e6)
+    v2 = v.at[:, :, pos + 1 :, :].set(-1e6)
+    out2 = attention_decode(q, k2, v2, jnp.int32(pos), block_k=8)
+    np.testing.assert_allclose(out1, out2, rtol=1e-5, atol=1e-6)
+
+
+def test_attention_softmax_convexity():
+    """Output lies in the convex hull of the visible v rows (per coordinate bounds)."""
+    b, h, s, d = 1, 1, 16, 8
+    q = rand(6, (b, h, 1, d))
+    k = rand(7, (b, h, s, d))
+    v = rand(8, (b, h, s, d))
+    pos = 7
+    out = np.asarray(attention_decode(q, k, v, jnp.int32(pos), block_k=8))[0, 0, 0]
+    vis = np.asarray(v)[0, 0, : pos + 1]
+    assert (out <= vis.max(axis=0) + 1e-5).all()
+    assert (out >= vis.min(axis=0) - 1e-5).all()
+
+
+def test_attention_block_k_invariance():
+    b, h, s, d = 2, 3, 32, 16
+    q = rand(9, (b, h, 1, d))
+    k = rand(10, (b, h, s, d))
+    v = rand(11, (b, h, s, d))
+    outs = [np.asarray(attention_decode(q, k, v, jnp.int32(17), block_k=bk))
+            for bk in (8, 16, 32)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=1e-5, atol=1e-6)

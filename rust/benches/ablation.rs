@@ -1,0 +1,20 @@
+//! Regenerates Figs 16–18 (k-way ablation, §5 optimization breakdown,
+//! block-count sensitivity). `cargo bench --bench ablation`
+
+use lambda_scale::figures::{multicast_figs as mfigs, throughput as tfigs};
+use lambda_scale::util::bench::measure;
+
+fn main() {
+    let ramps = measure("fig16 k-way ablation", || tfigs::fig16(4));
+    tfigs::print_ramps(
+        "Fig 16: impact of k-way transmission on throughput (13B)",
+        "paper: k=4 scales fastest, k=1 slowest (Non-Reorder)",
+        &ramps,
+    );
+
+    let f17 = measure("fig17 optimization breakdown", mfigs::fig17);
+    mfigs::print_fig17(&f17);
+
+    let f18 = measure("fig18 block-count sweep", mfigs::fig18);
+    mfigs::print_fig18(&f18);
+}

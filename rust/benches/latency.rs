@@ -1,0 +1,31 @@
+//! Regenerates Figs 12–13 (TTFT under stress load). `cargo bench --bench latency`
+
+use lambda_scale::figures::latency as figs;
+use lambda_scale::model::ModelSpec;
+use lambda_scale::util::bench::measure;
+
+fn main() {
+    for model in [ModelSpec::llama2_7b(), ModelSpec::llama2_13b(), ModelSpec::llama2_70b()] {
+        let d = measure(&format!("fig12 {}", model.name), || figs::fig12(&model, 7));
+        figs::print_ttft(
+            &format!("Fig 12: TTFT scaling via GDR — {}", model.name),
+            "paper (13B): λScale serves all 50 reqs in 1.1s — 2x / 1.4x / 8x faster than FaaSNet / NCCL / ServerlessLLM",
+            &d,
+        );
+        for (sys, speedup) in figs::p90_speedups(&d) {
+            println!("  p90 speedup vs {sys}: {speedup:.2}x");
+        }
+    }
+    for (model, k) in [
+        (ModelSpec::llama2_7b(), 6usize),
+        (ModelSpec::llama2_13b(), 6),
+        (ModelSpec::llama2_70b(), 2),
+    ] {
+        let d = measure(&format!("fig13 {}", model.name), || figs::fig13(&model, 1, k, 8));
+        figs::print_ttft(
+            &format!("Fig 13: TTFT scaling via local cache — {} (k={k})", model.name),
+            "paper (13B): λScale 1.63x faster at p90 even in ServerlessLLM's best case",
+            &d,
+        );
+    }
+}

@@ -1,0 +1,70 @@
+//! L3 hot-path microbenchmarks (the §Perf targets in DESIGN.md):
+//! schedule generation, router, batcher, simulator event loop, end-to-end
+//! serving simulation. `cargo bench --bench microbench`
+
+use lambda_scale::config::NetworkConfig;
+use lambda_scale::coordinator::{DynamicBatcher, Router};
+use lambda_scale::multicast::binomial::{binomial_plan, binomial_rounds};
+use lambda_scale::pipeline::generation::generate_pipelines;
+use lambda_scale::sim::event::EventQueue;
+use lambda_scale::sim::time::SimTime;
+use lambda_scale::sim::transfer::{Tier, TransferOpts};
+use lambda_scale::util::bench::bench;
+use std::time::Duration;
+
+fn main() {
+    let budget = Duration::from_millis(300);
+
+    println!("== schedule generation ==");
+    for n in [16usize, 256, 1024] {
+        let order: Vec<usize> = (0..16).collect();
+        bench(&format!("binomial_rounds n={n} b=16"), budget, || {
+            std::hint::black_box(binomial_rounds(n, &order));
+        });
+    }
+
+    println!("\n== pipeline generation ==");
+    let groups: Vec<Vec<usize>> = (0..4).map(|g| (g * 64..(g + 1) * 64).collect()).collect();
+    bench("generate_pipelines 4x64 nodes", budget, || {
+        std::hint::black_box(generate_pipelines(&groups));
+    });
+
+    println!("\n== router ==");
+    let mut router = Router::new();
+    for i in 0..64 {
+        router.add_instance(i, 1.0 + i as f64 * 0.1);
+    }
+    bench("route+complete over 64 instances", budget, || {
+        let id = router.route().unwrap();
+        router.complete(id);
+    });
+
+    println!("\n== batcher ==");
+    let mut b: DynamicBatcher<u64> = DynamicBatcher::new(16, SimTime::from_millis(10.0));
+    let mut i = 0u64;
+    bench("push+admit cycle", budget, || {
+        for _ in 0..16 {
+            b.push(i, SimTime(i));
+            i += 1;
+        }
+        std::hint::black_box(b.admit(16));
+    });
+
+    println!("\n== event queue ==");
+    bench("event queue push+pop 1k events", budget, || {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        for i in 0..1000u32 {
+            q.push(SimTime((i as u64 * 2_654_435_761) % 1_000_000), i);
+        }
+        while q.pop().is_some() {}
+    });
+
+    println!("\n== transfer sim end-to-end ==");
+    let net = NetworkConfig::default();
+    let nodes: Vec<usize> = (0..12).collect();
+    let plan = binomial_plan(&nodes, 16, Tier::Gpu);
+    let bytes = vec![100_000_000u64; 16];
+    bench("binomial 12-node 16-block multicast sim", budget, || {
+        std::hint::black_box(plan.execute(&net, TransferOpts::default(), &bytes));
+    });
+}

@@ -1,0 +1,11 @@
+//! Regenerates Figs 2–3 (§2.3 motivation studies). `cargo bench --bench motivation`
+
+use lambda_scale::figures::motivation;
+use lambda_scale::util::bench::measure;
+
+fn main() {
+    let f2 = measure("fig02 keep-alive study", || motivation::fig02(1));
+    motivation::print_fig02(&f2);
+    let f3 = measure("fig03 load-type study", || motivation::fig03(2));
+    motivation::print_fig03(&f3);
+}

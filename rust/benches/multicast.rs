@@ -1,0 +1,26 @@
+//! Regenerates Figs 7–8 (multicast latency) plus schedule-generation
+//! microbenchmarks. `cargo bench --bench multicast`
+
+use lambda_scale::figures::multicast_figs as figs;
+use lambda_scale::multicast::binomial::binomial_rounds;
+use lambda_scale::multicast::kway::chunk_orders;
+use lambda_scale::util::bench::{bench, measure};
+use std::time::Duration;
+
+fn main() {
+    let f7 = measure("fig07 multicast latency sweep", figs::fig07);
+    figs::print_fig07(&f7);
+    let f8 = measure("fig08 block arrival latency", figs::fig08);
+    figs::print_fig08(&f8);
+
+    println!("\n== microbenchmarks: schedule generation (L3 hot path) ==");
+    for n in [8usize, 64, 256, 1024] {
+        let order: Vec<usize> = (0..16).collect();
+        bench(&format!("binomial_rounds n={n} b=16"), Duration::from_millis(200), || {
+            std::hint::black_box(binomial_rounds(n, &order));
+        });
+    }
+    bench("kway chunk_orders b=64 k=4", Duration::from_millis(100), || {
+        std::hint::black_box(chunk_orders(64, 4));
+    });
+}

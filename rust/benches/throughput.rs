@@ -1,0 +1,41 @@
+//! Regenerates Figs 9–11 (throughput scaling under stress load).
+//! `cargo bench --bench throughput`
+
+use lambda_scale::figures::throughput as figs;
+use lambda_scale::model::ModelSpec;
+use lambda_scale::util::bench::measure;
+
+fn main() {
+    for model in [ModelSpec::llama2_7b(), ModelSpec::llama2_13b(), ModelSpec::llama2_70b()] {
+        let ramps = measure(&format!("fig09 {}", model.name), || figs::fig09(&model, 1));
+        figs::print_ramps(
+            &format!("Fig 9: throughput scaling via GDR — {}", model.name),
+            "paper: λScale halves ramp-up as k doubles; ServerlessLLM-SSD ramps far slower",
+            &ramps,
+        );
+        figs::print_series(&ramps, 8.0);
+    }
+    for (model, k) in [
+        (ModelSpec::llama2_7b(), 8usize),
+        (ModelSpec::llama2_13b(), 8),
+        (ModelSpec::llama2_70b(), 2),
+    ] {
+        // Paper fig 10 setup: R GPU-resident replicas + k host-memory nodes.
+        let k_eff = k.min(6);
+        let ramps =
+            measure(&format!("fig10 {}", model.name), || figs::fig10(&model, 1, k_eff, 2));
+        figs::print_ramps(
+            &format!("Fig 10: throughput scaling via local cache — {} (k={k_eff})", model.name),
+            "paper: λScale scales 2x–4x faster than ServerlessLLM from host memory",
+            &ramps,
+        );
+    }
+    for model in [ModelSpec::llama2_7b(), ModelSpec::llama2_13b(), ModelSpec::llama2_70b()] {
+        let ramps = measure(&format!("fig11 {}", model.name), || figs::fig11(&model, 3));
+        figs::print_ramps(
+            &format!("Fig 11: cold-start throughput — {}", model.name),
+            "paper: λScale outperforms ServerlessLLM 3.75x–11.4x on cold starts",
+            &ramps,
+        );
+    }
+}

@@ -1,0 +1,23 @@
+//! Regenerates Figs 14–15 (BurstGPT-like 30-minute trace: GPU cost +
+//! TTFT). `cargo bench --bench trace`
+
+use lambda_scale::figures::trace_figs as figs;
+use lambda_scale::model::ModelSpec;
+use lambda_scale::util::bench::measure;
+
+fn main() {
+    for model in [ModelSpec::llama2_7b(), ModelSpec::llama2_13b()] {
+        let f = measure(&format!("fig14/15 trace {}", model.name), || {
+            figs::fig14_15(&model, 21)
+        });
+        figs::print_fig14(&f);
+        figs::print_fig15(&f);
+        // GPU allocation timeline (Fig 14 middle rows).
+        println!("\nGPU allocation timeline (30 s buckets):");
+        for r in &f.runs {
+            let pts: Vec<String> =
+                r.gpu_series.iter().step_by(4).map(|&(t, g)| format!("{:.0}:{g}", t / 60.0)).collect();
+            println!("  {:<20} {}", r.system, pts.join(" "));
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! Typed configuration with testbed presets (paper Table 1) and a minimal
+//! TOML-subset loader (serde/toml are unavailable offline).
+//!
+//! The loader accepts the practical subset used by our config files:
+//! `[section]` headers, `key = value` with integer / float / bool / string
+//! values, `#` comments.
+
+mod parse;
+
+pub use parse::{parse_toml, TomlError, TomlValue};
+
+use std::collections::BTreeMap;
+
+/// Network fabric parameters. Defaults = paper Testbed1 (400 Gb/s IB, GDR).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NetworkConfig {
+    /// Inter-node RDMA link bandwidth, GB/s per direction (400 Gb/s ≈ 50 GB/s).
+    pub rdma_gbps: f64,
+    /// Intra-node NVLink bandwidth, GB/s (order of magnitude above RDMA).
+    pub nvlink_gbps: f64,
+    /// Host memory → GPU bandwidth, GB/s (paper: 64 GB/s).
+    pub hostmem_gbps: f64,
+    /// SSD → GPU bandwidth, GB/s (paper: 5 GB/s).
+    pub ssd_gbps: f64,
+    /// Fixed per-transfer RDMA work-request setup latency (seconds).
+    pub rdma_setup_s: f64,
+    /// Per-block management cost (RDMA request processing, registration,
+    /// block bookkeeping) per transfer — the overhead that makes very
+    /// fine-grained partitioning counterproductive (Fig 18's elbow).
+    pub per_block_mgmt_s: f64,
+    /// Per-block bookkeeping overhead without tensor packing, per tensor (s).
+    pub per_tensor_overhead_s: f64,
+    /// GPU memory allocation cost per block when pre-allocation is off (s).
+    pub alloc_overhead_s: f64,
+    /// NCCL-style communicator (re)initialization cost (s) — the paper
+    /// observes "up to hundreds of milliseconds" (NCCL issue #534).
+    pub nccl_group_init_s: f64,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        NetworkConfig {
+            rdma_gbps: 50.0,
+            nvlink_gbps: 400.0,
+            hostmem_gbps: 64.0,
+            ssd_gbps: 5.0,
+            rdma_setup_s: 15e-6,
+            per_block_mgmt_s: 4e-3,
+            per_tensor_overhead_s: 40e-6,
+            alloc_overhead_s: 3e-3,
+            nccl_group_init_s: 0.25,
+        }
+    }
+}
+
+/// Per-node hardware. Defaults = Testbed1 nodes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeConfig {
+    pub gpus_per_node: usize,
+    /// HBM per GPU (GB). H800: 80 GB.
+    pub gpu_mem_gb: f64,
+    /// Host DRAM (GB). Paper: 1 TB.
+    pub host_mem_gb: f64,
+    /// Local NVMe capacity (GB). Paper: 4 TB.
+    pub ssd_gb: f64,
+}
+
+impl Default for NodeConfig {
+    fn default() -> Self {
+        NodeConfig { gpus_per_node: 1, gpu_mem_gb: 80.0, host_mem_gb: 1024.0, ssd_gb: 4096.0 }
+    }
+}
+
+/// Inference-speed model for the simulated GPU (calibrated against the
+/// paper's H800 Llama-2 numbers; see DESIGN.md §Hardware substitutions).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ComputeConfig {
+    /// Effective GPU compute throughput for decode GEMMs, TFLOP/s.
+    pub gpu_tflops: f64,
+    /// GPU HBM bandwidth, GB/s (H800 ≈ 3350) — decode is weight-read bound.
+    pub hbm_gbps: f64,
+    /// Per-layer fixed kernel-launch/runtime overhead (s).
+    pub layer_overhead_s: f64,
+    /// Cross-node activation hop latency during pipelined execution (s):
+    /// hidden-state transfer + RDMA setup.
+    pub pipeline_hop_s: f64,
+    /// Prefill tokens processed per request on average (for cost model).
+    pub avg_prompt_tokens: f64,
+    /// Decode tokens generated per request on average.
+    pub avg_output_tokens: f64,
+}
+
+impl Default for ComputeConfig {
+    fn default() -> Self {
+        ComputeConfig {
+            gpu_tflops: 300.0,
+            hbm_gbps: 3350.0,
+            layer_overhead_s: 8e-6,
+            pipeline_hop_s: 30e-6,
+            avg_prompt_tokens: 128.0,
+            avg_output_tokens: 64.0,
+        }
+    }
+}
+
+/// Top-level cluster configuration.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct ClusterConfig {
+    pub n_nodes: usize,
+    pub node: NodeConfig,
+    pub network: NetworkConfig,
+    pub compute: ComputeConfig,
+}
+
+impl ClusterConfig {
+    /// Paper Testbed1: 12 nodes × 1 H800, 400 Gb/s IB.
+    pub fn testbed1() -> Self {
+        ClusterConfig { n_nodes: 12, ..Default::default() }
+    }
+
+    /// Paper Testbed2: 6 nodes × 4 H800, 400 Gb/s IB.
+    pub fn testbed2() -> Self {
+        ClusterConfig {
+            n_nodes: 6,
+            node: NodeConfig { gpus_per_node: 4, ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    pub fn with_nodes(mut self, n: usize) -> Self {
+        self.n_nodes = n;
+        self
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.n_nodes * self.node.gpus_per_node
+    }
+
+    /// Build from a parsed TOML-subset document, starting from defaults.
+    pub fn from_toml(doc: &BTreeMap<String, BTreeMap<String, TomlValue>>) -> Result<Self, String> {
+        let mut cfg = ClusterConfig::testbed1();
+        let getf = |sec: &BTreeMap<String, TomlValue>, k: &str, cur: f64| -> Result<f64, String> {
+            match sec.get(k) {
+                None => Ok(cur),
+                Some(TomlValue::Float(f)) => Ok(*f),
+                Some(TomlValue::Int(i)) => Ok(*i as f64),
+                Some(v) => Err(format!("key `{k}` must be numeric, got {v:?}")),
+            }
+        };
+        if let Some(sec) = doc.get("cluster") {
+            if let Some(v) = sec.get("n_nodes") {
+                cfg.n_nodes = v.as_int().ok_or("n_nodes must be int")? as usize;
+            }
+            if let Some(v) = sec.get("gpus_per_node") {
+                cfg.node.gpus_per_node = v.as_int().ok_or("gpus_per_node must be int")? as usize;
+            }
+            cfg.node.gpu_mem_gb = getf(sec, "gpu_mem_gb", cfg.node.gpu_mem_gb)?;
+            cfg.node.host_mem_gb = getf(sec, "host_mem_gb", cfg.node.host_mem_gb)?;
+            cfg.node.ssd_gb = getf(sec, "ssd_gb", cfg.node.ssd_gb)?;
+        }
+        if let Some(sec) = doc.get("network") {
+            cfg.network.rdma_gbps = getf(sec, "rdma_gbps", cfg.network.rdma_gbps)?;
+            cfg.network.nvlink_gbps = getf(sec, "nvlink_gbps", cfg.network.nvlink_gbps)?;
+            cfg.network.hostmem_gbps = getf(sec, "hostmem_gbps", cfg.network.hostmem_gbps)?;
+            cfg.network.ssd_gbps = getf(sec, "ssd_gbps", cfg.network.ssd_gbps)?;
+            cfg.network.rdma_setup_s = getf(sec, "rdma_setup_s", cfg.network.rdma_setup_s)?;
+            cfg.network.nccl_group_init_s =
+                getf(sec, "nccl_group_init_s", cfg.network.nccl_group_init_s)?;
+        }
+        if let Some(sec) = doc.get("compute") {
+            cfg.compute.gpu_tflops = getf(sec, "gpu_tflops", cfg.compute.gpu_tflops)?;
+            cfg.compute.layer_overhead_s = getf(sec, "layer_overhead_s", cfg.compute.layer_overhead_s)?;
+            cfg.compute.pipeline_hop_s = getf(sec, "pipeline_hop_s", cfg.compute.pipeline_hop_s)?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        let doc = parse_toml(&text).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_toml(&doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_table1() {
+        let t1 = ClusterConfig::testbed1();
+        assert_eq!(t1.n_nodes, 12);
+        assert_eq!(t1.node.gpus_per_node, 1);
+        assert_eq!(t1.total_gpus(), 12);
+        let t2 = ClusterConfig::testbed2();
+        assert_eq!(t2.n_nodes, 6);
+        assert_eq!(t2.total_gpus(), 24);
+        // Shared Table-1 constants.
+        for t in [&t1, &t2] {
+            assert_eq!(t.network.ssd_gbps, 5.0);
+            assert_eq!(t.network.hostmem_gbps, 64.0);
+            assert_eq!(t.node.host_mem_gb, 1024.0);
+        }
+    }
+
+    #[test]
+    fn from_toml_overrides() {
+        let doc = parse_toml(
+            "# test\n[cluster]\nn_nodes = 8\ngpus_per_node = 2\n[network]\nrdma_gbps = 25.0\n",
+        )
+        .unwrap();
+        let cfg = ClusterConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.n_nodes, 8);
+        assert_eq!(cfg.node.gpus_per_node, 2);
+        assert_eq!(cfg.network.rdma_gbps, 25.0);
+        // Untouched fields keep defaults.
+        assert_eq!(cfg.network.ssd_gbps, 5.0);
+    }
+
+    #[test]
+    fn from_toml_rejects_bad_types() {
+        let doc = parse_toml("[network]\nrdma_gbps = \"fast\"\n").unwrap();
+        assert!(ClusterConfig::from_toml(&doc).is_err());
+    }
+}

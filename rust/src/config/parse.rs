@@ -1,0 +1,150 @@
+//! Minimal TOML-subset parser: `[section]`, `key = value`, `#` comments.
+//! Values: integers, floats, booleans, quoted strings.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl TomlValue {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+/// Parse the TOML subset. Keys before any `[section]` land in section `""`.
+pub fn parse_toml(text: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = match raw.find('#') {
+            // `#` inside a quoted string is not a comment; our subset only
+            // allows strings fully quoted, so check quote parity first.
+            Some(h) if raw[..h].matches('"').count() % 2 == 0 => &raw[..h],
+            _ => raw,
+        }
+        .trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| TomlError { line: lineno, msg: "unterminated section".into() })?;
+            section = name.trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| TomlError { line: lineno, msg: "expected `key = value`".into() })?;
+        let key = line[..eq].trim().to_string();
+        let val = line[eq + 1..].trim();
+        if key.is_empty() || val.is_empty() {
+            return Err(TomlError { line: lineno, msg: "empty key or value".into() });
+        }
+        let parsed = parse_value(val)
+            .ok_or_else(|| TomlError { line: lineno, msg: format!("bad value `{val}`") })?;
+        doc.entry(section.clone()).or_default().insert(key, parsed);
+    }
+    Ok(doc)
+}
+
+fn parse_value(v: &str) -> Option<TomlValue> {
+    if v == "true" {
+        return Some(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Some(TomlValue::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('"') {
+        return inner.strip_suffix('"').map(|s| TomlValue::Str(s.to_string()));
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Some(TomlValue::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Some(TomlValue::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse_toml(
+            "top = 1\n[a]\nx = 2\ny = 3.5\nz = true\ns = \"hi\" # comment\n[b]\nx = -4\n",
+        )
+        .unwrap();
+        assert_eq!(doc[""]["top"], TomlValue::Int(1));
+        assert_eq!(doc["a"]["x"], TomlValue::Int(2));
+        assert_eq!(doc["a"]["y"], TomlValue::Float(3.5));
+        assert_eq!(doc["a"]["z"], TomlValue::Bool(true));
+        assert_eq!(doc["a"]["s"], TomlValue::Str("hi".into()));
+        assert_eq!(doc["b"]["x"], TomlValue::Int(-4));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let doc = parse_toml("# full comment\n\n[s]\nk = 1 # trailing\n").unwrap();
+        assert_eq!(doc["s"]["k"], TomlValue::Int(1));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse_toml("[ok]\nk = 1\nbroken line\n").unwrap_err();
+        assert_eq!(e.line, 3);
+        let e = parse_toml("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = parse_toml("[s]\nk = \"a#b\"\n").unwrap();
+        assert_eq!(doc["s"]["k"], TomlValue::Str("a#b".into()));
+    }
+}

@@ -1,0 +1,128 @@
+//! Reactive autoscaling policy: decide how many serving instances a model
+//! needs from observed arrivals and backlog, and when idle instances may be
+//! reclaimed (keep-alive).
+//!
+//! The policy itself is system-agnostic — λScale and the baselines differ
+//! in how *fast* a scaling decision materializes (multicast vs SSD load),
+//! which is exactly what Fig 14 measures.
+
+use crate::sim::time::SimTime;
+use std::collections::VecDeque;
+
+/// Sliding-window reactive autoscaler.
+#[derive(Clone, Debug)]
+pub struct Autoscaler {
+    /// Arrival-rate estimation window.
+    pub window: SimTime,
+    /// Demand a single instance can absorb, requests/s.
+    pub instance_rps: f64,
+    /// Capacity headroom multiplier (>1 over-provisions slightly).
+    pub headroom: f64,
+    /// Requests queued per instance that triggers an immediate scale-out.
+    pub backlog_per_instance: usize,
+    /// Idle time before an instance is reclaimed.
+    pub keep_alive: SimTime,
+    arrivals: VecDeque<SimTime>,
+}
+
+impl Autoscaler {
+    pub fn new(instance_rps: f64, keep_alive: SimTime) -> Self {
+        Autoscaler {
+            window: SimTime::from_secs(10.0),
+            instance_rps,
+            headroom: 1.2,
+            backlog_per_instance: 4,
+            keep_alive,
+            arrivals: VecDeque::new(),
+        }
+    }
+
+    /// Record an arrival.
+    pub fn observe(&mut self, now: SimTime) {
+        self.arrivals.push_back(now);
+        self.gc(now);
+    }
+
+    fn gc(&mut self, now: SimTime) {
+        while let Some(&front) = self.arrivals.front() {
+            if now.saturating_sub(front) > self.window {
+                self.arrivals.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Estimated arrival rate over the window (req/s).
+    pub fn rate(&mut self, now: SimTime) -> f64 {
+        self.gc(now);
+        let span = self.window.as_secs().max(1e-9);
+        self.arrivals.len() as f64 / span
+    }
+
+    /// Desired instance count given current backlog.
+    pub fn desired(&mut self, now: SimTime, queued: usize, current: usize) -> usize {
+        let by_rate = (self.rate(now) * self.headroom / self.instance_rps).ceil() as usize;
+        let by_backlog = if queued > 0 {
+            current.max(1) + queued / self.backlog_per_instance.max(1)
+        } else {
+            0
+        };
+        by_rate.max(by_backlog).max(usize::from(queued > 0 || !self.arrivals.is_empty()))
+    }
+
+    /// Should an instance idle since `idle_since` be reclaimed at `now`?
+    pub fn should_reclaim(&self, now: SimTime, idle_since: SimTime) -> bool {
+        now.saturating_sub(idle_since) >= self.keep_alive
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: f64) -> SimTime {
+        SimTime::from_secs(s)
+    }
+
+    #[test]
+    fn zero_traffic_zero_instances() {
+        let mut a = Autoscaler::new(2.0, t(15.0));
+        assert_eq!(a.desired(t(0.0), 0, 0), 0);
+    }
+
+    #[test]
+    fn rate_scaling() {
+        let mut a = Autoscaler::new(2.0, t(15.0));
+        // 100 arrivals in the last 10 s → 10 rps → need ceil(10*1.2/2) = 6.
+        for i in 0..100 {
+            a.observe(t(i as f64 * 0.1));
+        }
+        assert_eq!(a.desired(t(10.0), 0, 1), 6);
+    }
+
+    #[test]
+    fn backlog_forces_scale_out() {
+        let mut a = Autoscaler::new(2.0, t(15.0));
+        a.observe(t(0.0));
+        let d = a.desired(t(0.1), 40, 2);
+        assert!(d >= 2 + 40 / a.backlog_per_instance, "d={d}");
+    }
+
+    #[test]
+    fn window_forgets_old_arrivals() {
+        let mut a = Autoscaler::new(2.0, t(15.0));
+        for i in 0..50 {
+            a.observe(t(i as f64 * 0.01));
+        }
+        assert!(a.rate(t(0.5)) > 4.0);
+        assert_eq!(a.rate(t(100.0)), 0.0);
+    }
+
+    #[test]
+    fn keep_alive_reclaim() {
+        let a = Autoscaler::new(2.0, t(15.0));
+        assert!(!a.should_reclaim(t(10.0), t(0.0)));
+        assert!(a.should_reclaim(t(15.0), t(0.0)));
+    }
+}

@@ -1,0 +1,148 @@
+//! Dynamic batcher: continuous-batching admission control per instance.
+//!
+//! Decode slots are bounded (`max_batch`); waiting requests queue FIFO and
+//! are admitted as slots free up, or flushed as a batch when either the
+//! batch fills or the head-of-line request has waited `max_wait`. Used both
+//! by the serving simulation and the real PJRT serving driver
+//! (`examples/trace_replay.rs`), which batches to the artifact batch sizes.
+
+use crate::sim::time::SimTime;
+use std::collections::VecDeque;
+
+/// A queued unit of work.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Pending<T> {
+    pub item: T,
+    pub enqueued: SimTime,
+}
+
+/// FIFO batching queue with size and latency triggers.
+#[derive(Clone, Debug)]
+pub struct DynamicBatcher<T> {
+    queue: VecDeque<Pending<T>>,
+    pub max_batch: usize,
+    pub max_wait: SimTime,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(max_batch: usize, max_wait: SimTime) -> Self {
+        assert!(max_batch >= 1);
+        DynamicBatcher { queue: VecDeque::new(), max_batch, max_wait }
+    }
+
+    pub fn push(&mut self, item: T, now: SimTime) {
+        self.queue.push_back(Pending { item, enqueued: now });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Age of the head-of-line request.
+    pub fn hol_wait(&self, now: SimTime) -> SimTime {
+        self.queue.front().map_or(SimTime::ZERO, |p| now.saturating_sub(p.enqueued))
+    }
+
+    /// Should a batch be flushed now? (full batch available, or HOL waited
+    /// out but something is queued).
+    pub fn should_flush(&self, now: SimTime) -> bool {
+        self.queue.len() >= self.max_batch
+            || (!self.queue.is_empty() && self.hol_wait(now) >= self.max_wait)
+    }
+
+    /// Take up to `slots` requests (continuous-batching admission).
+    pub fn admit(&mut self, slots: usize) -> Vec<Pending<T>> {
+        let n = slots.min(self.queue.len());
+        self.queue.drain(..n).collect()
+    }
+
+    /// Take a full batch if the flush condition holds.
+    pub fn flush(&mut self, now: SimTime) -> Option<Vec<Pending<T>>> {
+        if !self.should_flush(now) {
+            return None;
+        }
+        Some(self.admit(self.max_batch))
+    }
+
+    /// Earliest future time the latency trigger could fire (for scheduling
+    /// a wakeup); `None` when empty.
+    pub fn next_deadline(&self) -> Option<SimTime> {
+        self.queue.front().map(|p| p.enqueued + self.max_wait)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minicheck::check;
+
+    fn t(s: f64) -> SimTime {
+        SimTime::from_secs(s)
+    }
+
+    #[test]
+    fn flushes_on_full_batch() {
+        let mut b = DynamicBatcher::new(4, t(1.0));
+        for i in 0..3 {
+            b.push(i, t(0.0));
+        }
+        assert!(b.flush(t(0.0)).is_none(), "not full, not timed out");
+        b.push(3, t(0.1));
+        let batch = b.flush(t(0.1)).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_timeout() {
+        let mut b = DynamicBatcher::new(8, t(0.5));
+        b.push("a", t(0.0));
+        assert!(b.flush(t(0.4)).is_none());
+        let batch = b.flush(t(0.5)).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn admit_respects_slots() {
+        let mut b = DynamicBatcher::new(8, t(1.0));
+        for i in 0..5 {
+            b.push(i, t(0.0));
+        }
+        let got = b.admit(3);
+        assert_eq!(got.iter().map(|p| p.item).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(b.len(), 2);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        check("batcher is FIFO", 50, |rng| {
+            let mut b = DynamicBatcher::new(rng.range(1, 8) as usize, t(1.0));
+            let mut pushed = 0u64;
+            let mut popped_last: i64 = -1;
+            for _ in 0..rng.range(1, 100) {
+                if rng.below(2) == 0 {
+                    b.push(pushed, t(pushed as f64));
+                    pushed += 1;
+                } else {
+                    for p in b.admit(rng.range(0, 4) as usize) {
+                        assert!(p.item as i64 > popped_last, "out of order");
+                        popped_last = p.item as i64;
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn next_deadline_tracks_hol() {
+        let mut b = DynamicBatcher::new(4, t(0.5));
+        assert_eq!(b.next_deadline(), None);
+        b.push(1, t(2.0));
+        b.push(2, t(3.0));
+        assert_eq!(b.next_deadline(), Some(t(2.5)));
+    }
+}

@@ -1,0 +1,170 @@
+//! Cluster manager: the multi-tenant control plane tying together the model
+//! registry, per-node tiered memory, and the motivation-study simulations
+//! (§2.3, Figs 2–3).
+
+use crate::memory::{Locality, NodeMemory};
+use crate::model::{ModelRegistry, ModelSpec};
+use crate::sim::time::SimTime;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// Multi-tenant cluster state.
+pub struct ClusterManager {
+    pub registry: ModelRegistry,
+    pub nodes: HashMap<usize, NodeMemory>,
+}
+
+impl ClusterManager {
+    pub fn new(n_nodes: usize, gpu_capacity: u64, host_capacity: u64) -> Self {
+        let nodes =
+            (0..n_nodes).map(|n| (n, NodeMemory::new(gpu_capacity, host_capacity))).collect();
+        ClusterManager { registry: ModelRegistry::new(), nodes }
+    }
+
+    /// Publish a model and seed it on every node's SSD (the multi-tenant
+    /// platform norm the paper assumes).
+    pub fn publish_everywhere(&mut self, spec: ModelSpec) {
+        let name = spec.name.clone();
+        self.registry.publish(spec);
+        for m in self.nodes.values_mut() {
+            m.put_ssd(&name);
+        }
+    }
+
+    /// Loading cases of §2.3 Fig 3.
+    pub fn classify_start(&self, node: usize, model: &str) -> Locality {
+        self.nodes[&node].locality(model)
+    }
+}
+
+/// Result of the Fig-2 keep-alive study.
+pub struct KeepAliveStudy {
+    /// Keep-alive durations (seconds): how long each evicted model had gone
+    /// unused when LRU reclaimed it — the serverless "keep-alive time" the
+    /// paper plots in Fig 2.
+    pub residencies: Vec<f64>,
+}
+
+/// Fig 2 simulation: `n_models` models on one node whose host memory holds
+/// `mem_slots` of them; per-model Poisson requests at `rps_per_model`; LRU
+/// eviction on miss. Returns the keep-alive-time distribution.
+pub fn keep_alive_study(
+    n_models: usize,
+    mem_slots: usize,
+    rps_per_model: f64,
+    duration_s: f64,
+    model_bytes: u64,
+    rng: &mut Rng,
+) -> KeepAliveStudy {
+    let mut node = NodeMemory::new(u64::MAX, model_bytes.saturating_mul(mem_slots as u64));
+    let mut residencies = Vec::new();
+    let mut last_use: HashMap<String, f64> = HashMap::new();
+
+    // Merge per-model Poisson streams.
+    let mut arrivals: Vec<(f64, usize)> = Vec::new();
+    for m in 0..n_models {
+        let mut t = 0.0;
+        loop {
+            t += rng.exp(rps_per_model);
+            if t >= duration_s {
+                break;
+            }
+            arrivals.push((t, m));
+        }
+    }
+    arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+
+    for (t, m) in arrivals {
+        let name = format!("model{m}");
+        let now = SimTime::from_secs(t);
+        match node.locality(&name) {
+            Locality::HostMem => node.touch(&name, now),
+            _ => {
+                let evicted = node.load_host(&name, model_bytes, now);
+                for e in evicted {
+                    if let Some(t0) = last_use.remove(&e) {
+                        residencies.push(t - t0);
+                    }
+                }
+            }
+        }
+        last_use.insert(name, t);
+    }
+    KeepAliveStudy { residencies }
+}
+
+/// Fig 3 load-type proportions from replaying a trace against a keep-alive
+/// host-memory cache: (hot, mem, ssd) fractions.
+pub fn load_type_study(
+    arrivals: &[(f64, usize)],
+    mem_slots: usize,
+    keep_alive_s: f64,
+    gpu_keep_alive_s: f64,
+    model_bytes: u64,
+) -> (f64, f64, f64) {
+    let mut node = NodeMemory::new(
+        model_bytes.saturating_mul(2), // GPU holds ~2 models
+        model_bytes.saturating_mul(mem_slots as u64),
+    );
+    let (mut hot, mut mem, mut ssd) = (0u64, 0u64, 0u64);
+    for &(t, m) in arrivals {
+        let name = format!("model{m}");
+        let now = SimTime::from_secs(t);
+        node.expire_gpu(now, SimTime::from_secs(gpu_keep_alive_s));
+        node.expire_host(now, SimTime::from_secs(keep_alive_s));
+        match node.locality(&name) {
+            Locality::Gpu => hot += 1,
+            Locality::HostMem => mem += 1,
+            _ => ssd += 1,
+        }
+        node.load_host(&name, model_bytes, now);
+        node.load_gpu(&name, model_bytes, now);
+        node.touch(&name, now);
+    }
+    let total = (hot + mem + ssd).max(1) as f64;
+    (hot as f64 / total, mem as f64 / total, ssd as f64 / total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_everywhere_seeds_ssd() {
+        let mut cm = ClusterManager::new(4, 80_000_000_000, 1_000_000_000_000);
+        cm.publish_everywhere(ModelSpec::llama2_7b());
+        for n in 0..4 {
+            assert_eq!(cm.classify_start(n, "llama2-7b"), Locality::Ssd);
+        }
+        assert_eq!(cm.registry.len(), 1);
+    }
+
+    #[test]
+    fn keep_alive_study_short_residencies() {
+        // Paper Fig 2: 12 models, 3 memory slots, 1 req/min/model → the
+        // bulk of evictions happen within ~15 s of the model's last use
+        // (models churn constantly; the paper reports >95 %, our LRU
+        // reconstruction lands lower — see EXPERIMENTS.md — but the shape,
+        // "models barely stay resident", holds).
+        let mut rng = Rng::new(11);
+        let study = keep_alive_study(12, 3, 1.0 / 60.0, 3600.0 * 4.0, 1, &mut rng);
+        assert!(study.residencies.len() > 100, "n={}", study.residencies.len());
+        let short =
+            study.residencies.iter().filter(|&&r| r < 15.0).count() as f64
+                / study.residencies.len() as f64;
+        assert!(short > 0.5, "short-keep-alive fraction {short}");
+        let mut s = crate::util::stats::Samples::new();
+        s.extend(&study.residencies);
+        assert!(s.p50() < 15.0, "median keep-alive {}", s.p50());
+    }
+
+    #[test]
+    fn load_type_study_finds_misses() {
+        // Round-robin over 12 models with 3 slots: mostly SSD loads.
+        let arrivals: Vec<(f64, usize)> =
+            (0..600).map(|i| (i as f64 * 5.0, i % 12)).collect();
+        let (hot, mem, ssd) = load_type_study(&arrivals, 3, 15.0, 15.0, 1);
+        assert!(ssd > 0.5, "ssd fraction {ssd}");
+        assert!((hot + mem + ssd - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,25 @@
+//! Layer-3 coordinator — the paper's system contribution.
+//!
+//! * [`router`] — join-shortest-queue request routing across instances.
+//! * [`batcher`] — dynamic / continuous batching admission.
+//! * [`autoscaler`] — reactive instance-count policy with keep-alive.
+//! * [`scaling`] — λPipe scaling operations (multicast → pipelines → mode
+//!   switch) and every baseline's scaling semantics.
+//! * [`serving`] — the end-to-end event-driven serving simulation
+//!   (Figs 9–16).
+//! * [`cluster`] — multi-tenant cluster manager + §2.3 motivation studies
+//!   (Figs 2–3).
+
+pub mod autoscaler;
+pub mod batcher;
+pub mod cluster;
+pub mod router;
+pub mod scaling;
+pub mod serving;
+
+pub use autoscaler::Autoscaler;
+pub use batcher::DynamicBatcher;
+pub use cluster::ClusterManager;
+pub use router::Router;
+pub use scaling::{plan_scaling, NewInstance, ScalingOutcome, Source, SystemKind};
+pub use serving::{run_serving, ServingConfig};

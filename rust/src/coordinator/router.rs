@@ -1,0 +1,155 @@
+//! Request router: join-shortest-queue dispatch across serving instances.
+//!
+//! The cluster manager routes each admitted request to the instance with
+//! the least outstanding work (active + queued), weighted by instance
+//! capacity so a 4-stage pipeline absorbs proportionally more than a
+//! fresh replica still warming its caches.
+
+use std::collections::HashMap;
+
+/// Router state: per-instance outstanding counts and capacity weights.
+#[derive(Clone, Debug, Default)]
+pub struct Router {
+    instances: HashMap<u64, InstanceLoad>,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct InstanceLoad {
+    outstanding: usize,
+    /// Relative serving capacity (tokens/s); higher ⇒ preferred.
+    weight: f64,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_instance(&mut self, id: u64, weight: f64) {
+        assert!(weight > 0.0, "instance weight must be positive");
+        self.instances.insert(id, InstanceLoad { outstanding: 0, weight });
+    }
+
+    /// Remove an instance, returning its outstanding count so the caller
+    /// can re-route those requests.
+    pub fn remove_instance(&mut self, id: u64) -> Option<usize> {
+        self.instances.remove(&id).map(|l| l.outstanding)
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.instances.contains_key(&id)
+    }
+
+    pub fn n_instances(&self) -> usize {
+        self.instances.len()
+    }
+
+    pub fn outstanding(&self, id: u64) -> usize {
+        self.instances.get(&id).map_or(0, |l| l.outstanding)
+    }
+
+    pub fn total_outstanding(&self) -> usize {
+        self.instances.values().map(|l| l.outstanding).sum()
+    }
+
+    /// Pick the instance with minimal normalized load; ties broken by id
+    /// for determinism. Returns `None` when no instances exist.
+    pub fn route(&mut self) -> Option<u64> {
+        let id = self
+            .instances
+            .iter()
+            .min_by(|(ia, a), (ib, b)| {
+                let la = (a.outstanding as f64 + 1.0) / a.weight;
+                let lb = (b.outstanding as f64 + 1.0) / b.weight;
+                la.partial_cmp(&lb).unwrap().then(ia.cmp(ib))
+            })
+            .map(|(&id, _)| id)?;
+        self.instances.get_mut(&id).unwrap().outstanding += 1;
+        Some(id)
+    }
+
+    /// Record a request finishing (or leaving) `id`.
+    pub fn complete(&mut self, id: u64) {
+        if let Some(l) = self.instances.get_mut(&id) {
+            assert!(l.outstanding > 0, "completion without outstanding request");
+            l.outstanding -= 1;
+        }
+    }
+
+    /// Update an instance's capacity weight (e.g. after mode switch).
+    pub fn set_weight(&mut self, id: u64, weight: f64) {
+        if let Some(l) = self.instances.get_mut(&id) {
+            l.weight = weight;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minicheck::check;
+
+    #[test]
+    fn routes_to_least_loaded() {
+        let mut r = Router::new();
+        r.add_instance(1, 1.0);
+        r.add_instance(2, 1.0);
+        let a = r.route().unwrap();
+        let b = r.route().unwrap();
+        assert_ne!(a, b, "JSQ must spread two requests over two idle instances");
+        r.complete(a);
+        assert_eq!(r.route(), Some(a));
+    }
+
+    #[test]
+    fn capacity_weights_bias_routing() {
+        let mut r = Router::new();
+        r.add_instance(1, 1.0);
+        r.add_instance(2, 4.0); // 4× capacity
+        let mut counts = HashMap::new();
+        for _ in 0..10 {
+            *counts.entry(r.route().unwrap()).or_insert(0) += 1;
+        }
+        assert!(counts[&2] > counts[&1], "{counts:?}");
+    }
+
+    #[test]
+    fn empty_router_returns_none() {
+        let mut r = Router::new();
+        assert_eq!(r.route(), None);
+    }
+
+    #[test]
+    fn remove_returns_outstanding() {
+        let mut r = Router::new();
+        r.add_instance(7, 1.0);
+        r.route();
+        r.route();
+        assert_eq!(r.remove_instance(7), Some(2));
+        assert_eq!(r.route(), None);
+    }
+
+    #[test]
+    fn property_conservation() {
+        check("router conserves requests", 100, |rng| {
+            let mut r = Router::new();
+            let n_inst = rng.range(1, 8);
+            for i in 0..n_inst {
+                r.add_instance(i, rng.uniform(0.5, 4.0));
+            }
+            let mut routed: Vec<u64> = Vec::new();
+            for _ in 0..rng.range(0, 200) {
+                if rng.below(3) < 2 {
+                    if let Some(id) = r.route() {
+                        routed.push(id);
+                    }
+                } else if !routed.is_empty() {
+                    let idx = rng.below(routed.len() as u64) as usize;
+                    let id = routed.swap_remove(idx);
+                    r.complete(id);
+                }
+                assert_eq!(r.total_outstanding(), routed.len());
+            }
+        });
+    }
+}

@@ -1,0 +1,141 @@
+//! Figs 12–13: TTFT latency under stress load (GDR scaling and local-cache
+//! scaling), with zoomed CDFs.
+
+use crate::coordinator::{run_serving, ServingConfig, SystemKind};
+use crate::model::ModelSpec;
+use crate::util::bench::Table;
+use crate::util::rng::Rng;
+use crate::util::stats::Samples;
+use crate::workload::burst_trace;
+
+/// TTFT distribution for one (system, model) run.
+pub struct TtftDist {
+    pub system: String,
+    pub model: String,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+    pub cdf: Vec<(f64, f64)>,
+}
+
+fn dist_of(system: SystemKind, mut cfg: ServingConfig, seed: u64) -> TtftDist {
+    let mut rng = Rng::new(seed);
+    let trace = burst_trace(100, 0.0, &cfg.spec.name, 128, 64, &mut rng);
+    cfg.system = system;
+    let m = run_serving(&cfg, &trace);
+    let mut s = m.ttft_samples();
+    let cdf = s.cdf(20);
+    TtftDist {
+        system: system.name(),
+        model: cfg.spec.name.clone(),
+        p50: s.p50(),
+        p90: s.p90(),
+        p99: s.p99(),
+        max: s.max(),
+        cdf: cdf.xs.iter().copied().zip(cdf.ps.iter().copied()).collect(),
+    }
+}
+
+fn cluster_for(model: &ModelSpec) -> crate::config::ClusterConfig {
+    if model.gpus_per_replica > 1 {
+        crate::config::ClusterConfig::testbed2()
+    } else {
+        let mut c = crate::config::ClusterConfig::testbed1();
+        c.n_nodes = 8;
+        c
+    }
+}
+
+/// Fig 12: TTFT when scaling via GDR (1 GPU source).
+pub fn fig12(model: &ModelSpec, seed: u64) -> Vec<TtftDist> {
+    [
+        SystemKind::LambdaScale { k: 1 },
+        SystemKind::FaasNet,
+        SystemKind::Nccl,
+        SystemKind::ServerlessLlm,
+    ]
+    .into_iter()
+    .map(|sys| {
+        let mut cfg = ServingConfig::new(sys, cluster_for(model), model.clone());
+        cfg.max_batch = 8;
+        cfg.initial_gpu_sources = 1;
+        dist_of(sys, cfg, seed)
+    })
+    .collect()
+}
+
+/// Fig 13: TTFT when scaling via local host-memory cache (Fig 10 setup).
+pub fn fig13(model: &ModelSpec, r: usize, k: usize, seed: u64) -> Vec<TtftDist> {
+    [SystemKind::LambdaScale { k }, SystemKind::ServerlessLlm]
+        .into_iter()
+        .map(|sys| {
+            let mut cfg = ServingConfig::new(sys, cluster_for(model), model.clone());
+            cfg.max_batch = 8;
+            cfg.initial_gpu_sources = r;
+            cfg.initial_host_sources = k;
+            dist_of(sys, cfg, seed)
+        })
+        .collect()
+}
+
+pub fn print_ttft(title: &str, note: &str, dists: &[TtftDist]) {
+    println!("\n== {title} ==");
+    let mut t = Table::new(&["system", "p50 (s)", "p90 (s)", "p99 (s)", "max (s)"]);
+    for d in dists {
+        t.row(&[
+            d.system.clone(),
+            format!("{:.3}", d.p50),
+            format!("{:.3}", d.p90),
+            format!("{:.3}", d.p99),
+            format!("{:.3}", d.max),
+        ]);
+    }
+    t.print();
+    println!("{note}");
+}
+
+/// Convenience: p90 speedup of the first dist over the others.
+pub fn p90_speedups(dists: &[TtftDist]) -> Vec<(String, f64)> {
+    let base = dists[0].p90.max(1e-9);
+    dists[1..].iter().map(|d| (d.system.clone(), d.p90 / base)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig12_lambdascale_best_p90() {
+        let d = fig12(&ModelSpec::llama2_13b(), 7);
+        assert!(d[0].system.starts_with("lambdascale"));
+        for other in &d[1..] {
+            assert!(
+                d[0].p90 <= other.p90 + 1e-9,
+                "λScale p90 {} vs {} {}",
+                d[0].p90,
+                other.system,
+                other.p90
+            );
+        }
+        // ServerlessLLM-SSD long tail (paper: 8x slower).
+        let sl = d.iter().find(|x| x.system.starts_with("serverlessllm")).unwrap();
+        assert!(sl.p90 > 2.0 * d[0].p90, "sllm {} ls {}", sl.p90, d[0].p90);
+    }
+
+    #[test]
+    fn fig13_lambdascale_beats_cache_scaling() {
+        let d = fig13(&ModelSpec::llama2_13b(), 1, 4, 8);
+        assert!(d[0].p90 <= d[1].p90 + 1e-9, "λScale {} vs ServerlessLLM {}", d[0].p90, d[1].p90);
+    }
+
+    #[test]
+    fn cdfs_are_monotone() {
+        let d = fig12(&ModelSpec::llama2_7b(), 9);
+        for dist in &d {
+            for w in dist.cdf.windows(2) {
+                assert!(w[0].0 <= w[1].0 && w[0].1 <= w[1].1);
+            }
+        }
+    }
+}

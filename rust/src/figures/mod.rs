@@ -1,0 +1,19 @@
+//! Figure/table regeneration: one generator per figure of the paper's
+//! evaluation (§2.3 + §7). Each generator returns structured data and can
+//! print the paper's rows/series; the `benches/` targets and the CLI both
+//! drive these (see DESIGN.md §5 for the experiment index).
+
+pub mod latency;
+pub mod motivation;
+pub mod multicast_figs;
+pub mod throughput;
+pub mod trace_figs;
+
+/// The three Llama-2 model sizes every figure sweeps.
+pub fn paper_models() -> Vec<crate::model::ModelSpec> {
+    vec![
+        crate::model::ModelSpec::llama2_7b(),
+        crate::model::ModelSpec::llama2_13b(),
+        crate::model::ModelSpec::llama2_70b(),
+    ]
+}

@@ -1,0 +1,124 @@
+//! Figs 2–3 (§2.3 motivation): model keep-alive churn and load-type mix.
+
+use crate::coordinator::cluster::{keep_alive_study, load_type_study};
+use crate::util::bench::Table;
+use crate::util::rng::Rng;
+use crate::util::stats::Samples;
+use crate::workload::BurstGptGen;
+
+/// Fig 2: keep-alive time distribution under multi-tenant memory pressure.
+pub struct Fig02 {
+    pub p50: f64,
+    pub p90: f64,
+    pub frac_under_15s: f64,
+    pub n_evictions: usize,
+    pub cdf: Vec<(f64, f64)>,
+}
+
+pub fn fig02(seed: u64) -> Fig02 {
+    let mut rng = Rng::new(seed);
+    // Paper setup: 12 models, memory holds 3, 1 req/min/model, LRU.
+    let study = keep_alive_study(12, 3, 1.0 / 60.0, 6.0 * 3600.0, 1, &mut rng);
+    let mut s = Samples::new();
+    s.extend(&study.residencies);
+    let frac = study.residencies.iter().filter(|&&r| r < 15.0).count() as f64
+        / study.residencies.len().max(1) as f64;
+    let cdf = s.cdf(24);
+    Fig02 {
+        p50: s.p50(),
+        p90: s.p90(),
+        frac_under_15s: frac,
+        n_evictions: study.residencies.len(),
+        cdf: cdf.xs.iter().copied().zip(cdf.ps.iter().copied()).collect(),
+    }
+}
+
+pub fn print_fig02(f: &Fig02) {
+    println!("\n== Fig 2: model keep-alive time in memory (12 models, 3 slots, 1 req/min) ==");
+    let mut t = Table::new(&["metric", "value"]);
+    t.row(&["evictions observed".into(), f.n_evictions.to_string()]);
+    t.row(&["p50 keep-alive (s)".into(), format!("{:.1}", f.p50)]);
+    t.row(&["p90 keep-alive (s)".into(), format!("{:.1}", f.p90)]);
+    t.row(&["fraction < 15 s".into(), format!("{:.1}%", f.frac_under_15s * 100.0)]);
+    t.print();
+    println!("paper: >95% of models evicted within ~15s (shape: constant churn)");
+}
+
+/// Fig 3: proportion of hot / memory / SSD loads for the two Fig-1 traces.
+pub struct Fig03 {
+    /// (trace name, hot fraction, mem fraction, ssd fraction).
+    pub rows: Vec<(String, f64, f64, f64)>,
+}
+
+pub fn fig03(seed: u64) -> Fig03 {
+    let mut rows = Vec::new();
+    // Trace 1: Alibaba-like, lower aggregate rate (per-model gaps exceed
+    // the keep-alive window more often → higher miss rate, as in the
+    // paper). Trace 2: BurstGPT-like, hotter and more skewed.
+    let gens = [
+        ("trace1-alibaba", BurstGptGen { base_rps: 0.4, spikes_per_hour: 4.0, spike_mult: 8.0, ..Default::default() }),
+        ("trace2-burstgpt", BurstGptGen { base_rps: 2.0, spikes_per_hour: 10.0, spike_mult: 14.0, ..Default::default() }),
+    ];
+    for (i, (name, gen)) in gens.into_iter().enumerate() {
+        let mut rng = Rng::new(seed + i as u64);
+        let trace = gen.generate(12.0 * 3600.0, "m", &mut rng);
+        // Spread requests across 12 models (multi-tenant node). Trace 1:
+        // near-uniform popularity; Trace 2: skewed (a few hot GPT models
+        // take most traffic) — which is what makes its miss rate lower in
+        // the paper (36% vs 64%).
+        let arrivals: Vec<(f64, usize)> = trace
+            .requests
+            .iter()
+            .map(|r| {
+                let h = (r.id.wrapping_mul(0x9E3779B97F4A7C15) >> 17) as usize;
+                let m = if i == 1 && h % 10 < 7 { h % 3 } else { h % 12 };
+                (r.arrival.as_secs(), m)
+            })
+            .collect();
+        let (hot, mem, ssd) = load_type_study(&arrivals, 3, 15.0, 15.0, 1);
+        rows.push((name.to_string(), hot, mem, ssd));
+    }
+    Fig03 { rows }
+}
+
+pub fn print_fig03(f: &Fig03) {
+    println!("\n== Fig 3: proportion of load types (15 s keep-alive) ==");
+    let mut t = Table::new(&["trace", "hot (no load)", "memory load", "SSD load"]);
+    for (name, hot, mem, ssd) in &f.rows {
+        t.row(&[
+            name.clone(),
+            format!("{:.1}%", hot * 100.0),
+            format!("{:.1}%", mem * 100.0),
+            format!("{:.1}%", ssd * 100.0),
+        ]);
+    }
+    t.print();
+    println!("paper: SSD loads (cache misses) account for 64% / 36% of the two traces");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig02_shape() {
+        let f = fig02(1);
+        assert!(f.n_evictions > 500);
+        assert!(f.p50 < 20.0, "median keep-alive {}", f.p50);
+        assert!(f.frac_under_15s > 0.4, "frac {}", f.frac_under_15s);
+        // CDF monotone.
+        for w in f.cdf.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn fig03_ssd_loads_dominate_misses() {
+        let f = fig03(2);
+        assert_eq!(f.rows.len(), 2);
+        for (name, hot, mem, ssd) in &f.rows {
+            assert!((hot + mem + ssd - 1.0).abs() < 1e-9, "{name}");
+            assert!(*ssd > 0.2, "{name}: ssd fraction {ssd} too low");
+        }
+    }
+}

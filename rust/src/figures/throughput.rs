@@ -1,0 +1,208 @@
+//! Figs 9, 10, 11, 16: throughput scaling under stress load.
+
+use crate::config::ClusterConfig;
+use crate::coordinator::{run_serving, ServingConfig, SystemKind};
+use crate::metrics::MetricsCollector;
+use crate::model::ModelSpec;
+use crate::util::bench::Table;
+use crate::util::rng::Rng;
+use crate::workload::{burst_trace, Trace};
+
+/// A throughput ramp: (time s, tokens/s) series plus summary scalars.
+pub struct Ramp {
+    pub system: String,
+    pub model: String,
+    pub series: Vec<(f64, f64)>,
+    /// p90 time-to-first-token over the burst — the paper's ramp-speed
+    /// proxy (how quickly new capacity absorbs the backlog).
+    pub ttft_p90: f64,
+    /// Time the last request got its first token (full absorption).
+    pub t_full: f64,
+    pub peak: f64,
+}
+
+fn cluster_for(model: &ModelSpec) -> ClusterConfig {
+    if model.gpus_per_replica > 1 {
+        ClusterConfig::testbed2()
+    } else {
+        let mut c = ClusterConfig::testbed1();
+        c.n_nodes = 8;
+        c
+    }
+}
+
+fn stress_trace(model: &ModelSpec, n: usize, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    burst_trace(n, 0.0, &model.name, 128, 64, &mut rng)
+}
+
+fn ramp_of(m: &MetricsCollector, system: &str, model: &str, horizon: f64) -> Ramp {
+    let series = m.throughput_series(0.1, horizon);
+    let peak = series.iter().map(|&(_, v)| v).fold(0.0f64, f64::max);
+    let mut s = m.ttft_samples();
+    Ramp {
+        system: system.into(),
+        model: model.into(),
+        series,
+        ttft_p90: s.p90(),
+        t_full: s.max(),
+        peak,
+    }
+}
+
+/// Fig 9: throughput scaling via GDR (sources hold the model in GPU).
+pub fn fig09(model: &ModelSpec, seed: u64) -> Vec<Ramp> {
+    let systems = [
+        SystemKind::LambdaScale { k: 1 },
+        SystemKind::LambdaScale { k: 2 },
+        SystemKind::LambdaScale { k: 4 },
+        SystemKind::FaasNet,
+        SystemKind::Nccl,
+        SystemKind::ServerlessLlm,
+    ];
+    let trace = stress_trace(model, 100, seed);
+    let mut out = Vec::new();
+    for sys in systems {
+        let mut cfg = ServingConfig::new(sys, cluster_for(model), model.clone());
+        cfg.max_batch = 8;
+        cfg.initial_gpu_sources = match sys {
+            SystemKind::LambdaScale { k } => k.min(4),
+            _ => 1,
+        };
+        let m = run_serving(&cfg, &trace);
+        out.push(ramp_of(&m, &sys.name(), &model.name, 30.0));
+    }
+    out
+}
+
+/// Fig 10: scaling via local host-memory cache — λScale vs ServerlessLLM.
+/// `r` nodes hold the model in GPU; `k` more hold it in host memory.
+pub fn fig10(model: &ModelSpec, r: usize, k: usize, seed: u64) -> Vec<Ramp> {
+    let trace = stress_trace(model, 100, seed);
+    let mut out = Vec::new();
+    for sys in [SystemKind::LambdaScale { k }, SystemKind::ServerlessLlm] {
+        let mut cfg = ServingConfig::new(sys, cluster_for(model), model.clone());
+        cfg.max_batch = 8;
+        cfg.initial_gpu_sources = r;
+        cfg.initial_host_sources = k;
+        let m = run_serving(&cfg, &trace);
+        out.push(ramp_of(&m, &sys.name(), &model.name, 30.0));
+    }
+    out
+}
+
+/// Fig 11: cold start — no GPU copies anywhere; one node has the model in
+/// host memory; ServerlessLLM falls back to SSD on the others.
+pub fn fig11(model: &ModelSpec, seed: u64) -> Vec<Ramp> {
+    let trace = stress_trace(model, 100, seed);
+    let mut out = Vec::new();
+    for sys in [SystemKind::LambdaScale { k: 1 }, SystemKind::ServerlessLlm] {
+        let mut cfg = ServingConfig::new(sys, cluster_for(model), model.clone());
+        cfg.max_batch = 8;
+        cfg.initial_gpu_sources = 0;
+        cfg.initial_host_sources = 1;
+        let m = run_serving(&cfg, &trace);
+        out.push(ramp_of(&m, &sys.name(), &model.name, 60.0));
+    }
+    out
+}
+
+/// Fig 16: k-way ablation (λScale only, k ∈ {1, 2, 4}) on 13B.
+pub fn fig16(seed: u64) -> Vec<Ramp> {
+    let model = ModelSpec::llama2_13b();
+    let trace = stress_trace(&model, 100, seed);
+    let mut out = Vec::new();
+    for k in [1usize, 2, 4] {
+        let mut cfg =
+            ServingConfig::new(SystemKind::LambdaScale { k }, cluster_for(&model), model.clone());
+        cfg.max_batch = 8;
+        cfg.initial_gpu_sources = k;
+        let m = run_serving(&cfg, &trace);
+        out.push(ramp_of(&m, &format!("k={k}"), &model.name, 30.0));
+    }
+    out
+}
+
+pub fn print_ramps(title: &str, note: &str, ramps: &[Ramp]) {
+    println!("\n== {title} ==");
+    let mut t = Table::new(&["system", "peak tok/s", "p90 TTFT (s)", "full absorption (s)"]);
+    for r in ramps {
+        t.row(&[
+            r.system.clone(),
+            format!("{:.0}", r.peak),
+            format!("{:.2}", r.ttft_p90),
+            format!("{:.2}", r.t_full),
+        ]);
+    }
+    t.print();
+    println!("{note}");
+}
+
+/// Print the full ramp series for plotting.
+pub fn print_series(ramps: &[Ramp], until_s: f64) {
+    for r in ramps {
+        let pts: Vec<String> = r
+            .series
+            .iter()
+            .take_while(|&&(t, _)| t <= until_s)
+            .step_by(5)
+            .map(|&(t, v)| format!("{t:.1}:{v:.0}"))
+            .collect();
+        println!("  {:<20} {}", r.system, pts.join(" "));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig09_lambdascale_ramps_fastest() {
+        let ramps = fig09(&ModelSpec::llama2_13b(), 1);
+        let t_of = |sys: &str| ramps.iter().find(|r| r.system.starts_with(sys)).unwrap().ttft_p90;
+        assert!(t_of("lambdascale-k1") <= t_of("serverlessllm"));
+        assert!(t_of("lambdascale-k4") <= t_of("lambdascale-k1"));
+        assert!(t_of("lambdascale-k1") <= t_of("faasnet"));
+        // ServerlessLLM (SSD) ramps dramatically slower than k=4.
+        assert!(
+            t_of("serverlessllm") > 3.0 * t_of("lambdascale-k4"),
+            "sllm {} vs ls-k4 {}",
+            t_of("serverlessllm"),
+            t_of("lambdascale-k4")
+        );
+    }
+
+    #[test]
+    fn fig10_lambdascale_faster_via_cache() {
+        let ramps = fig10(&ModelSpec::llama2_13b(), 1, 4, 2);
+        let ls = ramps.iter().find(|r| r.system.starts_with("lambdascale")).unwrap();
+        let sl = ramps.iter().find(|r| r.system.starts_with("serverlessllm")).unwrap();
+        assert!(
+            ls.ttft_p90 <= sl.ttft_p90,
+            "λScale {} vs ServerlessLLM {}",
+            ls.ttft_p90,
+            sl.ttft_p90
+        );
+    }
+
+    #[test]
+    fn fig11_cold_start_gap() {
+        let ramps = fig11(&ModelSpec::llama2_13b(), 3);
+        let ls = ramps.iter().find(|r| r.system.starts_with("lambdascale")).unwrap();
+        let sl = ramps.iter().find(|r| r.system.starts_with("serverlessllm")).unwrap();
+        // Paper: 3.75x–11.4x faster; assert a clear multiple on full
+        // backlog absorption.
+        assert!(
+            sl.t_full > 2.0 * ls.t_full,
+            "cold start: λScale {} vs ServerlessLLM {}",
+            ls.t_full,
+            sl.t_full
+        );
+    }
+
+    #[test]
+    fn fig16_higher_k_scales_faster() {
+        let ramps = fig16(4);
+        assert!(ramps[2].ttft_p90 <= ramps[0].ttft_p90, "k=4 {} vs k=1 {}", ramps[2].ttft_p90, ramps[0].ttft_p90);
+    }
+}

@@ -1,0 +1,188 @@
+//! Figs 14–15: the 30-minute BurstGPT-like trace — GPU allocation timeline,
+//! cumulative GPU time (cost) and TTFT CDF per system.
+
+use crate::config::ClusterConfig;
+use crate::coordinator::{run_serving, ServingConfig, SystemKind};
+use crate::model::ModelSpec;
+use crate::sim::time::SimTime;
+use crate::util::bench::Table;
+use crate::util::rng::Rng;
+use crate::util::stats::Samples;
+use crate::workload::{BurstGptGen, Trace};
+
+pub struct TraceRun {
+    pub system: String,
+    /// (time s, GPUs allocated) sampled series.
+    pub gpu_series: Vec<(f64, usize)>,
+    /// Cumulative GPU·seconds over the window.
+    pub gpu_time: f64,
+    pub ttft_p50: f64,
+    pub ttft_p90: f64,
+    pub ttft_p99: f64,
+    pub ttft_cdf: Vec<(f64, f64)>,
+    pub completed: usize,
+}
+
+pub struct Fig1415 {
+    pub model: String,
+    pub duration_s: f64,
+    pub trace_len: usize,
+    pub runs: Vec<TraceRun>,
+}
+
+/// Generate the 30-minute bursty trace (deterministic per seed). Calibrated
+/// so spikes demand ~8 replicas while the baseline needs 1–2 (the Fig 1 /
+/// Fig 14 regime where scaling speed decides both SLOs and cost).
+pub fn burst_trace_30min(model: &ModelSpec, seed: u64) -> Trace {
+    let gen = BurstGptGen {
+        base_rps: 4.0,
+        spikes_per_hour: 8.0,
+        spike_mult: 15.0,
+        avg_output: 128,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(seed);
+    gen.generate(1800.0, &model.name, &mut rng)
+}
+
+/// Run all five systems (λScale, FaaSNet, NCCL, ServerlessLLM, Ideal) over
+/// the trace.
+pub fn fig14_15(model: &ModelSpec, seed: u64) -> Fig1415 {
+    let trace = burst_trace_30min(model, seed);
+    let duration = 1800.0f64;
+    let systems = [
+        SystemKind::LambdaScale { k: 2 },
+        SystemKind::FaasNet,
+        SystemKind::Nccl,
+        SystemKind::ServerlessLlm,
+        SystemKind::Ideal,
+    ];
+    let mut runs = Vec::new();
+    for sys in systems {
+        let mut cluster = ClusterConfig::testbed1();
+        cluster.n_nodes = 12;
+        let mut cfg = ServingConfig::new(sys, cluster, model.clone());
+        cfg.max_batch = 8;
+        cfg.initial_gpu_sources = 1;
+        cfg.initial_host_sources = 2;
+        cfg.keep_alive_s = 15.0;
+        let m = run_serving(&cfg, &trace);
+        let mut s = m.ttft_samples();
+        let cdf = if s.is_empty() {
+            Vec::new()
+        } else {
+            let c = s.cdf(20);
+            c.xs.iter().copied().zip(c.ps.iter().copied()).collect()
+        };
+        runs.push(TraceRun {
+            system: sys.name(),
+            gpu_series: m.gpu_series(30.0, duration),
+            gpu_time: m.gpu_time(SimTime::from_secs(duration)),
+            ttft_p50: if s.is_empty() { f64::NAN } else { s.p50() },
+            ttft_p90: if s.is_empty() { f64::NAN } else { s.p90() },
+            ttft_p99: if s.is_empty() { f64::NAN } else { s.p99() },
+            ttft_cdf: cdf,
+            completed: m.requests.len(),
+        });
+    }
+    Fig1415 { model: model.name.clone(), duration_s: duration, trace_len: trace.len(), runs }
+}
+
+pub fn print_fig14(f: &Fig1415) {
+    println!(
+        "\n== Fig 14: GPU allocation & cost under 30-min BurstGPT-like trace ({}, {} reqs) ==",
+        f.model, f.trace_len
+    );
+    let ideal = f.runs.iter().find(|r| r.system == "ideal").map(|r| r.gpu_time).unwrap_or(0.0);
+    let mut t = Table::new(&["system", "GPU·s (cost)", "vs ideal", "peak GPUs", "completed"]);
+    for r in &f.runs {
+        let peak = r.gpu_series.iter().map(|&(_, g)| g).max().unwrap_or(0);
+        t.row(&[
+            r.system.clone(),
+            format!("{:.0}", r.gpu_time),
+            format!("+{:.1}%", (r.gpu_time / ideal.max(1e-9) - 1.0) * 100.0),
+            peak.to_string(),
+            r.completed.to_string(),
+        ]);
+    }
+    t.print();
+    println!("paper: λScale uses 17.8% / 18.1% / 31.3% less GPU time than FaaSNet / NCCL / ServerlessLLM,");
+    println!("       and stays within 4.3–18.6% of Ideal");
+}
+
+pub fn print_fig15(f: &Fig1415) {
+    println!("\n== Fig 15: TTFT under the BurstGPT-like trace ({}) ==", f.model);
+    let mut t = Table::new(&["system", "p50 (s)", "p90 (s)", "p99 (s)"]);
+    for r in &f.runs {
+        t.row(&[
+            r.system.clone(),
+            format!("{:.3}", r.ttft_p50),
+            format!("{:.3}", r.ttft_p90),
+            format!("{:.3}", r.ttft_p99),
+        ]);
+    }
+    t.print();
+    println!("paper: 2.4x–5x p90 TTFT improvement over baselines");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run() -> Fig1415 {
+        // 13B on 12 nodes, short seed-stable trace.
+        fig14_15(&ModelSpec::llama2_13b(), 21)
+    }
+
+    #[test]
+    fn trace_runs_complete_and_cost_ordering_holds() {
+        let f = run();
+        let get = |sys: &str| f.runs.iter().find(|r| r.system.starts_with(sys)).unwrap();
+        let ls = get("lambdascale");
+        let ideal = get("ideal");
+        // All systems finish (almost) the whole trace.
+        for r in &f.runs {
+            assert!(
+                r.completed as f64 >= 0.95 * f.trace_len as f64,
+                "{} completed only {}/{}",
+                r.system,
+                r.completed,
+                f.trace_len
+            );
+        }
+        // Ideal is the cheapest; λScale is closest to it.
+        for r in &f.runs {
+            if r.system != "ideal" {
+                assert!(r.gpu_time >= ideal.gpu_time * 0.999, "{} beat ideal?", r.system);
+            }
+        }
+        let sl = get("serverlessllm");
+        assert!(ls.gpu_time < sl.gpu_time, "λScale {} vs ServerlessLLM {}", ls.gpu_time, sl.gpu_time);
+    }
+
+    #[test]
+    fn lambdascale_best_tail_on_trace() {
+        let f = run();
+        let get = |sys: &str| f.runs.iter().find(|r| r.system.starts_with(sys)).unwrap();
+        let ls = get("lambdascale");
+        for sys in ["faasnet", "nccl", "serverlessllm"] {
+            let other = get(sys);
+            // p90 within a small tie window (steady-state decode dominates
+            // it); the spike-driven gap is in the p99 tail.
+            assert!(
+                ls.ttft_p90 <= other.ttft_p90 * 1.1 + 1e-3,
+                "λScale p90 {} vs {} {}",
+                ls.ttft_p90,
+                sys,
+                other.ttft_p90
+            );
+            assert!(
+                ls.ttft_p99 <= other.ttft_p99 + 1e-9,
+                "λScale p99 {} vs {} {}",
+                ls.ttft_p99,
+                sys,
+                other.ttft_p99
+            );
+        }
+    }
+}

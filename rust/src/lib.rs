@@ -1,0 +1,45 @@
+//! # λScale — fast model scaling for serverless LLM inference
+//!
+//! A production-oriented reproduction of *λScale: Enabling Fast Scaling for
+//! Serverless Large Language Model Inference* (CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas stack. This crate is Layer 3: the coordinator that
+//! owns the entire request path — routing, dynamic batching, model multicast
+//! scheduling (λPipe), execution-pipeline construction, tiered memory
+//! management, and autoscaling — plus the PJRT runtime that executes the
+//! AOT-compiled per-block model artifacts, and a discrete-event cluster
+//! simulator substituting for the paper's 12-node H800/400Gb-RDMA testbed.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`util`] — zero-dependency substrates: PRNG, JSON, stats, logging,
+//!   property-test + bench harnesses (the offline build has no serde /
+//!   tokio / criterion / proptest).
+//! * [`config`] — typed configuration + testbed presets (paper Table 1).
+//! * [`sim`] — discrete-event engine: cluster, links, storage tiers.
+//! * [`model`] — model specs, block partitioning, tensor packing.
+//! * [`multicast`] — binomial pipeline (RDMC), k-way transmission
+//!   (Algorithm 1), FaaSNet binary tree and NCCL-like baselines.
+//! * [`pipeline`] — execution-pipeline generation (Algorithm 2), 2D
+//!   pipelined decode, mode switching with KV recomputation.
+//! * [`memory`] — GPU/host/SSD tier manager, LRU keep-alive, pre-allocation.
+//! * [`coordinator`] — cluster manager, router, batcher, autoscaler, and the
+//!   end-to-end serving models for λScale + all baselines.
+//! * [`runtime`] — PJRT client, artifact manifest, block-wise decode engine.
+//! * [`workload`] — BurstGPT-like traces, Poisson/burst arrivals.
+//! * [`metrics`] — TTFT/TPS/GPU-time collection, CDFs.
+//! * [`figures`] — one generator per paper figure (benches + CLI call these).
+
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod multicast;
+pub mod pipeline;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+pub use config::ClusterConfig;

@@ -1,0 +1,145 @@
+//! λScale CLI — the leader entrypoint.
+//!
+//! ```text
+//! lambda-scale figures [--only figNN]      regenerate paper figures
+//! lambda-scale trace-gen --out FILE        emit a BurstGPT-like CSV trace
+//! lambda-scale serve [--artifacts DIR]     serve a demo generation on real PJRT
+//! lambda-scale info                        print testbed presets + model zoo
+//! ```
+//!
+//! (No clap offline — a small hand-rolled parser below.)
+
+use lambda_scale::config::ClusterConfig;
+use lambda_scale::figures;
+use lambda_scale::model::ModelSpec;
+use lambda_scale::util::rng::Rng;
+use lambda_scale::workload::BurstGptGen;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flag = |name: &str| -> Option<String> {
+        args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+    };
+
+    match cmd {
+        "figures" => {
+            let only = flag("--only");
+            let want = |f: &str| only.as_deref().map_or(true, |o| o == f);
+            if want("fig02") {
+                figures::motivation::print_fig02(&figures::motivation::fig02(1));
+            }
+            if want("fig03") {
+                figures::motivation::print_fig03(&figures::motivation::fig03(2));
+            }
+            if want("fig07") {
+                figures::multicast_figs::print_fig07(&figures::multicast_figs::fig07());
+            }
+            if want("fig08") {
+                figures::multicast_figs::print_fig08(&figures::multicast_figs::fig08());
+            }
+            if want("fig09") {
+                let m = ModelSpec::llama2_13b();
+                figures::throughput::print_ramps(
+                    "Fig 9: throughput scaling via GDR (13B)",
+                    "",
+                    &figures::throughput::fig09(&m, 1),
+                );
+            }
+            if want("fig12") {
+                let m = ModelSpec::llama2_13b();
+                figures::latency::print_ttft(
+                    "Fig 12: TTFT via GDR (13B)",
+                    "",
+                    &figures::latency::fig12(&m, 7),
+                );
+            }
+            if want("fig14") || want("fig15") {
+                let f = figures::trace_figs::fig14_15(&ModelSpec::llama2_13b(), 21);
+                figures::trace_figs::print_fig14(&f);
+                figures::trace_figs::print_fig15(&f);
+            }
+            if want("fig16") {
+                figures::throughput::print_ramps(
+                    "Fig 16: k-way ablation",
+                    "",
+                    &figures::throughput::fig16(4),
+                );
+            }
+            if want("fig17") {
+                figures::multicast_figs::print_fig17(&figures::multicast_figs::fig17());
+            }
+            if want("fig18") {
+                figures::multicast_figs::print_fig18(&figures::multicast_figs::fig18());
+            }
+            eprintln!("\n(complete sweeps across all models: `cargo bench`)");
+        }
+        "trace-gen" => {
+            let out = flag("--out").unwrap_or_else(|| "/tmp/burstgpt.csv".into());
+            let duration: f64 =
+                flag("--duration").and_then(|s| s.parse().ok()).unwrap_or(1800.0);
+            let seed: u64 = flag("--seed").and_then(|s| s.parse().ok()).unwrap_or(21);
+            let model = flag("--model").unwrap_or_else(|| "llama2-13b".into());
+            let gen = BurstGptGen::default();
+            let trace = gen.generate(duration, &model, &mut Rng::new(seed));
+            trace.save(&out).expect("writing trace");
+            println!("wrote {} requests ({duration}s) to {out}", trace.len());
+        }
+        "serve" => {
+            let dir = flag("--artifacts").unwrap_or_else(|| "artifacts".into());
+            let prompt = flag("--prompt").unwrap_or_else(|| "hello world".into());
+            let n: usize = flag("--tokens").and_then(|s| s.parse().ok()).unwrap_or(16);
+            if let Err(e) = serve_demo(&dir, &prompt, n) {
+                eprintln!("serve failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
+        "info" => {
+            for (name, cfg) in
+                [("testbed1", ClusterConfig::testbed1()), ("testbed2", ClusterConfig::testbed2())]
+            {
+                println!(
+                    "{name}: {} nodes × {} GPU(s), {} GB/s RDMA, {} GB/s host-mem, {} GB/s SSD",
+                    cfg.n_nodes,
+                    cfg.node.gpus_per_node,
+                    cfg.network.rdma_gbps,
+                    cfg.network.hostmem_gbps,
+                    cfg.network.ssd_gbps
+                );
+            }
+            for m in [ModelSpec::llama2_7b(), ModelSpec::llama2_13b(), ModelSpec::llama2_70b()] {
+                println!(
+                    "model {}: {:.1} GB, {} layers, {} GPU(s)/replica",
+                    m.name,
+                    m.bytes as f64 / 1e9,
+                    m.n_layers,
+                    m.gpus_per_replica
+                );
+            }
+        }
+        _ => {
+            eprintln!(
+                "λScale — fast model scaling for serverless LLM inference\n\n\
+                 usage: lambda-scale <figures|trace-gen|serve|info> [flags]\n\
+                 \x20 figures   [--only figNN]              regenerate paper figures\n\
+                 \x20 trace-gen [--out F] [--duration S]    emit a BurstGPT-like CSV trace\n\
+                 \x20 serve     [--artifacts D] [--prompt P] [--tokens N]\n\
+                 \x20 info                                  testbed presets + model zoo\n\n\
+                 examples: quickstart, multicast_demo, spike_serving, trace_replay\n\
+                 \x20 (cargo run --release --example <name>)"
+            );
+        }
+    }
+}
+
+fn serve_demo(dir: &str, prompt: &str, n: usize) -> anyhow::Result<()> {
+    use lambda_scale::runtime::{tokenizer, Engine};
+    let engine = Engine::new_full(dir)?;
+    let cfg = &engine.manifest.config;
+    let p = vec![tokenizer::encode_padded(prompt, cfg.vocab, cfg.prefill_len)];
+    let toks = engine.generate(&p, n.min(cfg.max_seq - cfg.prefill_len))?;
+    println!("prompt: {prompt:?}");
+    println!("tokens: {:?}", toks[0]);
+    println!("text:   {:?}", tokenizer::decode(&toks[0]));
+    Ok(())
+}

@@ -1,0 +1,190 @@
+//! Byte-capacity LRU cache with keep-alive expiry — the residency policy
+//! behind the §2.3 motivation study (Figs 2–3) and the host-memory cache in
+//! the serving simulation.
+
+use crate::sim::time::SimTime;
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+struct Entry {
+    bytes: u64,
+    last_use: SimTime,
+    inserted: SimTime,
+}
+
+/// LRU keyed by `K`, bounded by total bytes.
+#[derive(Clone, Debug)]
+pub struct LruCache<K: std::hash::Hash + Eq + Clone + Ord> {
+    capacity: u64,
+    used: u64,
+    entries: HashMap<K, Entry>,
+}
+
+impl<K: std::hash::Hash + Eq + Clone + Ord> LruCache<K> {
+    pub fn new(capacity: u64) -> Self {
+        LruCache { capacity, used: 0, entries: HashMap::new() }
+    }
+
+    pub fn contains(&self, k: &K) -> bool {
+        self.entries.contains_key(k)
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn keys(&self) -> Vec<K> {
+        let mut v: Vec<K> = self.entries.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Update recency if present.
+    pub fn touch(&mut self, k: &K, now: SimTime) {
+        if let Some(e) = self.entries.get_mut(k) {
+            e.last_use = now;
+        }
+    }
+
+    /// Insert (or refresh) `k`; evicts least-recently-used entries until it
+    /// fits. Returns the evicted keys (in eviction order). An item larger
+    /// than the whole capacity is rejected by panicking — that is a
+    /// configuration error, not a runtime condition.
+    pub fn insert(&mut self, k: K, bytes: u64, now: SimTime) -> Vec<K> {
+        assert!(bytes <= self.capacity, "item larger than cache capacity");
+        if let Some(e) = self.entries.get_mut(&k) {
+            e.last_use = now;
+            return vec![];
+        }
+        let mut evicted = Vec::new();
+        while self.used + bytes > self.capacity {
+            let victim = self
+                .entries
+                .iter()
+                .min_by_key(|(key, e)| (e.last_use, (*key).clone()))
+                .map(|(key, _)| key.clone())
+                .expect("over capacity with no entries");
+            self.remove(&victim);
+            evicted.push(victim);
+        }
+        self.used += bytes;
+        self.entries.insert(k, Entry { bytes, last_use: now, inserted: now });
+        evicted
+    }
+
+    pub fn remove(&mut self, k: &K) -> bool {
+        if let Some(e) = self.entries.remove(k) {
+            self.used -= e.bytes;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Remove all entries idle ≥ `keep_alive`; returns (key, residency time
+    /// = now − inserted) pairs — the Fig 2 keep-alive distribution data.
+    pub fn expire(&mut self, now: SimTime, keep_alive: SimTime) -> Vec<(K, SimTime)> {
+        let victims: Vec<K> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| now.saturating_sub(e.last_use) >= keep_alive)
+            .map(|(k, _)| k.clone())
+            .collect();
+        let mut out = Vec::with_capacity(victims.len());
+        for k in victims {
+            let e = &self.entries[&k];
+            out.push((k.clone(), now.saturating_sub(e.inserted)));
+            self.remove(&k);
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minicheck::check;
+
+    #[test]
+    fn basic_insert_evict() {
+        let mut c: LruCache<u32> = LruCache::new(100);
+        assert!(c.insert(1, 60, SimTime(1)).is_empty());
+        assert!(c.insert(2, 40, SimTime(2)).is_empty());
+        let ev = c.insert(3, 50, SimTime(3));
+        assert_eq!(ev, vec![1]); // 1 is LRU
+        assert_eq!(c.used(), 90);
+    }
+
+    #[test]
+    fn touch_protects_from_eviction() {
+        let mut c: LruCache<u32> = LruCache::new(100);
+        c.insert(1, 50, SimTime(1));
+        c.insert(2, 50, SimTime(2));
+        c.touch(&1, SimTime(3));
+        let ev = c.insert(3, 50, SimTime(4));
+        assert_eq!(ev, vec![2]);
+    }
+
+    #[test]
+    fn reinsert_refreshes_without_eviction() {
+        let mut c: LruCache<u32> = LruCache::new(100);
+        c.insert(1, 100, SimTime(1));
+        assert!(c.insert(1, 100, SimTime(2)).is_empty());
+        assert_eq!(c.used(), 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "larger than cache capacity")]
+    fn oversized_item_panics() {
+        let mut c: LruCache<u32> = LruCache::new(10);
+        c.insert(1, 11, SimTime(1));
+    }
+
+    #[test]
+    fn expire_returns_residency() {
+        let mut c: LruCache<&'static str> = LruCache::new(1000);
+        c.insert("a", 1, SimTime::from_secs(0.0));
+        c.insert("b", 1, SimTime::from_secs(5.0));
+        c.touch(&"a", SimTime::from_secs(7.0));
+        // At t=21: a idle 14s < 15s stays; b idle 16s ≥ 15s → expires with
+        // residency 16s.
+        let ex = c.expire(SimTime::from_secs(21.0), SimTime::from_secs(15.0));
+        assert_eq!(ex.len(), 1);
+        assert_eq!(ex[0].0, "b");
+        assert_eq!(ex[0].1, SimTime::from_secs(16.0));
+        assert!(c.contains(&"a"));
+    }
+
+    #[test]
+    fn property_used_matches_sum_and_capacity_respected() {
+        check("LRU accounting invariants", 100, |rng| {
+            let cap = rng.range(50, 500);
+            let mut c: LruCache<u64> = LruCache::new(cap);
+            let mut t = 0u64;
+            for _ in 0..rng.range(1, 100) {
+                t += 1;
+                let k = rng.below(30);
+                let sz = rng.range(1, cap.min(100));
+                match rng.below(3) {
+                    0 => {
+                        c.insert(k, sz, SimTime(t));
+                    }
+                    1 => {
+                        c.remove(&k);
+                    }
+                    _ => c.touch(&k, SimTime(t)),
+                }
+                assert!(c.used() <= cap, "over capacity");
+            }
+        });
+    }
+}

@@ -1,0 +1,200 @@
+//! Tiered model-memory management (§5): GPU HBM / host memory / SSD
+//! residency per node, LRU keep-alive eviction (the §2.3 motivation
+//! experiments), and pre-allocated block pools.
+
+pub mod lru;
+pub mod pool;
+
+pub use lru::LruCache;
+pub use pool::BlockPool;
+
+use crate::sim::time::SimTime;
+use crate::sim::transfer::Tier;
+use std::collections::HashMap;
+
+/// Where a model can be fetched from, best first (locality-driven startup).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Locality {
+    /// Hot start: already in GPU memory.
+    Gpu,
+    /// Warm start: in this node's host memory.
+    HostMem,
+    /// Cold-ish: on this node's SSD.
+    Ssd,
+    /// Cold: only remote copies exist.
+    Remote,
+}
+
+/// One node's two managed tiers (SSD treated as unlimited-but-slow, per the
+/// paper's testbed where all models fit on NVMe).
+#[derive(Clone, Debug)]
+pub struct NodeMemory {
+    pub gpu_capacity: u64,
+    pub host_capacity: u64,
+    gpu: LruCache<String>,
+    host: LruCache<String>,
+    /// Models present on local SSD (unbounded).
+    ssd: std::collections::HashSet<String>,
+}
+
+impl NodeMemory {
+    pub fn new(gpu_capacity: u64, host_capacity: u64) -> Self {
+        NodeMemory {
+            gpu_capacity,
+            host_capacity,
+            gpu: LruCache::new(gpu_capacity),
+            host: LruCache::new(host_capacity),
+            ssd: Default::default(),
+        }
+    }
+
+    pub fn put_ssd(&mut self, model: &str) {
+        self.ssd.insert(model.to_string());
+    }
+
+    /// Best local tier for `model`.
+    pub fn locality(&self, model: &str) -> Locality {
+        if self.gpu.contains(&model.to_string()) {
+            Locality::Gpu
+        } else if self.host.contains(&model.to_string()) {
+            Locality::HostMem
+        } else if self.ssd.contains(model) {
+            Locality::Ssd
+        } else {
+            Locality::Remote
+        }
+    }
+
+    /// Insert into GPU tier (evicting LRU models as needed); returns evicted.
+    pub fn load_gpu(&mut self, model: &str, bytes: u64, now: SimTime) -> Vec<String> {
+        self.gpu.insert(model.to_string(), bytes, now)
+    }
+
+    /// Insert into host tier; returns evicted.
+    pub fn load_host(&mut self, model: &str, bytes: u64, now: SimTime) -> Vec<String> {
+        self.host.insert(model.to_string(), bytes, now)
+    }
+
+    pub fn touch(&mut self, model: &str, now: SimTime) {
+        self.gpu.touch(&model.to_string(), now);
+        self.host.touch(&model.to_string(), now);
+    }
+
+    /// Drop GPU-resident models idle since before `now - keep_alive`
+    /// (the serverless keep-alive policy); returns (model, idle-duration).
+    pub fn expire_gpu(&mut self, now: SimTime, keep_alive: SimTime) -> Vec<(String, SimTime)> {
+        self.gpu.expire(now, keep_alive)
+    }
+
+    pub fn expire_host(&mut self, now: SimTime, keep_alive: SimTime) -> Vec<(String, SimTime)> {
+        self.host.expire(now, keep_alive)
+    }
+
+    pub fn evict_gpu(&mut self, model: &str) {
+        self.gpu.remove(&model.to_string());
+    }
+
+    pub fn gpu_used(&self) -> u64 {
+        self.gpu.used()
+    }
+
+    pub fn host_used(&self) -> u64 {
+        self.host.used()
+    }
+
+    pub fn gpu_models(&self) -> Vec<String> {
+        self.gpu.keys()
+    }
+
+    pub fn host_models(&self) -> Vec<String> {
+        self.host.keys()
+    }
+}
+
+/// Cluster-wide view used by the locality-driven startup scheme (§5):
+/// classify every node by its locality for a model, best sources first.
+pub fn rank_sources(nodes: &HashMap<usize, NodeMemory>, model: &str) -> Vec<(usize, Locality)> {
+    let mut v: Vec<(usize, Locality)> =
+        nodes.iter().map(|(&n, m)| (n, m.locality(model))).collect();
+    let rank = |l: Locality| match l {
+        Locality::Gpu => 0,
+        Locality::HostMem => 1,
+        Locality::Ssd => 2,
+        Locality::Remote => 3,
+    };
+    v.sort_by_key(|&(n, l)| (rank(l), n));
+    v
+}
+
+/// Map [`Locality`] to the simulator's source tier.
+pub fn locality_tier(l: Locality) -> Option<Tier> {
+    match l {
+        Locality::Gpu => Some(Tier::Gpu),
+        Locality::HostMem => Some(Tier::HostMem),
+        Locality::Ssd => Some(Tier::Ssd),
+        Locality::Remote => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gb(x: u64) -> u64 {
+        x * 1_000_000_000
+    }
+
+    #[test]
+    fn locality_ladder() {
+        let mut m = NodeMemory::new(gb(80), gb(200));
+        assert_eq!(m.locality("x"), Locality::Remote);
+        m.put_ssd("x");
+        assert_eq!(m.locality("x"), Locality::Ssd);
+        m.load_host("x", gb(26), SimTime::ZERO);
+        assert_eq!(m.locality("x"), Locality::HostMem);
+        m.load_gpu("x", gb(26), SimTime::ZERO);
+        assert_eq!(m.locality("x"), Locality::Gpu);
+    }
+
+    #[test]
+    fn gpu_capacity_evicts_lru() {
+        let mut m = NodeMemory::new(gb(80), gb(200));
+        m.load_gpu("a", gb(30), SimTime::from_secs(1.0));
+        m.load_gpu("b", gb(30), SimTime::from_secs(2.0));
+        m.touch("a", SimTime::from_secs(3.0)); // a now more recent than b
+        let evicted = m.load_gpu("c", gb(30), SimTime::from_secs(4.0));
+        assert_eq!(evicted, vec!["b".to_string()]);
+        assert_eq!(m.locality("a"), Locality::Gpu);
+        assert_eq!(m.locality("b"), Locality::Remote);
+    }
+
+    #[test]
+    fn keep_alive_expiry() {
+        let mut m = NodeMemory::new(gb(80), gb(200));
+        m.load_gpu("a", gb(10), SimTime::from_secs(0.0));
+        m.load_gpu("b", gb(10), SimTime::from_secs(8.0));
+        let expired = m.expire_gpu(SimTime::from_secs(16.0), SimTime::from_secs(15.0));
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].0, "a");
+        assert!(expired[0].1 >= SimTime::from_secs(15.0));
+        assert_eq!(m.locality("b"), Locality::Gpu);
+    }
+
+    #[test]
+    fn rank_sources_orders_by_tier() {
+        let mut nodes = HashMap::new();
+        let mut a = NodeMemory::new(gb(80), gb(100));
+        a.put_ssd("m");
+        let mut b = NodeMemory::new(gb(80), gb(100));
+        b.load_gpu("m", gb(10), SimTime::ZERO);
+        let mut c = NodeMemory::new(gb(80), gb(100));
+        c.load_host("m", gb(10), SimTime::ZERO);
+        nodes.insert(0, a);
+        nodes.insert(1, b);
+        nodes.insert(2, c);
+        let ranked = rank_sources(&nodes, "m");
+        assert_eq!(ranked[0], (1, Locality::Gpu));
+        assert_eq!(ranked[1], (2, Locality::HostMem));
+        assert_eq!(ranked[2], (0, Locality::Ssd));
+    }
+}

@@ -1,0 +1,148 @@
+//! GPU memory pre-allocation pool (§5, Fig 17 "+Pre-alloc").
+//!
+//! Block and intermediate-result buffers have fixed sizes during pipeline
+//! execution, so λScale pre-allocates slabs once and recycles them; runtime
+//! allocation only happens on pool miss (and is counted, since each miss
+//! costs `alloc_overhead_s` in the transfer model).
+
+/// A fixed-slab pool: `n_slabs` buffers of `slab_bytes` each.
+#[derive(Clone, Debug)]
+pub struct BlockPool {
+    slab_bytes: u64,
+    free: Vec<u32>,
+    total: u32,
+    /// Allocations served from the pool.
+    pub hits: u64,
+    /// Allocations that had to fall back to a fresh allocation.
+    pub misses: u64,
+}
+
+/// Handle to a pool slab (or a fallback allocation).
+#[derive(Debug, PartialEq, Eq)]
+pub struct Slab {
+    pub id: u32,
+    pub from_pool: bool,
+}
+
+impl BlockPool {
+    pub fn new(slab_bytes: u64, n_slabs: u32) -> Self {
+        BlockPool {
+            slab_bytes,
+            free: (0..n_slabs).rev().collect(),
+            total: n_slabs,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn slab_bytes(&self) -> u64 {
+        self.slab_bytes
+    }
+
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn capacity(&self) -> u32 {
+        self.total
+    }
+
+    /// Acquire a buffer of `bytes`. Pool slabs serve any request that fits;
+    /// larger requests and pool exhaustion fall back to a (counted) fresh
+    /// allocation.
+    pub fn acquire(&mut self, bytes: u64) -> Slab {
+        if bytes <= self.slab_bytes {
+            if let Some(id) = self.free.pop() {
+                self.hits += 1;
+                return Slab { id, from_pool: true };
+            }
+        }
+        self.misses += 1;
+        // Fallback ids live above the pool range.
+        let id = self.total + self.misses as u32;
+        Slab { id, from_pool: false }
+    }
+
+    /// Return a slab to the pool. Fallback allocations are simply dropped.
+    pub fn release(&mut self, slab: Slab) {
+        if slab.from_pool {
+            debug_assert!(slab.id < self.total);
+            debug_assert!(!self.free.contains(&slab.id), "double release of slab {}", slab.id);
+            self.free.push(slab.id);
+        }
+    }
+
+    /// Pool hit rate over all acquisitions so far.
+    pub fn hit_rate(&self) -> f64 {
+        let n = self.hits + self.misses;
+        if n == 0 {
+            return 1.0;
+        }
+        self.hits as f64 / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minicheck::check;
+
+    #[test]
+    fn acquire_release_cycle() {
+        let mut p = BlockPool::new(1 << 20, 2);
+        let a = p.acquire(1000);
+        let b = p.acquire(1000);
+        assert!(a.from_pool && b.from_pool);
+        assert_eq!(p.available(), 0);
+        let c = p.acquire(1000); // exhausted → miss
+        assert!(!c.from_pool);
+        p.release(a);
+        assert_eq!(p.available(), 1);
+        let d = p.acquire(1000);
+        assert!(d.from_pool);
+        assert_eq!(p.hits, 3);
+        assert_eq!(p.misses, 1);
+    }
+
+    #[test]
+    fn oversized_requests_miss() {
+        let mut p = BlockPool::new(100, 4);
+        let s = p.acquire(101);
+        assert!(!s.from_pool);
+        assert_eq!(p.available(), 4);
+    }
+
+    #[test]
+    fn hit_rate_tracks() {
+        let mut p = BlockPool::new(100, 1);
+        assert_eq!(p.hit_rate(), 1.0);
+        let a = p.acquire(1);
+        p.acquire(1);
+        assert_eq!(p.hit_rate(), 0.5);
+        p.release(a);
+    }
+
+    #[test]
+    fn property_never_double_hands_a_slab() {
+        check("pool never double-allocates a slab", 100, |rng| {
+            let mut p = BlockPool::new(100, rng.range(1, 8) as u32);
+            let mut held: Vec<Slab> = Vec::new();
+            for _ in 0..rng.range(1, 200) {
+                if rng.below(2) == 0 {
+                    let s = p.acquire(rng.range(1, 150));
+                    if s.from_pool {
+                        assert!(
+                            !held.iter().any(|h| h.from_pool && h.id == s.id),
+                            "slab {} handed out twice",
+                            s.id
+                        );
+                    }
+                    held.push(s);
+                } else if !held.is_empty() {
+                    let idx = rng.below(held.len() as u64) as usize;
+                    p.release(held.swap_remove(idx));
+                }
+            }
+        });
+    }
+}

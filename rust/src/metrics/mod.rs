@@ -1,0 +1,202 @@
+//! Serving metrics: per-request TTFT/latency records, throughput timelines,
+//! and GPU-time (cost) accounting — the measurement layer behind §7's
+//! throughput (TPS), latency (TTFT) and cost-effectiveness (GPU time)
+//! metrics.
+
+use crate::sim::time::SimTime;
+use crate::util::stats::Samples;
+
+/// Outcome of one served request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestMetrics {
+    pub id: u64,
+    pub arrival: SimTime,
+    /// Time the first output token was produced.
+    pub first_token: SimTime,
+    /// Time the last output token was produced.
+    pub completion: SimTime,
+    pub output_tokens: usize,
+}
+
+impl RequestMetrics {
+    pub fn ttft(&self) -> f64 {
+        (self.first_token.saturating_sub(self.arrival)).as_secs()
+    }
+
+    pub fn latency(&self) -> f64 {
+        (self.completion.saturating_sub(self.arrival)).as_secs()
+    }
+}
+
+/// Collector for one serving run.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsCollector {
+    pub requests: Vec<RequestMetrics>,
+    /// (time, tokens-generated-in-window) samples for throughput timelines.
+    token_events: Vec<(SimTime, usize)>,
+    /// (time, gpus-allocated) step series for cost accounting.
+    gpu_alloc: Vec<(SimTime, usize)>,
+}
+
+impl MetricsCollector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&mut self, m: RequestMetrics) {
+        self.requests.push(m);
+    }
+
+    /// Record `n` tokens generated at time `t`.
+    pub fn record_tokens(&mut self, t: SimTime, n: usize) {
+        self.token_events.push((t, n));
+    }
+
+    /// Record a change in the number of allocated GPUs.
+    pub fn record_gpu_alloc(&mut self, t: SimTime, gpus: usize) {
+        self.gpu_alloc.push((t, gpus));
+    }
+
+    pub fn ttft_samples(&self) -> Samples {
+        let mut s = Samples::new();
+        for r in &self.requests {
+            s.push(r.ttft());
+        }
+        s
+    }
+
+    pub fn latency_samples(&self) -> Samples {
+        let mut s = Samples::new();
+        for r in &self.requests {
+            s.push(r.latency());
+        }
+        s
+    }
+
+    /// Tokens/s over fixed windows (the Fig 9–11 timelines).
+    pub fn throughput_series(&self, window_s: f64, until_s: f64) -> Vec<(f64, f64)> {
+        let n_win = (until_s / window_s).ceil() as usize;
+        let mut counts = vec![0f64; n_win.max(1)];
+        for &(t, n) in &self.token_events {
+            let w = (t.as_secs() / window_s) as usize;
+            if w < counts.len() {
+                counts[w] += n as f64;
+            }
+        }
+        counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (i as f64 * window_s, c / window_s))
+            .collect()
+    }
+
+    /// GPU allocation step series sampled at `window_s` (Fig 14 middle rows).
+    pub fn gpu_series(&self, window_s: f64, until_s: f64) -> Vec<(f64, usize)> {
+        let mut series = Vec::new();
+        let mut events = self.gpu_alloc.clone();
+        events.sort_by_key(|&(t, _)| t);
+        let mut cur = 0usize;
+        let mut idx = 0usize;
+        let n_win = (until_s / window_s).ceil() as usize;
+        for w in 0..n_win {
+            let t_end = (w + 1) as f64 * window_s;
+            let mut peak = cur;
+            while idx < events.len() && events[idx].0.as_secs() < t_end {
+                cur = events[idx].1;
+                peak = peak.max(cur);
+                idx += 1;
+            }
+            series.push((w as f64 * window_s, peak));
+        }
+        series
+    }
+
+    /// Cumulative GPU·seconds (the paper's cost metric, Fig 14 bottom).
+    pub fn gpu_time(&self, until: SimTime) -> f64 {
+        let mut events = self.gpu_alloc.clone();
+        events.sort_by_key(|&(t, _)| t);
+        let mut total = 0.0;
+        let mut cur = 0usize;
+        let mut last = SimTime::ZERO;
+        for &(t, g) in &events {
+            let t = t.min(until);
+            total += cur as f64 * (t.saturating_sub(last)).as_secs();
+            cur = g;
+            last = t;
+        }
+        total += cur as f64 * (until.saturating_sub(last)).as_secs();
+        total
+    }
+
+    /// Total tokens generated.
+    pub fn total_tokens(&self) -> usize {
+        self.token_events.iter().map(|&(_, n)| n).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, arr: f64, first: f64, done: f64) -> RequestMetrics {
+        RequestMetrics {
+            id,
+            arrival: SimTime::from_secs(arr),
+            first_token: SimTime::from_secs(first),
+            completion: SimTime::from_secs(done),
+            output_tokens: 4,
+        }
+    }
+
+    #[test]
+    fn ttft_and_latency() {
+        let r = req(0, 1.0, 1.25, 2.0);
+        assert!((r.ttft() - 0.25).abs() < 1e-9);
+        assert!((r.latency() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_series_windows() {
+        let mut c = MetricsCollector::new();
+        c.record_tokens(SimTime::from_secs(0.1), 10);
+        c.record_tokens(SimTime::from_secs(0.9), 10);
+        c.record_tokens(SimTime::from_secs(1.5), 30);
+        let s = c.throughput_series(1.0, 2.0);
+        assert_eq!(s.len(), 2);
+        assert!((s[0].1 - 20.0).abs() < 1e-9);
+        assert!((s[1].1 - 30.0).abs() < 1e-9);
+        assert_eq!(c.total_tokens(), 50);
+    }
+
+    #[test]
+    fn gpu_time_integrates_steps() {
+        let mut c = MetricsCollector::new();
+        c.record_gpu_alloc(SimTime::from_secs(0.0), 2);
+        c.record_gpu_alloc(SimTime::from_secs(10.0), 6);
+        c.record_gpu_alloc(SimTime::from_secs(20.0), 0);
+        // [0,10): 2 GPUs, [10,20): 6 GPUs, [20,30): 0
+        assert!((c.gpu_time(SimTime::from_secs(30.0)) - (20.0 + 60.0)).abs() < 1e-9);
+        // Truncation mid-interval.
+        assert!((c.gpu_time(SimTime::from_secs(15.0)) - (20.0 + 30.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gpu_series_tracks_peaks() {
+        let mut c = MetricsCollector::new();
+        c.record_gpu_alloc(SimTime::from_secs(0.5), 4);
+        c.record_gpu_alloc(SimTime::from_secs(0.8), 1);
+        let s = c.gpu_series(1.0, 2.0);
+        assert_eq!(s[0].1, 4); // peak within first window
+        assert_eq!(s[1].1, 1);
+    }
+
+    #[test]
+    fn percentiles_via_samples() {
+        let mut c = MetricsCollector::new();
+        for i in 0..100 {
+            c.record_request(req(i, 0.0, (i + 1) as f64 / 100.0, 2.0));
+        }
+        let mut s = c.ttft_samples();
+        assert!((s.p90() - 0.901).abs() < 0.01);
+    }
+}

@@ -1,0 +1,189 @@
+//! Model metadata: specs (paper's Llama-2 family + the local tiny model),
+//! block partitioning for multicast, and the multi-tenant registry.
+
+mod registry;
+
+pub use registry::{ModelRegistry, RegisteredModel};
+
+/// A model deployed on the platform.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Total parameter bytes to move during scaling (fp16 for the paper's
+    /// models, fp32 for the local tiny artifacts).
+    pub bytes: u64,
+    /// Transformer layer count (pipeline-parallel unit).
+    pub n_layers: usize,
+    /// FLOPs per token per forward pass ≈ 2 * params.
+    pub flops_per_token: f64,
+    /// GPUs a single replica needs (1 for 7B/13B on 80 GB; 4 for 70B).
+    pub gpus_per_replica: usize,
+}
+
+impl ModelSpec {
+    pub fn new(name: &str, bytes: u64, n_layers: usize, gpus_per_replica: usize) -> Self {
+        let params = bytes as f64 / 2.0; // fp16
+        ModelSpec {
+            name: name.to_string(),
+            bytes,
+            n_layers,
+            flops_per_token: 2.0 * params,
+            gpus_per_replica,
+        }
+    }
+
+    /// Llama-2 7B: ~13.5 GB fp16, 32 layers, fits one GPU.
+    pub fn llama2_7b() -> Self {
+        ModelSpec::new("llama2-7b", 13_500_000_000, 32, 1)
+    }
+
+    /// Llama-2 13B: ~26 GB fp16, 40 layers, fits one GPU.
+    pub fn llama2_13b() -> Self {
+        ModelSpec::new("llama2-13b", 26_000_000_000, 40, 1)
+    }
+
+    /// Llama-2 70B: ~140 GB fp16, 80 layers, 4 GPUs per replica (Testbed2).
+    pub fn llama2_70b() -> Self {
+        ModelSpec::new("llama2-70b", 140_000_000_000, 80, 4)
+    }
+
+    /// The local tiny artifact model (~5.5M params fp32), for real execution.
+    pub fn tiny_local(bytes: u64, n_layers: usize) -> Self {
+        let mut s = ModelSpec::new("tiny-local", bytes, n_layers, 1);
+        s.flops_per_token = 2.0 * (bytes as f64 / 4.0); // fp32
+        s
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "llama2-7b" | "7b" => Some(Self::llama2_7b()),
+            "llama2-13b" | "13b" => Some(Self::llama2_13b()),
+            "llama2-70b" | "70b" => Some(Self::llama2_70b()),
+            _ => None,
+        }
+    }
+
+    /// Partition into `b` multicast blocks (§4.2): contiguous, near-equal
+    /// byte ranges aligned to layer boundaries where possible.
+    pub fn partition(&self, b: usize) -> Partition {
+        assert!(b >= 1, "need at least one block");
+        let layers_per_block = split_even(self.n_layers, b.min(self.n_layers));
+        let b_eff = layers_per_block.len();
+        let bytes_per_layer = self.bytes / self.n_layers as u64;
+        let mut blocks = Vec::with_capacity(b_eff);
+        let mut layer = 0usize;
+        for (i, &nl) in layers_per_block.iter().enumerate() {
+            let bytes = if i == b_eff - 1 {
+                self.bytes - bytes_per_layer * layer as u64
+            } else {
+                bytes_per_layer * nl as u64
+            };
+            blocks.push(BlockInfo { index: i, layer_start: layer, layer_end: layer + nl, bytes });
+            layer += nl;
+        }
+        Partition { model: self.name.clone(), blocks }
+    }
+}
+
+/// Split `total` into `parts` near-equal positive chunks.
+fn split_even(total: usize, parts: usize) -> Vec<usize> {
+    assert!(parts >= 1 && parts <= total, "cannot split {total} layers into {parts} blocks");
+    let base = total / parts;
+    let rem = total % parts;
+    (0..parts).map(|i| base + usize::from(i < rem)).collect()
+}
+
+/// One multicast block (contiguous layer range).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockInfo {
+    pub index: usize,
+    pub layer_start: usize,
+    pub layer_end: usize,
+    pub bytes: u64,
+}
+
+impl BlockInfo {
+    pub fn n_layers(&self) -> usize {
+        self.layer_end - self.layer_start
+    }
+}
+
+/// A model partitioned into multicast blocks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Partition {
+    pub model: String,
+    pub blocks: Vec<BlockInfo>,
+}
+
+impl Partition {
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn block_bytes(&self) -> Vec<u64> {
+        self.blocks.iter().map(|b| b.bytes).collect()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.blocks.iter().map(|b| b.bytes).sum()
+    }
+}
+
+/// The paper's default multicast granularity (Fig 18 elbow).
+pub const DEFAULT_BLOCKS: usize = 16;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minicheck::check;
+
+    #[test]
+    fn specs_match_paper() {
+        assert_eq!(ModelSpec::llama2_70b().bytes, 140_000_000_000);
+        assert_eq!(ModelSpec::llama2_70b().gpus_per_replica, 4);
+        assert_eq!(ModelSpec::llama2_7b().gpus_per_replica, 1);
+        assert!(ModelSpec::by_name("13b").is_some());
+        assert!(ModelSpec::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn partition_covers_model() {
+        let m = ModelSpec::llama2_13b();
+        for b in [1, 2, 8, 16, 24, 40] {
+            let p = m.partition(b);
+            assert_eq!(p.n_blocks(), b);
+            assert_eq!(p.total_bytes(), m.bytes, "b={b}");
+            assert_eq!(p.blocks[0].layer_start, 0);
+            assert_eq!(p.blocks.last().unwrap().layer_end, m.n_layers);
+            for w in p.blocks.windows(2) {
+                assert_eq!(w[0].layer_end, w[1].layer_start);
+            }
+        }
+    }
+
+    #[test]
+    fn partition_clamps_to_layers() {
+        let m = ModelSpec::new("x", 1000, 4, 1);
+        let p = m.partition(16); // more blocks than layers → clamp to 4
+        assert_eq!(p.n_blocks(), 4);
+        assert_eq!(p.total_bytes(), 1000);
+    }
+
+    #[test]
+    fn partition_property_bytes_conserved() {
+        check("partition conserves bytes and layers", 100, |rng| {
+            let layers = rng.range(1, 96) as usize;
+            let bytes = rng.range(1_000, 1_000_000_000);
+            let m = ModelSpec::new("t", bytes, layers, 1);
+            let b = rng.range(1, 64) as usize;
+            let p = m.partition(b);
+            assert_eq!(p.total_bytes(), bytes);
+            assert_eq!(p.blocks.iter().map(|bl| bl.n_layers()).sum::<usize>(), layers);
+            assert!(p.blocks.iter().all(|bl| bl.n_layers() >= 1));
+            // Near-even: layer counts differ by at most 1.
+            let min = p.blocks.iter().map(|bl| bl.n_layers()).min().unwrap();
+            let max = p.blocks.iter().map(|bl| bl.n_layers()).max().unwrap();
+            assert!(max - min <= 1);
+        });
+    }
+}

@@ -1,0 +1,126 @@
+//! Multi-tenant model registry: the set of models published on the platform
+//! and where their bytes currently live (which nodes, which tiers).
+
+use super::ModelSpec;
+use crate::sim::transfer::Tier;
+use std::collections::BTreeMap;
+
+/// Registry entry with placement state.
+#[derive(Clone, Debug)]
+pub struct RegisteredModel {
+    pub spec: ModelSpec,
+    /// Per-node residency tier (absent = not on that node).
+    pub placement: BTreeMap<usize, Tier>,
+}
+
+impl RegisteredModel {
+    /// Nodes holding a full replica at `tier` or better (Gpu < HostMem < Ssd).
+    pub fn holders_at_least(&self, tier: Tier) -> Vec<usize> {
+        let rank = |t: Tier| match t {
+            Tier::Gpu => 0,
+            Tier::HostMem => 1,
+            Tier::Ssd => 2,
+        };
+        self.placement
+            .iter()
+            .filter(|(_, &t)| rank(t) <= rank(tier))
+            .map(|(&n, _)| n)
+            .collect()
+    }
+}
+
+/// The platform's model registry.
+#[derive(Clone, Debug, Default)]
+pub struct ModelRegistry {
+    models: BTreeMap<String, RegisteredModel>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn publish(&mut self, spec: ModelSpec) {
+        self.models
+            .insert(spec.name.clone(), RegisteredModel { spec, placement: BTreeMap::new() });
+    }
+
+    pub fn get(&self, name: &str) -> Option<&RegisteredModel> {
+        self.models.get(name)
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut RegisteredModel> {
+        self.models.get_mut(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Record that `node` now holds `model` at `tier` (upgrades only —
+    /// a GPU-resident copy is never downgraded by a host-memory record).
+    pub fn place(&mut self, model: &str, node: usize, tier: Tier) {
+        let rank = |t: Tier| match t {
+            Tier::Gpu => 0,
+            Tier::HostMem => 1,
+            Tier::Ssd => 2,
+        };
+        if let Some(m) = self.models.get_mut(model) {
+            m.placement
+                .entry(node)
+                .and_modify(|t| {
+                    if rank(tier) < rank(*t) {
+                        *t = tier;
+                    }
+                })
+                .or_insert(tier);
+        }
+    }
+
+    /// Remove `model`'s copy from `node` entirely (eviction).
+    pub fn evict(&mut self, model: &str, node: usize) {
+        if let Some(m) = self.models.get_mut(model) {
+            m.placement.remove(&node);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_place_evict() {
+        let mut r = ModelRegistry::new();
+        r.publish(ModelSpec::llama2_7b());
+        r.place("llama2-7b", 0, Tier::Gpu);
+        r.place("llama2-7b", 1, Tier::HostMem);
+        r.place("llama2-7b", 2, Tier::Ssd);
+        let m = r.get("llama2-7b").unwrap();
+        assert_eq!(m.holders_at_least(Tier::Gpu), vec![0]);
+        assert_eq!(m.holders_at_least(Tier::HostMem), vec![0, 1]);
+        assert_eq!(m.holders_at_least(Tier::Ssd), vec![0, 1, 2]);
+        r.evict("llama2-7b", 0);
+        assert!(r.get("llama2-7b").unwrap().holders_at_least(Tier::Gpu).is_empty());
+    }
+
+    #[test]
+    fn place_only_upgrades() {
+        let mut r = ModelRegistry::new();
+        r.publish(ModelSpec::llama2_7b());
+        r.place("llama2-7b", 0, Tier::Gpu);
+        r.place("llama2-7b", 0, Tier::Ssd); // must not downgrade
+        assert_eq!(r.get("llama2-7b").unwrap().placement[&0], Tier::Gpu);
+        r.place("llama2-7b", 1, Tier::Ssd);
+        r.place("llama2-7b", 1, Tier::HostMem); // upgrade ok
+        assert_eq!(r.get("llama2-7b").unwrap().placement[&1], Tier::HostMem);
+    }
+}

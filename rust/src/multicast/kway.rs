@@ -1,0 +1,194 @@
+//! Algorithm 1 — k-way transmission strategy (§4.2).
+//!
+//! `k` source nodes each drive a binomial-pipeline sub-group; the `b`
+//! ordered blocks are split into `k` chunks and each sub-group transfers
+//! the chunks in a circularly shifted order, so destination nodes across
+//! sub-groups hold *complementary* model parts after only `~b/k` rounds —
+//! exactly what execution-pipeline generation (Algorithm 2) needs to
+//! assemble complete distributed replicas early.
+
+use super::binomial::binomial_plan_ordered;
+use super::{BlockId, MulticastPlan, NodeId};
+use crate::sim::time::SimTime;
+use crate::sim::transfer::Tier;
+
+/// Algorithm 1: block transfer orders for the k sub-groups.
+///
+/// Partitions `{0..b}` into `k` chunks of `⌈b/k⌉` (last possibly short) and
+/// gives sub-group `i` the chunk sequence `S_i, S_{i+1}, …` (circular).
+pub fn chunk_orders(b: usize, k: usize) -> Vec<Vec<BlockId>> {
+    assert!(b >= 1 && k >= 1);
+    let k = k.min(b); // more sub-groups than blocks degenerates to b chunks
+    let l = b.div_ceil(k);
+    let chunks: Vec<Vec<BlockId>> = (0..k)
+        .map(|i| ((l * i)..((l * (i + 1)).min(b))).collect())
+        .collect();
+    (0..k)
+        .map(|i| (0..k).flat_map(|j| chunks[(i + j) % k].iter().copied()).collect())
+        .collect()
+}
+
+/// Evenly split destination nodes into `k` sub-groups (sizes differ ≤ 1).
+pub fn split_subgroups(dests: &[NodeId], k: usize) -> Vec<Vec<NodeId>> {
+    assert!(k >= 1);
+    let k = k.min(dests.len().max(1));
+    let base = dests.len() / k;
+    let rem = dests.len() % k;
+    let mut out = Vec::with_capacity(k);
+    let mut idx = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < rem);
+        out.push(dests[idx..idx + len].to_vec());
+        idx += len;
+    }
+    out
+}
+
+/// Build the full k→N plan: `nodes[0..k]` are sources each holding the
+/// complete model at `source_tier`; the rest are destinations.
+pub fn kway_plan(
+    nodes: &[NodeId],
+    k: usize,
+    n_blocks: usize,
+    source_tier: Tier,
+) -> MulticastPlan {
+    assert!(k >= 1 && k < nodes.len(), "k-way needs k sources and ≥1 destination");
+    let sources = &nodes[..k];
+    let dests = &nodes[k..];
+    let orders = chunk_orders(n_blocks, k);
+    let groups = split_subgroups(dests, k);
+
+    let mut plan = MulticastPlan {
+        name: format!("kway-{k}"),
+        initial: Vec::new(),
+        intents: Vec::new(),
+        start_delay: SimTime::ZERO,
+        rounds: None,
+    };
+    let mut max_rounds = 0usize;
+    for (i, group) in groups.iter().enumerate() {
+        let order = &orders[i % orders.len()];
+        let mut members = vec![sources[i]];
+        members.extend_from_slice(group);
+        let sub = binomial_plan_ordered(&members, order, source_tier);
+        plan.initial.extend(sub.initial);
+        plan.intents.extend(sub.intents);
+        max_rounds = max_rounds.max(sub.rounds.unwrap_or(0));
+    }
+    // Sources beyond those driving groups (k > #groups) still hold the model.
+    for &s in &sources[groups.len().min(k)..] {
+        for b in 0..n_blocks {
+            plan.initial.push((s, b, source_tier));
+        }
+    }
+    plan.rounds = Some(max_rounds);
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minicheck::check;
+
+    #[test]
+    fn paper_example_2way_4blocks() {
+        // §4.2 example: b=4, k=2 → chunks {0,1},{2,3}; group 1 sends 0,1,2,3
+        // and group 2 sends 2,3,0,1.
+        let o = chunk_orders(4, 2);
+        assert_eq!(o[0], vec![0, 1, 2, 3]);
+        assert_eq!(o[1], vec![2, 3, 0, 1]);
+    }
+
+    #[test]
+    fn orders_are_permutations() {
+        check("k-way orders are permutations of all blocks", 100, |rng| {
+            let b = rng.range(1, 64) as usize;
+            let k = rng.range(1, 8) as usize;
+            let orders = chunk_orders(b, k);
+            assert_eq!(orders.len(), k.min(b));
+            for o in &orders {
+                let mut sorted = o.clone();
+                sorted.sort_unstable();
+                assert_eq!(sorted, (0..b).collect::<Vec<_>>(), "b={b} k={k}");
+            }
+        });
+    }
+
+    #[test]
+    fn orders_cover_all_blocks_early() {
+        // Complementarity: after the first chunk (⌈b/k⌉ blocks) of every
+        // sub-group, the union of transferred blocks is the whole model.
+        for (b, k) in [(16usize, 2usize), (16, 4), (15, 4), (8, 3)] {
+            let orders = chunk_orders(b, k);
+            let l = b.div_ceil(orders.len());
+            let mut seen = std::collections::HashSet::new();
+            for o in &orders {
+                seen.extend(o.iter().take(l).copied());
+            }
+            assert_eq!(seen.len(), b, "b={b} k={k}");
+        }
+    }
+
+    #[test]
+    fn subgroup_split_even() {
+        check("sub-group split is even and complete", 100, |rng| {
+            let n = rng.range(1, 64) as usize;
+            let k = rng.range(1, 8) as usize;
+            let dests: Vec<NodeId> = (0..n).collect();
+            let groups = split_subgroups(&dests, k);
+            let sizes: Vec<usize> = groups.iter().map(|g| g.len()).collect();
+            assert_eq!(sizes.iter().sum::<usize>(), n);
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "uneven split {sizes:?}");
+            let mut all: Vec<NodeId> = groups.concat();
+            all.sort_unstable();
+            assert_eq!(all, dests);
+        });
+    }
+
+    #[test]
+    fn kway_plan_delivers_everything() {
+        use crate::config::NetworkConfig;
+        use crate::sim::transfer::TransferOpts;
+        let net = NetworkConfig::default();
+        for (n, k, b) in [(8usize, 2usize, 4usize), (12, 4, 16), (9, 2, 8), (12, 1, 16)] {
+            let nodes: Vec<NodeId> = (0..n).collect();
+            let plan = kway_plan(&nodes, k, b, Tier::Gpu);
+            let bytes = vec![50_000_000u64; b];
+            let log = plan.execute(&net, TransferOpts::default(), &bytes);
+            assert!(
+                log.all_complete(&nodes, b).is_some(),
+                "n={n} k={k} b={b}: some node incomplete"
+            );
+        }
+    }
+
+    #[test]
+    fn higher_k_assembles_first_replica_faster() {
+        // The point of Algorithm 1: the first complete distributed replica
+        // (union across one node per sub-group) exists after ~b/k rounds.
+        use crate::config::NetworkConfig;
+        use crate::sim::transfer::TransferOpts;
+        let net = NetworkConfig::default();
+        let b = 16usize;
+        let bytes = vec![100_000_000u64; b];
+        let mut first_cover = Vec::new();
+        for k in [1usize, 2, 4] {
+            let nodes: Vec<NodeId> = (0..12).collect();
+            let plan = kway_plan(&nodes, k, b, Tier::Gpu);
+            let log = plan.execute(&net, TransferOpts::default(), &bytes);
+            // Earliest time the union of all *destination* holdings covers
+            // every block (executable distributed replica).
+            let mut per_block_min = vec![SimTime(u64::MAX); b];
+            for (&(node, blk), &t) in &log.arrivals {
+                if node >= k {
+                    per_block_min[blk] = per_block_min[blk].min(t);
+                }
+            }
+            let cover = per_block_min.iter().copied().max().unwrap();
+            first_cover.push((k, cover));
+        }
+        assert!(first_cover[1].1 < first_cover[0].1, "{first_cover:?}");
+        assert!(first_cover[2].1 < first_cover[1].1, "{first_cover:?}");
+    }
+}

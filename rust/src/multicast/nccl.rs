@@ -1,0 +1,77 @@
+//! NCCL-like broadcast baseline: ring-pipelined block transfer preceded by
+//! a communicator (re)initialization cost.
+//!
+//! NCCL is built for long-lived, static process groups; serverless scaling
+//! reconfigures the group on every scale-out, paying `ncclCommInitRank`
+//! each time — the paper measures "up to hundreds of milliseconds" (NCCL
+//! issue #534) and Fig 8 shows it as first-block tail latency. The steady
+//! state is a ring pipeline, which is bandwidth-optimal but adds `N−2`
+//! extra hop steps versus the binomial pipeline's `⌈log₂N⌉−1`.
+
+use super::{MulticastPlan, NodeId};
+use crate::config::NetworkConfig;
+use crate::sim::time::SimTime;
+use crate::sim::transfer::{Medium, SendIntent, Tier};
+
+/// Build the ring-broadcast plan rooted at `nodes[0]` (additional sources
+/// are placed adjacent to the root so they forward immediately).
+pub fn ring_plan(
+    nodes: &[NodeId],
+    n_sources: usize,
+    n_blocks: usize,
+    source_tier: Tier,
+    net: &NetworkConfig,
+) -> MulticastPlan {
+    assert!(!nodes.is_empty() && n_sources >= 1);
+    let mut plan = MulticastPlan {
+        name: "nccl-ring".into(),
+        initial: Vec::new(),
+        intents: Vec::new(),
+        start_delay: SimTime::from_secs(net.nccl_group_init_s),
+        rounds: None,
+    };
+    for &src in &nodes[..n_sources.min(nodes.len())] {
+        for b in 0..n_blocks {
+            plan.initial.push((src, b, source_tier));
+        }
+    }
+    // Chain: node i forwards every block to node i+1 in block order.
+    for w in nodes.windows(2) {
+        for b in 0..n_blocks {
+            plan.intents.push(SendIntent { src: w[0], dst: w[1], block: b, medium: Medium::Rdma });
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::transfer::TransferOpts;
+
+    #[test]
+    fn ring_timing_matches_chain_pipeline() {
+        let net = NetworkConfig::default();
+        let n = 8usize;
+        let b = 16usize;
+        let nodes: Vec<NodeId> = (0..n).collect();
+        let plan = ring_plan(&nodes, 1, b, Tier::Gpu, &net);
+        let bytes = vec![100_000_000u64; b];
+        let log = plan.execute(&net, TransferOpts::default(), &bytes);
+        let step = 0.1 / net.rdma_gbps + (net.rdma_setup_s + net.per_block_mgmt_s);
+        // init + (b + n - 2) pipelined steps
+        let expect = net.nccl_group_init_s + (b + n - 2) as f64 * step;
+        let got = log.all_complete(&nodes, b).unwrap().as_secs();
+        assert!((got - expect).abs() / expect < 0.05, "got {got:.4} expect {expect:.4}");
+    }
+
+    #[test]
+    fn first_block_pays_group_init() {
+        let net = NetworkConfig::default();
+        let nodes: Vec<NodeId> = (0..4).collect();
+        let plan = ring_plan(&nodes, 1, 8, Tier::Gpu, &net);
+        let log = plan.execute(&net, TransferOpts::default(), &vec![10_000_000u64; 8]);
+        let first = log.arrivals[&(1, 0)];
+        assert!(first >= SimTime::from_secs(net.nccl_group_init_s));
+    }
+}

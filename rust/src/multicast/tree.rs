@@ -1,0 +1,105 @@
+//! FaaSNet-style binary-tree multicast baseline.
+//!
+//! Each source roots a binary tree over its share of the destinations and
+//! pipelines blocks level by level. A parent must send every block twice
+//! (once per child) through its single NIC tx port, which is exactly the
+//! limited sender parallelism the paper blames for FaaSNet's growing tail
+//! latency at larger cluster sizes (Fig 8).
+
+use super::{MulticastPlan, NodeId};
+use crate::sim::time::SimTime;
+use crate::sim::transfer::{Medium, SendIntent, Tier};
+
+/// Build the binary-tree plan. `nodes[0..n_sources]` are sources; each
+/// roots a tree over an even share of the destinations.
+pub fn binary_tree_plan(
+    nodes: &[NodeId],
+    n_sources: usize,
+    n_blocks: usize,
+    source_tier: Tier,
+) -> MulticastPlan {
+    assert!(n_sources >= 1 && n_sources <= nodes.len());
+    let sources = &nodes[..n_sources];
+    let dests = &nodes[n_sources..];
+    let shares = super::kway::split_subgroups(dests, n_sources);
+
+    let mut plan = MulticastPlan {
+        name: "binary-tree".into(),
+        initial: Vec::new(),
+        intents: Vec::new(),
+        start_delay: SimTime::ZERO,
+        rounds: None,
+    };
+    for (i, &src) in sources.iter().enumerate() {
+        for b in 0..n_blocks {
+            plan.initial.push((src, b, source_tier));
+        }
+        let share = shares.get(i).map(|s| s.as_slice()).unwrap_or(&[]);
+        // Level-order positions: 0 = source, children of p are 2p+1, 2p+2.
+        let members: Vec<NodeId> = std::iter::once(src).chain(share.iter().copied()).collect();
+        for (p, &node) in members.iter().enumerate() {
+            let children = [2 * p + 1, 2 * p + 2];
+            for blk in 0..n_blocks {
+                for &c in &children {
+                    if c < members.len() {
+                        plan.intents.push(SendIntent {
+                            src: node,
+                            dst: members[c],
+                            block: blk,
+                            medium: Medium::Rdma,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetworkConfig;
+    use crate::sim::transfer::TransferOpts;
+
+    #[test]
+    fn delivers_all_blocks() {
+        let net = NetworkConfig::default();
+        for n in [2usize, 4, 8, 12] {
+            let nodes: Vec<NodeId> = (0..n).collect();
+            let b = 8;
+            let plan = binary_tree_plan(&nodes, 1, b, Tier::Gpu);
+            let log = plan.execute(&net, TransferOpts::default(), &vec![10_000_000u64; b]);
+            assert!(log.all_complete(&nodes, b).is_some(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn slower_than_binomial_at_scale() {
+        // The paper's headline multicast comparison (Fig 7): binomial beats
+        // the binary tree, increasingly so at larger cluster sizes.
+        use crate::multicast::binomial::binomial_plan;
+        let net = NetworkConfig::default();
+        let b = 16usize;
+        let bytes = vec![100_000_000u64; b];
+        for n in [8usize, 12] {
+            let nodes: Vec<NodeId> = (0..n).collect();
+            let tree = binary_tree_plan(&nodes, 1, b, Tier::Gpu)
+                .execute(&net, TransferOpts::default(), &bytes);
+            let bino =
+                binomial_plan(&nodes, b, Tier::Gpu).execute(&net, TransferOpts::default(), &bytes);
+            let t_tree = tree.all_complete(&nodes, b).unwrap();
+            let t_bino = bino.all_complete(&nodes, b).unwrap();
+            assert!(t_bino < t_tree, "n={n}: binomial {t_bino} vs tree {t_tree}");
+        }
+    }
+
+    #[test]
+    fn multi_source_splits_work() {
+        let net = NetworkConfig::default();
+        let nodes: Vec<NodeId> = (0..10).collect();
+        let plan = binary_tree_plan(&nodes, 2, 4, Tier::Gpu);
+        let log = plan.execute(&net, TransferOpts::default(), &vec![10_000_000u64; 4]);
+        assert!(log.all_complete(&nodes, 4).is_some());
+    }
+}

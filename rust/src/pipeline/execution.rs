@@ -1,0 +1,224 @@
+//! 2D pipelined execution performance model (§4.3, Fig 6).
+//!
+//! Dimension 1: each pipeline member owns a contiguous layer range and the
+//! hidden state flows member→member per token. Dimension 2: multiple
+//! batches are in flight, so every stage works on a different batch each
+//! step (classic pipeline parallelism without weight duplication).
+//!
+//! The model: a decode step of a stage with `L` layers costs
+//! `max(weight-read, GEMM) + L·launch-overhead`, plus one activation hop to
+//! the next stage. Steady-state throughput is set by the *slowest* stage;
+//! per-token latency is the sum of stage times plus hops. These analytic
+//! forms drive the serving simulation; the real-compute runtime
+//! (`crate::runtime`) executes the same structure on actual PJRT block
+//! executables.
+
+use crate::config::ComputeConfig;
+use crate::model::ModelSpec;
+use crate::multicast::NodeId;
+
+/// One pipeline stage: a node serving a contiguous layer range.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageSpec {
+    pub node: NodeId,
+    pub n_layers: usize,
+    /// Weight bytes resident at this stage.
+    pub bytes: u64,
+}
+
+/// An execution pipeline — a complete distributed model replica.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExecPipeline {
+    pub stages: Vec<StageSpec>,
+}
+
+impl ExecPipeline {
+    /// Build from a block assignment (`generation::pipeline_block_assignment`)
+    /// and the model partition.
+    pub fn from_assignment(
+        assignment: &[(NodeId, Vec<usize>)],
+        partition: &crate::model::Partition,
+    ) -> Self {
+        let stages = assignment
+            .iter()
+            .map(|(node, blocks)| {
+                let n_layers =
+                    blocks.iter().map(|&b| partition.blocks[b].n_layers()).sum();
+                let bytes = blocks.iter().map(|&b| partition.blocks[b].bytes).sum();
+                StageSpec { node: *node, n_layers, bytes }
+            })
+            .collect();
+        ExecPipeline { stages }
+    }
+
+    /// A trivial single-node "pipeline" (local execution mode).
+    pub fn local(node: NodeId, model: &ModelSpec) -> Self {
+        ExecPipeline {
+            stages: vec![StageSpec { node, n_layers: model.n_layers, bytes: model.bytes }],
+        }
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    pub fn nodes(&self) -> Vec<NodeId> {
+        self.stages.iter().map(|s| s.node).collect()
+    }
+
+    /// Decode-step time of one stage for a given batch size (seconds):
+    /// memory-bound weight read vs compute-bound GEMM, whichever dominates.
+    pub fn stage_time(&self, stage: usize, batch: usize, model: &ModelSpec, cfg: &ComputeConfig) -> f64 {
+        let s = &self.stages[stage];
+        if s.n_layers == 0 {
+            return 0.0;
+        }
+        let frac = s.n_layers as f64 / model.n_layers as f64;
+        let weight_read = (s.bytes as f64 / 1e9) / cfg.hbm_gbps;
+        let gemm = model.flops_per_token * frac * batch as f64 / (cfg.gpu_tflops * 1e12);
+        weight_read.max(gemm) + s.n_layers as f64 * cfg.layer_overhead_s
+    }
+
+    /// Per-token latency through the whole pipeline (dimension 1): sum of
+    /// stage times plus inter-stage activation hops.
+    pub fn token_latency(&self, batch: usize, model: &ModelSpec, cfg: &ComputeConfig) -> f64 {
+        let compute: f64 =
+            (0..self.stages.len()).map(|i| self.stage_time(i, batch, model, cfg)).sum();
+        compute + (self.stages.len().saturating_sub(1)) as f64 * cfg.pipeline_hop_s
+    }
+
+    /// Steady-state decode throughput in tokens/s with `in_flight` batches
+    /// of `batch` requests (dimension 2): the bottleneck stage sets the
+    /// cadence; with fewer in-flight batches than stages the pipeline
+    /// drains partially idle.
+    pub fn throughput_tps(
+        &self,
+        batch: usize,
+        in_flight: usize,
+        model: &ModelSpec,
+        cfg: &ComputeConfig,
+    ) -> f64 {
+        if batch == 0 || in_flight == 0 {
+            return 0.0;
+        }
+        let bottleneck = (0..self.stages.len())
+            .map(|i| self.stage_time(i, batch, model, cfg) + cfg.pipeline_hop_s)
+            .fold(0.0_f64, f64::max);
+        let token_lat = self.token_latency(batch, model, cfg);
+        // With u batches in flight the pipeline emits u*batch tokens per
+        // "rotation"; a rotation takes max(token_lat, u * bottleneck).
+        let u = in_flight.min(self.stages.len().max(1));
+        let rotation = token_lat.max(u as f64 * bottleneck);
+        (u * batch) as f64 / rotation
+    }
+
+    /// Peak throughput when fully fed (in_flight == n_stages).
+    pub fn peak_tps(&self, batch: usize, model: &ModelSpec, cfg: &ComputeConfig) -> f64 {
+        self.throughput_tps(batch, self.n_stages(), model, cfg)
+    }
+
+    /// Aggregate service rate with `n_active` concurrent requests spread
+    /// over the pipeline: they form `min(n, m)` in-flight micro-batches of
+    /// `⌈n/m⌉` (the 2D schedule of Fig 6a). This is the processor-sharing
+    /// capacity the serving layer uses.
+    pub fn service_rate(&self, n_active: usize, model: &ModelSpec, cfg: &ComputeConfig) -> f64 {
+        if n_active == 0 {
+            return 0.0;
+        }
+        let m = self.n_stages().max(1);
+        self.throughput_tps(n_active.div_ceil(m), n_active.min(m), model, cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ComputeConfig;
+
+    fn cfg() -> ComputeConfig {
+        ComputeConfig::default()
+    }
+
+    fn model() -> ModelSpec {
+        ModelSpec::llama2_13b()
+    }
+
+    fn even_pipeline(m: usize) -> ExecPipeline {
+        let md = model();
+        let stages = (0..m)
+            .map(|i| StageSpec {
+                node: i,
+                n_layers: md.n_layers / m,
+                bytes: md.bytes / m as u64,
+            })
+            .collect();
+        ExecPipeline { stages }
+    }
+
+    #[test]
+    fn local_pipeline_single_stage() {
+        let p = ExecPipeline::local(3, &model());
+        assert_eq!(p.n_stages(), 1);
+        assert_eq!(p.nodes(), vec![3]);
+        let t = p.token_latency(1, &model(), &cfg());
+        // 13B fp16 at 3.35 TB/s HBM: ≈ 7.8 ms/token + overheads.
+        assert!(t > 0.005 && t < 0.02, "token latency {t}");
+    }
+
+    #[test]
+    fn pipeline_latency_close_to_local_plus_hops() {
+        let local = ExecPipeline::local(0, &model()).token_latency(8, &model(), &cfg());
+        let p4 = even_pipeline(4).token_latency(8, &model(), &cfg());
+        assert!(p4 > local, "distributed adds hop latency");
+        assert!(p4 < local * 1.2, "but not dramatically: {p4} vs {local}");
+    }
+
+    #[test]
+    fn full_pipeline_aggregate_scales_with_stages() {
+        // A fully-fed m-stage pipeline keeps all m GPUs busy on m in-flight
+        // batches, so aggregate throughput ≈ m × a single GPU (each stage
+        // streams only its 1/m of the weights per step) — per-GPU
+        // efficiency stays ≈ 1 (the reason Fig 9's pipelines ramp so fast).
+        let md = model();
+        let local_tps = ExecPipeline::local(0, &md).peak_tps(8, &md, &cfg());
+        let p4_tps = even_pipeline(4).peak_tps(8, &md, &cfg());
+        let per_gpu_eff = p4_tps / (4.0 * local_tps);
+        assert!((0.7..=1.1).contains(&per_gpu_eff),
+            "per-GPU efficiency {per_gpu_eff} (p4 {p4_tps} local {local_tps})");
+    }
+
+    #[test]
+    fn underfed_pipeline_loses_throughput() {
+        let md = model();
+        let p = even_pipeline(4);
+        let full = p.throughput_tps(8, 4, &md, &cfg());
+        let half = p.throughput_tps(8, 2, &md, &cfg());
+        let one = p.throughput_tps(8, 1, &md, &cfg());
+        assert!(full > half && half > one, "{full} {half} {one}");
+    }
+
+    #[test]
+    fn bigger_batch_higher_tps() {
+        let md = model();
+        let p = even_pipeline(2);
+        assert!(p.peak_tps(16, &md, &cfg()) > p.peak_tps(1, &md, &cfg()));
+    }
+
+    #[test]
+    fn from_assignment_sums_layers_and_bytes() {
+        let md = model();
+        let part = md.partition(8);
+        let asn: Vec<(NodeId, Vec<usize>)> = vec![(0, vec![0, 1, 2, 3]), (1, vec![4, 5, 6, 7])];
+        let p = ExecPipeline::from_assignment(&asn, &part);
+        assert_eq!(p.stages[0].n_layers + p.stages[1].n_layers, md.n_layers);
+        assert_eq!(p.stages[0].bytes + p.stages[1].bytes, md.bytes);
+    }
+
+    #[test]
+    fn zero_batch_zero_tps() {
+        let md = model();
+        let p = even_pipeline(2);
+        assert_eq!(p.throughput_tps(0, 2, &md, &cfg()), 0.0);
+        assert_eq!(p.throughput_tps(8, 0, &md, &cfg()), 0.0);
+    }
+}

@@ -1,0 +1,204 @@
+//! Algorithm 2 — execution pipeline generation strategy (§4.3).
+//!
+//! Given the k multicast sub-groups, build execution pipelines (node groups
+//! that jointly hold one complete model) by taking one node from each
+//! sub-group — thanks to Algorithm 1's circularly shifted chunk orders,
+//! those nodes hold *complementary* chunks and become a complete replica
+//! after only `⌈b/k⌉` rounds. When only one sub-group still has unassigned
+//! nodes, its remaining nodes form an intra-sub-group pipeline.
+
+use crate::multicast::kway::chunk_orders;
+use crate::multicast::{BlockId, NodeId};
+use crate::sim::time::SimTime;
+use crate::sim::transfer::TransferLog;
+
+/// Algorithm 2. `sub_groups[i]` lists the destination nodes of sub-group
+/// `i` in transfer-topology order. Returns pipelines; each pipeline is an
+/// ordered list of `(node, sub_group_index)`.
+pub fn generate_pipelines(sub_groups: &[Vec<NodeId>]) -> Vec<Vec<(NodeId, usize)>> {
+    let mut remaining: Vec<(usize, std::collections::VecDeque<NodeId>)> = sub_groups
+        .iter()
+        .enumerate()
+        .map(|(i, g)| (i, g.iter().copied().collect::<std::collections::VecDeque<NodeId>>()))
+        .filter(|(_, g)| !g.is_empty())
+        .collect();
+    let mut pipelines = Vec::new();
+
+    while !remaining.is_empty() {
+        if remaining.len() == 1 {
+            // Lines 3–5: single sub-group left → one pipeline of its nodes.
+            let (gi, nodes) = remaining.pop().unwrap();
+            pipelines.push(nodes.into_iter().map(|n| (n, gi)).collect());
+            break;
+        }
+        // Lines 6–12: take the t-th node of every sub-group, a = min size.
+        let a = remaining.iter().map(|(_, g)| g.len()).min().unwrap();
+        for _ in 0..a {
+            let mut p = Vec::with_capacity(remaining.len());
+            for (gi, g) in remaining.iter_mut() {
+                p.push((g.pop_front().unwrap(), *gi));
+            }
+            pipelines.push(p);
+        }
+        remaining.retain(|(_, g)| !g.is_empty());
+    }
+    pipelines
+}
+
+/// Blocks each pipeline member must hold before the pipeline can run.
+///
+/// A member from sub-group `gi` is assigned the `gi`-th *chunk slot* of its
+/// pipeline: for a cross-sub-group pipeline built from k sub-groups, the
+/// member from sub-group `i` serves chunk `i` — the first chunk that
+/// sub-group receives under Algorithm 1's circular shift, which is what
+/// makes the pipeline executable earliest. For an intra-sub-group pipeline
+/// of `m` nodes, blocks are split contiguously among members.
+pub fn pipeline_block_assignment(
+    pipeline: &[(NodeId, usize)],
+    n_blocks: usize,
+    k: usize,
+) -> Vec<(NodeId, Vec<BlockId>)> {
+    let orders = chunk_orders(n_blocks, k);
+    let k_eff = orders.len();
+    let l = n_blocks.div_ceil(k_eff);
+    let chunk = |i: usize| -> Vec<BlockId> { ((l * i)..((l * (i + 1)).min(n_blocks))).collect() };
+
+    let distinct_groups: std::collections::HashSet<usize> =
+        pipeline.iter().map(|&(_, gi)| gi).collect();
+    if distinct_groups.len() == pipeline.len() && pipeline.len() == k_eff {
+        // Cross-sub-group pipeline: member from sub-group gi serves chunk gi.
+        pipeline.iter().map(|&(n, gi)| (n, chunk(gi % k_eff))).collect()
+    } else {
+        // Intra-sub-group (or irregular) pipeline: contiguous split.
+        let m = pipeline.len();
+        let base = n_blocks / m;
+        let rem = n_blocks % m;
+        let mut out = Vec::with_capacity(m);
+        let mut b = 0usize;
+        for (i, &(n, _)) in pipeline.iter().enumerate() {
+            let len = base + usize::from(i < rem);
+            out.push((n, (b..b + len).collect()));
+            b += len;
+        }
+        out
+    }
+}
+
+/// Earliest time every member holds its assigned blocks (from a multicast
+/// [`TransferLog`]); `None` if some block never arrived.
+pub fn pipeline_ready_time(
+    log: &TransferLog,
+    assignment: &[(NodeId, Vec<BlockId>)],
+) -> Option<SimTime> {
+    let mut ready = SimTime::ZERO;
+    for (node, blocks) in assignment {
+        for &b in blocks {
+            ready = ready.max(log.arrivals.get(&(*node, b)).copied()?);
+        }
+    }
+    Some(ready)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::minicheck::check;
+
+    #[test]
+    fn paper_example_2x3() {
+        // Fig 5: 2→8, two sub-groups of 3 destinations each →
+        // three 2-node pipelines (3&6, 4&7, 5&8).
+        let groups = vec![vec![3, 4, 5], vec![6, 7, 8]];
+        let p = generate_pipelines(&groups);
+        assert_eq!(p, vec![
+            vec![(3, 0), (6, 1)],
+            vec![(4, 0), (7, 1)],
+            vec![(5, 0), (8, 1)],
+        ]);
+    }
+
+    #[test]
+    fn single_subgroup_one_pipeline() {
+        let groups = vec![vec![1, 2, 3, 4]];
+        let p = generate_pipelines(&groups);
+        assert_eq!(p, vec![vec![(1, 0), (2, 0), (3, 0), (4, 0)]]);
+    }
+
+    #[test]
+    fn uneven_groups_leftover_forms_own_pipeline() {
+        // Groups of 3 and 1: one cross pipeline, remainder of group 0 forms
+        // an intra-group pipeline.
+        let groups = vec![vec![1, 2, 3], vec![9]];
+        let p = generate_pipelines(&groups);
+        assert_eq!(p.len(), 2);
+        assert_eq!(p[0], vec![(1, 0), (9, 1)]);
+        assert_eq!(p[1], vec![(2, 0), (3, 0)]);
+    }
+
+    #[test]
+    fn property_partition_of_all_nodes() {
+        check("Alg 2 pipelines partition all nodes", 100, |rng| {
+            let k = rng.range(1, 6) as usize;
+            let mut groups = Vec::new();
+            let mut next_id = 0usize;
+            for _ in 0..k {
+                let sz = rng.range(0, 9) as usize;
+                groups.push((0..sz).map(|_| { next_id += 1; next_id }).collect::<Vec<_>>());
+            }
+            let total: usize = groups.iter().map(|g| g.len()).sum();
+            let pipelines = generate_pipelines(&groups);
+            let mut all: Vec<NodeId> = pipelines.iter().flatten().map(|&(n, _)| n).collect();
+            assert_eq!(all.len(), total, "node lost or duplicated");
+            all.sort_unstable();
+            all.dedup();
+            assert_eq!(all.len(), total);
+        });
+    }
+
+    #[test]
+    fn property_assignment_covers_all_blocks() {
+        check("pipeline block assignment covers the model", 100, |rng| {
+            let k = rng.range(1, 5) as usize;
+            let b = rng.range(k as u64, 48) as usize;
+            let groups: Vec<Vec<NodeId>> =
+                (0..k).map(|i| vec![100 * (i + 1), 100 * (i + 1) + 1]).collect();
+            for p in generate_pipelines(&groups) {
+                let asn = pipeline_block_assignment(&p, b, k);
+                let mut covered: Vec<BlockId> =
+                    asn.iter().flat_map(|(_, bs)| bs.iter().copied()).collect();
+                covered.sort_unstable();
+                covered.dedup();
+                assert_eq!(covered, (0..b).collect::<Vec<_>>(), "k={k} b={b} p={p:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn ready_time_from_multicast_log() {
+        use crate::config::NetworkConfig;
+        use crate::multicast::kway::{kway_plan, split_subgroups};
+        use crate::sim::transfer::{Tier, TransferOpts};
+        let net = NetworkConfig::default();
+        let (n, k, b) = (8usize, 2usize, 8usize);
+        let nodes: Vec<NodeId> = (0..n).collect();
+        let plan = kway_plan(&nodes, k, b, Tier::Gpu);
+        let log = plan.execute(&net, TransferOpts::default(), &vec![50_000_000u64; b]);
+        let groups = split_subgroups(&nodes[k..], k);
+        let pipelines = generate_pipelines(&groups);
+        let full = log.all_complete(&nodes, b).unwrap();
+        for p in &pipelines {
+            let asn = pipeline_block_assignment(&p, b, k);
+            let t = pipeline_ready_time(&log, &asn).expect("pipeline never ready");
+            // Execute-while-load: every pipeline is ready before the full
+            // multicast finishes.
+            assert!(t <= full, "pipeline {p:?} ready {t} after full load {full}");
+        }
+        // And at least one is ready strictly earlier.
+        let earliest = pipelines
+            .iter()
+            .map(|p| pipeline_ready_time(&log, &pipeline_block_assignment(p, b, k)).unwrap())
+            .min()
+            .unwrap();
+        assert!(earliest < full);
+    }
+}

@@ -1,0 +1,11 @@
+//! λPipe execution pipelines (§4.3–§4.4): dynamic construction of complete
+//! distributed model replicas during multicast, the 2D pipelined execution
+//! performance model, and the mode switch back to local execution.
+
+pub mod execution;
+pub mod generation;
+pub mod mode_switch;
+
+pub use execution::{ExecPipeline, StageSpec};
+pub use generation::{generate_pipelines, pipeline_block_assignment, pipeline_ready_time};
+pub use mode_switch::{ModeSwitchPlan, SwitchStrategy};

@@ -1,0 +1,258 @@
+//! Block-wise inference engine on PJRT.
+//!
+//! Loads the AOT artifacts (per-block HLO text → compiled executables),
+//! holds per-block weights as XLA literals, and runs prefill/decode with
+//! Rust-owned KV-cache state. The engine can run *any subset* of blocks —
+//! that is what lets the coordinator place different blocks on different
+//! logical workers and run λPipe execution pipelines over real compute
+//! (`examples/trace_replay.rs`).
+//!
+//! Per the execute-while-load design, an engine starts with **no blocks
+//! resident** and gains them via [`Engine::install_block`] as the (real or
+//! simulated) multicast delivers them.
+
+use super::manifest::{Manifest, Phase};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+/// Compiled executables + weights for the blocks a worker currently holds.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    /// (block, phase, batch) → compiled executable.
+    exes: HashMap<(usize, Phase, usize), xla::PjRtLoadedExecutable>,
+    /// Per-block weight literals (HLO parameter order); None until installed.
+    weights: Vec<Option<Vec<xla::Literal>>>,
+}
+
+/// Per-request-batch decode state: one KV cache pair per model block.
+pub struct Session {
+    pub batch: usize,
+    /// (k_cache, v_cache) literals per block.
+    caches: Vec<(xla::Literal, xla::Literal)>,
+    /// Next absolute position to write.
+    pub pos: usize,
+}
+
+impl Engine {
+    /// Create an engine over `artifacts_dir` with no blocks installed.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        let n_blocks = manifest.config.n_blocks;
+        Ok(Engine { manifest, client, exes: HashMap::new(), weights: (0..n_blocks).map(|_| None).collect() })
+    }
+
+    /// Create an engine and install every block (local execution mode).
+    pub fn new_full(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let mut e = Engine::new(artifacts_dir)?;
+        for b in 0..e.manifest.config.n_blocks {
+            e.install_block(b)?;
+        }
+        Ok(e)
+    }
+
+    /// Compile one block's executables (all phases/batch sizes) without
+    /// loading weights. λScale pre-initializes executables and pre-allocates
+    /// buffers (§5) so that a block *arriving* over the multicast costs only
+    /// the weight transfer. Idempotent.
+    pub fn precompile_block(&mut self, block: usize) -> Result<()> {
+        if block >= self.manifest.config.n_blocks {
+            bail!("block {block} out of range");
+        }
+        for art in self.manifest.artifacts.clone() {
+            if art.block != block || self.exes.contains_key(&(art.block, art.phase, art.batch)) {
+                continue;
+            }
+            let path = self.manifest.dir.join(&art.path);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+            self.exes.insert((art.block, art.phase, art.batch), exe);
+        }
+        Ok(())
+    }
+
+    /// Install one model block: ensure its executables exist and load its
+    /// packed weights (the multicast payload). Idempotent.
+    pub fn install_block(&mut self, block: usize) -> Result<()> {
+        if block >= self.manifest.config.n_blocks {
+            bail!("block {block} out of range");
+        }
+        if self.weights[block].is_some() {
+            return Ok(());
+        }
+        self.precompile_block(block)?;
+        let w = self.manifest.load_block_weights(block)?;
+        self.weights[block] = Some(w);
+        Ok(())
+    }
+
+    /// Drop a block (GPU memory reclaim).
+    pub fn evict_block(&mut self, block: usize) {
+        self.weights[block] = None;
+        self.exes.retain(|&(b, _, _), _| b != block);
+    }
+
+    pub fn has_block(&self, block: usize) -> bool {
+        self.weights.get(block).is_some_and(|w| w.is_some())
+    }
+
+    pub fn blocks_resident(&self) -> Vec<usize> {
+        (0..self.manifest.config.n_blocks).filter(|&b| self.has_block(b)).collect()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.blocks_resident().len() == self.manifest.config.n_blocks
+    }
+
+    /// Start a decode session for `batch` concurrent sequences (must be one
+    /// of the artifact batch sizes).
+    pub fn session(&self, batch: usize) -> Result<Session> {
+        if !self.manifest.batch_sizes().contains(&batch) {
+            bail!(
+                "no artifacts for batch {batch}; available: {:?}",
+                self.manifest.batch_sizes()
+            );
+        }
+        let mut caches = Vec::new();
+        for b in 0..self.manifest.config.n_blocks {
+            let dims = self.manifest.cache_dims(b, batch);
+            let n: i64 = dims.iter().product();
+            let zeros = vec![0f32; n as usize];
+            let k = xla::Literal::vec1(&zeros).reshape(&dims)?;
+            let v = xla::Literal::vec1(&zeros).reshape(&dims)?;
+            caches.push((k, v));
+        }
+        Ok(Session { batch, caches, pos: 0 })
+    }
+
+    /// Run one block over hidden/token input `x`; updates the session's
+    /// cache for that block and returns the block output literal.
+    pub fn run_block(
+        &self,
+        block: usize,
+        phase: Phase,
+        session: &mut Session,
+        x: &xla::Literal,
+    ) -> Result<xla::Literal> {
+        let weights = self.weights[block]
+            .as_ref()
+            .ok_or_else(|| anyhow!("block {block} not resident (execute-while-load gap)"))?;
+        let exe = self
+            .exes
+            .get(&(block, phase, session.batch))
+            .ok_or_else(|| anyhow!("no executable for block {block} {phase:?} b{}", session.batch))?;
+
+        let mut args: Vec<&xla::Literal> = weights.iter().collect();
+        let (k, v) = &session.caches[block];
+        let pos_lit = xla::Literal::scalar(session.pos as i32);
+        args.push(x);
+        args.push(k);
+        args.push(v);
+        args.push(&pos_lit);
+
+        let result = exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow!("executing block {block}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        let (out, new_k, new_v) =
+            tuple.to_tuple3().map_err(|e| anyhow!("untupling result: {e:?}"))?;
+        session.caches[block] = (new_k, new_v);
+        Ok(out)
+    }
+
+    /// Full forward through all resident blocks; input tokens [B, S] i32.
+    /// Returns logits [B, S, vocab] flattened.
+    fn forward(
+        &self,
+        phase: Phase,
+        session: &mut Session,
+        tokens: &[i32],
+        seq: usize,
+    ) -> Result<Vec<f32>> {
+        assert_eq!(tokens.len(), session.batch * seq);
+        let x0 = xla::Literal::vec1(tokens).reshape(&[session.batch as i64, seq as i64])?;
+        let mut x = x0;
+        for b in 0..self.manifest.config.n_blocks {
+            x = self.run_block(b, phase, session, &x)?;
+        }
+        x.to_vec::<f32>().map_err(|e| anyhow!("logits to_vec: {e:?}"))
+    }
+
+    /// Prefill an entire prompt chunk of exactly `prefill_len` tokens per
+    /// sequence; returns last-position logits per sequence.
+    pub fn prefill(&self, session: &mut Session, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        let s = self.manifest.config.prefill_len;
+        assert_eq!(session.pos, 0, "prefill must start a session");
+        let logits = self.forward(Phase::Prefill, session, tokens, s)?;
+        session.pos = s;
+        let vocab = self.manifest.config.vocab;
+        Ok((0..session.batch)
+            .map(|b| logits[(b * s + s - 1) * vocab..(b * s + s) * vocab].to_vec())
+            .collect())
+    }
+
+    /// Decode one token per sequence; returns logits per sequence.
+    pub fn decode(&self, session: &mut Session, tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        assert_eq!(tokens.len(), session.batch);
+        if session.pos >= self.manifest.config.max_seq {
+            bail!("KV cache exhausted (max_seq {})", self.manifest.config.max_seq);
+        }
+        let logits = self.forward(Phase::Decode, session, tokens, 1)?;
+        session.pos += 1;
+        let vocab = self.manifest.config.vocab;
+        Ok((0..session.batch).map(|b| logits[b * vocab..(b + 1) * vocab].to_vec()).collect())
+    }
+
+    /// Greedy generation: prompt [B][prefill_len] → `n_tokens` ids per seq.
+    pub fn generate(&self, prompt: &[Vec<i32>], n_tokens: usize) -> Result<Vec<Vec<i32>>> {
+        let batch = prompt.len();
+        let mut session = self.session(batch)?;
+        let flat: Vec<i32> = prompt.iter().flatten().copied().collect();
+        let logits = self.prefill(&mut session, &flat)?;
+        let mut toks: Vec<i32> = logits.iter().map(|l| argmax(l)).collect();
+        let mut out: Vec<Vec<i32>> = (0..batch).map(|b| vec![toks[b]]).collect();
+        for _ in 1..n_tokens {
+            let logits = self.decode(&mut session, &toks)?;
+            toks = logits.iter().map(|l| argmax(l)).collect();
+            for (b, &t) in toks.iter().enumerate() {
+                out[b].push(t);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Deterministic argmax (first max wins), matching jnp.argmax.
+pub fn argmax(xs: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, 0.0]), 1);
+    }
+    // Engine integration tests against real artifacts live in
+    // rust/tests/runtime_integration.rs (they need `make artifacts`).
+}

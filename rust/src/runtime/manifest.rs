@@ -1,0 +1,264 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parses `manifest.json`, loads packed per-block weight
+//! buffers (λScale tensor packing: one contiguous file per block) and
+//! splits them into per-tensor XLA literals in HLO parameter order.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Model architecture constants from the manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelCfg {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub n_blocks: usize,
+    pub prefill_len: usize,
+    pub param_count: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_bytes: usize,
+    pub size_bytes: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct BlockMeta {
+    pub index: usize,
+    pub layer_start: usize,
+    pub layer_end: usize,
+    pub weights_file: String,
+    pub weights_bytes: usize,
+    pub tensors: Vec<TensorMeta>,
+}
+
+/// Execution phase an artifact was specialized for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub path: String,
+    pub block: usize,
+    pub phase: Phase,
+    pub batch: usize,
+    pub seq: usize,
+    pub n_weight_params: usize,
+}
+
+/// The parsed manifest plus its directory (for resolving relative paths).
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelCfg,
+    pub blocks: Vec<BlockMeta>,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing manifest.json: {e}"))?;
+
+        let c = j.expect("config");
+        let config = ModelCfg {
+            vocab: c.us("vocab"),
+            d_model: c.us("d_model"),
+            n_layers: c.us("n_layers"),
+            n_heads: c.us("n_heads"),
+            head_dim: c.us("head_dim"),
+            d_ff: c.us("d_ff"),
+            max_seq: c.us("max_seq"),
+            n_blocks: c.us("n_blocks"),
+            prefill_len: c.us("prefill_len"),
+            param_count: c.us("param_count"),
+        };
+
+        let mut blocks = Vec::new();
+        for b in j.arr("blocks") {
+            let tensors = b
+                .arr("tensors")
+                .iter()
+                .map(|t| TensorMeta {
+                    name: t.s("name").to_string(),
+                    shape: t.arr("shape").iter().map(|d| d.as_usize().unwrap()).collect(),
+                    offset_bytes: t.us("offset_bytes"),
+                    size_bytes: t.us("size_bytes"),
+                })
+                .collect();
+            blocks.push(BlockMeta {
+                index: b.us("index"),
+                layer_start: b.us("layer_start"),
+                layer_end: b.us("layer_end"),
+                weights_file: b.s("weights_file").to_string(),
+                weights_bytes: b.us("weights_bytes"),
+                tensors,
+            });
+        }
+        if blocks.len() != config.n_blocks {
+            bail!("manifest block count mismatch: {} vs {}", blocks.len(), config.n_blocks);
+        }
+
+        let mut artifacts = Vec::new();
+        for a in j.arr("artifacts") {
+            let phase = match a.s("phase") {
+                "prefill" => Phase::Prefill,
+                "decode" => Phase::Decode,
+                other => bail!("unknown phase `{other}`"),
+            };
+            artifacts.push(ArtifactMeta {
+                path: a.s("path").to_string(),
+                block: a.us("block"),
+                phase,
+                batch: a.us("batch"),
+                seq: a.us("seq"),
+                n_weight_params: a.us("n_weight_params"),
+            });
+        }
+        Ok(Manifest { dir, config, blocks, artifacts })
+    }
+
+    /// Batch sizes the artifacts were specialized for.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.artifacts.iter().map(|a| a.batch).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    pub fn find_artifact(&self, block: usize, phase: Phase, batch: usize) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.block == block && a.phase == phase && a.batch == batch)
+    }
+
+    /// Read the packed weight file of `block` and split into per-tensor f32
+    /// literals in manifest (= HLO parameter) order.
+    pub fn load_block_weights(&self, block: usize) -> Result<Vec<xla::Literal>> {
+        let meta = &self.blocks[block];
+        let path = self.dir.join(&meta.weights_file);
+        let blob =
+            std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        if blob.len() != meta.weights_bytes {
+            bail!(
+                "weight file {} is {} bytes, manifest says {}",
+                path.display(),
+                blob.len(),
+                meta.weights_bytes
+            );
+        }
+        let mut out = Vec::with_capacity(meta.tensors.len());
+        for t in &meta.tensors {
+            let raw = &blob[t.offset_bytes..t.offset_bytes + t.size_bytes];
+            let floats: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let expected: usize = t.shape.iter().product();
+            if floats.len() != expected {
+                bail!("tensor {} has {} elems, shape {:?}", t.name, floats.len(), t.shape);
+            }
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&floats).reshape(&dims)?;
+            out.push(lit);
+        }
+        Ok(out)
+    }
+
+    /// Shape of one block's KV cache for `batch`: [nl, B, max_seq, H, Dh].
+    pub fn cache_dims(&self, block: usize, batch: usize) -> Vec<i64> {
+        let b = &self.blocks[block];
+        vec![
+            (b.layer_end - b.layer_start) as i64,
+            batch as i64,
+            self.config.max_seq as i64,
+            self.config.n_heads as i64,
+            self.config.head_dim as i64,
+        ]
+    }
+}
+
+/// Golden generation record emitted by aot.py (integration-test oracle).
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub prompt: Vec<Vec<i32>>,
+    pub tokens: Vec<Vec<i32>>,
+}
+
+impl Golden {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Golden> {
+        let path = dir.as_ref().join("golden.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing golden.json: {e}"))?;
+        let mat = |key: &str| -> Vec<Vec<i32>> {
+            j.arr(key)
+                .iter()
+                .map(|row| row.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as i32).collect())
+                .collect()
+        };
+        Ok(Golden { prompt: mat("prompt"), tokens: mat("tokens") })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a minimal synthetic manifest on disk for parser tests (the full
+    /// end-to-end path against real artifacts lives in `rust/tests/`).
+    fn synth(dir: &Path) {
+        std::fs::create_dir_all(dir.join("weights")).unwrap();
+        let floats: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let bytes: Vec<u8> = floats.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(dir.join("weights/block0.bin"), &bytes).unwrap();
+        let manifest = r#"{
+ "config": {"vocab": 8, "d_model": 2, "n_layers": 1, "n_heads": 1, "head_dim": 2,
+            "d_ff": 4, "max_seq": 4, "n_blocks": 1, "prefill_len": 2,
+            "param_count": 6, "norm_eps": 1e-5, "rope_theta": 10000.0},
+ "blocks": [{"index": 0, "layer_start": 0, "layer_end": 1,
+             "weights_file": "weights/block0.bin", "weights_bytes": 24,
+             "cache_shape": [1, 0, 4, 1, 2],
+             "tensors": [{"name": "a", "shape": [2, 2], "offset_bytes": 0, "size_bytes": 16},
+                          {"name": "b", "shape": [2], "offset_bytes": 16, "size_bytes": 8}]}],
+ "artifacts": [{"path": "hlo/block0_decode_b1.hlo.txt", "block": 0, "phase": "decode",
+                "batch": 1, "seq": 1, "n_weight_params": 2, "x_dtype": "i32",
+                "out_kind": "logits"}]
+}"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    }
+
+    #[test]
+    fn parses_and_splits_weights() {
+        let dir = std::env::temp_dir().join(format!("lsm-{}", std::process::id()));
+        synth(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config.vocab, 8);
+        assert_eq!(m.blocks[0].tensors.len(), 2);
+        assert_eq!(m.cache_dims(0, 3), vec![1, 3, 4, 1, 2]);
+        assert!(m.find_artifact(0, Phase::Decode, 1).is_some());
+        assert!(m.find_artifact(0, Phase::Prefill, 1).is_none());
+        let w = m.load_block_weights(0).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0].to_vec::<f32>().unwrap(), vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(w[1].to_vec::<f32>().unwrap(), vec![4.0, 5.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        assert!(Manifest::load("/nonexistent/dir").is_err());
+    }
+}

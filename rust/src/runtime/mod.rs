@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT per-block HLO artifacts and executes real
+//! inference from the Rust request path (Python never runs at serve time).
+//!
+//! * [`manifest`] — the aot.py ↔ Rust contract (shapes, packing, phases).
+//! * [`engine`] — block-wise decode engine with Rust-owned KV caches;
+//!   blocks install incrementally (execute-while-load).
+//! * [`tokenizer`] — toy byte tokenizer for demo I/O.
+
+pub mod engine;
+pub mod manifest;
+pub mod tokenizer;
+
+pub use engine::{argmax, Engine, Session};
+pub use manifest::{Golden, Manifest, Phase};

@@ -1,0 +1,72 @@
+//! Toy byte-level tokenizer for demo I/O with the tiny artifact model.
+//!
+//! Vocabulary layout: 0 = PAD, 1 = BOS, 2 = EOS, bytes map to 3..258.
+//! Anything ≥ vocab (small test configs) wraps — the tiny model is random-
+//! initialized, so the mapping only needs to be deterministic + invertible
+//! for the byte range it covers.
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+const OFFSET: i32 = 3;
+
+/// Encode text to token ids, clamped into `vocab`.
+pub fn encode(text: &str, vocab: usize) -> Vec<i32> {
+    text.bytes().map(|b| (b as i32 + OFFSET) % vocab as i32).collect()
+}
+
+/// Encode with BOS and right-pad/truncate to exactly `len` tokens.
+pub fn encode_padded(text: &str, vocab: usize, len: usize) -> Vec<i32> {
+    let mut ids = vec![BOS];
+    ids.extend(encode(text, vocab));
+    ids.truncate(len);
+    while ids.len() < len {
+        ids.push(PAD);
+    }
+    ids
+}
+
+/// Decode ids back to text (specials and out-of-byte-range ids are dropped).
+pub fn decode(ids: &[i32]) -> String {
+    let bytes: Vec<u8> = ids
+        .iter()
+        .filter(|&&i| i >= OFFSET && i < OFFSET + 256)
+        .map(|&i| (i - OFFSET) as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let ids = encode("hello, λScale!", 512);
+        // λ is multi-byte; roundtrip through bytes must reproduce it.
+        assert_eq!(decode(&ids), "hello, λScale!");
+    }
+
+    #[test]
+    fn padded_layout() {
+        let ids = encode_padded("hi", 512, 6);
+        assert_eq!(ids.len(), 6);
+        assert_eq!(ids[0], BOS);
+        assert_eq!(&ids[3..], &[PAD, PAD, PAD]);
+        assert_eq!(decode(&ids), "hi");
+    }
+
+    #[test]
+    fn truncation() {
+        let ids = encode_padded("a longer prompt", 512, 4);
+        assert_eq!(ids.len(), 4);
+    }
+
+    #[test]
+    fn small_vocab_wraps_deterministically() {
+        let a = encode("xyz", 64);
+        let b = encode("xyz", 64);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&t| (t as usize) < 64));
+    }
+}

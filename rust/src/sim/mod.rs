@@ -1,0 +1,17 @@
+//! Discrete-event cluster simulator — the substrate that stands in for the
+//! paper's 12-node H800 / 400 Gb/s InfiniBand testbed (see DESIGN.md §2).
+//!
+//! * [`time`] — nanosecond-resolution simulated time.
+//! * [`event`] — generic deterministic event queue.
+//! * [`transfer`] — dependency-driven block-transfer executor: multicast
+//!   algorithms emit per-node ordered send queues; the executor runs them
+//!   respecting block availability and NIC port occupancy, yielding per-node
+//!   block arrival times (the raw data behind Figs 7, 8, 17, 18).
+
+pub mod event;
+pub mod time;
+pub mod transfer;
+
+pub use event::EventQueue;
+pub use time::SimTime;
+pub use transfer::{BlockId, Medium, NodeId, SendIntent, Tier, TransferLog, TransferOpts, TransferSim};

@@ -1,0 +1,93 @@
+//! Simulated time: integer nanoseconds (total order, no float-comparison
+//! hazards in the event queue) with ergonomic second-based constructors.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in simulated time, in nanoseconds since simulation start.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    /// From seconds (clamped at zero; sub-nanosecond truncated).
+    pub fn from_secs(s: f64) -> SimTime {
+        assert!(s.is_finite(), "non-finite time");
+        SimTime((s.max(0.0) * 1e9).round() as u64)
+    }
+
+    pub fn from_micros(us: f64) -> SimTime {
+        SimTime::from_secs(us * 1e-6)
+    }
+
+    pub fn from_millis(ms: f64) -> SimTime {
+        SimTime::from_secs(ms * 1e-3)
+    }
+
+    pub fn as_secs(self) -> f64 {
+        self.0 as f64 * 1e-9
+    }
+
+    pub fn as_millis(self) -> f64 {
+        self.0 as f64 * 1e-6
+    }
+
+    pub fn saturating_sub(self, other: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(other.0))
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.checked_sub(rhs.0).expect("negative SimTime"))
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.6}s", self.as_secs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_secs() {
+        let t = SimTime::from_secs(1.25);
+        assert_eq!(t.0, 1_250_000_000);
+        assert!((t.as_secs() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ordering_and_arith() {
+        let a = SimTime::from_millis(1.0);
+        let b = SimTime::from_millis(2.0);
+        assert!(a < b);
+        assert_eq!((a + a), b);
+        assert_eq!(b - a, a);
+        assert_eq!(a.saturating_sub(b), SimTime::ZERO);
+    }
+
+    #[test]
+    #[should_panic(expected = "negative")]
+    fn negative_sub_panics() {
+        let _ = SimTime::from_secs(1.0) - SimTime::from_secs(2.0);
+    }
+}

@@ -1,0 +1,118 @@
+//! Leveled stderr logger with a process-global level.
+//!
+//! `LAMBDA_SCALE_LOG={error|warn|info|debug|trace}` (default `info`) or
+//! programmatic [`set_level`]. Zero cost below the active level beyond one
+//! atomic load.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn from_str(s: &str) -> Option<Level> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => return None,
+        })
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
+
+fn init_from_env() -> u8 {
+    let lvl = std::env::var("LAMBDA_SCALE_LOG")
+        .ok()
+        .and_then(|s| Level::from_str(&s))
+        .unwrap_or(Level::Info) as u8;
+    LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    let cur = LEVEL.load(Ordering::Relaxed);
+    let cur = if cur == 255 { init_from_env() } else { cur };
+    (l as u8) <= cur
+}
+
+/// Process start, for relative timestamps.
+pub fn epoch() -> Instant {
+    use std::sync::OnceLock;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+pub fn log(level: Level, module: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = epoch().elapsed().as_secs_f64();
+    eprintln!("[{t:9.3}s {} {module}] {args}", level.tag());
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parse() {
+        assert_eq!(Level::from_str("debug"), Some(Level::Debug));
+        assert_eq!(Level::from_str("DEBUG"), Some(Level::Debug));
+        assert_eq!(Level::from_str("nope"), None);
+    }
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,85 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `n` seeded cases; on failure it reports the
+//! failing seed so the case replays deterministically:
+//!
+//! ```no_run
+//! use lambda_scale::util::minicheck::check;
+//! check("rng below is bounded", 200, |rng| {
+//!     let n = rng.range(1, 1000);
+//!     let x = rng.below(n);
+//!     assert!(x < n, "x={x} n={n}");
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` deterministic seeds. Panics (with the seed) on the
+/// first failing case. Set `MINICHECK_SEED` to replay one specific seed.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, cases: u64, prop: F) {
+    if let Ok(s) = std::env::var("MINICHECK_SEED") {
+        let seed: u64 = s.parse().expect("MINICHECK_SEED must be a u64");
+        let mut rng = Rng::new(seed);
+        prop(&mut rng);
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case;
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property `{name}` failed on case {case} (replay with MINICHECK_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Draw a vector of length in [min_len, max_len] with elements from `gen`.
+pub fn vec_of<T>(rng: &mut Rng, min_len: usize, max_len: usize, mut gen: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+    let len = rng.range(min_len as u64, max_len as u64) as usize;
+    (0..len).map(|_| gen(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("trivial", 50, |rng| {
+            let x = rng.below(10);
+            assert!(x < 10);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `failing`")]
+    fn failing_property_reports_seed() {
+        // Silence the panic backtrace noise from catch_unwind.
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let r = std::panic::catch_unwind(|| {
+            check("failing", 50, |rng| {
+                assert!(rng.below(10) < 5, "too big");
+            });
+        });
+        std::panic::set_hook(prev);
+        std::panic::resume_unwind(r.unwrap_err());
+    }
+
+    #[test]
+    fn vec_of_respects_bounds() {
+        check("vec_of bounds", 50, |rng| {
+            let v = vec_of(rng, 2, 9, |r| r.below(100));
+            assert!(v.len() >= 2 && v.len() <= 9);
+        });
+    }
+}

@@ -1,0 +1,15 @@
+//! Zero-dependency substrates.
+//!
+//! The offline build environment vendors only the `xla` crate's dependency
+//! closure, so everything a serving framework normally pulls from crates.io
+//! (serde, rand, criterion, proptest, a logger) is implemented here from
+//! scratch, small and auditable.
+
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod minicheck;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

@@ -1,0 +1,287 @@
+//! Summary statistics: percentiles, CDFs, histograms, online mean/variance.
+//!
+//! Used by the metrics layer (TTFT/TPS distributions) and the figure
+//! generators (every CDF figure in the paper flows through [`Cdf`]).
+
+/// A growable sample set with percentile queries (exact, sort-on-demand).
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    data: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.data.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend(&mut self, xs: &[f64]) {
+        self.data.extend_from_slice(xs);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.data.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile with linear interpolation; `p` in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> f64 {
+        assert!(!self.data.is_empty(), "percentile of empty sample set");
+        assert!((0.0..=100.0).contains(&p));
+        self.ensure_sorted();
+        let n = self.data.len();
+        if n == 1 {
+            return self.data[0];
+        }
+        let rank = p / 100.0 * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        self.data[lo] * (1.0 - frac) + self.data[hi] * frac
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p90(&mut self) -> f64 {
+        self.percentile(90.0)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn min(&mut self) -> f64 {
+        self.ensure_sorted();
+        self.data[0]
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        *self.data.last().unwrap()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            return f64::NAN;
+        }
+        self.data.iter().sum::<f64>() / self.data.len() as f64
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().sum()
+    }
+
+    /// Empirical CDF sampled at `points` evenly spaced quantiles.
+    pub fn cdf(&mut self, points: usize) -> Cdf {
+        self.ensure_sorted();
+        let n = self.data.len();
+        assert!(n > 0 && points >= 2);
+        let mut xs = Vec::with_capacity(points);
+        let mut ps = Vec::with_capacity(points);
+        for i in 0..points {
+            let q = i as f64 / (points - 1) as f64;
+            let idx = ((n - 1) as f64 * q).round() as usize;
+            xs.push(self.data[idx]);
+            ps.push((idx + 1) as f64 / n as f64);
+        }
+        Cdf { xs, ps }
+    }
+
+    pub fn values(&mut self) -> &[f64] {
+        self.ensure_sorted();
+        &self.data
+    }
+}
+
+/// An empirical CDF: (value, cumulative probability) pairs.
+#[derive(Clone, Debug)]
+pub struct Cdf {
+    pub xs: Vec<f64>,
+    pub ps: Vec<f64>,
+}
+
+impl Cdf {
+    /// Fraction of mass at or below `x`.
+    pub fn at(&self, x: f64) -> f64 {
+        match self.xs.iter().rposition(|&v| v <= x) {
+            Some(i) => self.ps[i],
+            None => 0.0,
+        }
+    }
+}
+
+/// Fixed-bin histogram over [lo, hi); out-of-range values clamp to end bins.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+    pub count: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, n_bins: usize) -> Self {
+        assert!(hi > lo && n_bins > 0);
+        Histogram { lo, hi, bins: vec![0; n_bins], count: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let n = self.bins.len();
+        let idx = if x < self.lo {
+            0
+        } else if x >= self.hi {
+            n - 1
+        } else {
+            (((x - self.lo) / (self.hi - self.lo)) * n as f64) as usize
+        };
+        self.bins[idx.min(n - 1)] += 1;
+        self.count += 1;
+    }
+
+    /// Fraction of samples in each bin.
+    pub fn normalized(&self) -> Vec<f64> {
+        if self.count == 0 {
+            return vec![0.0; self.bins.len()];
+        }
+        self.bins.iter().map(|&b| b as f64 / self.count as f64).collect()
+    }
+
+    pub fn bin_edges(&self) -> Vec<f64> {
+        let n = self.bins.len();
+        (0..=n).map(|i| self.lo + (self.hi - self.lo) * i as f64 / n as f64).collect()
+    }
+}
+
+/// Welford online mean/variance — allocation-free hot-loop statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Online {
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_exact() {
+        let mut s = Samples::new();
+        s.extend(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.p50(), 3.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+        assert!((s.percentile(25.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let mut s = Samples::new();
+        s.extend(&[0.0, 10.0]);
+        assert!((s.percentile(50.0) - 5.0).abs() < 1e-12);
+        assert!((s.p90() - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unsorted_input_ok() {
+        let mut s = Samples::new();
+        s.extend(&[5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(s.p50(), 3.0);
+        s.push(0.0);
+        assert_eq!(s.min(), 0.0);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let mut s = Samples::new();
+        for i in 0..100 {
+            s.push((i * 7 % 100) as f64);
+        }
+        let cdf = s.cdf(20);
+        for w in cdf.xs.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        for w in cdf.ps.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        assert!((cdf.ps.last().unwrap() - 1.0).abs() < 1e-12);
+        assert!(cdf.at(49.0) > 0.4 && cdf.at(49.0) < 0.6);
+    }
+
+    #[test]
+    fn histogram_bins() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..10 {
+            h.add(i as f64 + 0.5);
+        }
+        assert!(h.bins.iter().all(|&b| b == 1));
+        h.add(-5.0);
+        h.add(99.0);
+        assert_eq!(h.bins[0], 2);
+        assert_eq!(h.bins[9], 2);
+        let norm = h.normalized();
+        assert!((norm.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut o = Online::default();
+        for &x in &xs {
+            o.add(x);
+        }
+        assert!((o.mean() - 5.0).abs() < 1e-12);
+        assert!((o.variance() - 32.0 / 7.0).abs() < 1e-12);
+    }
+}

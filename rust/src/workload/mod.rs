@@ -1,0 +1,109 @@
+//! Inference workloads: request records, synthetic arrival processes, the
+//! BurstGPT-like bursty trace generator (Fig 1 / §7.5 substitution — the
+//! real Azure trace is not redistributable), and CSV trace replay.
+
+pub mod burstgpt;
+pub mod trace;
+
+pub use burstgpt::BurstGptGen;
+pub use trace::{Request, Trace};
+
+use crate::sim::time::SimTime;
+use crate::util::rng::Rng;
+
+/// Homogeneous Poisson arrivals at `rps` for `duration` seconds.
+pub fn poisson_trace(
+    rps: f64,
+    duration_s: f64,
+    model: &str,
+    avg_prompt: usize,
+    avg_output: usize,
+    rng: &mut Rng,
+) -> Trace {
+    let mut reqs = Vec::new();
+    let mut t = 0.0;
+    let mut id = 0u64;
+    while t < duration_s {
+        t += rng.exp(rps.max(1e-9));
+        if t >= duration_s {
+            break;
+        }
+        reqs.push(Request {
+            id,
+            arrival: SimTime::from_secs(t),
+            model: model.to_string(),
+            prompt_tokens: sample_tokens(avg_prompt, rng),
+            output_tokens: sample_tokens(avg_output, rng),
+        });
+        id += 1;
+    }
+    Trace { requests: reqs }
+}
+
+/// A one-shot stress burst: `n` requests arriving simultaneously at `t0`
+/// (the §7.3/§7.4 stress-test shape: 50 concurrent requests at time zero).
+pub fn burst_trace(
+    n: usize,
+    t0: f64,
+    model: &str,
+    avg_prompt: usize,
+    avg_output: usize,
+    rng: &mut Rng,
+) -> Trace {
+    let requests = (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            arrival: SimTime::from_secs(t0),
+            model: model.to_string(),
+            prompt_tokens: sample_tokens(avg_prompt, rng),
+            output_tokens: sample_tokens(avg_output, rng),
+        })
+        .collect();
+    Trace { requests }
+}
+
+/// Token counts are log-normal-ish around the mean (heavy right tail, ≥ 1),
+/// matching observed production prompt/output length distributions.
+fn sample_tokens(mean: usize, rng: &mut Rng) -> usize {
+    if mean == 0 {
+        return 0;
+    }
+    let sigma = 0.6f64;
+    let mu = (mean as f64).ln() - sigma * sigma / 2.0;
+    rng.lognormal(mu, sigma).round().max(1.0) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_approximate() {
+        let mut rng = Rng::new(1);
+        let t = poisson_trace(50.0, 100.0, "m", 128, 64, &mut rng);
+        let n = t.requests.len() as f64;
+        assert!((n - 5000.0).abs() < 300.0, "n={n}");
+        // Arrivals sorted and in range.
+        for w in t.requests.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+    }
+
+    #[test]
+    fn burst_all_at_once() {
+        let mut rng = Rng::new(2);
+        let t = burst_trace(50, 1.0, "m", 128, 64, &mut rng);
+        assert_eq!(t.requests.len(), 50);
+        assert!(t.requests.iter().all(|r| r.arrival == SimTime::from_secs(1.0)));
+        assert!(t.requests.iter().all(|r| r.prompt_tokens >= 1 && r.output_tokens >= 1));
+    }
+
+    #[test]
+    fn token_sampling_mean() {
+        let mut rng = Rng::new(3);
+        let n = 20_000;
+        let mean: f64 =
+            (0..n).map(|_| sample_tokens(128, &mut rng) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 128.0).abs() < 10.0, "mean={mean}");
+    }
+}

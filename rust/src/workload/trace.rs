@@ -1,0 +1,179 @@
+//! Request/trace records with CSV (de)serialization.
+//!
+//! CSV schema (header required):
+//! `id,arrival_s,model,prompt_tokens,output_tokens`
+
+use crate::sim::time::SimTime;
+
+/// One inference request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Request {
+    pub id: u64,
+    pub arrival: SimTime,
+    pub model: String,
+    pub prompt_tokens: usize,
+    pub output_tokens: usize,
+}
+
+/// A time-ordered request trace.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    pub fn duration(&self) -> SimTime {
+        self.requests.iter().map(|r| r.arrival).max().unwrap_or(SimTime::ZERO)
+    }
+
+    /// Ensure arrival order (stable by id for ties).
+    pub fn sort(&mut self) {
+        self.requests.sort_by_key(|r| (r.arrival, r.id));
+    }
+
+    /// Requests-per-second series over fixed windows (Fig 1 / Fig 14 top).
+    pub fn rps_series(&self, window_s: f64) -> Vec<(f64, f64)> {
+        if self.requests.is_empty() {
+            return vec![];
+        }
+        let end = self.duration().as_secs();
+        let n_win = (end / window_s).floor() as usize + 1;
+        let mut counts = vec![0u64; n_win];
+        for r in &self.requests {
+            let w = (r.arrival.as_secs() / window_s) as usize;
+            counts[w.min(n_win - 1)] += 1;
+        }
+        counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (i as f64 * window_s, c as f64 / window_s))
+            .collect()
+    }
+
+    /// Concatenate with `other`, offsetting its arrivals by `offset`.
+    pub fn merge(&mut self, other: &Trace, offset: SimTime) {
+        let base = self.requests.len() as u64;
+        for r in &other.requests {
+            self.requests.push(Request {
+                id: base + r.id,
+                arrival: r.arrival + offset,
+                model: r.model.clone(),
+                prompt_tokens: r.prompt_tokens,
+                output_tokens: r.output_tokens,
+            });
+        }
+        self.sort();
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("id,arrival_s,model,prompt_tokens,output_tokens\n");
+        for r in &self.requests {
+            s.push_str(&format!(
+                "{},{:.6},{},{},{}\n",
+                r.id,
+                r.arrival.as_secs(),
+                r.model,
+                r.prompt_tokens,
+                r.output_tokens
+            ));
+        }
+        s
+    }
+
+    pub fn from_csv(text: &str) -> Result<Trace, String> {
+        let mut lines = text.lines();
+        let header = lines.next().ok_or("empty trace file")?;
+        if header.trim() != "id,arrival_s,model,prompt_tokens,output_tokens" {
+            return Err(format!("unexpected header: {header}"));
+        }
+        let mut requests = Vec::new();
+        for (i, line) in lines.enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let f: Vec<&str> = line.split(',').collect();
+            if f.len() != 5 {
+                return Err(format!("line {}: expected 5 fields, got {}", i + 2, f.len()));
+            }
+            requests.push(Request {
+                id: f[0].parse().map_err(|e| format!("line {}: id: {e}", i + 2))?,
+                arrival: SimTime::from_secs(
+                    f[1].parse::<f64>().map_err(|e| format!("line {}: arrival: {e}", i + 2))?,
+                ),
+                model: f[2].to_string(),
+                prompt_tokens: f[3].parse().map_err(|e| format!("line {}: prompt: {e}", i + 2))?,
+                output_tokens: f[4].parse().map_err(|e| format!("line {}: output: {e}", i + 2))?,
+            });
+        }
+        let mut t = Trace { requests };
+        t.sort();
+        Ok(t)
+    }
+
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_csv())
+    }
+
+    pub fn load(path: &str) -> Result<Trace, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Trace::from_csv(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        Trace {
+            requests: vec![
+                Request { id: 0, arrival: SimTime::from_secs(0.5), model: "a".into(), prompt_tokens: 10, output_tokens: 5 },
+                Request { id: 1, arrival: SimTime::from_secs(1.5), model: "b".into(), prompt_tokens: 20, output_tokens: 8 },
+                Request { id: 2, arrival: SimTime::from_secs(1.6), model: "a".into(), prompt_tokens: 30, output_tokens: 2 },
+            ],
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let t = sample();
+        let csv = t.to_csv();
+        let back = Trace::from_csv(&csv).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn csv_rejects_malformed() {
+        assert!(Trace::from_csv("").is_err());
+        assert!(Trace::from_csv("bad,header\n").is_err());
+        assert!(Trace::from_csv("id,arrival_s,model,prompt_tokens,output_tokens\n1,2,3\n").is_err());
+    }
+
+    #[test]
+    fn rps_series_counts() {
+        let t = sample();
+        let series = t.rps_series(1.0);
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].1, 1.0); // 1 request in [0,1)
+        assert_eq!(series[1].1, 2.0); // 2 requests in [1,2)
+    }
+
+    #[test]
+    fn merge_offsets_and_sorts() {
+        let mut a = sample();
+        let b = sample();
+        a.merge(&b, SimTime::from_secs(10.0));
+        assert_eq!(a.len(), 6);
+        assert!(a.requests.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        assert_eq!(a.requests.last().unwrap().arrival, SimTime::from_secs(11.6));
+    }
+}

@@ -1,0 +1,112 @@
+//! Real-compute execute-while-load consistency: a λPipe execution pipeline
+//! chained across two worker engines (each holding half the blocks) must
+//! produce exactly the tokens of single-engine local execution, including
+//! after a §4.4 mode switch with KV recomputation.
+//!
+//! Requires artifacts (skips with a notice otherwise). This is the
+//! test-sized version of `examples/trace_replay.rs`.
+
+use lambda_scale::runtime::{argmax, Engine, Phase};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn two_worker_pipeline_matches_local_with_mode_switch() {
+    let Some(dir) = artifacts_dir() else { return };
+    let probe = Engine::new(&dir).unwrap();
+    let cfg = probe.manifest.config.clone();
+    drop(probe);
+    assert!(cfg.n_blocks >= 2);
+    let split = cfg.n_blocks / 2;
+
+    // Two workers: w0 holds blocks [0, split), w1 holds [split, n).
+    let mut w0 = Engine::new(&dir).unwrap();
+    let mut w1 = Engine::new(&dir).unwrap();
+    for b in 0..split {
+        w0.install_block(b).unwrap();
+    }
+    for b in split..cfg.n_blocks {
+        w1.install_block(b).unwrap();
+    }
+
+    let batch = 1usize;
+    let prompt: Vec<i32> = (0..cfg.prefill_len).map(|i| ((i * 13 + 7) % cfg.vocab) as i32).collect();
+    let pipe_tokens = 4usize;
+    let local_tokens = 4usize;
+
+    // Reference: pure local generation.
+    let reference = {
+        let full = Engine::new_full(&dir).unwrap();
+        full.generate(&[prompt.clone()], pipe_tokens + local_tokens).unwrap()
+    };
+
+    // Phase 1: pipelined prefill + decode across the two workers.
+    let mut s0 = w0.session(batch).unwrap();
+    let mut s1 = w1.session(batch).unwrap();
+    let run_step = |w0: &Engine,
+                    w1: &Engine,
+                    s0: &mut lambda_scale::runtime::Session,
+                    s1: &mut lambda_scale::runtime::Session,
+                    phase: Phase,
+                    x: xla::Literal|
+     -> xla::Literal {
+        let mut x = x;
+        for b in 0..split {
+            x = w0.run_block(b, phase, s0, &x).unwrap();
+        }
+        for b in split..cfg.n_blocks {
+            x = w1.run_block(b, phase, s1, &x).unwrap();
+        }
+        x
+    };
+
+    let x = xla::Literal::vec1(&prompt).reshape(&[1, cfg.prefill_len as i64]).unwrap();
+    let out = run_step(&w0, &w1, &mut s0, &mut s1, Phase::Prefill, x);
+    s0.pos = cfg.prefill_len;
+    s1.pos = cfg.prefill_len;
+    let logits = out.to_vec::<f32>().unwrap();
+    let base = (cfg.prefill_len - 1) * cfg.vocab;
+    let mut tok = argmax(&logits[base..base + cfg.vocab]);
+    let mut generated = vec![tok];
+    for _ in 1..pipe_tokens {
+        let x = xla::Literal::vec1(&[tok]).reshape(&[1, 1]).unwrap();
+        let out = run_step(&w0, &w1, &mut s0, &mut s1, Phase::Decode, x);
+        s0.pos += 1;
+        s1.pos += 1;
+        let logits = out.to_vec::<f32>().unwrap();
+        tok = argmax(&logits[..cfg.vocab]);
+        generated.push(tok);
+    }
+
+    // Mode switch: finish the "multicast" (install everything on w0), then
+    // recompute the KV cache from prompt + generated tokens and continue
+    // locally on w0.
+    for b in 0..cfg.n_blocks {
+        w0.install_block(b).unwrap();
+    }
+    assert!(w0.is_complete());
+    let mut local = w0.session(batch).unwrap();
+    w0.prefill(&mut local, &prompt).unwrap();
+    for &t in &generated[..generated.len() - 1] {
+        w0.decode(&mut local, &[t]).unwrap();
+    }
+    let mut tok = *generated.last().unwrap();
+    for _ in 0..local_tokens {
+        let logits = w0.decode(&mut local, &[tok]).unwrap();
+        tok = argmax(&logits[0]);
+        generated.push(tok);
+    }
+
+    assert_eq!(
+        generated, reference[0],
+        "pipelined + mode-switched generation diverged from local execution"
+    );
+}

@@ -1,0 +1,123 @@
+//! Cross-system serving-simulation invariants (property style): request
+//! conservation, metric sanity, GPU accounting, determinism.
+
+use lambda_scale::config::ClusterConfig;
+use lambda_scale::coordinator::{run_serving, ServingConfig, SystemKind};
+use lambda_scale::model::ModelSpec;
+use lambda_scale::sim::time::SimTime;
+use lambda_scale::util::rng::Rng;
+use lambda_scale::workload::{burst_trace, poisson_trace, Trace};
+
+fn systems() -> Vec<SystemKind> {
+    vec![
+        SystemKind::LambdaScale { k: 1 },
+        SystemKind::LambdaScale { k: 2 },
+        SystemKind::FaasNet,
+        SystemKind::Nccl,
+        SystemKind::ServerlessLlm,
+        SystemKind::Ideal,
+    ]
+}
+
+fn check_run(sys: SystemKind, trace: &Trace, cfg: &ServingConfig) {
+    let m = run_serving(cfg, trace);
+    // Conservation: every request completes exactly once.
+    assert_eq!(m.requests.len(), trace.len(), "{}: lost/duplicated requests", sys.name());
+    let mut ids: Vec<u64> = m.requests.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), trace.len(), "{}: duplicate completions", sys.name());
+    // Causality: first token after arrival, completion after first token.
+    for r in &m.requests {
+        assert!(r.first_token >= r.arrival, "{}: token before arrival", sys.name());
+        assert!(r.completion >= r.first_token, "{}: completion before first token", sys.name());
+    }
+    // Token accounting roughly matches requested output.
+    let expected: usize = trace.requests.iter().map(|r| r.output_tokens).sum();
+    let counted = m.total_tokens();
+    assert!(
+        counted as f64 >= 0.7 * expected as f64,
+        "{}: counted {counted} of {expected} tokens",
+        sys.name()
+    );
+    // GPU accounting bounded by the cluster.
+    let horizon = m
+        .requests
+        .iter()
+        .map(|r| r.completion)
+        .max()
+        .unwrap_or(SimTime::ZERO)
+        + SimTime::from_secs(60.0);
+    let bound = (cfg.cluster.n_nodes * cfg.cluster.node.gpus_per_node) as f64
+        * horizon.as_secs();
+    let gt = m.gpu_time(horizon);
+    assert!(gt > 0.0 && gt <= bound * 1.001, "{}: gpu time {gt} vs bound {bound}", sys.name());
+}
+
+#[test]
+fn burst_invariants_all_systems() {
+    let mut rng = Rng::new(5);
+    let trace = burst_trace(60, 0.0, "llama2-13b", 128, 64, &mut rng);
+    for sys in systems() {
+        let mut cluster = ClusterConfig::testbed1();
+        cluster.n_nodes = 8;
+        let mut cfg = ServingConfig::new(sys, cluster, ModelSpec::llama2_13b());
+        cfg.max_batch = 8;
+        check_run(sys, &trace, &cfg);
+    }
+}
+
+#[test]
+fn poisson_invariants_all_systems() {
+    let mut rng = Rng::new(9);
+    let trace = poisson_trace(20.0, 30.0, "llama2-7b", 96, 48, &mut rng);
+    for sys in systems() {
+        let mut cluster = ClusterConfig::testbed1();
+        cluster.n_nodes = 6;
+        let mut cfg = ServingConfig::new(sys, cluster, ModelSpec::llama2_7b());
+        cfg.max_batch = 8;
+        check_run(sys, &trace, &cfg);
+    }
+}
+
+#[test]
+fn serving_is_deterministic() {
+    let mut rng = Rng::new(13);
+    let trace = burst_trace(40, 0.0, "llama2-13b", 128, 64, &mut rng);
+    let mut cluster = ClusterConfig::testbed1();
+    cluster.n_nodes = 8;
+    let cfg = ServingConfig::new(SystemKind::LambdaScale { k: 2 }, cluster, ModelSpec::llama2_13b());
+    let a = run_serving(&cfg, &trace);
+    let b = run_serving(&cfg, &trace);
+    let key = |m: &lambda_scale::metrics::MetricsCollector| {
+        let mut v: Vec<(u64, u64, u64)> =
+            m.requests.iter().map(|r| (r.id, r.first_token.0, r.completion.0)).collect();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(key(&a), key(&b));
+}
+
+#[test]
+fn multi_gpu_model_on_testbed2() {
+    // 70B spans 4 GPUs per replica; the simulation must stay consistent.
+    let mut rng = Rng::new(17);
+    let trace = burst_trace(30, 0.0, "llama2-70b", 128, 32, &mut rng);
+    for sys in [SystemKind::LambdaScale { k: 1 }, SystemKind::ServerlessLlm] {
+        let cluster = ClusterConfig::testbed2();
+        let mut cfg = ServingConfig::new(sys, cluster, ModelSpec::llama2_70b());
+        cfg.max_batch = 8;
+        check_run(sys, &trace, &cfg);
+    }
+}
+
+#[test]
+fn empty_trace_is_fine() {
+    let cfg = ServingConfig::new(
+        SystemKind::LambdaScale { k: 1 },
+        ClusterConfig::testbed1(),
+        ModelSpec::llama2_13b(),
+    );
+    let m = run_serving(&cfg, &Trace::default());
+    assert!(m.requests.is_empty());
+}
