@@ -2,12 +2,16 @@
 //! the simulated Testbed1 cluster; report TTFT distribution, ramp speed and
 //! GPU cost side by side (the §7.3/§7.4 experiment as a single command).
 //!
+//! Each run goes through the trait-based `ServingSession` builder — the
+//! same path a custom `ScalingBackend` / `RoutingPolicy` /
+//! `AdmissionPolicy` would plug into.
+//!
 //! ```sh
 //! cargo run --release --example spike_serving [model] [n_requests]
 //! ```
 
 use lambda_scale::config::ClusterConfig;
-use lambda_scale::coordinator::{run_serving, ServingConfig, SystemKind};
+use lambda_scale::coordinator::{ServingSession, SystemKind};
 use lambda_scale::model::ModelSpec;
 use lambda_scale::sim::time::SimTime;
 use lambda_scale::util::bench::Table;
@@ -43,13 +47,19 @@ fn main() {
     ] {
         let mut cluster = ClusterConfig::testbed1();
         cluster.n_nodes = 8;
-        let mut cfg = ServingConfig::new(sys, cluster, model.clone());
-        cfg.max_batch = 8;
-        cfg.initial_gpu_sources = match sys {
+        let gpu_sources = match sys {
             SystemKind::LambdaScale { k } => k.min(4),
             _ => 1,
         };
-        let m = run_serving(&cfg, &trace);
+        let m = ServingSession::builder()
+            .cluster(cluster)
+            .model(model.clone())
+            .system(sys)
+            .max_batch(8)
+            .initial_gpu_sources(gpu_sources)
+            .trace(trace.clone())
+            .run()
+            .into_single();
         let mut s = m.ttft_samples();
         let peak = m.gpu_series(1.0, 60.0).iter().map(|&(_, g)| g).max().unwrap_or(0);
         t.row(&[

@@ -1,0 +1,507 @@
+//! Pluggable scaling backends: the open, trait-based face of the scaling
+//! controller.
+//!
+//! A [`ScalingBackend`] turns a [`ScalingRequest`] ("these nodes hold the
+//! model, these need it") into a timed [`ScalingOutcome`] ("this pipeline /
+//! replica serves at t"). One impl per system from the paper's evaluation:
+//!
+//! * [`LambdaPipe`] — λScale's λPipe flow (§4 + §5): k-way binomial
+//!   multicast, execute-while-load pipelines, mode switch to local replicas.
+//! * [`FaasNet`] — binary-tree function-image distribution (full model
+//!   before serving).
+//! * [`NcclBcast`] — NCCL-like chained broadcast.
+//! * [`ServerlessLlm`] — local-tier loads only (host memory or SSD), never
+//!   cross-node multicast.
+//! * [`Ideal`] — zero-cost instantaneous scaling (Fig 14's Ideal line).
+//! * [`MockBackend`] — scripted outcomes for engine unit tests.
+//!
+//! The serving engine ([`super::engine`]) is generic over this trait; adding
+//! a new scaling policy means implementing `plan` and handing the boxed
+//! backend to `ServingSession::builder().backend(..)` — no engine changes.
+//! `SystemKind` remains as a thin config/CLI-compatible factory
+//! ([`super::scaling::SystemKind::backend`]).
+
+use super::scaling::{NewInstance, ScalingOutcome, Source};
+use crate::config::ClusterConfig;
+use crate::model::{ModelSpec, Partition};
+use crate::multicast::{self, Algorithm, NodeId};
+use crate::pipeline::execution::ExecPipeline;
+use crate::pipeline::generation::{
+    generate_pipelines, pipeline_block_assignment, pipeline_ready_time,
+};
+use crate::pipeline::mode_switch::{plan_switch, SwitchStrategy};
+use crate::sim::time::SimTime;
+use crate::sim::transfer::{Medium, SendIntent, Tier, TransferOpts, TransferSim};
+
+/// One scaling operation's inputs: who holds the model, who needs it, and
+/// how transfers are tuned. Sources are tier-tagged, best tier first (live
+/// GPU replicas, then recruited host-memory nodes, then an SSD fallback).
+#[derive(Clone, Debug)]
+pub struct ScalingRequest<'a> {
+    /// Nodes holding the model (tier-tagged, best first).
+    pub sources: Vec<Source>,
+    /// Cold nodes that need the model delivered.
+    pub dests: Vec<NodeId>,
+    pub spec: &'a ModelSpec,
+    pub partition: &'a Partition,
+    pub opts: TransferOpts,
+    pub switch: SwitchStrategy,
+}
+
+/// Per-node occupancy as seen by a backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeStatus {
+    Free,
+    Loading,
+    Serving,
+}
+
+/// Read-only cluster view handed to backends. `nodes` may be empty when the
+/// caller tracks no per-node state (e.g. the `plan_scaling` compatibility
+/// shim); `config` is always present.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterState<'a> {
+    pub config: &'a ClusterConfig,
+    pub nodes: &'a [NodeStatus],
+}
+
+impl<'a> ClusterState<'a> {
+    /// A view carrying only the static cluster configuration.
+    pub fn config_only(config: &'a ClusterConfig) -> Self {
+        ClusterState { config, nodes: &[] }
+    }
+}
+
+/// A scaling policy: plans when pipelines / local replicas become available
+/// after a scale-out decision. Implementations must be deterministic —
+/// the serving engine's reproducibility depends on it.
+pub trait ScalingBackend {
+    /// Human-readable policy name (used in reports and figures).
+    fn name(&self) -> String;
+
+    /// Plan one scaling operation. Times in the returned outcome are
+    /// relative to the operation's start.
+    fn plan(&self, req: &ScalingRequest, cluster: &ClusterState) -> ScalingOutcome;
+}
+
+// ---- shared planning helpers ------------------------------------------------
+
+fn medium_of(tier: Tier) -> Medium {
+    if tier == Tier::HostMem {
+        Medium::HostMem
+    } else {
+        Medium::Ssd
+    }
+}
+
+/// Sequential block loads through a node's own storage port.
+fn local_load_time(sim: &TransferSim, tier: Tier, block_bytes: &[u64]) -> SimTime {
+    let medium = medium_of(tier);
+    let mut t = SimTime::ZERO;
+    for &bytes in block_bytes {
+        t += sim.duration(bytes, medium, tier);
+    }
+    t
+}
+
+/// Pure warm-up operation (no cold destinations): every source self-loads
+/// into its own GPU; GPU-tier sources serve immediately.
+fn plan_warmup(req: &ScalingRequest, cluster: &ClusterState) -> ScalingOutcome {
+    let block_bytes = req.partition.block_bytes();
+    let sim = TransferSim::new(&cluster.config.network, req.opts);
+    let mut out = ScalingOutcome::default();
+    for s in &req.sources {
+        let t = match s.tier {
+            Tier::Gpu => SimTime::ZERO,
+            tier => local_load_time(&sim, tier, &block_bytes),
+        };
+        out.instances.push((t, NewInstance::Local { node: s.node }));
+        if t > SimTime::ZERO {
+            out.nodes_loading.push((s.node, t));
+        }
+        out.finish = out.finish.max(t);
+    }
+    out
+}
+
+/// Tree/chain multicast plan shared by FaaSNet and NCCL-like baselines:
+/// instances appear only when a node holds the entire model.
+fn plan_tree_multicast(
+    alg: Algorithm,
+    req: &ScalingRequest,
+    cluster: &ClusterState,
+) -> ScalingOutcome {
+    let sources = &req.sources;
+    let dests = &req.dests;
+    let n_blocks = req.partition.n_blocks();
+    let block_bytes = req.partition.block_bytes();
+    let net = &cluster.config.network;
+    let mut out = ScalingOutcome::default();
+
+    let mut nodes: Vec<NodeId> = sources.iter().map(|s| s.node).collect();
+    nodes.extend_from_slice(dests);
+    let mut plan = multicast::build_plan(alg, &nodes, sources.len(), n_blocks, sources[0].tier, net);
+    plan.initial.clear();
+    for s in sources {
+        for b in 0..n_blocks {
+            plan.initial.push((s.node, b, s.tier));
+        }
+    }
+    let log = plan.execute(net, req.opts, &block_bytes);
+    out.finish = log.all_complete(&nodes, n_blocks).unwrap_or(log.finish);
+    for s in sources {
+        out.instances.push((SimTime::ZERO, NewInstance::Local { node: s.node }));
+    }
+    for &d in dests {
+        let t = log.node_complete(d, n_blocks).unwrap_or(out.finish);
+        out.instances.push((t, NewInstance::Local { node: d }));
+        out.nodes_loading.push((d, t));
+    }
+    out
+}
+
+// ---- λScale -----------------------------------------------------------------
+
+/// λScale's λPipe scaling: k-way binomial multicast with execute-while-load
+/// execution pipelines and a mode switch to local replicas on completion.
+#[derive(Clone, Copy, Debug)]
+pub struct LambdaPipe {
+    /// k-way transmission degree (Algorithm 1).
+    pub k: usize,
+}
+
+impl ScalingBackend for LambdaPipe {
+    fn name(&self) -> String {
+        format!("lambdascale-k{}", self.k)
+    }
+
+    fn plan(&self, req: &ScalingRequest, cluster: &ClusterState) -> ScalingOutcome {
+        let sources = &req.sources;
+        let dests = &req.dests;
+        assert!(!sources.is_empty(), "scaling requires at least one source replica");
+        if dests.is_empty() {
+            return plan_warmup(req, cluster);
+        }
+        let n_blocks = req.partition.n_blocks();
+        let block_bytes = req.partition.block_bytes();
+        let net = &cluster.config.network;
+        let mut out = ScalingOutcome::default();
+
+        let k_eff = self.k.clamp(1, sources.len()).min(dests.len().max(1));
+        let active_sources = &sources[..k_eff];
+        let mut nodes: Vec<NodeId> = active_sources.iter().map(|s| s.node).collect();
+        nodes.extend_from_slice(dests);
+        let mut plan = multicast::kway::kway_plan(&nodes, k_eff, n_blocks, active_sources[0].tier);
+        // Per-source tiers may differ; patch initial holdings.
+        plan.initial.clear();
+        for s in active_sources {
+            for b in 0..n_blocks {
+                plan.initial.push((s.node, b, s.tier));
+            }
+        }
+        // Sources also stage into their own GPU to serve locally.
+        for s in active_sources {
+            if s.tier != Tier::Gpu {
+                let medium = medium_of(s.tier);
+                for b in 0..n_blocks {
+                    plan.intents.push(SendIntent { src: s.node, dst: s.node, block: b, medium });
+                }
+            }
+        }
+        let log = plan.execute(net, req.opts, &block_bytes);
+        let finish = log
+            .all_complete(&nodes, n_blocks)
+            .expect("λScale multicast left nodes incomplete");
+        out.finish = finish;
+
+        // Execute-while-load: pipelines over the destination sub-groups.
+        let groups = multicast::kway::split_subgroups(dests, k_eff);
+        for p in generate_pipelines(&groups) {
+            if p.len() < 2 {
+                // A single-member "pipeline" is just a node that has the
+                // whole model — the Local instance below covers it.
+                continue;
+            }
+            let assignment = pipeline_block_assignment(&p, n_blocks, k_eff);
+            if let Some(ready) = pipeline_ready_time(&log, &assignment) {
+                let pipe = ExecPipeline::from_assignment(&assignment, req.partition);
+                out.instances
+                    .push((ready, NewInstance::Pipeline { pipeline: pipe, dissolve_at: finish }));
+            }
+        }
+        // Mode switch: every participant becomes a local replica at finish
+        // (+ recompute stall for in-flight state, charged by the serving
+        // layer via `plan_switch`).
+        let stall = plan_switch(
+            &[],
+            &nodes.iter().copied().collect::<Vec<_>>(),
+            req.spec,
+            &cluster.config.compute,
+            net,
+            Some(req.switch),
+        )
+        .stall_s;
+        let local_at = finish + SimTime::from_secs(stall);
+        for s in active_sources {
+            let t = if s.tier == Tier::Gpu {
+                SimTime::ZERO
+            } else {
+                log.node_complete(s.node, n_blocks).unwrap_or(finish)
+            };
+            out.instances.push((t, NewInstance::Local { node: s.node }));
+            if s.tier != Tier::Gpu {
+                out.nodes_loading.push((s.node, t));
+            }
+        }
+        // Sources beyond the k-way senders (extra warm replicas) still
+        // self-load into their GPUs and serve (§5 locality-driven startup) —
+        // they must not be stranded.
+        let sim = TransferSim::new(net, req.opts);
+        for s in &sources[k_eff..] {
+            let t = match s.tier {
+                Tier::Gpu => SimTime::ZERO,
+                tier => local_load_time(&sim, tier, &block_bytes),
+            };
+            out.instances.push((t, NewInstance::Local { node: s.node }));
+            if t > SimTime::ZERO {
+                out.nodes_loading.push((s.node, t));
+            }
+        }
+        for &d in dests {
+            out.instances.push((local_at, NewInstance::Local { node: d }));
+            out.nodes_loading.push((d, local_at));
+        }
+        out
+    }
+}
+
+// ---- FaaSNet ---------------------------------------------------------------
+
+/// FaaSNet-style binary-tree distribution: no partial-model serving.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaasNet;
+
+impl ScalingBackend for FaasNet {
+    fn name(&self) -> String {
+        "faasnet".into()
+    }
+
+    fn plan(&self, req: &ScalingRequest, cluster: &ClusterState) -> ScalingOutcome {
+        assert!(!req.sources.is_empty(), "scaling requires at least one source replica");
+        if req.dests.is_empty() {
+            return plan_warmup(req, cluster);
+        }
+        plan_tree_multicast(Algorithm::FaasNet, req, cluster)
+    }
+}
+
+// ---- NCCL ------------------------------------------------------------------
+
+/// NCCL-like chained broadcast: no partial-model serving.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NcclBcast;
+
+impl ScalingBackend for NcclBcast {
+    fn name(&self) -> String {
+        "nccl".into()
+    }
+
+    fn plan(&self, req: &ScalingRequest, cluster: &ClusterState) -> ScalingOutcome {
+        assert!(!req.sources.is_empty(), "scaling requires at least one source replica");
+        if req.dests.is_empty() {
+            return plan_warmup(req, cluster);
+        }
+        plan_tree_multicast(Algorithm::Nccl, req, cluster)
+    }
+}
+
+// ---- ServerlessLLM ---------------------------------------------------------
+
+/// ServerlessLLM-style scaling: every recruit loads from its own local tier
+/// (host memory if cached there, SSD otherwise); never multicasts.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerlessLlm;
+
+impl ScalingBackend for ServerlessLlm {
+    fn name(&self) -> String {
+        "serverlessllm".into()
+    }
+
+    fn plan(&self, req: &ScalingRequest, cluster: &ClusterState) -> ScalingOutcome {
+        let sources = &req.sources;
+        assert!(!sources.is_empty(), "scaling requires at least one source replica");
+        let block_bytes = req.partition.block_bytes();
+        let mut out = ScalingOutcome::default();
+        // Host-memory sources are warm recruits: they self-load and serve
+        // (they cannot multicast to anyone under this policy). Cold dests
+        // fall back to their own SSD.
+        let warm: Vec<NodeId> =
+            sources.iter().filter(|s| s.tier == Tier::HostMem).map(|s| s.node).collect();
+        let load_dests: Vec<NodeId> = warm
+            .iter()
+            .copied()
+            .chain(req.dests.iter().copied().filter(|d| !warm.contains(d)))
+            .collect();
+        let src_tier = |n: NodeId| {
+            sources.iter().find(|s| s.node == n).map(|s| s.tier).unwrap_or(Tier::Ssd)
+        };
+        let sim = TransferSim::new(&cluster.config.network, req.opts);
+        for s in sources.iter().filter(|s| s.tier == Tier::Gpu) {
+            out.instances.push((SimTime::ZERO, NewInstance::Local { node: s.node }));
+        }
+        for &d in &load_dests {
+            let t = local_load_time(&sim, src_tier(d), &block_bytes);
+            out.instances.push((t, NewInstance::Local { node: d }));
+            out.nodes_loading.push((d, t));
+            out.finish = out.finish.max(t);
+        }
+        out
+    }
+}
+
+// ---- Ideal -----------------------------------------------------------------
+
+/// Zero-cost instantaneous scaling: every source and destination serves a
+/// full local replica at t=0 (Fig 14's cost floor).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Ideal;
+
+impl ScalingBackend for Ideal {
+    fn name(&self) -> String {
+        "ideal".into()
+    }
+
+    fn plan(&self, req: &ScalingRequest, _cluster: &ClusterState) -> ScalingOutcome {
+        assert!(!req.sources.is_empty(), "scaling requires at least one source replica");
+        let mut out = ScalingOutcome::default();
+        for &d in &req.dests {
+            out.instances.push((SimTime::ZERO, NewInstance::Local { node: d }));
+        }
+        for s in &req.sources {
+            out.instances.push((SimTime::ZERO, NewInstance::Local { node: s.node }));
+        }
+        out
+    }
+}
+
+// ---- test double -----------------------------------------------------------
+
+/// Scripted backend for unit-testing the serving engine without running a
+/// real multicast plan: each `plan` call pops the next scripted outcome
+/// (repeating the last one when the script runs dry).
+pub struct MockBackend {
+    script: std::cell::RefCell<std::collections::VecDeque<ScalingOutcome>>,
+    last: std::cell::RefCell<ScalingOutcome>,
+    /// (n_sources, n_dests) per plan call, for assertions.
+    pub calls: std::cell::RefCell<Vec<(usize, usize)>>,
+}
+
+impl MockBackend {
+    pub fn new(outcomes: Vec<ScalingOutcome>) -> Self {
+        MockBackend {
+            script: std::cell::RefCell::new(outcomes.into()),
+            last: std::cell::RefCell::new(ScalingOutcome::default()),
+            calls: std::cell::RefCell::new(Vec::new()),
+        }
+    }
+}
+
+impl ScalingBackend for MockBackend {
+    fn name(&self) -> String {
+        "mock".into()
+    }
+
+    fn plan(&self, req: &ScalingRequest, _cluster: &ClusterState) -> ScalingOutcome {
+        self.calls.borrow_mut().push((req.sources.len(), req.dests.len()));
+        match self.script.borrow_mut().pop_front() {
+            Some(o) => {
+                *self.last.borrow_mut() = o.clone();
+                o
+            }
+            None => self.last.borrow().clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scaling::SystemKind;
+
+    fn setup() -> (ModelSpec, Partition, ClusterConfig) {
+        let spec = ModelSpec::llama2_13b();
+        let part = spec.partition(16);
+        (spec, part, ClusterConfig::testbed1())
+    }
+
+    fn req<'a>(
+        spec: &'a ModelSpec,
+        part: &'a Partition,
+        sources: Vec<Source>,
+        dests: Vec<NodeId>,
+    ) -> ScalingRequest<'a> {
+        ScalingRequest {
+            sources,
+            dests,
+            spec,
+            partition: part,
+            opts: TransferOpts::default(),
+            switch: SwitchStrategy::Recompute,
+        }
+    }
+
+    #[test]
+    fn factory_names_match_systems() {
+        for sys in [
+            SystemKind::LambdaScale { k: 2 },
+            SystemKind::FaasNet,
+            SystemKind::Nccl,
+            SystemKind::ServerlessLlm,
+            SystemKind::Ideal,
+        ] {
+            assert_eq!(sys.backend().name(), sys.name());
+        }
+    }
+
+    #[test]
+    fn warmup_plan_self_loads_hostmem_sources() {
+        let (spec, part, cl) = setup();
+        let r = req(&spec, &part, vec![Source { node: 3, tier: Tier::HostMem }], vec![]);
+        let out = LambdaPipe { k: 2 }.plan(&r, &ClusterState::config_only(&cl));
+        assert_eq!(out.instances.len(), 1);
+        assert!(out.instances[0].0 > SimTime::ZERO, "host-memory staging takes time");
+        assert_eq!(out.nodes_loading.len(), 1);
+    }
+
+    #[test]
+    fn mock_backend_replays_script() {
+        let (spec, part, cl) = setup();
+        let mut o1 = ScalingOutcome::default();
+        o1.instances.push((SimTime::from_secs(0.5), NewInstance::Local { node: 7 }));
+        let mock = MockBackend::new(vec![o1.clone()]);
+        let r = req(&spec, &part, vec![Source { node: 0, tier: Tier::Gpu }], vec![7]);
+        let cs = ClusterState::config_only(&cl);
+        let a = mock.plan(&r, &cs);
+        let b = mock.plan(&r, &cs); // script dry: repeats last
+        assert_eq!(a.instances.len(), 1);
+        assert_eq!(b.instances.len(), 1);
+        assert_eq!(mock.calls.borrow().len(), 2);
+    }
+
+    #[test]
+    fn serverlessllm_warm_sources_become_load_dests() {
+        let (spec, part, cl) = setup();
+        // One warm recruit + one cold dest: both load locally, warm faster.
+        let r = req(
+            &spec,
+            &part,
+            vec![Source { node: 1, tier: Tier::HostMem }],
+            vec![2],
+        );
+        let out = ServerlessLlm.plan(&r, &ClusterState::config_only(&cl));
+        assert_eq!(out.instances.len(), 2);
+        let t_warm = out.instances[0].0;
+        let t_cold = out.instances[1].0;
+        assert!(t_warm < t_cold, "host-mem load {t_warm} must beat SSD {t_cold}");
+    }
+}

@@ -69,9 +69,21 @@ impl<T> DynamicBatcher<T> {
     }
 
     /// Earliest future time the latency trigger could fire (for scheduling
-    /// a wakeup); `None` when empty.
+    /// a wakeup); `None` when empty. Saturating, so an "effectively never"
+    /// `max_wait` of [`SimTime::MAX`] is safe.
     pub fn next_deadline(&self) -> Option<SimTime> {
-        self.queue.front().map(|p| p.enqueued + self.max_wait)
+        self.queue.front().map(|p| p.enqueued.saturating_add(self.max_wait))
+    }
+
+    /// Iterate the waiting requests in FIFO order without admitting them.
+    pub fn iter(&self) -> impl Iterator<Item = &Pending<T>> {
+        self.queue.iter()
+    }
+
+    /// Take every waiting request out (used when a peer steals queued work
+    /// during rebalancing or an instance dissolves).
+    pub fn drain_all(&mut self) -> Vec<Pending<T>> {
+        self.queue.drain(..).collect()
     }
 }
 

@@ -1,0 +1,853 @@
+//! The serving engine: a discrete-event loop over one shared cluster,
+//! driving instance lifecycles (up → serve → dissolve → reclaim) for any
+//! number of concurrently-served models.
+//!
+//! The engine is *policy-free*: every system-specific decision is delegated
+//! to the traits a [`ModelSession`] carries —
+//! [`ScalingBackend`](super::backend::ScalingBackend) plans scaling
+//! operations, [`RoutingPolicy`](super::policy::RoutingPolicy) (via
+//! [`Router`]) places requests, and
+//! [`AdmissionPolicy`](super::policy::AdmissionPolicy) moves queued
+//! requests into bounded decode slots through each instance's
+//! [`DynamicBatcher`] waiting queue. The event loop never matches on
+//! `SystemKind`.
+//!
+//! Serving instances are modelled as processor-sharing queues whose total
+//! service rate follows the [`ExecPipeline`] performance model (so an
+//! underfed pipeline or a small batch serves slower, exactly as in §4.3).
+//! GPU-time cost accounting charges nodes from the moment a scaling
+//! operation reserves them (loading time is billed — the reason slow
+//! loading costs money in Fig 14). Models share the cluster's nodes
+//! (§2.3 multi-tenancy): scale-outs recruit from the same free pool, and
+//! per-model host-memory warmth survives GPU reclaim.
+
+use super::backend::{ClusterState, NodeStatus, ScalingRequest};
+use super::batcher::DynamicBatcher;
+use super::scaling::{NewInstance, ScalingOutcome, Source};
+use super::session::{ModelReport, ModelSession, SessionReport};
+use crate::config::ClusterConfig;
+use crate::metrics::RequestMetrics;
+use crate::multicast::NodeId;
+use crate::pipeline::execution::ExecPipeline;
+use crate::pipeline::mode_switch::plan_switch;
+use crate::sim::event::EventQueue;
+use crate::sim::time::SimTime;
+use crate::sim::transfer::Tier;
+use std::collections::{HashMap, HashSet};
+
+#[derive(Clone, Debug)]
+struct ActiveReq {
+    idx: usize,
+    /// Work done so far, token units.
+    done: f64,
+    /// Work needed before the first token (prefill + 1 token).
+    w_first: f64,
+    /// Total work (prefill + all output tokens).
+    w_total: f64,
+    first_emitted: bool,
+    admitted: SimTime,
+}
+
+struct Inst {
+    pipe: ExecPipeline,
+    dissolve_at: Option<SimTime>,
+    active: Vec<ActiveReq>,
+    /// Waiting requests, gated by the model's admission policy.
+    queue: DynamicBatcher<usize>,
+    last_update: SimTime,
+    idle_since: SimTime,
+    version: u64,
+    token_accum: f64,
+}
+
+/// Events carry the index of the model they belong to.
+enum Ev {
+    Arrival(usize, usize),
+    /// Coalesced scaling decision (same-instant arrivals see one decision).
+    ScaleCheck(usize),
+    InstanceUp(usize, u64),
+    InstTick(usize, u64, u64),
+    /// Time-triggered admission re-check (e.g. batching max_wait expiry).
+    AdmitTick(usize, u64),
+    Dissolve(usize, u64),
+    DissolveDone(usize, Vec<usize>),
+    Reclaim(usize, u64),
+}
+
+/// Shared-node occupancy: at most one model owns a node's GPU at a time;
+/// host-memory warmth is tracked per model in [`ModelRuntime::warm`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum NodeUse {
+    Free,
+    Loading(usize),
+    Serving(usize),
+}
+
+/// Per-model mutable state inside the engine.
+struct ModelRuntime {
+    ms: ModelSession,
+    backend_name: String,
+    instances: HashMap<u64, Inst>,
+    next_inst_id: u64,
+    /// Global queue when no instance exists yet.
+    unrouted: std::collections::VecDeque<usize>,
+    req_inst: HashMap<usize, u64>,
+    /// Nodes holding this model in host memory (survives GPU reclaim).
+    warm: HashSet<NodeId>,
+    autoscaler: super::autoscaler::Autoscaler,
+    /// A ScaleCheck event is already queued.
+    scale_check_pending: bool,
+    /// Earliest time the next scaling operation may start (cooldown).
+    next_op_at: SimTime,
+    last_gpu_count: usize,
+    first_tokens: HashMap<usize, SimTime>,
+    completed: usize,
+    partition: crate::model::Partition,
+    prefill_ratio: f64,
+    /// Instances scheduled to come up, keyed by stash id.
+    pending: HashMap<u64, (ExecPipeline, Option<SimTime>)>,
+    next_stash_id: u64,
+    /// Nodes claimed as GPU-resident sources at t=0 (spawned in `run`).
+    initial_gpu_nodes: Vec<NodeId>,
+}
+
+impl ModelRuntime {
+    fn new(ms: ModelSession, cluster: &ClusterConfig) -> Self {
+        let p = &ms.params;
+        let partition = p.spec.partition(p.n_blocks);
+        // Work-units: prefill cost per prompt token relative to one decode
+        // token at batch 1 on a local replica.
+        let local = ExecPipeline::local(0, &p.spec);
+        let decode_tok_s = 1.0 / local.peak_tps(1, &p.spec, &cluster.compute).max(1e-9);
+        let prefill_tok_s = p.spec.flops_per_token / (cluster.compute.gpu_tflops * 1e12);
+        let prefill_ratio = prefill_tok_s / decode_tok_s;
+
+        let per_inst_rps = local.peak_tps(p.max_batch, &p.spec, &cluster.compute)
+            / cluster.compute.avg_output_tokens.max(1.0);
+        let autoscaler = super::autoscaler::Autoscaler::new(
+            per_inst_rps.max(0.1),
+            SimTime::from_secs(p.keep_alive_s),
+        );
+        let backend_name = ms.backend.name();
+        ModelRuntime {
+            ms,
+            backend_name,
+            instances: HashMap::new(),
+            next_inst_id: 0,
+            unrouted: std::collections::VecDeque::new(),
+            req_inst: HashMap::new(),
+            warm: HashSet::new(),
+            autoscaler,
+            scale_check_pending: false,
+            next_op_at: SimTime::ZERO,
+            last_gpu_count: 0,
+            first_tokens: HashMap::new(),
+            completed: 0,
+            partition,
+            prefill_ratio,
+            pending: HashMap::new(),
+            next_stash_id: 1_000_000,
+            initial_gpu_nodes: Vec::new(),
+        }
+    }
+}
+
+/// The multi-model serving engine. Construct with [`ServingEngine::new`],
+/// add models (in priority order for initial node claims), then [`run`].
+///
+/// [`run`]: ServingEngine::run
+pub struct ServingEngine {
+    cluster: ClusterConfig,
+    q: EventQueue<Ev>,
+    node_state: Vec<NodeUse>,
+    models: Vec<ModelRuntime>,
+}
+
+impl ServingEngine {
+    pub fn new(cluster: ClusterConfig) -> Self {
+        let node_state = vec![NodeUse::Free; cluster.n_nodes];
+        ServingEngine { cluster, q: EventQueue::new(), node_state, models: Vec::new() }
+    }
+
+    /// Register a model: claims its initial GPU-resident and host-memory
+    /// source nodes from the cluster's free pool (first-come order).
+    /// Returns the model's index.
+    pub fn add_model(&mut self, ms: ModelSession) -> usize {
+        let m = self.models.len();
+        let mut rt = ModelRuntime::new(ms, &self.cluster);
+        let mut want_gpu = rt.ms.params.initial_gpu_sources;
+        let mut want_host = rt.ms.params.initial_host_sources;
+        for n in 0..self.node_state.len() {
+            if self.node_state[n] != NodeUse::Free {
+                continue;
+            }
+            if want_gpu > 0 {
+                self.node_state[n] = NodeUse::Serving(m);
+                rt.initial_gpu_nodes.push(n);
+                want_gpu -= 1;
+            } else if want_host > 0 {
+                rt.warm.insert(n);
+                want_host -= 1;
+            } else {
+                break;
+            }
+        }
+        self.models.push(rt);
+        m
+    }
+
+    /// Run the event loop to completion and return per-model metrics.
+    pub fn run(mut self) -> SessionReport {
+        // Initial GPU-resident sources serve from t=0.
+        for m in 0..self.models.len() {
+            let nodes = std::mem::take(&mut self.models[m].initial_gpu_nodes);
+            for node in nodes {
+                let pipe = ExecPipeline::local(node, &self.models[m].ms.params.spec);
+                self.spawn_instance(m, pipe, None, SimTime::ZERO);
+            }
+            self.account_gpus(m, SimTime::ZERO);
+        }
+        for m in 0..self.models.len() {
+            for (i, r) in self.models[m].ms.trace.requests.iter().enumerate() {
+                self.q.push(r.arrival, Ev::Arrival(m, i));
+            }
+        }
+        while let Some((t, ev)) = self.q.pop() {
+            match ev {
+                Ev::Arrival(m, i) => self.on_arrival(t, m, i),
+                Ev::ScaleCheck(m) => {
+                    self.models[m].scale_check_pending = false;
+                    self.maybe_scale(t, m);
+                }
+                Ev::InstanceUp(m, id) => self.on_instance_up(t, m, id),
+                Ev::InstTick(m, id, ver) => self.on_tick(t, m, id, ver),
+                Ev::AdmitTick(m, id) => self.try_admit(t, m, id),
+                Ev::Dissolve(m, id) => self.on_dissolve(t, m, id),
+                Ev::DissolveDone(m, reqs) => {
+                    for r in reqs {
+                        self.route_request(t, m, r);
+                    }
+                }
+                Ev::Reclaim(m, id) => self.on_reclaim(t, m, id),
+            }
+        }
+        SessionReport {
+            models: self
+                .models
+                .into_iter()
+                .map(|rt| ModelReport {
+                    model: rt.ms.params.spec.name.clone(),
+                    system: rt.backend_name,
+                    router: rt.ms.router.policy_name(),
+                    completed: rt.completed,
+                    metrics: rt.ms.metrics,
+                })
+                .collect(),
+        }
+    }
+
+    // ---- instance lifecycle ------------------------------------------------
+
+    fn spawn_instance(
+        &mut self,
+        m: usize,
+        pipe: ExecPipeline,
+        dissolve_at: Option<SimTime>,
+        now: SimTime,
+    ) -> u64 {
+        let md = &mut self.models[m];
+        let id = md.next_inst_id;
+        md.next_inst_id += 1;
+        let weight =
+            pipe.service_rate(md.ms.params.max_batch, &md.ms.params.spec, &self.cluster.compute);
+        for &n in &pipe.nodes() {
+            if n < self.node_state.len() {
+                self.node_state[n] = NodeUse::Serving(m);
+                md.warm.remove(&n);
+            }
+        }
+        let queue = md.ms.admission.make_queue(md.ms.params.max_batch);
+        md.instances.insert(
+            id,
+            Inst {
+                pipe,
+                dissolve_at,
+                active: Vec::new(),
+                queue,
+                last_update: now,
+                idle_since: now,
+                version: 0,
+                token_accum: 0.0,
+            },
+        );
+        md.ms.router.add_instance(id, weight.max(1e-6));
+        if let Some(d) = dissolve_at {
+            self.q.push(d.max(now), Ev::Dissolve(m, id));
+        } else {
+            self.schedule_reclaim(m, id, now);
+        }
+        // Drain globally queued requests, then rebalance: a fresh instance
+        // must be able to steal queued (not yet admitted) work from
+        // overloaded peers — otherwise scaling out never helps requests
+        // that arrived before the new capacity.
+        while let Some(r) = self.models[m].unrouted.pop_front() {
+            self.route_request(now, m, r);
+        }
+        self.rebalance(now, m);
+        self.account_gpus(m, now);
+        id
+    }
+
+    /// Pull every queued-but-not-admitted request back and re-route.
+    fn rebalance(&mut self, now: SimTime, m: usize) {
+        let mut ids: Vec<u64> = self.models[m].instances.keys().copied().collect();
+        ids.sort_unstable();
+        let mut pool: Vec<usize> = Vec::new();
+        for id in &ids {
+            self.advance(now, m, *id);
+            let md = &mut self.models[m];
+            let inst = md.instances.get_mut(id).unwrap();
+            for p in inst.queue.drain_all() {
+                md.ms.router.complete(*id);
+                md.req_inst.remove(&p.item);
+                pool.push(p.item);
+            }
+        }
+        // Oldest first keeps FIFO fairness.
+        pool.sort_unstable();
+        for idx in pool {
+            self.route_request(now, m, idx);
+        }
+    }
+
+    fn schedule_reclaim(&mut self, m: usize, id: u64, now: SimTime) {
+        let md = &self.models[m];
+        if md.instances.contains_key(&id) {
+            let at = now + SimTime::from_secs(md.ms.params.keep_alive_s);
+            self.q.push(at, Ev::Reclaim(m, id));
+        }
+    }
+
+    fn on_reclaim(&mut self, now: SimTime, m: usize, id: u64) {
+        let md = &self.models[m];
+        let Some(inst) = md.instances.get(&id) else { return };
+        if !inst.active.is_empty() || !inst.queue.is_empty() {
+            // Busy: advance() will schedule a fresh reclaim when it next
+            // goes idle. (No self-rescheduling here — it would keep the
+            // event queue alive forever.)
+            return;
+        }
+        if !md.autoscaler.should_reclaim(now, inst.idle_since) {
+            // Idle but not long enough: one bounded re-check.
+            let at = inst.idle_since + SimTime::from_secs(md.ms.params.keep_alive_s);
+            if at > now {
+                self.q.push(at, Ev::Reclaim(m, id));
+            }
+            return;
+        }
+        // Keep at least one replica alive so k >= 1 (paper footnote 2):
+        // the floor instance simply stays; if another instance appears and
+        // this one idles again, a new reclaim will be scheduled.
+        let locals = md.instances.values().filter(|i| i.dissolve_at.is_none()).count();
+        if locals <= 1 && md.instances[&id].dissolve_at.is_none() {
+            return;
+        }
+        let md = &mut self.models[m];
+        let inst = md.instances.remove(&id).unwrap();
+        md.ms.router.remove_instance(id);
+        for n in inst.pipe.nodes() {
+            if n < self.node_state.len() {
+                // Model stays in host memory after GPU reclaim (warm).
+                self.node_state[n] = NodeUse::Free;
+                md.warm.insert(n);
+            }
+        }
+        self.account_gpus(m, now);
+    }
+
+    // ---- arrivals & routing -------------------------------------------------
+
+    fn on_arrival(&mut self, now: SimTime, m: usize, idx: usize) {
+        self.models[m].autoscaler.observe(now);
+        self.route_request(now, m, idx);
+        // Defer the scaling decision: same-instant arrivals (a burst) are
+        // coalesced into one decision that sees the full backlog.
+        if !self.models[m].scale_check_pending {
+            self.models[m].scale_check_pending = true;
+            self.q.push(now, Ev::ScaleCheck(m));
+        }
+    }
+
+    fn route_request(&mut self, now: SimTime, m: usize, idx: usize) {
+        let md = &mut self.models[m];
+        match md.ms.router.route() {
+            Some(id) => {
+                md.req_inst.insert(idx, id);
+                // Enqueue at the request's arrival time, not `now`: rebalance
+                // and dissolve re-route requests through here, and restarting
+                // the head-of-line clock would let every scale-out push a
+                // batched-admission max_wait deadline further into the future.
+                let enqueued = md.ms.trace.requests[idx].arrival;
+                md.instances.get_mut(&id).unwrap().queue.push(idx, enqueued);
+                self.try_admit(now, m, id);
+            }
+            None => md.unrouted.push_back(idx),
+        }
+    }
+
+    fn try_admit(&mut self, now: SimTime, m: usize, id: u64) {
+        if !self.models[m].instances.contains_key(&id) {
+            return;
+        }
+        self.advance(now, m, id);
+        let md = &mut self.models[m];
+        let Some(inst) = md.instances.get_mut(&id) else { return };
+        let n = md.ms.admission.admit(now, &inst.queue, inst.active.len(), md.ms.params.max_batch);
+        let mut changed = false;
+        for p in inst.queue.admit(n) {
+            let idx = p.item;
+            let r = &md.ms.trace.requests[idx];
+            let w_prefill = r.prompt_tokens as f64 * md.prefill_ratio;
+            inst.active.push(ActiveReq {
+                idx,
+                done: 0.0,
+                w_first: w_prefill + 1.0,
+                w_total: w_prefill + r.output_tokens as f64,
+                first_emitted: false,
+                admitted: now,
+            });
+            changed = true;
+        }
+        // Time-triggered admission (e.g. batching max_wait): wake up when
+        // the policy's deadline passes.
+        let deadline = if inst.queue.is_empty() {
+            None
+        } else {
+            md.ms.admission.next_deadline(&inst.queue)
+        };
+        if changed {
+            self.reschedule(now, m, id);
+        }
+        if let Some(at) = deadline {
+            if at > now {
+                self.q.push(at, Ev::AdmitTick(m, id));
+            }
+        }
+    }
+
+    // ---- processor-sharing mechanics ----------------------------------------
+
+    /// Advance PS progress of instance `id` up to `now`, emitting tokens.
+    fn advance(&mut self, now: SimTime, m: usize, id: u64) {
+        let md = &mut self.models[m];
+        let Some(inst) = md.instances.get_mut(&id) else { return };
+        let dt = (now.saturating_sub(inst.last_update)).as_secs();
+        inst.last_update = now;
+        if dt <= 0.0 || inst.active.is_empty() {
+            return;
+        }
+        let total =
+            inst.pipe.service_rate(inst.active.len(), &md.ms.params.spec, &self.cluster.compute);
+        let per_req = total / inst.active.len() as f64;
+        let mut emitted_tokens = 0usize;
+        let mut finished: Vec<ActiveReq> = Vec::new();
+        let mut token_accum = inst.token_accum + total * dt;
+        for a in &mut inst.active {
+            a.done += per_req * dt;
+            if !a.first_emitted && a.done + 1e-9 >= a.w_first {
+                a.first_emitted = true;
+                md.first_tokens.insert(a.idx, now);
+            }
+        }
+        emitted_tokens += token_accum as usize;
+        token_accum -= emitted_tokens as f64;
+        let mut i = 0;
+        while i < inst.active.len() {
+            if inst.active[i].done + 1e-9 >= inst.active[i].w_total {
+                finished.push(inst.active.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        inst.token_accum = token_accum;
+        let went_idle = inst.active.is_empty() && inst.queue.is_empty();
+        if went_idle {
+            inst.idle_since = now;
+        }
+        if emitted_tokens > 0 {
+            md.ms.metrics.record_tokens(now, emitted_tokens);
+        }
+        for f in finished {
+            self.complete_request(now, m, id, &f);
+        }
+        if went_idle {
+            self.schedule_reclaim(m, id, now);
+        }
+    }
+
+    fn complete_request(&mut self, now: SimTime, m: usize, inst_id: u64, a: &ActiveReq) {
+        let md = &mut self.models[m];
+        let r = &md.ms.trace.requests[a.idx];
+        let first = md.first_tokens.get(&a.idx).copied().unwrap_or(now);
+        md.ms.metrics.record_request(RequestMetrics {
+            id: r.id,
+            arrival: r.arrival,
+            first_token: first,
+            completion: now,
+            output_tokens: r.output_tokens,
+        });
+        md.ms.router.complete(inst_id);
+        md.req_inst.remove(&a.idx);
+        md.completed += 1;
+        self.try_admit(now, m, inst_id);
+    }
+
+    /// Schedule the next progress event: earliest threshold crossing or a
+    /// coarse tick for throughput sampling.
+    fn reschedule(&mut self, now: SimTime, m: usize, id: u64) {
+        let md = &mut self.models[m];
+        let Some(inst) = md.instances.get_mut(&id) else { return };
+        inst.version += 1;
+        let ver = inst.version;
+        if inst.active.is_empty() {
+            return;
+        }
+        let total =
+            inst.pipe.service_rate(inst.active.len(), &md.ms.params.spec, &self.cluster.compute);
+        let per_req = (total / inst.active.len() as f64).max(1e-9);
+        let mut dt_min = f64::INFINITY;
+        for a in &inst.active {
+            if !a.first_emitted {
+                dt_min = dt_min.min((a.w_first - a.done).max(0.0) / per_req);
+            }
+            dt_min = dt_min.min((a.w_total - a.done).max(0.0) / per_req);
+        }
+        let dt = dt_min.clamp(1e-6, 0.05); // ≤50 ms ticks for clean timelines
+        self.q.push(now + SimTime::from_secs(dt), Ev::InstTick(m, id, ver));
+    }
+
+    fn on_tick(&mut self, now: SimTime, m: usize, id: u64, ver: u64) {
+        {
+            let Some(inst) = self.models[m].instances.get(&id) else { return };
+            if inst.version != ver {
+                return;
+            }
+        }
+        self.advance(now, m, id);
+        self.try_admit(now, m, id);
+        self.reschedule(now, m, id);
+    }
+
+    // ---- scaling -------------------------------------------------------------
+
+    fn maybe_scale(&mut self, now: SimTime, m: usize) {
+        let md = &mut self.models[m];
+        if now < md.next_op_at {
+            // Cooldown: re-check when the window opens.
+            if !md.scale_check_pending {
+                md.scale_check_pending = true;
+                let at = md.next_op_at;
+                self.q.push(at, Ev::ScaleCheck(m));
+            }
+            return;
+        }
+        let queued =
+            md.unrouted.len() + md.instances.values().map(|i| i.queue.len()).sum::<usize>();
+        let loading =
+            self.node_state.iter().filter(|s| **s == NodeUse::Loading(m)).count();
+        let current = md.instances.len() + loading;
+        // Capacity sizing: each instance absorbs max_batch concurrent
+        // decodes; backlog beyond the in-flight slots demands new replicas.
+        let by_backlog = if queued > 0 {
+            md.instances.len() + queued.div_ceil(md.ms.params.max_batch.max(1))
+        } else {
+            0
+        };
+        let desired = md.autoscaler.desired(now, queued, current).max(by_backlog);
+        if desired <= current {
+            return;
+        }
+        // Free nodes to recruit (shared across models: first claim wins).
+        let free: Vec<NodeId> = (0..self.cluster.n_nodes)
+            .filter(|&n| self.node_state[n] == NodeUse::Free)
+            .collect();
+        let want = (desired - current).min(free.len());
+        if want == 0 {
+            return;
+        }
+        md.next_op_at = now + SimTime::from_millis(100.0);
+
+        // Locality-driven recruitment (§5): warm (host-memory) nodes are the
+        // most valuable recruits — they self-load AND act as multicast
+        // sources — so take them first; cold nodes become multicast
+        // destinations.
+        let warm_nodes: Vec<NodeId> =
+            free.iter().copied().filter(|n| md.warm.contains(n)).collect();
+        let cold: Vec<NodeId> =
+            free.iter().copied().filter(|n| !md.warm.contains(n)).collect();
+        let take_warm = want.min(warm_nodes.len());
+        let take_cold = want - take_warm;
+        let recruited_warm = &warm_nodes[..take_warm];
+        let dests_net: Vec<NodeId> = cold[..take_cold.min(cold.len())].to_vec();
+
+        // Sources: live GPU replicas first, then every recruited warm node.
+        let mut sources_for_plan: Vec<Source> = md
+            .instances
+            .values()
+            .filter(|i| i.dissolve_at.is_none() && i.pipe.n_stages() == 1)
+            .map(|i| Source { node: i.pipe.nodes()[0], tier: Tier::Gpu })
+            .collect();
+        sources_for_plan.sort_by_key(|s| s.node);
+        for &n in recruited_warm {
+            sources_for_plan.push(Source { node: n, tier: Tier::HostMem });
+        }
+        if sources_for_plan.is_empty() {
+            if md.ms.params.ssd_everywhere && !dests_net.is_empty() {
+                sources_for_plan.push(Source { node: dests_net[0], tier: Tier::Ssd });
+            } else {
+                return; // nothing to scale from
+            }
+        }
+        if dests_net.is_empty() && recruited_warm.is_empty() {
+            return;
+        }
+        // Hand the tier-tagged recruitment to the backend; it decides how
+        // (and whether) warm recruits multicast, self-load, or both.
+        let statuses: Vec<NodeStatus> = self
+            .node_state
+            .iter()
+            .map(|s| match s {
+                NodeUse::Free => NodeStatus::Free,
+                NodeUse::Loading(_) => NodeStatus::Loading,
+                NodeUse::Serving(_) => NodeStatus::Serving,
+            })
+            .collect();
+        let req = ScalingRequest {
+            sources: sources_for_plan,
+            dests: dests_net.clone(),
+            spec: &md.ms.params.spec,
+            partition: &md.partition,
+            opts: md.ms.params.opts,
+            switch: md.ms.params.switch,
+        };
+        let outcome: ScalingOutcome =
+            md.ms.backend.plan(&req, &ClusterState { config: &self.cluster, nodes: &statuses });
+        drop(req);
+        for &d in dests_net.iter().chain(recruited_warm.iter()) {
+            self.node_state[d] = NodeUse::Loading(m);
+            md.warm.remove(&d);
+        }
+        self.account_gpus(m, now);
+        for (t, ni) in outcome.instances {
+            match ni {
+                NewInstance::Pipeline { pipeline, dissolve_at } => {
+                    let abs_ready = now + t;
+                    let abs_dissolve = now + dissolve_at;
+                    let stash = self.stash_pipeline(m, pipeline, Some(abs_dissolve));
+                    self.q.push(abs_ready, Ev::InstanceUp(m, stash));
+                }
+                NewInstance::Local { node } => {
+                    // Skip nodes already serving (sources).
+                    if matches!(self.node_state.get(node), Some(NodeUse::Serving(_)))
+                        && t == SimTime::ZERO
+                    {
+                        continue;
+                    }
+                    let stash = self.stash_local(m, node);
+                    self.q.push(now + t, Ev::InstanceUp(m, stash));
+                }
+            }
+        }
+    }
+
+    // Pending instance stash: instances created at InstanceUp time.
+    fn stash_pipeline(&mut self, m: usize, pipe: ExecPipeline, dissolve: Option<SimTime>) -> u64 {
+        let md = &mut self.models[m];
+        let id = md.next_stash_id;
+        md.next_stash_id += 1;
+        md.pending.insert(id, (pipe, dissolve));
+        id
+    }
+
+    fn stash_local(&mut self, m: usize, node: NodeId) -> u64 {
+        let md = &mut self.models[m];
+        let id = md.next_stash_id;
+        md.next_stash_id += 1;
+        let pipe = ExecPipeline::local(node, &md.ms.params.spec);
+        md.pending.insert(id, (pipe, None));
+        id
+    }
+
+    fn on_instance_up(&mut self, now: SimTime, m: usize, stash_id: u64) {
+        let md = &mut self.models[m];
+        let Some((pipe, dissolve)) = md.pending.remove(&stash_id) else { return };
+        // A node may have been reused; only bring up if its nodes aren't
+        // already serving via another live instance of this model.
+        let clash = pipe.nodes().iter().any(|&n| {
+            md.instances.values().any(|i| {
+                i.dissolve_at.is_none() && i.pipe.nodes().contains(&n) && i.pipe.n_stages() == 1
+            })
+        });
+        if clash && dissolve.is_some() {
+            return; // pipeline superseded by a local replica already up
+        }
+        self.spawn_instance(m, pipe, dissolve, now);
+    }
+
+    fn on_dissolve(&mut self, now: SimTime, m: usize, id: u64) {
+        {
+            let Some(inst) = self.models[m].instances.get(&id) else { return };
+            if inst.dissolve_at.is_none() {
+                return;
+            }
+        }
+        self.advance(now, m, id);
+        let md = &mut self.models[m];
+        let inst = md.instances.remove(&id).unwrap();
+        let outstanding = md.ms.router.remove_instance(id).unwrap_or(0);
+        let _ = outstanding;
+        // Mode switch: redistribute in-flight + queued requests with the KV
+        // rebuild stall.
+        let mut to_reroute: Vec<usize> = inst.queue.iter().map(|p| p.item).collect();
+        let mut in_flight: Vec<(u64, usize)> = Vec::new();
+        for a in &inst.active {
+            let r = &md.ms.trace.requests[a.idx];
+            let ctx = r.prompt_tokens + a.done.floor() as usize;
+            in_flight.push((r.id, ctx));
+            to_reroute.push(a.idx);
+        }
+        for idx in &to_reroute {
+            md.req_inst.remove(idx);
+        }
+        let stall = plan_switch(
+            &in_flight,
+            &inst.pipe.nodes(),
+            &md.ms.params.spec,
+            &self.cluster.compute,
+            &self.cluster.network,
+            Some(md.ms.params.switch),
+        )
+        .stall_s;
+        self.q
+            .push(now + SimTime::from_secs(stall), Ev::DissolveDone(m, to_reroute));
+        self.account_gpus(m, now);
+    }
+
+    // ---- accounting ----------------------------------------------------------
+
+    /// Record model `m`'s GPU footprint: nodes serving one of its instances
+    /// plus nodes loading it.
+    fn account_gpus(&mut self, m: usize, now: SimTime) {
+        let md = &self.models[m];
+        let mut nodes_busy: HashSet<NodeId> = HashSet::new();
+        for inst in md.instances.values() {
+            for n in inst.pipe.nodes() {
+                nodes_busy.insert(n);
+            }
+        }
+        for (n, st) in self.node_state.iter().enumerate() {
+            if *st == NodeUse::Loading(m) {
+                nodes_busy.insert(n);
+            }
+        }
+        let gpus = nodes_busy.len() * self.cluster.node.gpus_per_node.max(1);
+        let md = &mut self.models[m];
+        if gpus != md.last_gpu_count {
+            md.last_gpu_count = gpus;
+            md.ms.metrics.record_gpu_alloc(now, gpus);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::coordinator::backend::MockBackend;
+    use crate::coordinator::session::ServingSession;
+    use crate::model::ModelSpec;
+    use crate::util::rng::Rng;
+    use crate::workload;
+
+    fn burst(n: usize) -> crate::workload::Trace {
+        let mut rng = Rng::new(42);
+        workload::burst_trace(n, 0.0, "llama2-13b", 128, 64, &mut rng)
+    }
+
+    fn cluster(n: usize) -> ClusterConfig {
+        let mut c = ClusterConfig::testbed1();
+        c.n_nodes = n;
+        c
+    }
+
+    /// Scripted lifecycle on a cold cluster: the mock backend brings up one
+    /// short-lived pipeline over nodes 0–1 plus local replicas at its
+    /// dissolve time — the engine must run up → serve → dissolve → reclaim
+    /// without any real multicast plan, and every token served before t=1.0
+    /// can only have come from the scripted pipeline.
+    #[test]
+    fn mock_backend_drives_full_lifecycle() {
+        let spec = ModelSpec::llama2_13b();
+        let part = spec.partition(crate::model::DEFAULT_BLOCKS);
+        let half = part.n_blocks() / 2;
+        let pipe_assignment: Vec<(NodeId, Vec<usize>)> = vec![
+            (0, (0..half).collect()),
+            (1, (half..part.n_blocks()).collect()),
+        ];
+        let pipeline = ExecPipeline::from_assignment(&pipe_assignment, &part);
+        let mut outcome = ScalingOutcome::default();
+        outcome.instances.push((
+            SimTime::from_secs(0.2),
+            NewInstance::Pipeline { pipeline, dissolve_at: SimTime::from_secs(1.0) },
+        ));
+        outcome.instances.push((SimTime::from_secs(1.0), NewInstance::Local { node: 0 }));
+        outcome.instances.push((SimTime::from_secs(1.0), NewInstance::Local { node: 1 }));
+        outcome.finish = SimTime::from_secs(1.0);
+        outcome.nodes_loading.push((0, SimTime::from_secs(1.0)));
+        outcome.nodes_loading.push((1, SimTime::from_secs(1.0)));
+
+        let report = ServingSession::builder()
+            .cluster(cluster(4))
+            .model(spec)
+            .backend(Box::new(MockBackend::new(vec![outcome])))
+            .max_batch(4)
+            .keep_alive(2.0)
+            .initial_gpu_sources(0) // cold: nothing serves until the mock plan
+            .trace(burst(8))
+            .run();
+        let r = &report.models[0];
+        assert_eq!(r.system, "mock");
+        assert_eq!(r.metrics.requests.len(), 8, "all requests must complete");
+        // Up → serve: nothing can emit before the pipeline at t=0.2, and
+        // anything before the t=1.0 locals proves the pipeline served.
+        let first = r.metrics.requests.iter().map(|q| q.first_token).min().unwrap();
+        assert!(first >= SimTime::from_secs(0.2), "served before any instance was up");
+        assert!(
+            first < SimTime::from_secs(1.0),
+            "execute-while-load pipeline never served (first token at {first})"
+        );
+        // Dissolve → reclaim: the burst drains, the keep-alive floor holds
+        // one replica, so allocation must fall back by the horizon.
+        let series = r.metrics.gpu_series(5.0, 60.0);
+        let last = series.last().unwrap().1;
+        assert!(last <= 2, "no scale-in after mock lifecycle: {series:?}");
+    }
+
+    /// An empty scripted outcome must not wedge the engine: the initial
+    /// replica keeps serving and every request still completes.
+    #[test]
+    fn empty_mock_outcome_does_not_wedge_engine() {
+        let spec = ModelSpec::llama2_13b();
+        let mock = MockBackend::new(vec![ScalingOutcome::default()]);
+        let mut eng = ServingEngine::new(cluster(4));
+        let ms = crate::coordinator::session::ModelSession::for_test(
+            spec,
+            Box::new(mock),
+            burst(10),
+        );
+        eng.add_model(ms);
+        let report = eng.run();
+        assert_eq!(report.models[0].metrics.requests.len(), 10);
+        assert_eq!(report.models[0].completed, 10);
+    }
+}

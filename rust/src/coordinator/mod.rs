@@ -1,25 +1,54 @@
-//! Layer-3 coordinator — the paper's system contribution.
+//! Layer-3 coordinator — the paper's system contribution, structured as a
+//! trait-based serving engine with pluggable policies.
 //!
-//! * [`router`] — join-shortest-queue request routing across instances.
-//! * [`batcher`] — dynamic / continuous batching admission.
+//! The three extension points (see `docs/ARCHITECTURE.md` for a guide):
+//!
+//! * [`backend::ScalingBackend`] — plans scaling operations. One impl per
+//!   evaluated system: λPipe multicast + execute-while-load
+//!   ([`backend::LambdaPipe`]), FaaSNet trees ([`backend::FaasNet`]),
+//!   NCCL-like broadcast ([`backend::NcclBcast`]), local-tier loading
+//!   ([`backend::ServerlessLlm`]), and the instantaneous cost floor
+//!   ([`backend::Ideal`]); plus [`backend::MockBackend`] for tests.
+//! * [`policy::RoutingPolicy`] — places requests on instances (weighted
+//!   join-shortest-queue, least-loaded, round-robin).
+//! * [`policy::AdmissionPolicy`] — moves queued requests into decode slots
+//!   through each instance's [`DynamicBatcher`] (immediate continuous
+//!   batching, or batched flush on full-batch / `max_wait`).
+//!
+//! Around them:
+//!
+//! * [`engine`] — the policy-free, multi-model discrete-event serving
+//!   engine (instance lifecycle: up → serve → dissolve → reclaim).
+//! * [`session`] — the builder-style [`ServingSession`] front door
+//!   (multiple concurrent models sharing one cluster, §2.3).
+//! * [`router`] — per-instance load accounting, dispatching via a
+//!   `RoutingPolicy`.
+//! * [`batcher`] — the FIFO waiting queue with size/latency flush triggers.
 //! * [`autoscaler`] — reactive instance-count policy with keep-alive.
-//! * [`scaling`] — λPipe scaling operations (multicast → pipelines → mode
-//!   switch) and every baseline's scaling semantics.
-//! * [`serving`] — the end-to-end event-driven serving simulation
-//!   (Figs 9–16).
+//! * [`scaling`] — scaling outcome types + `SystemKind` factory +
+//!   `plan_scaling` compatibility shim.
+//! * [`serving`] — legacy `run_serving(cfg, trace)` shim.
 //! * [`cluster`] — multi-tenant cluster manager + §2.3 motivation studies
 //!   (Figs 2–3).
 
 pub mod autoscaler;
+pub mod backend;
 pub mod batcher;
 pub mod cluster;
+pub mod engine;
+pub mod policy;
 pub mod router;
 pub mod scaling;
 pub mod serving;
+pub mod session;
 
 pub use autoscaler::Autoscaler;
+pub use backend::{ClusterState, MockBackend, ScalingBackend, ScalingRequest};
 pub use batcher::DynamicBatcher;
 pub use cluster::ClusterManager;
+pub use engine::ServingEngine;
+pub use policy::{AdmissionPolicy, RoutingPolicy};
 pub use router::Router;
 pub use scaling::{plan_scaling, NewInstance, ScalingOutcome, Source, SystemKind};
 pub use serving::{run_serving, ServingConfig};
+pub use session::{ModelReport, ModelSession, ServingSession, SessionReport};

@@ -1,0 +1,273 @@
+//! Pluggable request-routing and admission policies.
+//!
+//! [`RoutingPolicy`] picks which serving instance receives the next
+//! request; [`AdmissionPolicy`] decides when queued requests move into an
+//! instance's bounded decode slots. Both are consulted by the serving
+//! engine every time the respective decision comes up, so swapping a boxed
+//! policy changes cluster behavior without touching the event loop.
+//!
+//! Routing ships with weighted join-shortest-queue (the paper's default),
+//! an unweighted least-loaded variant, and deterministic round-robin.
+//! Admission ships with immediate continuous batching and a
+//! [`DynamicBatcher`]-driven batched mode (flush on full batch or
+//! `max_wait` head-of-line latency).
+//!
+//! All policies must be deterministic: candidates are presented sorted by
+//! instance id, and reproducible simulation runs depend on stable picks.
+
+use super::batcher::DynamicBatcher;
+use crate::sim::time::SimTime;
+
+/// One routing candidate: a live instance and its current load.
+#[derive(Clone, Copy, Debug)]
+pub struct InstanceView {
+    pub id: u64,
+    /// Requests routed to the instance and not yet completed.
+    pub outstanding: usize,
+    /// Relative serving capacity (tokens/s); higher ⇒ preferred.
+    pub weight: f64,
+}
+
+/// Request-routing policy: pick an instance for the next request.
+pub trait RoutingPolicy {
+    fn name(&self) -> &'static str;
+
+    /// Pick among `candidates` (sorted by id ascending, never empty entries
+    /// with non-positive weight). Returns `None` only when `candidates` is
+    /// empty. Must be deterministic.
+    fn pick(&mut self, candidates: &[InstanceView]) -> Option<u64>;
+}
+
+/// Weighted join-shortest-queue: minimal `(outstanding + 1) / weight`, ties
+/// broken by lowest id. The default policy (and the seed engine's
+/// behavior): a 4-stage pipeline absorbs proportionally more than a fresh
+/// replica still warming its caches.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JoinShortestQueue;
+
+impl RoutingPolicy for JoinShortestQueue {
+    fn name(&self) -> &'static str {
+        "join-shortest-queue"
+    }
+
+    fn pick(&mut self, candidates: &[InstanceView]) -> Option<u64> {
+        let mut best: Option<(f64, u64)> = None;
+        for c in candidates {
+            let load = (c.outstanding as f64 + 1.0) / c.weight;
+            if best.map_or(true, |(bl, _)| load < bl) {
+                best = Some((load, c.id));
+            }
+        }
+        best.map(|(_, id)| id)
+    }
+}
+
+/// Unweighted least-loaded: minimal outstanding count, ties by lowest id.
+/// Ignores capacity weights — useful when instance capacity estimates are
+/// unreliable (e.g. heterogeneous pipelines mid-scale-out).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LeastLoaded;
+
+impl RoutingPolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn pick(&mut self, candidates: &[InstanceView]) -> Option<u64> {
+        candidates.iter().min_by_key(|c| (c.outstanding, c.id)).map(|c| c.id)
+    }
+}
+
+/// Deterministic round-robin over the candidate list (sorted by id). Load-
+/// and weight-oblivious; a baseline for routing-policy ablations.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoutingPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn pick(&mut self, candidates: &[InstanceView]) -> Option<u64> {
+        if candidates.is_empty() {
+            return None;
+        }
+        let id = candidates[self.next % candidates.len()].id;
+        self.next = (self.next + 1) % candidates.len().max(1);
+        Some(id)
+    }
+}
+
+/// Admission policy: decide when queued requests occupy decode slots.
+///
+/// The engine keeps one [`DynamicBatcher`] waiting queue per instance
+/// (created through [`AdmissionPolicy::make_queue`], so the policy controls
+/// the flush triggers) and asks `admit` how many head-of-line requests to
+/// move into the instance's batch whenever slots may be free.
+pub trait AdmissionPolicy {
+    fn name(&self) -> &'static str;
+
+    /// Build the per-instance waiting queue. `max_batch` is the instance's
+    /// concurrent decode-slot bound.
+    fn make_queue(&self, max_batch: usize) -> DynamicBatcher<usize>;
+
+    /// How many queued requests to admit now, given `active` occupied slots
+    /// out of `max_batch`.
+    fn admit(
+        &mut self,
+        now: SimTime,
+        queue: &DynamicBatcher<usize>,
+        active: usize,
+        max_batch: usize,
+    ) -> usize;
+
+    /// Next future instant this decision could change without new arrivals
+    /// or completions (e.g. a head-of-line wait deadline). `None` for
+    /// purely event-driven policies.
+    fn next_deadline(&self, queue: &DynamicBatcher<usize>) -> Option<SimTime>;
+}
+
+/// Continuous batching: admit whenever a slot is free (the seed engine's
+/// behavior). The waiting queue never time-triggers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ImmediateAdmission;
+
+impl AdmissionPolicy for ImmediateAdmission {
+    fn name(&self) -> &'static str {
+        "immediate"
+    }
+
+    fn make_queue(&self, max_batch: usize) -> DynamicBatcher<usize> {
+        // max_wait is irrelevant: this policy never consults the trigger.
+        DynamicBatcher::new(max_batch, SimTime::MAX)
+    }
+
+    fn admit(
+        &mut self,
+        _now: SimTime,
+        queue: &DynamicBatcher<usize>,
+        active: usize,
+        max_batch: usize,
+    ) -> usize {
+        max_batch.saturating_sub(active).min(queue.len())
+    }
+
+    fn next_deadline(&self, _queue: &DynamicBatcher<usize>) -> Option<SimTime> {
+        None
+    }
+}
+
+/// Batched admission through the [`DynamicBatcher`] triggers: requests wait
+/// until a full batch is available or the head-of-line request has waited
+/// `max_wait`, then move into free slots together. Trades first-token
+/// latency for denser batches (higher decode throughput per step).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchedAdmission {
+    pub max_wait: SimTime,
+}
+
+impl BatchedAdmission {
+    pub fn new(max_wait: SimTime) -> Self {
+        BatchedAdmission { max_wait }
+    }
+}
+
+impl AdmissionPolicy for BatchedAdmission {
+    fn name(&self) -> &'static str {
+        "batched"
+    }
+
+    fn make_queue(&self, max_batch: usize) -> DynamicBatcher<usize> {
+        DynamicBatcher::new(max_batch, self.max_wait)
+    }
+
+    fn admit(
+        &mut self,
+        now: SimTime,
+        queue: &DynamicBatcher<usize>,
+        active: usize,
+        max_batch: usize,
+    ) -> usize {
+        let free = max_batch.saturating_sub(active);
+        if free == 0 || !queue.should_flush(now) {
+            return 0;
+        }
+        free.min(queue.len())
+    }
+
+    fn next_deadline(&self, queue: &DynamicBatcher<usize>) -> Option<SimTime> {
+        queue.next_deadline()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn views(loads: &[(u64, usize, f64)]) -> Vec<InstanceView> {
+        loads
+            .iter()
+            .map(|&(id, outstanding, weight)| InstanceView { id, outstanding, weight })
+            .collect()
+    }
+
+    #[test]
+    fn jsq_weighs_capacity() {
+        let mut p = JoinShortestQueue;
+        // Instance 2 has 4x capacity: even with 2 outstanding it wins.
+        let v = views(&[(1, 0, 1.0), (2, 2, 4.0)]);
+        assert_eq!(p.pick(&v), Some(2));
+        // Ties break to the lowest id.
+        let v = views(&[(3, 1, 1.0), (5, 1, 1.0)]);
+        assert_eq!(p.pick(&v), Some(3));
+        assert_eq!(p.pick(&[]), None);
+    }
+
+    #[test]
+    fn least_loaded_ignores_weights() {
+        let mut p = LeastLoaded;
+        let v = views(&[(1, 1, 10.0), (2, 0, 0.1)]);
+        assert_eq!(p.pick(&v), Some(2));
+    }
+
+    #[test]
+    fn round_robin_rotates() {
+        let mut p = RoundRobin::default();
+        let v = views(&[(1, 0, 1.0), (2, 0, 1.0), (3, 0, 1.0)]);
+        let picks: Vec<_> = (0..4).map(|_| p.pick(&v).unwrap()).collect();
+        assert_eq!(picks, vec![1, 2, 3, 1]);
+    }
+
+    #[test]
+    fn immediate_fills_free_slots() {
+        let mut p = ImmediateAdmission;
+        let mut q = p.make_queue(8);
+        for i in 0..5 {
+            q.push(i, SimTime::ZERO);
+        }
+        assert_eq!(p.admit(SimTime::ZERO, &q, 6, 8), 2);
+        assert_eq!(p.admit(SimTime::ZERO, &q, 8, 8), 0);
+        assert_eq!(p.next_deadline(&q), None);
+    }
+
+    #[test]
+    fn batched_waits_for_trigger() {
+        let mut p = BatchedAdmission::new(SimTime::from_secs(0.5));
+        let mut q = p.make_queue(4);
+        for i in 0..3 {
+            q.push(i, SimTime::ZERO);
+        }
+        // Under-full and young: hold.
+        assert_eq!(p.admit(SimTime::from_secs(0.1), &q, 0, 4), 0);
+        assert_eq!(p.next_deadline(&q), Some(SimTime::from_secs(0.5)));
+        // Head-of-line timeout: flush what fits.
+        assert_eq!(p.admit(SimTime::from_secs(0.5), &q, 0, 4), 3);
+        // Full batch flushes immediately.
+        q.push(3, SimTime::from_secs(0.6));
+        assert_eq!(p.admit(SimTime::from_secs(0.6), &q, 0, 4), 4);
+        // No free slots: nothing admitted even when triggered.
+        assert_eq!(p.admit(SimTime::from_secs(0.6), &q, 4, 4), 0);
+    }
+}

@@ -1,16 +1,21 @@
-//! Request router: join-shortest-queue dispatch across serving instances.
+//! Request router: load accounting + policy-driven dispatch across serving
+//! instances.
 //!
-//! The cluster manager routes each admitted request to the instance with
-//! the least outstanding work (active + queued), weighted by instance
-//! capacity so a 4-stage pipeline absorbs proportionally more than a
-//! fresh replica still warming its caches.
+//! The router tracks per-instance outstanding work and capacity weights and
+//! delegates the actual pick to a pluggable [`RoutingPolicy`]
+//! (join-shortest-queue by default, exactly the paper's cluster-manager
+//! behavior; see [`super::policy`] for the variants).
 
-use std::collections::HashMap;
+use super::policy::{InstanceView, JoinShortestQueue, RoutingPolicy};
+use std::collections::BTreeMap;
 
-/// Router state: per-instance outstanding counts and capacity weights.
-#[derive(Clone, Debug, Default)]
+/// Router state: per-instance outstanding counts and capacity weights,
+/// plus the policy consulted on every `route` call. Instances live in a
+/// `BTreeMap` so policies always see candidates in id order without a
+/// per-route sort.
 pub struct Router {
-    instances: HashMap<u64, InstanceLoad>,
+    instances: BTreeMap<u64, InstanceLoad>,
+    policy: Box<dyn RoutingPolicy>,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -20,9 +25,25 @@ struct InstanceLoad {
     weight: f64,
 }
 
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl Router {
+    /// Weighted join-shortest-queue router (the default policy).
     pub fn new() -> Self {
-        Self::default()
+        Self::with_policy(Box::new(JoinShortestQueue))
+    }
+
+    /// Router dispatching through a custom policy.
+    pub fn with_policy(policy: Box<dyn RoutingPolicy>) -> Self {
+        Router { instances: BTreeMap::new(), policy }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
     }
 
     pub fn add_instance(&mut self, id: u64, weight: f64) {
@@ -52,19 +73,19 @@ impl Router {
         self.instances.values().map(|l| l.outstanding).sum()
     }
 
-    /// Pick the instance with minimal normalized load; ties broken by id
-    /// for determinism. Returns `None` when no instances exist.
+    /// Ask the policy for an instance and charge it one outstanding
+    /// request. Returns `None` when no instances exist.
     pub fn route(&mut self) -> Option<u64> {
-        let id = self
+        let candidates: Vec<InstanceView> = self
             .instances
             .iter()
-            .min_by(|(ia, a), (ib, b)| {
-                let la = (a.outstanding as f64 + 1.0) / a.weight;
-                let lb = (b.outstanding as f64 + 1.0) / b.weight;
-                la.partial_cmp(&lb).unwrap().then(ia.cmp(ib))
-            })
-            .map(|(&id, _)| id)?;
-        self.instances.get_mut(&id).unwrap().outstanding += 1;
+            .map(|(&id, l)| InstanceView { id, outstanding: l.outstanding, weight: l.weight })
+            .collect();
+        let id = self.policy.pick(&candidates)?;
+        self.instances
+            .get_mut(&id)
+            .expect("routing policy picked an unknown instance")
+            .outstanding += 1;
         Some(id)
     }
 
@@ -87,7 +108,9 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::policy::{LeastLoaded, RoundRobin};
     use crate::util::minicheck::check;
+    use std::collections::HashMap;
 
     #[test]
     fn routes_to_least_loaded() {
@@ -127,6 +150,27 @@ mod tests {
         r.route();
         assert_eq!(r.remove_instance(7), Some(2));
         assert_eq!(r.route(), None);
+    }
+
+    #[test]
+    fn round_robin_policy_cycles() {
+        let mut r = Router::with_policy(Box::new(RoundRobin::default()));
+        assert_eq!(r.policy_name(), "round-robin");
+        for id in [1u64, 2, 3] {
+            r.add_instance(id, 1.0);
+        }
+        let picks: Vec<u64> = (0..6).map(|_| r.route().unwrap()).collect();
+        assert_eq!(picks, vec![1, 2, 3, 1, 2, 3]);
+    }
+
+    #[test]
+    fn least_loaded_policy_ignores_weight() {
+        let mut r = Router::with_policy(Box::new(LeastLoaded));
+        r.add_instance(1, 100.0);
+        r.add_instance(2, 0.5);
+        let a = r.route().unwrap();
+        let b = r.route().unwrap();
+        assert_ne!(a, b, "least-loaded must alternate over idle instances");
     }
 
     #[test]

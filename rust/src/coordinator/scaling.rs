@@ -1,25 +1,28 @@
-//! Scaling controller: turns "bring up the model on these nodes" into
-//! timed instance availability, per system.
+//! Scaling types and the `SystemKind` factory.
 //!
-//! For λScale this is the full λPipe flow (§4 + §5 locality-driven
-//! startup): pick the best-tier sources, run k-way binomial multicast,
-//! stand up execution pipelines as their blocks land (execute-while-load),
-//! then mode-switch every participant to a local replica when the
-//! multicast completes. Baselines stand instances up only when a node
-//! holds the entire model.
+//! The per-system planning logic ("turn *bring up the model on these
+//! nodes* into timed instance availability") lives in the
+//! [`super::backend`] trait impls — [`super::backend::LambdaPipe`],
+//! [`super::backend::FaasNet`], [`super::backend::NcclBcast`],
+//! [`super::backend::ServerlessLlm`], [`super::backend::Ideal`]. This
+//! module keeps the shared outcome types, [`SystemKind`] as a thin
+//! config/CLI-compatible factory over those backends, and the legacy
+//! [`plan_scaling`] entrypoint as a compatibility shim.
 
+use super::backend::{
+    ClusterState, FaasNet, Ideal, LambdaPipe, NcclBcast, ScalingBackend, ScalingRequest,
+    ServerlessLlm,
+};
 use crate::config::ClusterConfig;
 use crate::model::{ModelSpec, Partition};
-use crate::multicast::{self, Algorithm, NodeId};
+use crate::multicast::{Algorithm, NodeId};
 use crate::pipeline::execution::ExecPipeline;
-use crate::pipeline::generation::{
-    generate_pipelines, pipeline_block_assignment, pipeline_ready_time,
-};
-use crate::pipeline::mode_switch::{plan_switch, SwitchStrategy};
+use crate::pipeline::mode_switch::SwitchStrategy;
 use crate::sim::time::SimTime;
-use crate::sim::transfer::{Medium, SendIntent, Tier, TransferOpts};
+use crate::sim::transfer::{Tier, TransferOpts};
 
-/// Which serving system's scaling semantics to apply.
+/// Which serving system's scaling semantics to apply (config/CLI handle;
+/// resolves to a [`ScalingBackend`] via [`SystemKind::backend`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SystemKind {
     /// λScale with k-way transmission.
@@ -51,6 +54,18 @@ impl SystemKind {
             SystemKind::Ideal => None,
         }
     }
+
+    /// Instantiate the scaling backend this kind names (the factory the
+    /// serving session uses when configured via `SystemKind`).
+    pub fn backend(&self) -> Box<dyn ScalingBackend> {
+        match self {
+            SystemKind::LambdaScale { k } => Box::new(LambdaPipe { k: *k }),
+            SystemKind::FaasNet => Box::new(FaasNet),
+            SystemKind::Nccl => Box::new(NcclBcast),
+            SystemKind::ServerlessLlm => Box::new(ServerlessLlm),
+            SystemKind::Ideal => Box::new(Ideal),
+        }
+    }
 }
 
 /// An instance that becomes available during/after scaling.
@@ -80,8 +95,16 @@ pub struct Source {
     pub tier: Tier,
 }
 
-/// Plan a scaling operation: `sources` hold the model (tier-tagged, best
-/// first), `dests` need it. Returns instance availability per system.
+/// Compatibility shim over the trait-based backends: `sources` hold the
+/// model (tier-tagged, best first), `dests` need it. Prefer
+/// [`SystemKind::backend`] + [`ScalingBackend::plan`] in new code.
+///
+/// One deliberate behavior change vs the seed: for
+/// [`SystemKind::ServerlessLlm`], host-memory sources now also self-load
+/// and serve (they are treated as warm recruits, deduplicated against
+/// `dests`), where the old code only planned loads for the explicit
+/// `dests` — the engine previously encoded that expansion itself.
+#[allow(clippy::too_many_arguments)]
 pub fn plan_scaling(
     system: SystemKind,
     sources: &[Source],
@@ -93,206 +116,15 @@ pub fn plan_scaling(
     switch: SwitchStrategy,
 ) -> ScalingOutcome {
     assert!(!sources.is_empty(), "scaling requires at least one source replica");
-    let n_blocks = partition.n_blocks();
-    let block_bytes = partition.block_bytes();
-    let mut out = ScalingOutcome::default();
-
-    if system == SystemKind::Ideal {
-        for &d in dests {
-            out.instances.push((SimTime::ZERO, NewInstance::Local { node: d }));
-        }
-        for s in sources {
-            out.instances.push((SimTime::ZERO, NewInstance::Local { node: s.node }));
-        }
-        return out;
-    }
-
-    // Warm-start sources: a host-memory source loads into its own GPU and
-    // serves as soon as its local load completes; GPU sources serve at t=0.
-    let net = &cluster.network;
-
-    if dests.is_empty() && system != SystemKind::ServerlessLlm {
-        // Pure warm-up operation: sources self-load, no multicast.
-        let sim = crate::sim::transfer::TransferSim::new(net, opts);
-        for s in sources {
-            let t = match s.tier {
-                Tier::Gpu => SimTime::ZERO,
-                tier => {
-                    let medium =
-                        if tier == Tier::HostMem { Medium::HostMem } else { Medium::Ssd };
-                    let mut t = SimTime::ZERO;
-                    for &bytes in &block_bytes {
-                        t += sim.duration(bytes, medium, tier);
-                    }
-                    t
-                }
-            };
-            out.instances.push((t, NewInstance::Local { node: s.node }));
-            if t > SimTime::ZERO {
-                out.nodes_loading.push((s.node, t));
-            }
-            out.finish = out.finish.max(t);
-        }
-        return out;
-    }
-
-    match system {
-        SystemKind::LambdaScale { k } => {
-            let k_eff = k.clamp(1, sources.len()).min(dests.len().max(1));
-            let active_sources = &sources[..k_eff];
-            let mut nodes: Vec<NodeId> = active_sources.iter().map(|s| s.node).collect();
-            nodes.extend_from_slice(dests);
-            let mut plan =
-                multicast::kway::kway_plan(&nodes, k_eff, n_blocks, active_sources[0].tier);
-            // Per-source tiers may differ; patch initial holdings.
-            plan.initial.clear();
-            for (i, s) in active_sources.iter().enumerate() {
-                let _ = i;
-                for b in 0..n_blocks {
-                    plan.initial.push((s.node, b, s.tier));
-                }
-            }
-            // Sources also stage into their own GPU to serve locally.
-            for s in active_sources {
-                if s.tier != Tier::Gpu {
-                    let medium =
-                        if s.tier == Tier::HostMem { Medium::HostMem } else { Medium::Ssd };
-                    for b in 0..n_blocks {
-                        plan.intents.push(SendIntent {
-                            src: s.node,
-                            dst: s.node,
-                            block: b,
-                            medium,
-                        });
-                    }
-                }
-            }
-            let log = plan.execute(net, opts, &block_bytes);
-            let finish = log
-                .all_complete(&nodes, n_blocks)
-                .expect("λScale multicast left nodes incomplete");
-            out.finish = finish;
-
-            // Execute-while-load: pipelines over the destination sub-groups.
-            let groups = multicast::kway::split_subgroups(dests, k_eff);
-            for p in generate_pipelines(&groups) {
-                if p.len() < 2 {
-                    // A single-member "pipeline" is just a node that has the
-                    // whole model — the Local instance below covers it.
-                    continue;
-                }
-                let assignment = pipeline_block_assignment(&p, n_blocks, k_eff);
-                if let Some(ready) = pipeline_ready_time(&log, &assignment) {
-                    let pipe = ExecPipeline::from_assignment(&assignment, partition);
-                    out.instances
-                        .push((ready, NewInstance::Pipeline { pipeline: pipe, dissolve_at: finish }));
-                }
-            }
-            // Mode switch: every participant becomes a local replica at
-            // finish (+ recompute stall for in-flight state, charged by the
-            // serving layer via `plan_switch`).
-            let stall = plan_switch(
-                &[],
-                &nodes.iter().copied().collect::<Vec<_>>(),
-                spec,
-                &cluster.compute,
-                net,
-                Some(switch),
-            )
-            .stall_s;
-            let local_at = finish + SimTime::from_secs(stall);
-            for s in active_sources {
-                let t = if s.tier == Tier::Gpu {
-                    SimTime::ZERO
-                } else {
-                    log.node_complete(s.node, n_blocks).unwrap_or(finish)
-                };
-                out.instances.push((t, NewInstance::Local { node: s.node }));
-                if s.tier != Tier::Gpu {
-                    out.nodes_loading.push((s.node, t));
-                }
-            }
-            // Sources beyond the k-way senders (extra warm replicas) still
-            // self-load into their GPUs and serve (§5 locality-driven
-            // startup) — they must not be stranded.
-            let sim = crate::sim::transfer::TransferSim::new(net, opts);
-            for s in &sources[k_eff..] {
-                let t = match s.tier {
-                    Tier::Gpu => SimTime::ZERO,
-                    tier => {
-                        let medium =
-                            if tier == Tier::HostMem { Medium::HostMem } else { Medium::Ssd };
-                        let mut t = SimTime::ZERO;
-                        for &bytes in &block_bytes {
-                            t += sim.duration(bytes, medium, tier);
-                        }
-                        t
-                    }
-                };
-                out.instances.push((t, NewInstance::Local { node: s.node }));
-                if t > SimTime::ZERO {
-                    out.nodes_loading.push((s.node, t));
-                }
-            }
-            for &d in dests {
-                out.instances.push((local_at, NewInstance::Local { node: d }));
-                out.nodes_loading.push((d, local_at));
-            }
-        }
-        SystemKind::FaasNet | SystemKind::Nccl => {
-            let alg = system.algorithm().unwrap();
-            let mut nodes: Vec<NodeId> = sources.iter().map(|s| s.node).collect();
-            nodes.extend_from_slice(dests);
-            let mut plan =
-                multicast::build_plan(alg, &nodes, sources.len(), n_blocks, sources[0].tier, net);
-            plan.initial.clear();
-            for s in sources {
-                for b in 0..n_blocks {
-                    plan.initial.push((s.node, b, s.tier));
-                }
-            }
-            let log = plan.execute(net, opts, &block_bytes);
-            out.finish = log.all_complete(&nodes, n_blocks).unwrap_or(log.finish);
-            for s in sources {
-                out.instances.push((SimTime::ZERO, NewInstance::Local { node: s.node }));
-            }
-            for &d in dests {
-                let t = log.node_complete(d, n_blocks).unwrap_or(out.finish);
-                out.instances.push((t, NewInstance::Local { node: d }));
-                out.nodes_loading.push((d, t));
-            }
-        }
-        SystemKind::ServerlessLlm => {
-            // Local-tier loads only: each destination loads from its own
-            // host memory (if the caller says it is cached there — encoded
-            // by sources containing that node) or SSD.
-            let src_tier = |n: NodeId| {
-                sources
-                    .iter()
-                    .find(|s| s.node == n)
-                    .map(|s| s.tier)
-                    .unwrap_or(Tier::Ssd)
-            };
-            let sim = crate::sim::transfer::TransferSim::new(net, opts);
-            for s in sources.iter().filter(|s| s.tier == Tier::Gpu) {
-                out.instances.push((SimTime::ZERO, NewInstance::Local { node: s.node }));
-            }
-            for &d in dests {
-                let tier = src_tier(d);
-                let medium = if tier == Tier::HostMem { Medium::HostMem } else { Medium::Ssd };
-                // Sequential block loads through the node's storage port.
-                let mut t = SimTime::ZERO;
-                for &bytes in &block_bytes {
-                    t += sim.duration(bytes, medium, tier);
-                }
-                out.instances.push((t, NewInstance::Local { node: d }));
-                out.nodes_loading.push((d, t));
-                out.finish = out.finish.max(t);
-            }
-        }
-        SystemKind::Ideal => unreachable!(),
-    }
-    out
+    let req = ScalingRequest {
+        sources: sources.to_vec(),
+        dests: dests.to_vec(),
+        spec,
+        partition,
+        opts,
+        switch,
+    };
+    system.backend().plan(&req, &ClusterState::config_only(cluster))
 }
 
 #[cfg(test)]

@@ -1,32 +1,22 @@
-//! End-to-end serving simulation: the cluster manager's event loop over a
-//! request trace, for λScale and every baseline (the engine behind
-//! Figs 9–16).
+//! Legacy single-model serving entrypoint.
 //!
-//! Serving instances are modelled as processor-sharing queues whose total
-//! service rate follows the [`ExecPipeline`] performance model (so an
-//! underfed pipeline or a small batch serves slower, exactly as in §4.3).
-//! Scaling operations go through [`super::scaling::plan_scaling`], which
-//! returns *when* pipelines / local replicas become available; GPU-time
-//! cost accounting charges nodes from the moment a scaling operation
-//! reserves them (loading time is billed — the reason slow loading costs
-//! money in Fig 14).
+//! The event loop itself lives in [`super::engine::ServingEngine`], driven
+//! through the builder-style [`super::session::ServingSession`] API.
+//! This module keeps the seed-era [`ServingConfig`] struct and the
+//! [`run_serving`] function as a compatibility shim so existing callers
+//! (and any external scripts) keep working unchanged.
 
-use super::autoscaler::Autoscaler;
-use super::router::Router;
-use super::scaling::{plan_scaling, NewInstance, ScalingOutcome, Source, SystemKind};
+use super::scaling::SystemKind;
+use super::session::ServingSession;
 use crate::config::ClusterConfig;
-use crate::metrics::{MetricsCollector, RequestMetrics};
-use crate::model::{ModelSpec, Partition};
-use crate::multicast::NodeId;
-use crate::pipeline::execution::ExecPipeline;
-use crate::pipeline::mode_switch::{plan_switch, SwitchStrategy};
-use crate::sim::event::EventQueue;
-use crate::sim::time::SimTime;
-use crate::sim::transfer::{Tier, TransferOpts};
+use crate::metrics::MetricsCollector;
+use crate::model::ModelSpec;
+use crate::pipeline::mode_switch::SwitchStrategy;
+use crate::sim::transfer::TransferOpts;
 use crate::workload::Trace;
-use std::collections::{HashMap, VecDeque};
 
-/// Serving-run configuration.
+/// Serving-run configuration (legacy shape; the session builder exposes
+/// the same knobs per model).
 #[derive(Clone, Debug)]
 pub struct ServingConfig {
     pub cluster: ClusterConfig,
@@ -65,632 +55,17 @@ impl ServingConfig {
     }
 }
 
-#[derive(Clone, Debug)]
-struct ActiveReq {
-    idx: usize,
-    /// Work done so far, token units.
-    done: f64,
-    /// Work needed before the first token (prefill + 1 token).
-    w_first: f64,
-    /// Total work (prefill + all output tokens).
-    w_total: f64,
-    first_emitted: bool,
-    admitted: SimTime,
-}
-
-struct Inst {
-    pipe: ExecPipeline,
-    dissolve_at: Option<SimTime>,
-    active: Vec<ActiveReq>,
-    queue: VecDeque<usize>,
-    last_update: SimTime,
-    idle_since: SimTime,
-    version: u64,
-    token_accum: f64,
-}
-
-enum Ev {
-    Arrival(usize),
-    /// Coalesced scaling decision (same-instant arrivals see one decision).
-    ScaleCheck,
-    InstanceUp(u64),
-    InstTick(u64, u64),
-    Dissolve(u64),
-    DissolveDone(Vec<usize>),
-    Reclaim(u64),
-}
-
 /// Run the serving simulation of `trace` under `cfg`; returns collected
 /// metrics (TTFT per request, token timeline, GPU allocation timeline).
+/// Compatibility shim over [`ServingSession`].
 pub fn run_serving(cfg: &ServingConfig, trace: &Trace) -> MetricsCollector {
-    Sim::new(cfg, trace).run()
-}
-
-struct Sim<'a> {
-    cfg: &'a ServingConfig,
-    trace: &'a Trace,
-    q: EventQueue<Ev>,
-    metrics: MetricsCollector,
-    router: Router,
-    instances: HashMap<u64, Inst>,
-    next_inst_id: u64,
-    /// Global queue when no instance exists yet.
-    unrouted: VecDeque<usize>,
-    req_inst: HashMap<usize, u64>,
-    node_state: Vec<NodeState>,
-    autoscaler: Autoscaler,
-    /// A ScaleCheck event is already queued.
-    scale_check_pending: bool,
-    /// Earliest time the next scaling operation may start (cooldown).
-    next_op_at: SimTime,
-    last_gpu_count: usize,
-    first_tokens: HashMap<usize, SimTime>,
-    completed: usize,
-    partition: Partition,
-    prefill_ratio: f64,
-    /// Instances scheduled to come up, keyed by stash id.
-    pending: HashMap<u64, (ExecPipeline, Option<SimTime>)>,
-    next_stash_id: u64,
-}
-
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum NodeState {
-    Free,
-    /// Holds the model in host memory but no GPU work.
-    WarmFree,
-    Loading,
-    Serving,
-}
-
-impl<'a> Sim<'a> {
-    fn new(cfg: &'a ServingConfig, trace: &'a Trace) -> Self {
-        let partition = cfg.spec.partition(cfg.n_blocks);
-        // Work-units: prefill cost per prompt token relative to one decode
-        // token at batch 1 on a local replica.
-        let local = ExecPipeline::local(0, &cfg.spec);
-        let decode_tok_s = 1.0 / local.peak_tps(1, &cfg.spec, &cfg.cluster.compute).max(1e-9);
-        let prefill_tok_s = cfg.spec.flops_per_token / (cfg.cluster.compute.gpu_tflops * 1e12);
-        let prefill_ratio = prefill_tok_s / decode_tok_s;
-
-        let per_inst_rps = local.peak_tps(cfg.max_batch, &cfg.spec, &cfg.cluster.compute)
-            / cfg.cluster.compute.avg_output_tokens.max(1.0);
-        let autoscaler = Autoscaler::new(per_inst_rps.max(0.1), SimTime::from_secs(cfg.keep_alive_s));
-
-        let mut node_state = vec![NodeState::Free; cfg.cluster.n_nodes];
-        for st in node_state.iter_mut().take(cfg.initial_gpu_sources.min(cfg.cluster.n_nodes)) {
-            *st = NodeState::Serving; // becomes an instance below
-        }
-        let lo = cfg.initial_gpu_sources.min(cfg.cluster.n_nodes);
-        let hi = (lo + cfg.initial_host_sources).min(cfg.cluster.n_nodes);
-        for st in node_state.iter_mut().take(hi).skip(lo) {
-            *st = NodeState::WarmFree;
-        }
-
-        Sim {
-            cfg,
-            trace,
-            q: EventQueue::new(),
-            metrics: MetricsCollector::new(),
-            router: Router::new(),
-            instances: HashMap::new(),
-            next_inst_id: 0,
-            unrouted: VecDeque::new(),
-            req_inst: HashMap::new(),
-            node_state,
-            autoscaler,
-            scale_check_pending: false,
-            next_op_at: SimTime::ZERO,
-            last_gpu_count: 0,
-            first_tokens: HashMap::new(),
-            completed: 0,
-            partition,
-            prefill_ratio,
-            pending: HashMap::new(),
-            next_stash_id: 1_000_000,
-        }
-    }
-
-    fn run(mut self) -> MetricsCollector {
-        // Initial GPU-resident sources serve from t=0.
-        for node in 0..self.cfg.initial_gpu_sources.min(self.cfg.cluster.n_nodes) {
-            self.spawn_instance(ExecPipeline::local(node, &self.cfg.spec), None, SimTime::ZERO);
-        }
-        self.account_gpus(SimTime::ZERO);
-        for (i, r) in self.trace.requests.iter().enumerate() {
-            self.q.push(r.arrival, Ev::Arrival(i));
-        }
-        while let Some((t, ev)) = self.q.pop() {
-            match ev {
-                Ev::Arrival(i) => self.on_arrival(t, i),
-                Ev::ScaleCheck => {
-                    self.scale_check_pending = false;
-                    self.maybe_scale(t);
-                }
-                Ev::InstanceUp(id) => self.on_instance_up(t, id),
-                Ev::InstTick(id, ver) => self.on_tick(t, id, ver),
-                Ev::Dissolve(id) => self.on_dissolve(t, id),
-                Ev::DissolveDone(reqs) => {
-                    for r in reqs {
-                        self.route_request(t, r);
-                    }
-                }
-                Ev::Reclaim(id) => self.on_reclaim(t, id),
-            }
-        }
-        self.metrics
-    }
-
-    // ---- instance lifecycle ------------------------------------------------
-
-    fn spawn_instance(
-        &mut self,
-        pipe: ExecPipeline,
-        dissolve_at: Option<SimTime>,
-        now: SimTime,
-    ) -> u64 {
-        let id = self.next_inst_id;
-        self.next_inst_id += 1;
-        let weight = pipe.service_rate(self.cfg.max_batch, &self.cfg.spec, &self.cfg.cluster.compute);
-        for &n in &pipe.nodes() {
-            if n < self.node_state.len() {
-                self.node_state[n] = NodeState::Serving;
-            }
-        }
-        self.instances.insert(
-            id,
-            Inst {
-                pipe,
-                dissolve_at,
-                active: Vec::new(),
-                queue: VecDeque::new(),
-                last_update: now,
-                idle_since: now,
-                version: 0,
-                token_accum: 0.0,
-            },
-        );
-        self.router.add_instance(id, weight.max(1e-6));
-        if let Some(d) = dissolve_at {
-            self.q.push(d.max(now), Ev::Dissolve(id));
-        } else {
-            self.schedule_reclaim(id, now);
-        }
-        // Drain globally queued requests, then rebalance: a fresh instance
-        // must be able to steal queued (not yet admitted) work from
-        // overloaded peers — otherwise scaling out never helps requests
-        // that arrived before the new capacity.
-        while let Some(r) = self.unrouted.pop_front() {
-            self.route_request(now, r);
-        }
-        self.rebalance(now);
-        self.account_gpus(now);
-        id
-    }
-
-    /// Pull every queued-but-not-admitted request back and re-route via JSQ.
-    fn rebalance(&mut self, now: SimTime) {
-        let ids: Vec<u64> = self.instances.keys().copied().collect();
-        let mut pool: Vec<usize> = Vec::new();
-        for id in &ids {
-            self.advance(now, *id);
-            let inst = self.instances.get_mut(id).unwrap();
-            while let Some(idx) = inst.queue.pop_back() {
-                self.router.complete(*id);
-                self.req_inst.remove(&idx);
-                pool.push(idx);
-            }
-        }
-        // Oldest first keeps FIFO fairness.
-        pool.sort_unstable();
-        for idx in pool {
-            self.route_request(now, idx);
-        }
-    }
-
-    fn schedule_reclaim(&mut self, id: u64, now: SimTime) {
-        if self.instances.contains_key(&id) {
-            self.q.push(now + SimTime::from_secs(self.cfg.keep_alive_s), Ev::Reclaim(id));
-        }
-    }
-
-    fn on_reclaim(&mut self, now: SimTime, id: u64) {
-        let Some(inst) = self.instances.get(&id) else { return };
-        if !inst.active.is_empty() || !inst.queue.is_empty() {
-            // Busy: advance() will schedule a fresh reclaim when it next
-            // goes idle. (No self-rescheduling here — it would keep the
-            // event queue alive forever.)
-            return;
-        }
-        if !self.autoscaler.should_reclaim(now, inst.idle_since) {
-            // Idle but not long enough: one bounded re-check.
-            let at = inst.idle_since + SimTime::from_secs(self.cfg.keep_alive_s);
-            if at > now {
-                self.q.push(at, Ev::Reclaim(id));
-            }
-            return;
-        }
-        // Keep at least one replica alive so k >= 1 (paper footnote 2):
-        // the floor instance simply stays; if another instance appears and
-        // this one idles again, a new reclaim will be scheduled.
-        let locals = self
-            .instances
-            .values()
-            .filter(|i| i.dissolve_at.is_none())
-            .count();
-        if locals <= 1 && self.instances[&id].dissolve_at.is_none() {
-            return;
-        }
-        let inst = self.instances.remove(&id).unwrap();
-        self.router.remove_instance(id);
-        for n in inst.pipe.nodes() {
-            if n < self.node_state.len() {
-                // Model stays in host memory after GPU reclaim (warm).
-                self.node_state[n] = NodeState::WarmFree;
-            }
-        }
-        self.account_gpus(now);
-    }
-
-    // ---- arrivals & routing -------------------------------------------------
-
-    fn on_arrival(&mut self, now: SimTime, idx: usize) {
-        self.autoscaler.observe(now);
-        self.route_request(now, idx);
-        // Defer the scaling decision: same-instant arrivals (a burst) are
-        // coalesced into one decision that sees the full backlog.
-        if !self.scale_check_pending {
-            self.scale_check_pending = true;
-            self.q.push(now, Ev::ScaleCheck);
-        }
-    }
-
-    fn route_request(&mut self, now: SimTime, idx: usize) {
-        match self.router.route() {
-            Some(id) => {
-                self.req_inst.insert(idx, id);
-                let inst = self.instances.get_mut(&id).unwrap();
-                inst.queue.push_back(idx);
-                self.try_admit(now, id);
-            }
-            None => self.unrouted.push_back(idx),
-        }
-    }
-
-    fn try_admit(&mut self, now: SimTime, id: u64) {
-        let Some(inst) = self.instances.get_mut(&id) else { return };
-        self.advance(now, id);
-        let inst = self.instances.get_mut(&id).unwrap();
-        let mut changed = false;
-        while inst.active.len() < self.cfg.max_batch {
-            let Some(idx) = inst.queue.pop_front() else { break };
-            let r = &self.trace.requests[idx];
-            let w_prefill = r.prompt_tokens as f64 * self.prefill_ratio;
-            inst.active.push(ActiveReq {
-                idx,
-                done: 0.0,
-                w_first: w_prefill + 1.0,
-                w_total: w_prefill + r.output_tokens as f64,
-                first_emitted: false,
-                admitted: now,
-            });
-            changed = true;
-        }
-        if changed {
-            self.reschedule(now, id);
-        }
-    }
-
-    // ---- processor-sharing mechanics ----------------------------------------
-
-    /// Advance PS progress of instance `id` up to `now`, emitting tokens.
-    fn advance(&mut self, now: SimTime, id: u64) {
-        let Some(inst) = self.instances.get_mut(&id) else { return };
-        let dt = (now.saturating_sub(inst.last_update)).as_secs();
-        inst.last_update = now;
-        if dt <= 0.0 || inst.active.is_empty() {
-            return;
-        }
-        let total =
-            inst.pipe.service_rate(inst.active.len(), &self.cfg.spec, &self.cfg.cluster.compute);
-        let per_req = total / inst.active.len() as f64;
-        let mut emitted_tokens = 0usize;
-        let mut finished: Vec<ActiveReq> = Vec::new();
-        let mut token_accum = inst.token_accum + total * dt;
-        for a in &mut inst.active {
-            a.done += per_req * dt;
-            if !a.first_emitted && a.done + 1e-9 >= a.w_first {
-                a.first_emitted = true;
-                self.first_tokens.insert(a.idx, now);
-            }
-        }
-        emitted_tokens += token_accum as usize;
-        token_accum -= emitted_tokens as f64;
-        let mut i = 0;
-        while i < inst.active.len() {
-            if inst.active[i].done + 1e-9 >= inst.active[i].w_total {
-                finished.push(inst.active.swap_remove(i));
-            } else {
-                i += 1;
-            }
-        }
-        inst.token_accum = token_accum;
-        let went_idle = inst.active.is_empty() && inst.queue.is_empty();
-        if went_idle {
-            inst.idle_since = now;
-        }
-        if emitted_tokens > 0 {
-            self.metrics.record_tokens(now, emitted_tokens);
-        }
-        for f in finished {
-            self.complete_request(now, id, &f);
-        }
-        if went_idle {
-            self.schedule_reclaim(id, now);
-        }
-    }
-
-    fn complete_request(&mut self, now: SimTime, inst_id: u64, a: &ActiveReq) {
-        let r = &self.trace.requests[a.idx];
-        let first = self.first_tokens.get(&a.idx).copied().unwrap_or(now);
-        self.metrics.record_request(RequestMetrics {
-            id: r.id,
-            arrival: r.arrival,
-            first_token: first,
-            completion: now,
-            output_tokens: r.output_tokens,
-        });
-        self.router.complete(inst_id);
-        self.req_inst.remove(&a.idx);
-        self.completed += 1;
-        self.try_admit(now, inst_id);
-    }
-
-    /// Schedule the next progress event: earliest threshold crossing or a
-    /// coarse tick for throughput sampling.
-    fn reschedule(&mut self, now: SimTime, id: u64) {
-        let Some(inst) = self.instances.get_mut(&id) else { return };
-        inst.version += 1;
-        let ver = inst.version;
-        if inst.active.is_empty() {
-            return;
-        }
-        let total =
-            inst.pipe.service_rate(inst.active.len(), &self.cfg.spec, &self.cfg.cluster.compute);
-        let per_req = (total / inst.active.len() as f64).max(1e-9);
-        let mut dt_min = f64::INFINITY;
-        for a in &inst.active {
-            if !a.first_emitted {
-                dt_min = dt_min.min((a.w_first - a.done).max(0.0) / per_req);
-            }
-            dt_min = dt_min.min((a.w_total - a.done).max(0.0) / per_req);
-        }
-        let dt = dt_min.clamp(1e-6, 0.05); // ≤50 ms ticks for clean timelines
-        self.q.push(now + SimTime::from_secs(dt), Ev::InstTick(id, ver));
-    }
-
-    fn on_tick(&mut self, now: SimTime, id: u64, ver: u64) {
-        let Some(inst) = self.instances.get(&id) else { return };
-        if inst.version != ver {
-            return;
-        }
-        self.advance(now, id);
-        self.try_admit(now, id);
-        self.reschedule(now, id);
-    }
-
-    // ---- scaling -------------------------------------------------------------
-
-    fn maybe_scale(&mut self, now: SimTime) {
-        if now < self.next_op_at {
-            // Cooldown: re-check when the window opens.
-            if !self.scale_check_pending {
-                self.scale_check_pending = true;
-                self.q.push(self.next_op_at, Ev::ScaleCheck);
-            }
-            return;
-        }
-        let queued = self.unrouted.len()
-            + self.instances.values().map(|i| i.queue.len()).sum::<usize>();
-        let loading = self.node_state.iter().filter(|s| **s == NodeState::Loading).count();
-        let current = self.instances.len() + loading;
-        // Capacity sizing: each instance absorbs max_batch concurrent
-        // decodes; backlog beyond the in-flight slots demands new replicas.
-        let by_backlog = if queued > 0 {
-            self.instances.len() + queued.div_ceil(self.cfg.max_batch.max(1))
-        } else {
-            0
-        };
-        let desired = self.autoscaler.desired(now, queued, current).max(by_backlog);
-        if desired <= current {
-            return;
-        }
-        // Free nodes to recruit.
-        let free: Vec<NodeId> = (0..self.cfg.cluster.n_nodes)
-            .filter(|&n| matches!(self.node_state[n], NodeState::Free | NodeState::WarmFree))
-            .collect();
-        let want = (desired - current).min(free.len());
-        if want == 0 {
-            return;
-        }
-        self.next_op_at = now + SimTime::from_millis(100.0);
-
-        // Locality-driven recruitment (§5): warm (host-memory) nodes are the
-        // most valuable recruits — they self-load AND act as multicast
-        // sources — so take them first; cold nodes become multicast
-        // destinations.
-        let warm: Vec<NodeId> =
-            free.iter().copied().filter(|&n| self.node_state[n] == NodeState::WarmFree).collect();
-        let cold: Vec<NodeId> =
-            free.iter().copied().filter(|&n| self.node_state[n] == NodeState::Free).collect();
-        let take_warm = want.min(warm.len());
-        let take_cold = want - take_warm;
-        let recruited_warm = &warm[..take_warm];
-        let dests_net: Vec<NodeId> = cold[..take_cold.min(cold.len())].to_vec();
-
-        // Sources: live GPU replicas first, then every recruited warm node.
-        let mut sources_for_plan: Vec<Source> = self
-            .instances
-            .values()
-            .filter(|i| i.dissolve_at.is_none() && i.pipe.n_stages() == 1)
-            .map(|i| Source { node: i.pipe.nodes()[0], tier: Tier::Gpu })
-            .collect();
-        sources_for_plan.sort_by_key(|s| s.node);
-        for &n in recruited_warm {
-            sources_for_plan.push(Source { node: n, tier: Tier::HostMem });
-        }
-        if sources_for_plan.is_empty() {
-            if self.cfg.ssd_everywhere && !dests_net.is_empty() {
-                sources_for_plan.push(Source { node: dests_net[0], tier: Tier::Ssd });
-            } else {
-                return; // nothing to scale from
-            }
-        }
-        // ServerlessLLM never multicasts: every recruit loads from its own
-        // local tier (host memory if warm, SSD otherwise).
-        if self.cfg.system == SystemKind::ServerlessLlm {
-            sources_for_plan = recruited_warm
-                .iter()
-                .map(|&n| Source { node: n, tier: Tier::HostMem })
-                .chain(dests_net.iter().map(|&d| Source { node: d, tier: Tier::Ssd }))
-                .collect();
-        }
-        if dests_net.is_empty() && recruited_warm.is_empty() {
-            return;
-        }
-        // ServerlessLLM treats every recruit (warm or cold) as a local-load
-        // destination.
-        let dests_for_plan: Vec<NodeId> = if self.cfg.system == SystemKind::ServerlessLlm {
-            recruited_warm.iter().copied().chain(dests_net.iter().copied()).collect()
-        } else {
-            dests_net.clone()
-        };
-        let outcome: ScalingOutcome = plan_scaling(
-            self.cfg.system,
-            &sources_for_plan,
-            &dests_for_plan,
-            &self.cfg.spec,
-            &self.partition,
-            &self.cfg.cluster,
-            self.cfg.opts,
-            self.cfg.switch,
-        );
-        for &d in dests_net.iter().chain(recruited_warm.iter()) {
-            self.node_state[d] = NodeState::Loading;
-        }
-        self.account_gpus(now);
-        for (t, ni) in outcome.instances {
-            match ni {
-                NewInstance::Pipeline { pipeline, dissolve_at } => {
-                    let abs_ready = now + t;
-                    let abs_dissolve = now + dissolve_at;
-                    let stash = self.stash_pipeline(pipeline, Some(abs_dissolve));
-                    self.q.push(abs_ready, Ev::InstanceUp(stash));
-                }
-                NewInstance::Local { node } => {
-                    // Skip nodes already serving (sources).
-                    if self.node_state.get(node) == Some(&NodeState::Serving) && t == SimTime::ZERO
-                    {
-                        continue;
-                    }
-                    let stash = self.stash_local(node);
-                    self.q.push(now + t, Ev::InstanceUp(stash));
-                }
-            }
-        }
-    }
-
-    // Pending instance stash: instances created at InstanceUp time.
-    fn stash_pipeline(&mut self, pipe: ExecPipeline, dissolve: Option<SimTime>) -> u64 {
-        let id = self.next_stash_id;
-        self.next_stash_id += 1;
-        self.pending.insert(id, (pipe, dissolve));
-        id
-    }
-
-    fn stash_local(&mut self, node: NodeId) -> u64 {
-        let id = self.next_stash_id;
-        self.next_stash_id += 1;
-        self.pending
-            .insert(id, (ExecPipeline::local(node, &self.cfg.spec), None));
-        id
-    }
-
-    fn on_instance_up(&mut self, now: SimTime, stash_id: u64) {
-        let Some((pipe, dissolve)) = self.pending.remove(&stash_id) else { return };
-        // A node may have been reused; only bring up if its nodes aren't
-        // already serving via another live instance.
-        let clash = pipe.nodes().iter().any(|&n| {
-            self.instances
-                .values()
-                .any(|i| i.dissolve_at.is_none() && i.pipe.nodes().contains(&n) && i.pipe.n_stages() == 1)
-        });
-        if clash && dissolve.is_some() {
-            return; // pipeline superseded by a local replica already up
-        }
-        self.spawn_instance(pipe, dissolve, now);
-    }
-
-    fn on_dissolve(&mut self, now: SimTime, id: u64) {
-        let Some(inst) = self.instances.get(&id) else { return };
-        if inst.dissolve_at.is_none() {
-            return;
-        }
-        self.advance(now, id);
-        let inst = self.instances.remove(&id).unwrap();
-        let outstanding = self.router.remove_instance(id).unwrap_or(0);
-        let _ = outstanding;
-        // Mode switch: redistribute in-flight + queued requests with the KV
-        // rebuild stall.
-        let mut to_reroute: Vec<usize> = inst.queue.iter().copied().collect();
-        let mut in_flight: Vec<(u64, usize)> = Vec::new();
-        for a in &inst.active {
-            let r = &self.trace.requests[a.idx];
-            let ctx = r.prompt_tokens + a.done.floor() as usize;
-            in_flight.push((r.id, ctx));
-            to_reroute.push(a.idx);
-        }
-        for idx in &to_reroute {
-            self.req_inst.remove(idx);
-        }
-        let stall = plan_switch(
-            &in_flight,
-            &inst.pipe.nodes(),
-            &self.cfg.spec,
-            &self.cfg.cluster.compute,
-            &self.cfg.cluster.network,
-            Some(self.cfg.switch),
-        )
-        .stall_s;
-        self.q
-            .push(now + SimTime::from_secs(stall), Ev::DissolveDone(to_reroute));
-        self.account_gpus(now);
-    }
-
-    // ---- accounting ----------------------------------------------------------
-
-    fn account_gpus(&mut self, now: SimTime) {
-        let mut nodes_busy: std::collections::HashSet<NodeId> = std::collections::HashSet::new();
-        for inst in self.instances.values() {
-            for n in inst.pipe.nodes() {
-                nodes_busy.insert(n);
-            }
-        }
-        for (n, st) in self.node_state.iter().enumerate() {
-            if *st == NodeState::Loading {
-                nodes_busy.insert(n);
-            }
-        }
-        let gpus = nodes_busy.len() * self.cfg.cluster.node.gpus_per_node.max(1);
-        if gpus != self.last_gpu_count {
-            self.last_gpu_count = gpus;
-            self.metrics.record_gpu_alloc(now, gpus);
-        }
-    }
+    ServingSession::from_config(cfg, trace.clone()).run().into_single()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::time::SimTime;
     use crate::util::rng::Rng;
     use crate::workload;
 

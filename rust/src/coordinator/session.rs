@@ -1,0 +1,381 @@
+//! `ServingSession`: the builder-style front door to the serving engine.
+//!
+//! A session serves one or more models on a shared cluster, each with its
+//! own trace, scaling backend, routing policy and admission policy:
+//!
+//! ```no_run
+//! use lambda_scale::config::ClusterConfig;
+//! use lambda_scale::coordinator::{ServingSession, SystemKind};
+//! use lambda_scale::coordinator::policy::{BatchedAdmission, LeastLoaded};
+//! use lambda_scale::model::ModelSpec;
+//! use lambda_scale::sim::time::SimTime;
+//! use lambda_scale::workload::Trace;
+//!
+//! let report = ServingSession::builder()
+//!     .cluster(ClusterConfig::testbed1())
+//!     .model(ModelSpec::llama2_13b())
+//!     .system(SystemKind::LambdaScale { k: 2 })
+//!     .trace(Trace::default())
+//!     .model(ModelSpec::llama2_7b()) // second tenant on the same cluster
+//!     .system(SystemKind::ServerlessLlm)
+//!     .router(Box::new(LeastLoaded))
+//!     .admission(Box::new(BatchedAdmission::new(SimTime::from_secs(0.05))))
+//!     .trace(Trace::default())
+//!     .run();
+//! for m in &report.models {
+//!     println!("{} via {}: {} served", m.model, m.system, m.metrics.requests.len());
+//! }
+//! ```
+//!
+//! Per-model builder methods (`system`, `backend`, `router`, `admission`,
+//! `trace`, `max_batch`, …) apply to the most recently added `.model(..)`;
+//! calling them before any `.model(..)` panics. The legacy single-model
+//! entrypoint [`super::serving::run_serving`] is a thin shim over
+//! [`ServingSession::from_config`].
+
+use super::backend::ScalingBackend;
+use super::engine::ServingEngine;
+use super::policy::{AdmissionPolicy, ImmediateAdmission, RoutingPolicy};
+use super::router::Router;
+use super::scaling::SystemKind;
+use super::serving::ServingConfig;
+use crate::config::ClusterConfig;
+use crate::metrics::MetricsCollector;
+use crate::model::ModelSpec;
+use crate::pipeline::mode_switch::SwitchStrategy;
+use crate::sim::transfer::TransferOpts;
+use crate::workload::Trace;
+
+/// Per-model serving parameters (defaults match the seed engine).
+#[derive(Clone, Debug)]
+pub struct ModelParams {
+    pub spec: ModelSpec,
+    pub n_blocks: usize,
+    /// Concurrent decode slots per instance.
+    pub max_batch: usize,
+    pub keep_alive_s: f64,
+    pub opts: TransferOpts,
+    pub switch: SwitchStrategy,
+    /// Nodes holding the model in GPU memory at t=0 (serving immediately).
+    pub initial_gpu_sources: usize,
+    /// Nodes holding the model in host memory at t=0.
+    pub initial_host_sources: usize,
+    /// Whether every node has the model on its local SSD (multi-tenant
+    /// platforms keep models on NVMe; ServerlessLLM depends on this).
+    pub ssd_everywhere: bool,
+}
+
+impl ModelParams {
+    pub fn new(spec: ModelSpec) -> Self {
+        ModelParams {
+            spec,
+            n_blocks: crate::model::DEFAULT_BLOCKS,
+            max_batch: 16,
+            keep_alive_s: 15.0,
+            opts: TransferOpts::default(),
+            switch: SwitchStrategy::Recompute,
+            initial_gpu_sources: 1,
+            initial_host_sources: 0,
+            ssd_everywhere: true,
+        }
+    }
+}
+
+/// One model's full serving setup inside a session: parameters, the three
+/// policy objects, its request trace, and the metrics it collects.
+pub struct ModelSession {
+    pub(crate) params: ModelParams,
+    pub(crate) backend: Box<dyn ScalingBackend>,
+    pub(crate) router: Router,
+    pub(crate) admission: Box<dyn AdmissionPolicy>,
+    pub(crate) trace: Trace,
+    pub(crate) metrics: MetricsCollector,
+}
+
+impl ModelSession {
+    fn new(spec: ModelSpec) -> Self {
+        ModelSession {
+            params: ModelParams::new(spec),
+            backend: SystemKind::LambdaScale { k: 1 }.backend(),
+            router: Router::new(),
+            admission: Box::new(ImmediateAdmission),
+            trace: Trace::default(),
+            metrics: MetricsCollector::new(),
+        }
+    }
+
+    /// Test helper: a model session with an explicit backend and trace.
+    #[doc(hidden)]
+    pub fn for_test(spec: ModelSpec, backend: Box<dyn ScalingBackend>, trace: Trace) -> Self {
+        let mut ms = ModelSession::new(spec);
+        ms.backend = backend;
+        ms.trace = trace;
+        ms
+    }
+}
+
+/// Builder for [`ServingSession`]. See the module docs for the fluent
+/// grammar: `.model(spec)` opens a model scope; per-model setters apply to
+/// the most recent model.
+pub struct ServingSessionBuilder {
+    cluster: ClusterConfig,
+    models: Vec<ModelSession>,
+}
+
+impl ServingSessionBuilder {
+    fn current(&mut self) -> &mut ModelSession {
+        self.models
+            .last_mut()
+            .expect("call .model(spec) before per-model builder methods")
+    }
+
+    /// Set the shared cluster (default: Testbed1).
+    pub fn cluster(mut self, cluster: ClusterConfig) -> Self {
+        self.cluster = cluster;
+        self
+    }
+
+    /// Add a model to the session; subsequent per-model setters configure
+    /// it until the next `.model(..)` call.
+    pub fn model(mut self, spec: ModelSpec) -> Self {
+        self.models.push(ModelSession::new(spec));
+        self
+    }
+
+    /// Scaling backend by system kind (thin factory over
+    /// [`SystemKind::backend`]).
+    pub fn system(mut self, system: SystemKind) -> Self {
+        self.current().backend = system.backend();
+        self
+    }
+
+    /// Custom scaling backend.
+    pub fn backend(mut self, backend: Box<dyn ScalingBackend>) -> Self {
+        self.current().backend = backend;
+        self
+    }
+
+    /// Routing policy (default: weighted join-shortest-queue).
+    pub fn router(mut self, policy: Box<dyn RoutingPolicy>) -> Self {
+        self.current().router = Router::with_policy(policy);
+        self
+    }
+
+    /// Admission policy (default: immediate continuous batching).
+    pub fn admission(mut self, policy: Box<dyn AdmissionPolicy>) -> Self {
+        self.current().admission = policy;
+        self
+    }
+
+    /// The model's request trace.
+    pub fn trace(mut self, trace: Trace) -> Self {
+        self.current().trace = trace;
+        self
+    }
+
+    pub fn max_batch(mut self, slots: usize) -> Self {
+        self.current().params.max_batch = slots;
+        self
+    }
+
+    pub fn keep_alive(mut self, seconds: f64) -> Self {
+        self.current().params.keep_alive_s = seconds;
+        self
+    }
+
+    pub fn n_blocks(mut self, blocks: usize) -> Self {
+        self.current().params.n_blocks = blocks;
+        self
+    }
+
+    pub fn transfer_opts(mut self, opts: TransferOpts) -> Self {
+        self.current().params.opts = opts;
+        self
+    }
+
+    pub fn switch_strategy(mut self, switch: SwitchStrategy) -> Self {
+        self.current().params.switch = switch;
+        self
+    }
+
+    pub fn initial_gpu_sources(mut self, n: usize) -> Self {
+        self.current().params.initial_gpu_sources = n;
+        self
+    }
+
+    pub fn initial_host_sources(mut self, n: usize) -> Self {
+        self.current().params.initial_host_sources = n;
+        self
+    }
+
+    pub fn ssd_everywhere(mut self, yes: bool) -> Self {
+        self.current().params.ssd_everywhere = yes;
+        self
+    }
+
+    pub fn build(self) -> ServingSession {
+        ServingSession { cluster: self.cluster, models: self.models }
+    }
+
+    /// Build and run in one step.
+    pub fn run(self) -> SessionReport {
+        self.build().run()
+    }
+}
+
+/// A configured serving session: one shared cluster, N models.
+pub struct ServingSession {
+    cluster: ClusterConfig,
+    models: Vec<ModelSession>,
+}
+
+impl ServingSession {
+    pub fn builder() -> ServingSessionBuilder {
+        ServingSessionBuilder { cluster: ClusterConfig::testbed1(), models: Vec::new() }
+    }
+
+    /// Single-model session from a legacy [`ServingConfig`] (the
+    /// `run_serving` compatibility path).
+    pub fn from_config(cfg: &ServingConfig, trace: Trace) -> ServingSession {
+        ServingSession::builder()
+            .cluster(cfg.cluster.clone())
+            .model(cfg.spec.clone())
+            .system(cfg.system)
+            .n_blocks(cfg.n_blocks)
+            .max_batch(cfg.max_batch)
+            .keep_alive(cfg.keep_alive_s)
+            .transfer_opts(cfg.opts)
+            .switch_strategy(cfg.switch)
+            .initial_gpu_sources(cfg.initial_gpu_sources)
+            .initial_host_sources(cfg.initial_host_sources)
+            .ssd_everywhere(cfg.ssd_everywhere)
+            .trace(trace)
+            .build()
+    }
+
+    /// Run the session to completion.
+    pub fn run(self) -> SessionReport {
+        let mut engine = ServingEngine::new(self.cluster);
+        for ms in self.models {
+            engine.add_model(ms);
+        }
+        engine.run()
+    }
+}
+
+/// One model's results from a session run.
+pub struct ModelReport {
+    pub model: String,
+    /// The scaling backend's name (e.g. `lambdascale-k2`).
+    pub system: String,
+    /// The routing policy's name (e.g. `join-shortest-queue`).
+    pub router: &'static str,
+    /// Requests fully served.
+    pub completed: usize,
+    pub metrics: MetricsCollector,
+}
+
+/// Results of a session run, one report per model (in `.model(..)` order).
+pub struct SessionReport {
+    pub models: Vec<ModelReport>,
+}
+
+impl SessionReport {
+    /// Unwrap the single model's metrics (panics on multi-model sessions).
+    pub fn into_single(mut self) -> MetricsCollector {
+        assert_eq!(self.models.len(), 1, "into_single on a {}-model session", self.models.len());
+        self.models.remove(0).metrics
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::workload::burst_trace;
+
+    #[test]
+    fn builder_defaults_match_seed_config() {
+        let p = ModelParams::new(ModelSpec::llama2_13b());
+        let legacy = ServingConfig::new(
+            SystemKind::LambdaScale { k: 1 },
+            ClusterConfig::testbed1(),
+            ModelSpec::llama2_13b(),
+        );
+        assert_eq!(p.max_batch, legacy.max_batch);
+        assert_eq!(p.n_blocks, legacy.n_blocks);
+        assert_eq!(p.keep_alive_s, legacy.keep_alive_s);
+        assert_eq!(p.initial_gpu_sources, legacy.initial_gpu_sources);
+        assert_eq!(p.initial_host_sources, legacy.initial_host_sources);
+        assert_eq!(p.ssd_everywhere, legacy.ssd_everywhere);
+    }
+
+    #[test]
+    fn session_matches_run_serving_shim() {
+        let mut rng = Rng::new(3);
+        let trace = burst_trace(30, 0.0, "llama2-13b", 128, 64, &mut rng);
+        let mut cluster = ClusterConfig::testbed1();
+        cluster.n_nodes = 8;
+        let cfg = ServingConfig::new(
+            SystemKind::LambdaScale { k: 2 },
+            cluster.clone(),
+            ModelSpec::llama2_13b(),
+        );
+        let via_shim = super::super::serving::run_serving(&cfg, &trace);
+        let via_session = ServingSession::builder()
+            .cluster(cluster)
+            .model(ModelSpec::llama2_13b())
+            .system(SystemKind::LambdaScale { k: 2 })
+            .trace(trace)
+            .run()
+            .into_single();
+        let key = |m: &MetricsCollector| {
+            let mut v: Vec<(u64, u64, u64)> =
+                m.requests.iter().map(|r| (r.id, r.first_token.0, r.completion.0)).collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(key(&via_shim), key(&via_session));
+    }
+
+    #[test]
+    #[should_panic(expected = "call .model(spec)")]
+    fn per_model_setter_without_model_panics() {
+        let _ = ServingSession::builder().max_batch(4);
+    }
+
+    /// `from_config` must forward every `ServingConfig` field (the
+    /// end-to-end shim comparison cannot catch a dropped field because
+    /// `run_serving` shares this code path).
+    #[test]
+    fn from_config_maps_every_field() {
+        use crate::pipeline::mode_switch::SwitchStrategy;
+        let mut cluster = ClusterConfig::testbed1();
+        cluster.n_nodes = 5;
+        let mut cfg =
+            ServingConfig::new(SystemKind::FaasNet, cluster, ModelSpec::llama2_7b());
+        cfg.n_blocks = 8;
+        cfg.max_batch = 3;
+        cfg.keep_alive_s = 7.5;
+        cfg.initial_gpu_sources = 2;
+        cfg.initial_host_sources = 3;
+        cfg.ssd_everywhere = false;
+        cfg.switch = SwitchStrategy::TransferKv;
+        let mut rng = Rng::new(1);
+        let trace = burst_trace(5, 0.0, "llama2-7b", 8, 8, &mut rng);
+        let s = ServingSession::from_config(&cfg, trace.clone());
+        assert_eq!(s.cluster.n_nodes, 5);
+        assert_eq!(s.models.len(), 1);
+        let ms = &s.models[0];
+        assert_eq!(ms.params.spec.name, "llama2-7b");
+        assert_eq!(ms.params.n_blocks, 8);
+        assert_eq!(ms.params.max_batch, 3);
+        assert_eq!(ms.params.keep_alive_s, 7.5);
+        assert_eq!(ms.params.initial_gpu_sources, 2);
+        assert_eq!(ms.params.initial_host_sources, 3);
+        assert!(!ms.params.ssd_everywhere);
+        assert_eq!(ms.params.switch, SwitchStrategy::TransferKv);
+        assert_eq!(ms.backend.name(), "faasnet");
+        assert_eq!(ms.trace, trace);
+    }
+}

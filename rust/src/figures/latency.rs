@@ -1,11 +1,12 @@
 //! Figs 12–13: TTFT latency under stress load (GDR scaling and local-cache
-//! scaling), with zoomed CDFs.
+//! scaling), with zoomed CDFs. Runs through the trait-based
+//! [`ServingSession`] API.
 
-use crate::coordinator::{run_serving, ServingConfig, SystemKind};
+use crate::config::ClusterConfig;
+use crate::coordinator::{ServingSession, SystemKind};
 use crate::model::ModelSpec;
 use crate::util::bench::Table;
 use crate::util::rng::Rng;
-use crate::util::stats::Samples;
 use crate::workload::burst_trace;
 
 /// TTFT distribution for one (system, model) run.
@@ -19,16 +20,31 @@ pub struct TtftDist {
     pub cdf: Vec<(f64, f64)>,
 }
 
-fn dist_of(system: SystemKind, mut cfg: ServingConfig, seed: u64) -> TtftDist {
+fn dist_of(
+    system: SystemKind,
+    cluster: ClusterConfig,
+    model: &ModelSpec,
+    gpu_sources: usize,
+    host_sources: usize,
+    seed: u64,
+) -> TtftDist {
     let mut rng = Rng::new(seed);
-    let trace = burst_trace(100, 0.0, &cfg.spec.name, 128, 64, &mut rng);
-    cfg.system = system;
-    let m = run_serving(&cfg, &trace);
+    let trace = burst_trace(100, 0.0, &model.name, 128, 64, &mut rng);
+    let m = ServingSession::builder()
+        .cluster(cluster)
+        .model(model.clone())
+        .system(system)
+        .max_batch(8)
+        .initial_gpu_sources(gpu_sources)
+        .initial_host_sources(host_sources)
+        .trace(trace)
+        .run()
+        .into_single();
     let mut s = m.ttft_samples();
     let cdf = s.cdf(20);
     TtftDist {
         system: system.name(),
-        model: cfg.spec.name.clone(),
+        model: model.name.clone(),
         p50: s.p50(),
         p90: s.p90(),
         p99: s.p99(),
@@ -37,11 +53,11 @@ fn dist_of(system: SystemKind, mut cfg: ServingConfig, seed: u64) -> TtftDist {
     }
 }
 
-fn cluster_for(model: &ModelSpec) -> crate::config::ClusterConfig {
+fn cluster_for(model: &ModelSpec) -> ClusterConfig {
     if model.gpus_per_replica > 1 {
-        crate::config::ClusterConfig::testbed2()
+        ClusterConfig::testbed2()
     } else {
-        let mut c = crate::config::ClusterConfig::testbed1();
+        let mut c = ClusterConfig::testbed1();
         c.n_nodes = 8;
         c
     }
@@ -56,12 +72,7 @@ pub fn fig12(model: &ModelSpec, seed: u64) -> Vec<TtftDist> {
         SystemKind::ServerlessLlm,
     ]
     .into_iter()
-    .map(|sys| {
-        let mut cfg = ServingConfig::new(sys, cluster_for(model), model.clone());
-        cfg.max_batch = 8;
-        cfg.initial_gpu_sources = 1;
-        dist_of(sys, cfg, seed)
-    })
+    .map(|sys| dist_of(sys, cluster_for(model), model, 1, 0, seed))
     .collect()
 }
 
@@ -69,13 +80,7 @@ pub fn fig12(model: &ModelSpec, seed: u64) -> Vec<TtftDist> {
 pub fn fig13(model: &ModelSpec, r: usize, k: usize, seed: u64) -> Vec<TtftDist> {
     [SystemKind::LambdaScale { k }, SystemKind::ServerlessLlm]
         .into_iter()
-        .map(|sys| {
-            let mut cfg = ServingConfig::new(sys, cluster_for(model), model.clone());
-            cfg.max_batch = 8;
-            cfg.initial_gpu_sources = r;
-            cfg.initial_host_sources = k;
-            dist_of(sys, cfg, seed)
-        })
+        .map(|sys| dist_of(sys, cluster_for(model), model, r, k, seed))
         .collect()
 }
 

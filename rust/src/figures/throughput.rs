@@ -1,7 +1,8 @@
-//! Figs 9, 10, 11, 16: throughput scaling under stress load.
+//! Figs 9, 10, 11, 16: throughput scaling under stress load. Runs through
+//! the trait-based [`ServingSession`] API.
 
 use crate::config::ClusterConfig;
-use crate::coordinator::{run_serving, ServingConfig, SystemKind};
+use crate::coordinator::{ServingSession, SystemKind};
 use crate::metrics::MetricsCollector;
 use crate::model::ModelSpec;
 use crate::util::bench::Table;
@@ -36,6 +37,25 @@ fn stress_trace(model: &ModelSpec, n: usize, seed: u64) -> Trace {
     burst_trace(n, 0.0, &model.name, 128, 64, &mut rng)
 }
 
+fn run_one(
+    sys: SystemKind,
+    model: &ModelSpec,
+    trace: &Trace,
+    gpu_sources: usize,
+    host_sources: usize,
+) -> MetricsCollector {
+    ServingSession::builder()
+        .cluster(cluster_for(model))
+        .model(model.clone())
+        .system(sys)
+        .max_batch(8)
+        .initial_gpu_sources(gpu_sources)
+        .initial_host_sources(host_sources)
+        .trace(trace.clone())
+        .run()
+        .into_single()
+}
+
 fn ramp_of(m: &MetricsCollector, system: &str, model: &str, horizon: f64) -> Ramp {
     let series = m.throughput_series(0.1, horizon);
     let peak = series.iter().map(|&(_, v)| v).fold(0.0f64, f64::max);
@@ -63,13 +83,11 @@ pub fn fig09(model: &ModelSpec, seed: u64) -> Vec<Ramp> {
     let trace = stress_trace(model, 100, seed);
     let mut out = Vec::new();
     for sys in systems {
-        let mut cfg = ServingConfig::new(sys, cluster_for(model), model.clone());
-        cfg.max_batch = 8;
-        cfg.initial_gpu_sources = match sys {
+        let gpu_sources = match sys {
             SystemKind::LambdaScale { k } => k.min(4),
             _ => 1,
         };
-        let m = run_serving(&cfg, &trace);
+        let m = run_one(sys, model, &trace, gpu_sources, 0);
         out.push(ramp_of(&m, &sys.name(), &model.name, 30.0));
     }
     out
@@ -81,11 +99,7 @@ pub fn fig10(model: &ModelSpec, r: usize, k: usize, seed: u64) -> Vec<Ramp> {
     let trace = stress_trace(model, 100, seed);
     let mut out = Vec::new();
     for sys in [SystemKind::LambdaScale { k }, SystemKind::ServerlessLlm] {
-        let mut cfg = ServingConfig::new(sys, cluster_for(model), model.clone());
-        cfg.max_batch = 8;
-        cfg.initial_gpu_sources = r;
-        cfg.initial_host_sources = k;
-        let m = run_serving(&cfg, &trace);
+        let m = run_one(sys, model, &trace, r, k);
         out.push(ramp_of(&m, &sys.name(), &model.name, 30.0));
     }
     out
@@ -97,11 +111,7 @@ pub fn fig11(model: &ModelSpec, seed: u64) -> Vec<Ramp> {
     let trace = stress_trace(model, 100, seed);
     let mut out = Vec::new();
     for sys in [SystemKind::LambdaScale { k: 1 }, SystemKind::ServerlessLlm] {
-        let mut cfg = ServingConfig::new(sys, cluster_for(model), model.clone());
-        cfg.max_batch = 8;
-        cfg.initial_gpu_sources = 0;
-        cfg.initial_host_sources = 1;
-        let m = run_serving(&cfg, &trace);
+        let m = run_one(sys, model, &trace, 0, 1);
         out.push(ramp_of(&m, &sys.name(), &model.name, 60.0));
     }
     out
@@ -113,11 +123,7 @@ pub fn fig16(seed: u64) -> Vec<Ramp> {
     let trace = stress_trace(&model, 100, seed);
     let mut out = Vec::new();
     for k in [1usize, 2, 4] {
-        let mut cfg =
-            ServingConfig::new(SystemKind::LambdaScale { k }, cluster_for(&model), model.clone());
-        cfg.max_batch = 8;
-        cfg.initial_gpu_sources = k;
-        let m = run_serving(&cfg, &trace);
+        let m = run_one(SystemKind::LambdaScale { k }, &model, &trace, k, 0);
         out.push(ramp_of(&m, &format!("k={k}"), &model.name, 30.0));
     }
     out

@@ -2,12 +2,11 @@
 //! cumulative GPU time (cost) and TTFT CDF per system.
 
 use crate::config::ClusterConfig;
-use crate::coordinator::{run_serving, ServingConfig, SystemKind};
+use crate::coordinator::{ServingSession, SystemKind};
 use crate::model::ModelSpec;
 use crate::sim::time::SimTime;
 use crate::util::bench::Table;
 use crate::util::rng::Rng;
-use crate::util::stats::Samples;
 use crate::workload::{BurstGptGen, Trace};
 
 pub struct TraceRun {
@@ -61,12 +60,17 @@ pub fn fig14_15(model: &ModelSpec, seed: u64) -> Fig1415 {
     for sys in systems {
         let mut cluster = ClusterConfig::testbed1();
         cluster.n_nodes = 12;
-        let mut cfg = ServingConfig::new(sys, cluster, model.clone());
-        cfg.max_batch = 8;
-        cfg.initial_gpu_sources = 1;
-        cfg.initial_host_sources = 2;
-        cfg.keep_alive_s = 15.0;
-        let m = run_serving(&cfg, &trace);
+        let m = ServingSession::builder()
+            .cluster(cluster)
+            .model(model.clone())
+            .system(sys)
+            .max_batch(8)
+            .initial_gpu_sources(1)
+            .initial_host_sources(2)
+            .keep_alive(15.0)
+            .trace(trace.clone())
+            .run()
+            .into_single();
         let mut s = m.ttft_samples();
         let cdf = if s.is_empty() {
             Vec::new()

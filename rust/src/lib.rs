@@ -22,8 +22,14 @@
 //! * [`pipeline`] — execution-pipeline generation (Algorithm 2), 2D
 //!   pipelined decode, mode switching with KV recomputation.
 //! * [`memory`] — GPU/host/SSD tier manager, LRU keep-alive, pre-allocation.
-//! * [`coordinator`] — cluster manager, router, batcher, autoscaler, and the
-//!   end-to-end serving models for λScale + all baselines.
+//! * [`coordinator`] — the trait-based serving stack: a policy-free
+//!   multi-model [`coordinator::engine::ServingEngine`] driven through the
+//!   builder-style [`coordinator::session::ServingSession`] API, with
+//!   pluggable [`coordinator::backend::ScalingBackend`] impls (λPipe,
+//!   FaaSNet, NCCL, ServerlessLLM, Ideal),
+//!   [`coordinator::policy::RoutingPolicy`] and
+//!   [`coordinator::policy::AdmissionPolicy`] objects, plus the cluster
+//!   manager, router, batcher and autoscaler (see docs/ARCHITECTURE.md).
 //! * [`runtime`] — PJRT client, artifact manifest, block-wise decode engine.
 //! * [`workload`] — BurstGPT-like traces, Poisson/burst arrivals.
 //! * [`metrics`] — TTFT/TPS/GPU-time collection, CDFs.

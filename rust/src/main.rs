@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! lambda-scale figures [--only figNN]      regenerate paper figures
+//! lambda-scale session [--requests N]      two-tenant ServingSession demo
 //! lambda-scale trace-gen --out FILE        emit a BurstGPT-like CSV trace
 //! lambda-scale serve [--artifacts DIR]     serve a demo generation on real PJRT
 //! lambda-scale info                        print testbed presets + model zoo
@@ -10,10 +11,14 @@
 //! (No clap offline — a small hand-rolled parser below.)
 
 use lambda_scale::config::ClusterConfig;
+use lambda_scale::coordinator::policy::{BatchedAdmission, LeastLoaded};
+use lambda_scale::coordinator::{ServingSession, SystemKind};
 use lambda_scale::figures;
 use lambda_scale::model::ModelSpec;
+use lambda_scale::sim::time::SimTime;
+use lambda_scale::util::bench::Table;
 use lambda_scale::util::rng::Rng;
-use lambda_scale::workload::BurstGptGen;
+use lambda_scale::workload::{burst_trace, BurstGptGen};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -74,6 +79,51 @@ fn main() {
             }
             eprintln!("\n(complete sweeps across all models: `cargo bench`)");
         }
+        "session" => {
+            // Two tenants sharing one 12-node Testbed1 cluster (§2.3
+            // multi-tenancy): a 13B model scaling via λPipe and a 7B model
+            // on ServerlessLLM-style local loads, with different routing
+            // and admission policies — all through one ServingSession.
+            let n: usize = flag("--requests").and_then(|s| s.parse().ok()).unwrap_or(80);
+            let mut cluster = ClusterConfig::testbed1();
+            cluster.n_nodes = 12;
+            let mut rng = Rng::new(11);
+            let trace13 = burst_trace(n, 0.0, "llama2-13b", 128, 64, &mut rng);
+            let trace7 = burst_trace(n, 5.0, "llama2-7b", 96, 48, &mut rng);
+            let report = ServingSession::builder()
+                .cluster(cluster)
+                .model(ModelSpec::llama2_13b())
+                .system(SystemKind::LambdaScale { k: 2 })
+                .max_batch(8)
+                .trace(trace13)
+                .model(ModelSpec::llama2_7b())
+                .system(SystemKind::ServerlessLlm)
+                .router(Box::new(LeastLoaded))
+                .admission(Box::new(BatchedAdmission::new(SimTime::from_secs(0.05))))
+                .max_batch(8)
+                .trace(trace7)
+                .run();
+            println!("two-tenant session: {n} requests per model, shared 12-node cluster\n");
+            let mut t = Table::new(&[
+                "model", "backend", "router", "served", "p50 TTFT (s)", "p90 TTFT (s)",
+                "GPU·s (60s)",
+            ]);
+            for m in &report.models {
+                let mut s = m.metrics.ttft_samples();
+                t.row(&[
+                    m.model.clone(),
+                    m.system.clone(),
+                    m.router.to_string(),
+                    format!("{}", m.completed),
+                    format!("{:.3}", s.p50()),
+                    format!("{:.3}", s.p90()),
+                    format!("{:.0}", m.metrics.gpu_time(SimTime::from_secs(60.0))),
+                ]);
+            }
+            t.print();
+            println!("\n(the 7B tenant pays SSD loads + batched admission; the 13B tenant");
+            println!(" multicasts — same engine, different trait objects)");
+        }
         "trace-gen" => {
             let out = flag("--out").unwrap_or_else(|| "/tmp/burstgpt.csv".into());
             let duration: f64 =
@@ -120,8 +170,9 @@ fn main() {
         _ => {
             eprintln!(
                 "λScale — fast model scaling for serverless LLM inference\n\n\
-                 usage: lambda-scale <figures|trace-gen|serve|info> [flags]\n\
+                 usage: lambda-scale <figures|session|trace-gen|serve|info> [flags]\n\
                  \x20 figures   [--only figNN]              regenerate paper figures\n\
+                 \x20 session   [--requests N]              two-tenant ServingSession demo\n\
                  \x20 trace-gen [--out F] [--duration S]    emit a BurstGPT-like CSV trace\n\
                  \x20 serve     [--artifacts D] [--prompt P] [--tokens N]\n\
                  \x20 info                                  testbed presets + model zoo\n\n\

@@ -11,6 +11,14 @@ pub struct SimTime(pub u64);
 impl SimTime {
     pub const ZERO: SimTime = SimTime(0);
 
+    /// The far future (used as an "effectively never" deadline).
+    pub const MAX: SimTime = SimTime(u64::MAX);
+
+    /// Addition clamped at [`SimTime::MAX`] (safe with `MAX` deadlines).
+    pub fn saturating_add(self, other: SimTime) -> SimTime {
+        SimTime(self.0.saturating_add(other.0))
+    }
+
     /// From seconds (clamped at zero; sub-nanosecond truncated).
     pub fn from_secs(s: f64) -> SimTime {
         assert!(s.is_finite(), "non-finite time");

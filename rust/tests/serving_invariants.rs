@@ -1,8 +1,11 @@
 //! Cross-system serving-simulation invariants (property style): request
-//! conservation, metric sanity, GPU accounting, determinism.
+//! conservation, metric sanity, GPU accounting, determinism. Runs through
+//! the trait-based `ServingSession` API (with one test pinned to the
+//! legacy `run_serving` shim to keep the compatibility path covered).
 
 use lambda_scale::config::ClusterConfig;
-use lambda_scale::coordinator::{run_serving, ServingConfig, SystemKind};
+use lambda_scale::coordinator::{run_serving, ServingConfig, ServingSession, SystemKind};
+use lambda_scale::metrics::MetricsCollector;
 use lambda_scale::model::ModelSpec;
 use lambda_scale::sim::time::SimTime;
 use lambda_scale::util::rng::Rng;
@@ -19,8 +22,18 @@ fn systems() -> Vec<SystemKind> {
     ]
 }
 
-fn check_run(sys: SystemKind, trace: &Trace, cfg: &ServingConfig) {
-    let m = run_serving(cfg, trace);
+fn run_session(sys: SystemKind, cluster: ClusterConfig, spec: ModelSpec, trace: &Trace) -> MetricsCollector {
+    ServingSession::builder()
+        .cluster(cluster)
+        .model(spec)
+        .system(sys)
+        .max_batch(8)
+        .trace(trace.clone())
+        .run()
+        .into_single()
+}
+
+fn check_metrics(sys: SystemKind, trace: &Trace, cluster: &ClusterConfig, m: &MetricsCollector) {
     // Conservation: every request completes exactly once.
     assert_eq!(m.requests.len(), trace.len(), "{}: lost/duplicated requests", sys.name());
     let mut ids: Vec<u64> = m.requests.iter().map(|r| r.id).collect();
@@ -48,8 +61,7 @@ fn check_run(sys: SystemKind, trace: &Trace, cfg: &ServingConfig) {
         .max()
         .unwrap_or(SimTime::ZERO)
         + SimTime::from_secs(60.0);
-    let bound = (cfg.cluster.n_nodes * cfg.cluster.node.gpus_per_node) as f64
-        * horizon.as_secs();
+    let bound = (cluster.n_nodes * cluster.node.gpus_per_node) as f64 * horizon.as_secs();
     let gt = m.gpu_time(horizon);
     assert!(gt > 0.0 && gt <= bound * 1.001, "{}: gpu time {gt} vs bound {bound}", sys.name());
 }
@@ -61,9 +73,8 @@ fn burst_invariants_all_systems() {
     for sys in systems() {
         let mut cluster = ClusterConfig::testbed1();
         cluster.n_nodes = 8;
-        let mut cfg = ServingConfig::new(sys, cluster, ModelSpec::llama2_13b());
-        cfg.max_batch = 8;
-        check_run(sys, &trace, &cfg);
+        let m = run_session(sys, cluster.clone(), ModelSpec::llama2_13b(), &trace);
+        check_metrics(sys, &trace, &cluster, &m);
     }
 }
 
@@ -74,9 +85,8 @@ fn poisson_invariants_all_systems() {
     for sys in systems() {
         let mut cluster = ClusterConfig::testbed1();
         cluster.n_nodes = 6;
-        let mut cfg = ServingConfig::new(sys, cluster, ModelSpec::llama2_7b());
-        cfg.max_batch = 8;
-        check_run(sys, &trace, &cfg);
+        let m = run_session(sys, cluster.clone(), ModelSpec::llama2_7b(), &trace);
+        check_metrics(sys, &trace, &cluster, &m);
     }
 }
 
@@ -86,16 +96,34 @@ fn serving_is_deterministic() {
     let trace = burst_trace(40, 0.0, "llama2-13b", 128, 64, &mut rng);
     let mut cluster = ClusterConfig::testbed1();
     cluster.n_nodes = 8;
-    let cfg = ServingConfig::new(SystemKind::LambdaScale { k: 2 }, cluster, ModelSpec::llama2_13b());
-    let a = run_serving(&cfg, &trace);
-    let b = run_serving(&cfg, &trace);
-    let key = |m: &lambda_scale::metrics::MetricsCollector| {
+    let key = |m: &MetricsCollector| {
         let mut v: Vec<(u64, u64, u64)> =
             m.requests.iter().map(|r| (r.id, r.first_token.0, r.completion.0)).collect();
         v.sort_unstable();
         v
     };
+    // Twice via the session API...
+    let a = run_session(
+        SystemKind::LambdaScale { k: 2 },
+        cluster.clone(),
+        ModelSpec::llama2_13b(),
+        &trace,
+    );
+    let b = run_session(
+        SystemKind::LambdaScale { k: 2 },
+        cluster.clone(),
+        ModelSpec::llama2_13b(),
+        &trace,
+    );
     assert_eq!(key(&a), key(&b));
+    // ...and through the legacy shim (shares the session code path, so this
+    // only guards against run_serving growing separate logic; field
+    // forwarding itself is unit-tested in coordinator::session).
+    let mut cfg =
+        ServingConfig::new(SystemKind::LambdaScale { k: 2 }, cluster, ModelSpec::llama2_13b());
+    cfg.max_batch = 8;
+    let c = run_serving(&cfg, &trace);
+    assert_eq!(key(&a), key(&c));
 }
 
 #[test]
@@ -105,9 +133,8 @@ fn multi_gpu_model_on_testbed2() {
     let trace = burst_trace(30, 0.0, "llama2-70b", 128, 32, &mut rng);
     for sys in [SystemKind::LambdaScale { k: 1 }, SystemKind::ServerlessLlm] {
         let cluster = ClusterConfig::testbed2();
-        let mut cfg = ServingConfig::new(sys, cluster, ModelSpec::llama2_70b());
-        cfg.max_batch = 8;
-        check_run(sys, &trace, &cfg);
+        let m = run_session(sys, cluster.clone(), ModelSpec::llama2_70b(), &trace);
+        check_metrics(sys, &trace, &cluster, &m);
     }
 }
 

@@ -1,0 +1,196 @@
+//! Integration tests for the trait-based `ServingSession` API: multi-model
+//! cluster sharing, pluggable routing policies, and `DynamicBatcher`-driven
+//! batched admission.
+
+use lambda_scale::config::ClusterConfig;
+use lambda_scale::coordinator::policy::{BatchedAdmission, ImmediateAdmission, LeastLoaded, RoundRobin};
+use lambda_scale::coordinator::{ServingSession, SystemKind};
+use lambda_scale::model::ModelSpec;
+use lambda_scale::sim::time::SimTime;
+use lambda_scale::util::rng::Rng;
+use lambda_scale::workload::{burst_trace, Trace};
+
+fn burst(n: usize, t0: f64, model: &str, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    burst_trace(n, t0, model, 128, 64, &mut rng)
+}
+
+/// Two models with different backends share one 12-node cluster: both
+/// traces must complete in full, reports come back in `.model(..)` order,
+/// and the combined GPU allocation never exceeds the cluster.
+#[test]
+fn two_model_session_shares_cluster() {
+    let cluster = ClusterConfig::testbed1(); // 12 × 1 GPU
+    let report = ServingSession::builder()
+        .cluster(cluster.clone())
+        .model(ModelSpec::llama2_13b())
+        .system(SystemKind::LambdaScale { k: 2 })
+        .max_batch(8)
+        .trace(burst(50, 0.0, "llama2-13b", 21))
+        .model(ModelSpec::llama2_7b())
+        .system(SystemKind::ServerlessLlm)
+        .max_batch(8)
+        .trace(burst(40, 2.0, "llama2-7b", 22))
+        .run();
+
+    assert_eq!(report.models.len(), 2);
+    let a = &report.models[0];
+    let b = &report.models[1];
+    assert_eq!(a.model, "llama2-13b");
+    assert!(a.system.starts_with("lambdascale"), "{}", a.system);
+    assert_eq!(b.model, "llama2-7b");
+    assert_eq!(b.system, "serverlessllm");
+
+    // Conservation per tenant.
+    assert_eq!(a.metrics.requests.len(), 50, "13B tenant lost requests");
+    assert_eq!(b.metrics.requests.len(), 40, "7B tenant lost requests");
+    for r in a.metrics.requests.iter().chain(b.metrics.requests.iter()) {
+        assert!(r.first_token >= r.arrival && r.completion >= r.first_token);
+    }
+    // Both tenants actually consumed GPU time on the shared cluster…
+    let horizon = SimTime::from_secs(120.0);
+    assert!(a.metrics.gpu_time(horizon) > 0.0);
+    assert!(b.metrics.gpu_time(horizon) > 0.0);
+    // …and node sharing is exclusive: the summed allocation stays within
+    // the cluster at every sample point.
+    let ga = a.metrics.gpu_series(1.0, 120.0);
+    let gb = b.metrics.gpu_series(1.0, 120.0);
+    let cap = cluster.n_nodes * cluster.node.gpus_per_node;
+    for (&(t, na), &(_, nb)) in ga.iter().zip(gb.iter()) {
+        assert!(na + nb <= cap, "over-allocated at t={t}: {na}+{nb} > {cap}");
+    }
+}
+
+/// A two-model session is deterministic run-to-run.
+#[test]
+fn two_model_session_is_deterministic() {
+    let run = || {
+        let report = ServingSession::builder()
+            .cluster(ClusterConfig::testbed1())
+            .model(ModelSpec::llama2_13b())
+            .system(SystemKind::LambdaScale { k: 1 })
+            .max_batch(8)
+            .trace(burst(30, 0.0, "llama2-13b", 5))
+            .model(ModelSpec::llama2_7b())
+            .system(SystemKind::FaasNet)
+            .max_batch(8)
+            .trace(burst(30, 1.0, "llama2-7b", 6))
+            .run();
+        report
+            .models
+            .iter()
+            .flat_map(|m| {
+                let mut v: Vec<(u64, u64, u64)> = m
+                    .metrics
+                    .requests
+                    .iter()
+                    .map(|r| (r.id, r.first_token.0, r.completion.0))
+                    .collect();
+                v.sort_unstable();
+                v
+            })
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(), run());
+}
+
+/// Routing-policy variants keep request conservation on a scaling cluster.
+#[test]
+fn routing_policy_variants_conserve_requests() {
+    for (name, policy) in [
+        ("least-loaded", Box::new(LeastLoaded) as Box<dyn lambda_scale::coordinator::RoutingPolicy>),
+        ("round-robin", Box::new(RoundRobin::default()) as _),
+    ] {
+        let mut cluster = ClusterConfig::testbed1();
+        cluster.n_nodes = 8;
+        let m = ServingSession::builder()
+            .cluster(cluster)
+            .model(ModelSpec::llama2_13b())
+            .system(SystemKind::LambdaScale { k: 2 })
+            .router(policy)
+            .max_batch(8)
+            .trace(burst(50, 0.0, "llama2-13b", 7))
+            .run()
+            .into_single();
+        assert_eq!(m.requests.len(), 50, "{name}: lost requests");
+    }
+}
+
+/// Regression for the `DynamicBatcher` wiring — `max_wait`: an under-full
+/// batch is held until the head-of-line deadline, so no request can see a
+/// first token before `max_wait` (immediate admission on the same workload
+/// serves well before it).
+#[test]
+fn batched_admission_respects_max_wait() {
+    let max_wait = 0.5;
+    let single_node = || {
+        let mut c = ClusterConfig::testbed1();
+        c.n_nodes = 1; // no head-room: admission alone decides timing
+        c
+    };
+    let batched = ServingSession::builder()
+        .cluster(single_node())
+        .model(ModelSpec::llama2_13b())
+        .system(SystemKind::Ideal)
+        .max_batch(4)
+        .admission(Box::new(BatchedAdmission::new(SimTime::from_secs(max_wait))))
+        .trace(burst(3, 0.0, "llama2-13b", 9)) // 3 < max_batch: never fills
+        .run()
+        .into_single();
+    assert_eq!(batched.requests.len(), 3);
+    for r in &batched.requests {
+        assert!(
+            r.ttft() >= max_wait,
+            "request {} admitted before max_wait: ttft {:.3}",
+            r.id,
+            r.ttft()
+        );
+    }
+
+    let immediate = ServingSession::builder()
+        .cluster(single_node())
+        .model(ModelSpec::llama2_13b())
+        .system(SystemKind::Ideal)
+        .max_batch(4)
+        .admission(Box::new(ImmediateAdmission))
+        .trace(burst(3, 0.0, "llama2-13b", 9))
+        .run()
+        .into_single();
+    assert!(
+        immediate.ttft_samples().max() < max_wait,
+        "immediate admission must serve before the batching deadline"
+    );
+}
+
+/// Regression for the `DynamicBatcher` wiring — `max_batch`: a full batch
+/// flushes immediately, and the batch bound holds (request max_batch+1
+/// waits for the deadline, not the batch).
+#[test]
+fn batched_admission_respects_max_batch() {
+    let max_wait = 10.0;
+    let mut cluster = ClusterConfig::testbed1();
+    cluster.n_nodes = 1;
+    let m = ServingSession::builder()
+        .cluster(cluster)
+        .model(ModelSpec::llama2_13b())
+        .system(SystemKind::Ideal)
+        .max_batch(4)
+        .admission(Box::new(BatchedAdmission::new(SimTime::from_secs(max_wait))))
+        .trace(burst(5, 0.0, "llama2-13b", 10)) // 4 fill the batch, 1 left over
+        .run()
+        .into_single();
+    assert_eq!(m.requests.len(), 5);
+    let mut ttfts: Vec<f64> = m.requests.iter().map(|r| r.ttft()).collect();
+    ttfts.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    // The full batch of 4 flushed at t=0 (well before the deadline)…
+    assert!(ttfts[3] < max_wait / 2.0, "full batch did not flush early: {ttfts:?}");
+    // …while the 5th (over the batch bound) had to wait out max_wait.
+    assert!(ttfts[4] >= max_wait, "batch bound exceeded: {ttfts:?}");
+}
+
+/// The builder panics loudly when per-model setters precede `.model(..)`.
+#[test]
+#[should_panic(expected = "call .model(spec)")]
+fn builder_requires_model_scope() {
+    let _ = ServingSession::builder().system(SystemKind::Ideal);
+}
