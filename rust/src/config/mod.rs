@@ -63,11 +63,26 @@ pub struct NodeConfig {
     pub host_mem_gb: f64,
     /// Local NVMe capacity (GB). Paper: 4 TB.
     pub ssd_gb: f64,
+    /// Managed GPU model-memory budget per node, in bytes, enforced by the
+    /// `MemoryManager` (model weights only; KV/activations are outside the
+    /// managed budget). `u64::MAX` = unbounded, the seed behavior — bound
+    /// it to make keep-alive eviction and multi-tenant contention real.
+    pub gpu_capacity_bytes: u64,
+    /// Managed host-memory model-cache budget per node, in bytes
+    /// (`u64::MAX` = unbounded).
+    pub host_capacity_bytes: u64,
 }
 
 impl Default for NodeConfig {
     fn default() -> Self {
-        NodeConfig { gpus_per_node: 1, gpu_mem_gb: 80.0, host_mem_gb: 1024.0, ssd_gb: 4096.0 }
+        NodeConfig {
+            gpus_per_node: 1,
+            gpu_mem_gb: 80.0,
+            host_mem_gb: 1024.0,
+            ssd_gb: 4096.0,
+            gpu_capacity_bytes: u64::MAX,
+            host_capacity_bytes: u64::MAX,
+        }
     }
 }
 
@@ -157,6 +172,14 @@ impl ClusterConfig {
             cfg.node.gpu_mem_gb = getf(sec, "gpu_mem_gb", cfg.node.gpu_mem_gb)?;
             cfg.node.host_mem_gb = getf(sec, "host_mem_gb", cfg.node.host_mem_gb)?;
             cfg.node.ssd_gb = getf(sec, "ssd_gb", cfg.node.ssd_gb)?;
+            // Managed residency budgets (GB in the file, bytes in memory;
+            // absent = unbounded).
+            if sec.contains_key("gpu_capacity_gb") {
+                cfg.node.gpu_capacity_bytes = (getf(sec, "gpu_capacity_gb", 0.0)? * 1e9) as u64;
+            }
+            if sec.contains_key("host_capacity_gb") {
+                cfg.node.host_capacity_bytes = (getf(sec, "host_capacity_gb", 0.0)? * 1e9) as u64;
+            }
         }
         if let Some(sec) = doc.get("network") {
             cfg.network.rdma_gbps = getf(sec, "rdma_gbps", cfg.network.rdma_gbps)?;
@@ -215,6 +238,16 @@ mod tests {
         assert_eq!(cfg.network.rdma_gbps, 25.0);
         // Untouched fields keep defaults.
         assert_eq!(cfg.network.ssd_gbps, 5.0);
+        assert_eq!(cfg.node.gpu_capacity_bytes, u64::MAX, "default is unbounded");
+        assert_eq!(cfg.node.host_capacity_bytes, u64::MAX);
+    }
+
+    #[test]
+    fn from_toml_reads_managed_capacities() {
+        let doc = parse_toml("[cluster]\ngpu_capacity_gb = 80\nhost_capacity_gb = 52.5\n").unwrap();
+        let cfg = ClusterConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.node.gpu_capacity_bytes, 80_000_000_000);
+        assert_eq!(cfg.node.host_capacity_bytes, 52_500_000_000);
     }
 
     #[test]

@@ -23,6 +23,7 @@
 
 use super::scaling::{NewInstance, ScalingOutcome, Source};
 use crate::config::ClusterConfig;
+use crate::memory::Locality;
 use crate::model::{ModelSpec, Partition};
 use crate::multicast::{self, Algorithm, NodeId};
 use crate::pipeline::execution::ExecPipeline;
@@ -56,19 +57,29 @@ pub enum NodeStatus {
     Serving,
 }
 
-/// Read-only cluster view handed to backends. `nodes` may be empty when the
-/// caller tracks no per-node state (e.g. the `plan_scaling` compatibility
-/// shim); `config` is always present.
+/// Read-only cluster view handed to backends. `nodes` and `residency` may
+/// be empty when the caller tracks no per-node state (e.g. the
+/// `plan_scaling` compatibility shim); `config` is always present.
 #[derive(Clone, Copy, Debug)]
 pub struct ClusterState<'a> {
     pub config: &'a ClusterConfig,
     pub nodes: &'a [NodeStatus],
+    /// Per-node residency of the model being scaled, from the serving
+    /// engine's `MemoryManager` (`Locality::Gpu` only for fully-loaded
+    /// copies). Backends use it to pick each recruit's cheapest local
+    /// tier instead of guessing from the caller-assembled source list.
+    pub residency: &'a [Locality],
 }
 
 impl<'a> ClusterState<'a> {
     /// A view carrying only the static cluster configuration.
     pub fn config_only(config: &'a ClusterConfig) -> Self {
-        ClusterState { config, nodes: &[] }
+        ClusterState { config, nodes: &[], residency: &[] }
+    }
+
+    /// The best local tier `node` holds the model in, when known.
+    pub fn locality_of(&self, node: NodeId) -> Option<Locality> {
+        self.residency.get(node).copied()
     }
 }
 
@@ -334,7 +345,9 @@ impl ScalingBackend for ServerlessLlm {
         let mut out = ScalingOutcome::default();
         // Host-memory sources are warm recruits: they self-load and serve
         // (they cannot multicast to anyone under this policy). Cold dests
-        // fall back to their own SSD.
+        // load from the best local tier the cluster's residency view
+        // reports for them (host cache beats SSD), defaulting to SSD when
+        // the caller tracks no residency.
         let warm: Vec<NodeId> =
             sources.iter().filter(|s| s.tier == Tier::HostMem).map(|s| s.node).collect();
         let load_dests: Vec<NodeId> = warm
@@ -343,7 +356,17 @@ impl ScalingBackend for ServerlessLlm {
             .chain(req.dests.iter().copied().filter(|d| !warm.contains(d)))
             .collect();
         let src_tier = |n: NodeId| {
-            sources.iter().find(|s| s.node == n).map(|s| s.tier).unwrap_or(Tier::Ssd)
+            sources
+                .iter()
+                .find(|s| s.node == n)
+                .map(|s| s.tier)
+                .or_else(|| {
+                    cluster.locality_of(n).map(|l| match l {
+                        Locality::Gpu | Locality::HostMem => Tier::HostMem,
+                        Locality::Ssd | Locality::Remote => Tier::Ssd,
+                    })
+                })
+                .unwrap_or(Tier::Ssd)
         };
         let sim = TransferSim::new(&cluster.config.network, req.opts);
         for s in sources.iter().filter(|s| s.tier == Tier::Gpu) {
@@ -486,6 +509,44 @@ mod tests {
         assert_eq!(a.instances.len(), 1);
         assert_eq!(b.instances.len(), 1);
         assert_eq!(mock.calls.borrow().len(), 2);
+    }
+
+    #[test]
+    fn serverlessllm_uses_residency_for_dest_tier() {
+        let (spec, part, cl) = setup();
+        let r = req(&spec, &part, vec![Source { node: 0, tier: Tier::Gpu }], vec![1, 2]);
+        // Node 1 caches the model in host memory, node 2 only on SSD.
+        let residency = [Locality::Gpu, Locality::HostMem, Locality::Ssd];
+        let cs = ClusterState { config: &cl, nodes: &[], residency: &residency };
+        let out = ServerlessLlm.plan(&r, &cs);
+        let t_of = |n: NodeId| {
+            out.instances
+                .iter()
+                .find_map(|(t, i)| match i {
+                    NewInstance::Local { node } if *node == n => Some(*t),
+                    _ => None,
+                })
+                .unwrap()
+        };
+        assert!(
+            t_of(1) < t_of(2),
+            "host-cached dest {} must load faster than SSD dest {}",
+            t_of(1),
+            t_of(2)
+        );
+        // Without a residency view both dests pay the SSD price.
+        let blind = ServerlessLlm.plan(&r, &ClusterState::config_only(&cl));
+        let tb = |n: NodeId| {
+            blind
+                .instances
+                .iter()
+                .find_map(|(t, i)| match i {
+                    NewInstance::Local { node } if *node == n => Some(*t),
+                    _ => None,
+                })
+                .unwrap()
+        };
+        assert_eq!(tb(1), tb(2));
     }
 
     #[test]

@@ -1,8 +1,12 @@
 //! Cluster manager: the multi-tenant control plane tying together the model
-//! registry, per-node tiered memory, and the motivation-study simulations
-//! (§2.3, Figs 2–3).
+//! registry, the cluster-wide tiered [`MemoryManager`], and the
+//! motivation-study simulations (§2.3, Figs 2–3).
+//!
+//! Residency lives in the same [`MemoryManager`] type the serving engine
+//! owns; the studies here are thin clients of its raw per-node operations
+//! (no demotion cascades — each study models exactly one tier transition).
 
-use crate::memory::{Locality, NodeMemory};
+use crate::memory::{Locality, MemoryManager};
 use crate::model::{ModelRegistry, ModelSpec};
 use crate::sim::time::SimTime;
 use crate::util::rng::Rng;
@@ -11,29 +15,31 @@ use std::collections::HashMap;
 /// Multi-tenant cluster state.
 pub struct ClusterManager {
     pub registry: ModelRegistry,
-    pub nodes: HashMap<usize, NodeMemory>,
+    pub mem: MemoryManager,
 }
 
 impl ClusterManager {
     pub fn new(n_nodes: usize, gpu_capacity: u64, host_capacity: u64) -> Self {
-        let nodes =
-            (0..n_nodes).map(|n| (n, NodeMemory::new(gpu_capacity, host_capacity))).collect();
-        ClusterManager { registry: ModelRegistry::new(), nodes }
+        ClusterManager {
+            registry: ModelRegistry::new(),
+            mem: MemoryManager::uniform(n_nodes, gpu_capacity, host_capacity),
+        }
     }
 
     /// Publish a model and seed it on every node's SSD (the multi-tenant
     /// platform norm the paper assumes).
     pub fn publish_everywhere(&mut self, spec: ModelSpec) {
         let name = spec.name.clone();
+        let bytes = spec.bytes;
         self.registry.publish(spec);
-        for m in self.nodes.values_mut() {
-            m.put_ssd(&name);
-        }
+        self.mem.register_model(&name, bytes);
+        self.mem.seed_ssd_everywhere(&name);
     }
 
-    /// Loading cases of §2.3 Fig 3.
+    /// Loading cases of §2.3 Fig 3. Unknown node ids classify as
+    /// [`Locality::Remote`] — a node we do not manage holds no local copy.
     pub fn classify_start(&self, node: usize, model: &str) -> Locality {
-        self.nodes[&node].locality(model)
+        self.mem.locality(node, model)
     }
 }
 
@@ -56,7 +62,8 @@ pub fn keep_alive_study(
     model_bytes: u64,
     rng: &mut Rng,
 ) -> KeepAliveStudy {
-    let mut node = NodeMemory::new(u64::MAX, model_bytes.saturating_mul(mem_slots as u64));
+    let mut mem =
+        MemoryManager::uniform(1, u64::MAX, model_bytes.saturating_mul(mem_slots as u64));
     let mut residencies = Vec::new();
     let mut last_use: HashMap<String, f64> = HashMap::new();
 
@@ -77,10 +84,10 @@ pub fn keep_alive_study(
     for (t, m) in arrivals {
         let name = format!("model{m}");
         let now = SimTime::from_secs(t);
-        match node.locality(&name) {
-            Locality::HostMem => node.touch(&name, now),
+        match mem.locality(0, &name) {
+            Locality::HostMem => mem.touch(0, &name, now),
             _ => {
-                let evicted = node.load_host(&name, model_bytes, now);
+                let evicted = mem.load_host(0, &name, model_bytes, now);
                 for e in evicted {
                     if let Some(t0) = last_use.remove(&e) {
                         residencies.push(t - t0);
@@ -102,27 +109,28 @@ pub fn load_type_study(
     gpu_keep_alive_s: f64,
     model_bytes: u64,
 ) -> (f64, f64, f64) {
-    let mut node = NodeMemory::new(
+    let mut mem = MemoryManager::uniform(
+        1,
         model_bytes.saturating_mul(2), // GPU holds ~2 models
         model_bytes.saturating_mul(mem_slots as u64),
     );
-    let (mut hot, mut mem, mut ssd) = (0u64, 0u64, 0u64);
+    let (mut hot, mut memory, mut ssd) = (0u64, 0u64, 0u64);
     for &(t, m) in arrivals {
         let name = format!("model{m}");
         let now = SimTime::from_secs(t);
-        node.expire_gpu(now, SimTime::from_secs(gpu_keep_alive_s));
-        node.expire_host(now, SimTime::from_secs(keep_alive_s));
-        match node.locality(&name) {
+        mem.expire_gpu(0, now, SimTime::from_secs(gpu_keep_alive_s));
+        mem.expire_host(0, now, SimTime::from_secs(keep_alive_s));
+        match mem.locality(0, &name) {
             Locality::Gpu => hot += 1,
-            Locality::HostMem => mem += 1,
+            Locality::HostMem => memory += 1,
             _ => ssd += 1,
         }
-        node.load_host(&name, model_bytes, now);
-        node.load_gpu(&name, model_bytes, now);
-        node.touch(&name, now);
+        mem.load_host(0, &name, model_bytes, now);
+        mem.load_gpu(0, &name, model_bytes, now);
+        mem.touch(0, &name, now);
     }
-    let total = (hot + mem + ssd).max(1) as f64;
-    (hot as f64 / total, mem as f64 / total, ssd as f64 / total)
+    let total = (hot + memory + ssd).max(1) as f64;
+    (hot as f64 / total, memory as f64 / total, ssd as f64 / total)
 }
 
 #[cfg(test)]
@@ -137,6 +145,17 @@ mod tests {
             assert_eq!(cm.classify_start(n, "llama2-7b"), Locality::Ssd);
         }
         assert_eq!(cm.registry.len(), 1);
+    }
+
+    #[test]
+    fn classify_start_unknown_node_is_remote() {
+        // Regression: this used to panic on a HashMap index miss.
+        let mut cm = ClusterManager::new(2, 80_000_000_000, 1_000_000_000_000);
+        cm.publish_everywhere(ModelSpec::llama2_7b());
+        assert_eq!(cm.classify_start(7, "llama2-7b"), Locality::Remote);
+        assert_eq!(cm.classify_start(usize::MAX, "llama2-7b"), Locality::Remote);
+        // Unknown models on known nodes are also just Remote.
+        assert_eq!(cm.classify_start(0, "no-such-model"), Locality::Remote);
     }
 
     #[test]

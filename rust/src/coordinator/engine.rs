@@ -20,12 +20,21 @@
 //! loading costs money in Fig 14). Models share the cluster's nodes
 //! (§2.3 multi-tenancy): scale-outs recruit from the same free pool, and
 //! per-model host-memory warmth survives GPU reclaim.
+//!
+//! Residency is owned by one cluster-wide [`MemoryManager`] shared across
+//! all tenants (§5): every recruit reserves byte-accurate GPU capacity
+//! (pinned while serving), reclaim demotes GPU→host through the manager —
+//! which, under bounded host capacity, may evict *another tenant's* warm
+//! copy and turn that tenant's next scale-up cold — and scaling plans read
+//! warmth and tier-tagged sources from manager queries instead of any
+//! per-model bookkeeping.
 
 use super::backend::{ClusterState, NodeStatus, ScalingRequest};
 use super::batcher::DynamicBatcher;
 use super::scaling::{NewInstance, ScalingOutcome, Source};
 use super::session::{ModelReport, ModelSession, SessionReport};
 use crate::config::ClusterConfig;
+use crate::memory::{Locality, MemoryManager};
 use crate::metrics::RequestMetrics;
 use crate::multicast::NodeId;
 use crate::pipeline::execution::ExecPipeline;
@@ -75,7 +84,7 @@ enum Ev {
 }
 
 /// Shared-node occupancy: at most one model owns a node's GPU at a time;
-/// host-memory warmth is tracked per model in [`ModelRuntime::warm`].
+/// host-memory warmth lives in the engine's shared [`MemoryManager`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum NodeUse {
     Free,
@@ -87,13 +96,15 @@ enum NodeUse {
 struct ModelRuntime {
     ms: ModelSession,
     backend_name: String,
+    /// This tenant's residency key in the shared [`MemoryManager`]
+    /// (per-tenant, so two tenants serving the same spec keep distinct
+    /// copies, exactly like the pre-manager per-model warm sets).
+    mem_key: String,
     instances: HashMap<u64, Inst>,
     next_inst_id: u64,
     /// Global queue when no instance exists yet.
     unrouted: std::collections::VecDeque<usize>,
     req_inst: HashMap<usize, u64>,
-    /// Nodes holding this model in host memory (survives GPU reclaim).
-    warm: HashSet<NodeId>,
     autoscaler: super::autoscaler::Autoscaler,
     /// A ScaleCheck event is already queued.
     scale_check_pending: bool,
@@ -112,7 +123,7 @@ struct ModelRuntime {
 }
 
 impl ModelRuntime {
-    fn new(ms: ModelSession, cluster: &ClusterConfig) -> Self {
+    fn new(ms: ModelSession, cluster: &ClusterConfig, tenant: usize) -> Self {
         let p = &ms.params;
         let partition = p.spec.partition(p.n_blocks);
         // Work-units: prefill cost per prompt token relative to one decode
@@ -129,14 +140,15 @@ impl ModelRuntime {
             SimTime::from_secs(p.keep_alive_s),
         );
         let backend_name = ms.backend.name();
+        let mem_key = format!("{}#{tenant}", ms.params.spec.name);
         ModelRuntime {
             ms,
             backend_name,
+            mem_key,
             instances: HashMap::new(),
             next_inst_id: 0,
             unrouted: std::collections::VecDeque::new(),
             req_inst: HashMap::new(),
-            warm: HashSet::new(),
             autoscaler,
             scale_check_pending: false,
             next_op_at: SimTime::ZERO,
@@ -161,20 +173,34 @@ pub struct ServingEngine {
     q: EventQueue<Ev>,
     node_state: Vec<NodeUse>,
     models: Vec<ModelRuntime>,
+    /// Cluster-wide tiered residency, shared across all tenants (§5).
+    mem: MemoryManager,
 }
 
 impl ServingEngine {
     pub fn new(cluster: ClusterConfig) -> Self {
         let node_state = vec![NodeUse::Free; cluster.n_nodes];
-        ServingEngine { cluster, q: EventQueue::new(), node_state, models: Vec::new() }
+        let mem = MemoryManager::from_cluster(&cluster);
+        ServingEngine { cluster, q: EventQueue::new(), node_state, models: Vec::new(), mem }
+    }
+
+    /// The shared residency manager (read-only; inspect before `run`).
+    pub fn memory(&self) -> &MemoryManager {
+        &self.mem
     }
 
     /// Register a model: claims its initial GPU-resident and host-memory
-    /// source nodes from the cluster's free pool (first-come order).
-    /// Returns the model's index.
+    /// source nodes from the cluster's free pool (first-come order),
+    /// reserving their bytes in the shared memory manager — nodes whose
+    /// managed capacity cannot take the model are skipped. Returns the
+    /// model's index.
     pub fn add_model(&mut self, ms: ModelSession) -> usize {
         let m = self.models.len();
-        let mut rt = ModelRuntime::new(ms, &self.cluster);
+        let mut rt = ModelRuntime::new(ms, &self.cluster, m);
+        self.mem.register_model(&rt.mem_key, rt.ms.params.spec.bytes);
+        if rt.ms.params.ssd_everywhere {
+            self.mem.seed_ssd_everywhere(&rt.mem_key);
+        }
         let mut want_gpu = rt.ms.params.initial_gpu_sources;
         let mut want_host = rt.ms.params.initial_host_sources;
         for n in 0..self.node_state.len() {
@@ -182,15 +208,20 @@ impl ServingEngine {
                 continue;
             }
             if want_gpu > 0 {
-                self.node_state[n] = NodeUse::Serving(m);
-                rt.initial_gpu_nodes.push(n);
-                want_gpu -= 1;
-            } else if want_host > 0 {
-                rt.warm.insert(n);
-                want_host -= 1;
-            } else {
-                break;
+                if self.mem.reserve_gpu(n, &rt.mem_key, SimTime::ZERO).is_ok() {
+                    self.node_state[n] = NodeUse::Serving(m);
+                    rt.initial_gpu_nodes.push(n);
+                    want_gpu -= 1;
+                }
+                continue;
             }
+            if want_host > 0 {
+                if self.mem.admit_host(n, &rt.mem_key, SimTime::ZERO).is_ok() {
+                    want_host -= 1;
+                }
+                continue;
+            }
+            break;
         }
         self.models.push(rt);
         m
@@ -255,17 +286,27 @@ impl ServingEngine {
         dissolve_at: Option<SimTime>,
         now: SimTime,
     ) -> u64 {
+        // A full local replica is a serveable multicast source; pipeline
+        // stages hold only part of the model and never become sources.
+        let full_replica = pipe.n_stages() == 1;
+        let mem_key = self.models[m].mem_key.clone();
+        for &n in &pipe.nodes() {
+            if n < self.node_state.len() {
+                self.node_state[n] = NodeUse::Serving(m);
+                // Usually a refresh of the reservation made at recruit
+                // time; scripted (mock) plans may land on unreserved nodes,
+                // where a full node is simply not charged.
+                let _ = self.mem.reserve_gpu(n, &mem_key, now);
+                if full_replica {
+                    self.mem.mark_gpu_ready(n, &mem_key);
+                }
+            }
+        }
         let md = &mut self.models[m];
         let id = md.next_inst_id;
         md.next_inst_id += 1;
         let weight =
             pipe.service_rate(md.ms.params.max_batch, &md.ms.params.spec, &self.cluster.compute);
-        for &n in &pipe.nodes() {
-            if n < self.node_state.len() {
-                self.node_state[n] = NodeUse::Serving(m);
-                md.warm.remove(&n);
-            }
-        }
         let queue = md.ms.admission.make_queue(md.ms.params.max_batch);
         md.instances.insert(
             id,
@@ -353,13 +394,18 @@ impl ServingEngine {
             return;
         }
         let md = &mut self.models[m];
+        let mem_key = md.mem_key.clone();
         let inst = md.instances.remove(&id).unwrap();
         md.ms.router.remove_instance(id);
         for n in inst.pipe.nodes() {
             if n < self.node_state.len() {
-                // Model stays in host memory after GPU reclaim (warm).
                 self.node_state[n] = NodeUse::Free;
-                md.warm.insert(n);
+                // GPU→host demotion through the shared manager: the model
+                // stays warm if the node's host tier has room — possibly by
+                // evicting another tenant's warm copy (whose next scale-up
+                // then goes cold); with too little host capacity this copy
+                // itself falls through to SSD.
+                let _demoted = self.mem.release_gpu(n, &mem_key, now);
             }
         }
         self.account_gpus(m, now);
@@ -541,16 +587,16 @@ impl ServingEngine {
     // ---- scaling -------------------------------------------------------------
 
     fn maybe_scale(&mut self, now: SimTime, m: usize) {
-        let md = &mut self.models[m];
-        if now < md.next_op_at {
+        if now < self.models[m].next_op_at {
             // Cooldown: re-check when the window opens.
-            if !md.scale_check_pending {
-                md.scale_check_pending = true;
-                let at = md.next_op_at;
+            if !self.models[m].scale_check_pending {
+                self.models[m].scale_check_pending = true;
+                let at = self.models[m].next_op_at;
                 self.q.push(at, Ev::ScaleCheck(m));
             }
             return;
         }
+        let md = &mut self.models[m];
         let queued =
             md.unrouted.len() + md.instances.values().map(|i| i.queue.len()).sum::<usize>();
         let loading =
@@ -575,44 +621,73 @@ impl ServingEngine {
         if want == 0 {
             return;
         }
+        let mem_key = md.mem_key.clone();
         md.next_op_at = now + SimTime::from_millis(100.0);
 
-        // Locality-driven recruitment (§5): warm (host-memory) nodes are the
-        // most valuable recruits — they self-load AND act as multicast
-        // sources — so take them first; cold nodes become multicast
-        // destinations.
-        let warm_nodes: Vec<NodeId> =
-            free.iter().copied().filter(|n| md.warm.contains(n)).collect();
-        let cold: Vec<NodeId> =
-            free.iter().copied().filter(|n| !md.warm.contains(n)).collect();
-        let take_warm = want.min(warm_nodes.len());
-        let take_cold = want - take_warm;
-        let recruited_warm = &warm_nodes[..take_warm];
-        let dests_net: Vec<NodeId> = cold[..take_cold.min(cold.len())].to_vec();
-
-        // Sources: live GPU replicas first, then every recruited warm node.
-        let mut sources_for_plan: Vec<Source> = md
-            .instances
-            .values()
-            .filter(|i| i.dissolve_at.is_none() && i.pipe.n_stages() == 1)
-            .map(|i| Source { node: i.pipe.nodes()[0], tier: Tier::Gpu })
+        // Locality-driven recruitment (§5), answered by the shared memory
+        // manager: host-warm nodes are the most valuable recruits — they
+        // self-load AND act as multicast sources — so take them first;
+        // cold nodes become multicast destinations.
+        let warm_cand: Vec<NodeId> = free
+            .iter()
+            .copied()
+            .filter(|&n| self.mem.locality(n, &mem_key) == Locality::HostMem)
             .collect();
-        sources_for_plan.sort_by_key(|s| s.node);
-        for &n in recruited_warm {
+        let cold_cand: Vec<NodeId> = free
+            .iter()
+            .copied()
+            .filter(|&n| self.mem.locality(n, &mem_key) != Locality::HostMem)
+            .collect();
+        let take_warm = want.min(warm_cand.len());
+        let take_cold = (want - take_warm).min(cold_cand.len());
+        // Capacity-aware recruitment: every recruit reserves (and pins) the
+        // model's bytes in its GPU tier up front; nodes whose managed GPU
+        // capacity cannot take the model are skipped.
+        let mut recruited_warm: Vec<NodeId> = Vec::new();
+        for &n in &warm_cand[..take_warm] {
+            if self.mem.reserve_gpu(n, &mem_key, now).is_ok() {
+                recruited_warm.push(n);
+            }
+        }
+        let mut dests_net: Vec<NodeId> = Vec::new();
+        for &n in &cold_cand[..take_cold] {
+            if self.mem.reserve_gpu(n, &mem_key, now).is_ok() {
+                dests_net.push(n);
+            }
+        }
+
+        // Sources from the manager: fully-loaded GPU replicas first, then
+        // every recruited warm node.
+        let mut sources_for_plan: Vec<Source> = self
+            .mem
+            .gpu_sources(&mem_key)
+            .into_iter()
+            .map(|n| Source { node: n, tier: Tier::Gpu })
+            .collect();
+        for &n in &recruited_warm {
             sources_for_plan.push(Source { node: n, tier: Tier::HostMem });
         }
         if sources_for_plan.is_empty() {
-            if md.ms.params.ssd_everywhere && !dests_net.is_empty() {
-                sources_for_plan.push(Source { node: dests_net[0], tier: Tier::Ssd });
-            } else {
-                return; // nothing to scale from
+            // Cold-start fallback: a dest with an SSD copy self-loads.
+            // Checked against the SSD set, not `locality()` — the dest's
+            // GPU reservation above already makes its raw locality `Gpu`.
+            if let Some(&d) = dests_net.first() {
+                if self.mem.node(d).in_ssd(&mem_key) {
+                    sources_for_plan.push(Source { node: d, tier: Tier::Ssd });
+                }
             }
         }
-        if dests_net.is_empty() && recruited_warm.is_empty() {
+        if sources_for_plan.is_empty() || (dests_net.is_empty() && recruited_warm.is_empty()) {
+            // Nothing to scale from (or to): hand the reservations back —
+            // the nodes never held the model, so no demotion happens.
+            for &n in recruited_warm.iter().chain(dests_net.iter()) {
+                self.mem.cancel_gpu_reservation(n, &mem_key);
+            }
             return;
         }
         // Hand the tier-tagged recruitment to the backend; it decides how
-        // (and whether) warm recruits multicast, self-load, or both.
+        // (and whether) warm recruits multicast, self-load, or both. The
+        // residency view lets it pick each node's cheapest local tier.
         let statuses: Vec<NodeStatus> = self
             .node_state
             .iter()
@@ -622,6 +697,8 @@ impl ServingEngine {
                 NodeUse::Serving(_) => NodeStatus::Serving,
             })
             .collect();
+        let residency = self.mem.residency(&mem_key);
+        let md = &mut self.models[m];
         let req = ScalingRequest {
             sources: sources_for_plan,
             dests: dests_net.clone(),
@@ -630,12 +707,30 @@ impl ServingEngine {
             opts: md.ms.params.opts,
             switch: md.ms.params.switch,
         };
-        let outcome: ScalingOutcome =
-            md.ms.backend.plan(&req, &ClusterState { config: &self.cluster, nodes: &statuses });
+        let outcome: ScalingOutcome = md.ms.backend.plan(
+            &req,
+            &ClusterState { config: &self.cluster, nodes: &statuses, residency: &residency },
+        );
         drop(req);
+        // Recruits the plan actually uses start loading; a recruit the
+        // outcome never references (possible with scripted or partial
+        // plans — every shipped backend covers all recruits) hands its
+        // reservation back instead of leaking a pinned phantom copy.
+        let mut referenced: HashSet<NodeId> = HashSet::new();
+        for (_, ni) in &outcome.instances {
+            match ni {
+                NewInstance::Pipeline { pipeline, .. } => referenced.extend(pipeline.nodes()),
+                NewInstance::Local { node } => {
+                    referenced.insert(*node);
+                }
+            }
+        }
         for &d in dests_net.iter().chain(recruited_warm.iter()) {
-            self.node_state[d] = NodeUse::Loading(m);
-            md.warm.remove(&d);
+            if referenced.contains(&d) {
+                self.node_state[d] = NodeUse::Loading(m);
+            } else {
+                self.mem.cancel_gpu_reservation(d, &mem_key);
+            }
         }
         self.account_gpus(m, now);
         for (t, ni) in outcome.instances {
@@ -728,6 +823,16 @@ impl ServingEngine {
             Some(md.ms.params.switch),
         )
         .stall_s;
+        let mem_key = md.mem_key.clone();
+        // A dissolving pipeline's nodes are mid-mode-switch: nothing
+        // serveable there until their local replicas spawn, so they must
+        // not linger as multicast sources. (No-op for real multi-stage
+        // pipelines, which are never sources; guards scripted plans.)
+        for n in inst.pipe.nodes() {
+            if n < self.node_state.len() {
+                self.mem.clear_gpu_ready(n, &mem_key);
+            }
+        }
         self.q
             .push(now + SimTime::from_secs(stall), Ev::DissolveDone(m, to_reroute));
         self.account_gpus(m, now);
@@ -831,6 +936,67 @@ mod tests {
         let series = r.metrics.gpu_series(5.0, 60.0);
         let last = series.last().unwrap().1;
         assert!(last <= 2, "no scale-in after mock lifecycle: {series:?}");
+    }
+
+    /// `add_model` routes all residency through the shared MemoryManager:
+    /// initial GPU sources are reserved (pinned), SSD is seeded everywhere,
+    /// and tenants get distinct residency keys.
+    #[test]
+    fn add_model_registers_residency_with_manager() {
+        let mut eng = ServingEngine::new(cluster(4));
+        let a = eng.add_model(crate::coordinator::session::ModelSession::for_test(
+            ModelSpec::llama2_13b(),
+            Box::new(MockBackend::new(vec![])),
+            burst(1),
+        ));
+        let b = eng.add_model(crate::coordinator::session::ModelSession::for_test(
+            ModelSpec::llama2_7b(),
+            Box::new(MockBackend::new(vec![])),
+            burst(1),
+        ));
+        assert_eq!((a, b), (0, 1));
+        let mem = eng.memory();
+        // First-come claims: tenant 0 on node 0, tenant 1 on node 1.
+        assert_eq!(mem.locality(0, "llama2-13b#0"), Locality::Gpu);
+        assert_eq!(mem.locality(1, "llama2-7b#1"), Locality::Gpu);
+        // Pinned: a serving replica must not be evictable.
+        assert!(mem.node(0).gpu_pinned("llama2-13b#0"));
+        // ssd_everywhere seeds the lower tier on every node.
+        assert_eq!(mem.locality(3, "llama2-13b#0"), Locality::Ssd);
+        mem.assert_invariants();
+    }
+
+    /// Cold start with no GPU and no warm sources: the SSD fallback must
+    /// still let the backend plan. Regression: the fallback has to consult
+    /// the SSD set directly, because the recruits' own GPU reservations
+    /// shadow their raw locality by the time sources are assembled.
+    #[test]
+    fn cold_start_scales_from_ssd_fallback() {
+        let report = ServingSession::builder()
+            .cluster(cluster(4))
+            .model(ModelSpec::llama2_13b())
+            .system(crate::coordinator::SystemKind::ServerlessLlm)
+            .initial_gpu_sources(0)
+            .max_batch(8)
+            .trace(burst(10))
+            .run();
+        assert_eq!(report.models[0].completed, 10, "cold SSD start must serve all requests");
+    }
+
+    /// With a GPU budget too small for the model, no node can ever be
+    /// recruited: the engine must decline to serve rather than
+    /// oversubscribe (and must not wedge or panic).
+    #[test]
+    fn gpu_capacity_too_small_declines_to_serve() {
+        let mut c = cluster(4);
+        c.node.gpu_capacity_bytes = 1_000_000_000; // 1 GB < 26 GB model
+        let report = ServingSession::builder()
+            .cluster(c)
+            .model(ModelSpec::llama2_13b())
+            .system(crate::coordinator::SystemKind::ServerlessLlm)
+            .trace(burst(5))
+            .run();
+        assert_eq!(report.models[0].completed, 0, "nothing can fit, nothing may serve");
     }
 
     /// An empty scripted outcome must not wedge the engine: the initial

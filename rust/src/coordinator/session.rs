@@ -29,9 +29,12 @@
 //!
 //! Per-model builder methods (`system`, `backend`, `router`, `admission`,
 //! `trace`, `max_batch`, …) apply to the most recently added `.model(..)`;
-//! calling them before any `.model(..)` panics. The legacy single-model
-//! entrypoint [`super::serving::run_serving`] is a thin shim over
-//! [`ServingSession::from_config`].
+//! calling them before any `.model(..)` panics. Cluster-scoped methods
+//! (`cluster`, `gpu_capacity_bytes`, `host_capacity_bytes`) may be called
+//! any time; the capacity knobs bound the session's shared `MemoryManager`
+//! (all tenants contend for the same per-node GPU/host byte budgets). The
+//! legacy single-model entrypoint [`super::serving::run_serving`] is a
+//! thin shim over [`ServingSession::from_config`].
 
 use super::backend::ScalingBackend;
 use super::engine::ServingEngine;
@@ -132,6 +135,25 @@ impl ServingSessionBuilder {
     /// Set the shared cluster (default: Testbed1).
     pub fn cluster(mut self, cluster: ClusterConfig) -> Self {
         self.cluster = cluster;
+        self
+    }
+
+    /// Per-node managed GPU model-memory budget in bytes, enforced by the
+    /// session's shared `MemoryManager` (default `u64::MAX` = unbounded,
+    /// the seed behavior). Cluster-scoped: call after `.cluster(..)` —
+    /// replacing the cluster resets it.
+    pub fn gpu_capacity_bytes(mut self, bytes: u64) -> Self {
+        self.cluster.node.gpu_capacity_bytes = bytes;
+        self
+    }
+
+    /// Per-node managed host-memory model-cache budget in bytes (default
+    /// `u64::MAX` = unbounded). Bounding it makes keep-alive warmth a
+    /// contended resource: one tenant's reclaim-time GPU→host demotion can
+    /// evict another tenant's warm copy. Cluster-scoped; call after
+    /// `.cluster(..)`.
+    pub fn host_capacity_bytes(mut self, bytes: u64) -> Self {
+        self.cluster.node.host_capacity_bytes = bytes;
         self
     }
 

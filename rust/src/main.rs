@@ -2,7 +2,9 @@
 //!
 //! ```text
 //! lambda-scale figures [--only figNN]      regenerate paper figures
-//! lambda-scale session [--requests N]      two-tenant ServingSession demo
+//! lambda-scale session [--requests N] [--gpu-cap GB] [--host-cap GB]
+//!                                          two-tenant ServingSession demo
+//!                                          (caps bound the shared MemoryManager)
 //! lambda-scale trace-gen --out FILE        emit a BurstGPT-like CSV trace
 //! lambda-scale serve [--artifacts DIR]     serve a demo generation on real PJRT
 //! lambda-scale info                        print testbed presets + model zoo
@@ -84,26 +86,53 @@ fn main() {
             // multi-tenancy): a 13B model scaling via λPipe and a 7B model
             // on ServerlessLLM-style local loads, with different routing
             // and admission policies — all through one ServingSession.
+            // `--gpu-cap` / `--host-cap` (GB per node) bound the shared
+            // MemoryManager: with a small host cap, one tenant's reclaim
+            // evicts the other's warm copies and its re-scale goes cold.
             let n: usize = flag("--requests").and_then(|s| s.parse().ok()).unwrap_or(80);
+            let gpu_cap_gb: Option<f64> = flag("--gpu-cap").and_then(|s| s.parse().ok());
+            let host_cap_gb: Option<f64> = flag("--host-cap").and_then(|s| s.parse().ok());
             let mut cluster = ClusterConfig::testbed1();
             cluster.n_nodes = 12;
+            if let Some(g) = gpu_cap_gb {
+                cluster.node.gpu_capacity_bytes = (g * 1e9) as u64;
+            }
+            if let Some(h) = host_cap_gb {
+                cluster.node.host_capacity_bytes = (h * 1e9) as u64;
+            }
             let mut rng = Rng::new(11);
-            let trace13 = burst_trace(n, 0.0, "llama2-13b", 128, 64, &mut rng);
+            // Two bursts per tenant, interleaved so the second 13B burst
+            // arrives after the 7B tenant's reclaim demoted into host
+            // memory (the contention window under a bounded --host-cap).
+            let mut trace13 = burst_trace(n, 0.0, "llama2-13b", 128, 64, &mut rng);
+            let rejoin = burst_trace(n / 2, 45.0, "llama2-13b", 128, 64, &mut rng);
+            trace13.merge(&rejoin, SimTime::ZERO);
             let trace7 = burst_trace(n, 5.0, "llama2-7b", 96, 48, &mut rng);
             let report = ServingSession::builder()
                 .cluster(cluster)
                 .model(ModelSpec::llama2_13b())
                 .system(SystemKind::LambdaScale { k: 2 })
                 .max_batch(8)
+                .keep_alive(10.0)
                 .trace(trace13)
                 .model(ModelSpec::llama2_7b())
                 .system(SystemKind::ServerlessLlm)
                 .router(Box::new(LeastLoaded))
                 .admission(Box::new(BatchedAdmission::new(SimTime::from_secs(0.05))))
                 .max_batch(8)
+                .keep_alive(10.0)
                 .trace(trace7)
                 .run();
-            println!("two-tenant session: {n} requests per model, shared 12-node cluster\n");
+            println!(
+                "two-tenant session: {n}(+{}) requests per model, shared 12-node cluster",
+                n / 2
+            );
+            let cap_str = |c: Option<f64>| c.map_or("unbounded".to_string(), |g| format!("{g} GB"));
+            println!(
+                "managed per-node capacity: GPU {}, host {}\n",
+                cap_str(gpu_cap_gb),
+                cap_str(host_cap_gb)
+            );
             let mut t = Table::new(&[
                 "model", "backend", "router", "served", "p50 TTFT (s)", "p90 TTFT (s)",
                 "GPU·s (60s)",
@@ -123,6 +152,14 @@ fn main() {
             t.print();
             println!("\n(the 7B tenant pays SSD loads + batched admission; the 13B tenant");
             println!(" multicasts — same engine, different trait objects)");
+            if host_cap_gb.is_some() || gpu_cap_gb.is_some() {
+                println!("\n(bounded capacities: the tenants now contend for warm host memory —");
+                println!(" compare TTFT against an unbounded run; λPipe re-multicasts around a");
+                println!(" lost warm copy, while the SSD-bound tenant pays the full cold load.");
+                println!(" See examples/memory_pressure.rs for the isolated A/B measurement.)");
+            } else {
+                println!("\n(try --host-cap 30 to watch the tenants fight over warm memory)");
+            }
         }
         "trace-gen" => {
             let out = flag("--out").unwrap_or_else(|| "/tmp/burstgpt.csv".into());
@@ -172,7 +209,8 @@ fn main() {
                 "λScale — fast model scaling for serverless LLM inference\n\n\
                  usage: lambda-scale <figures|session|trace-gen|serve|info> [flags]\n\
                  \x20 figures   [--only figNN]              regenerate paper figures\n\
-                 \x20 session   [--requests N]              two-tenant ServingSession demo\n\
+                 \x20 session   [--requests N] [--gpu-cap GB] [--host-cap GB]\n\
+                 \x20                                       two-tenant memory-contention demo\n\
                  \x20 trace-gen [--out F] [--duration S]    emit a BurstGPT-like CSV trace\n\
                  \x20 serve     [--artifacts D] [--prompt P] [--tokens N]\n\
                  \x20 info                                  testbed presets + model zoo\n\n\

@@ -10,6 +10,16 @@ struct Entry {
     bytes: u64,
     last_use: SimTime,
     inserted: SimTime,
+    pinned: bool,
+}
+
+/// Why an insertion could not be satisfied.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InsertError {
+    /// The item alone exceeds the tier capacity.
+    TooLarge,
+    /// Pinned residents leave too little evictable room.
+    PinnedPressure,
 }
 
 /// LRU keyed by `K`, bounded by total bytes.
@@ -54,32 +64,85 @@ impl<K: std::hash::Hash + Eq + Clone + Ord> LruCache<K> {
         }
     }
 
+    /// Pin `k`: pinned entries are never chosen as eviction victims and
+    /// never expire (a serving replica must stay resident). Returns whether
+    /// the key was present.
+    pub fn pin(&mut self, k: &K) -> bool {
+        match self.entries.get_mut(k) {
+            Some(e) => {
+                e.pinned = true;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Unpin `k`, making it evictable again. Returns whether it was present.
+    pub fn unpin(&mut self, k: &K) -> bool {
+        match self.entries.get_mut(k) {
+            Some(e) => {
+                e.pinned = false;
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn is_pinned(&self, k: &K) -> bool {
+        self.entries.get(k).map_or(false, |e| e.pinned)
+    }
+
+    /// Total bytes held by pinned entries.
+    pub fn pinned_bytes(&self) -> u64 {
+        self.entries.values().filter(|e| e.pinned).map(|e| e.bytes).sum()
+    }
+
     /// Insert (or refresh) `k`; evicts least-recently-used entries until it
     /// fits. Returns the evicted keys (in eviction order). An item larger
     /// than the whole capacity is rejected by panicking — that is a
-    /// configuration error, not a runtime condition.
+    /// configuration error, not a runtime condition. Callers that pin
+    /// entries must use [`LruCache::try_insert`] instead.
     pub fn insert(&mut self, k: K, bytes: u64, now: SimTime) -> Vec<K> {
         assert!(bytes <= self.capacity, "item larger than cache capacity");
+        self.try_insert(k, bytes, now).expect("insert under pinned pressure; use try_insert")
+    }
+
+    /// Insert (or refresh) `k`, evicting least-recently-used *unpinned*
+    /// entries until it fits. Returns the evicted keys in eviction order,
+    /// or an error when the item cannot fit without displacing pinned
+    /// residents. A refresh of a present key always succeeds and never
+    /// changes its pin state.
+    pub fn try_insert(&mut self, k: K, bytes: u64, now: SimTime) -> Result<Vec<K>, InsertError> {
         if let Some(e) = self.entries.get_mut(&k) {
             e.last_use = now;
-            return vec![];
+            return Ok(vec![]);
+        }
+        if bytes > self.capacity {
+            return Err(InsertError::TooLarge);
+        }
+        if self.pinned_bytes().saturating_add(bytes) > self.capacity {
+            return Err(InsertError::PinnedPressure);
         }
         let mut evicted = Vec::new();
         while self.used + bytes > self.capacity {
+            // Feasibility was checked above, so an unpinned victim exists.
             let victim = self
                 .entries
                 .iter()
+                .filter(|(_, e)| !e.pinned)
                 .min_by_key(|(key, e)| (e.last_use, (*key).clone()))
                 .map(|(key, _)| key.clone())
-                .expect("over capacity with no entries");
+                .expect("over capacity with no unpinned entries");
             self.remove(&victim);
             evicted.push(victim);
         }
         self.used += bytes;
-        self.entries.insert(k, Entry { bytes, last_use: now, inserted: now });
-        evicted
+        self.entries.insert(k, Entry { bytes, last_use: now, inserted: now, pinned: false });
+        Ok(evicted)
     }
 
+    /// Remove `k` unconditionally (pins do not protect against explicit
+    /// removal — only against eviction and expiry).
     pub fn remove(&mut self, k: &K) -> bool {
         if let Some(e) = self.entries.remove(k) {
             self.used -= e.bytes;
@@ -89,13 +152,14 @@ impl<K: std::hash::Hash + Eq + Clone + Ord> LruCache<K> {
         }
     }
 
-    /// Remove all entries idle ≥ `keep_alive`; returns (key, residency time
-    /// = now − inserted) pairs — the Fig 2 keep-alive distribution data.
+    /// Remove all unpinned entries idle ≥ `keep_alive`; returns (key,
+    /// residency time = now − inserted) pairs — the Fig 2 keep-alive
+    /// distribution data.
     pub fn expire(&mut self, now: SimTime, keep_alive: SimTime) -> Vec<(K, SimTime)> {
         let victims: Vec<K> = self
             .entries
             .iter()
-            .filter(|(_, e)| now.saturating_sub(e.last_use) >= keep_alive)
+            .filter(|(_, e)| !e.pinned && now.saturating_sub(e.last_use) >= keep_alive)
             .map(|(k, _)| k.clone())
             .collect();
         let mut out = Vec::with_capacity(victims.len());
@@ -165,6 +229,75 @@ mod tests {
     }
 
     #[test]
+    fn eviction_order_is_lru_under_capacity_pressure() {
+        // One oversized insert must shed several residents, least recently
+        // used first — the order the serving layer relies on for demotions.
+        let mut c: LruCache<&'static str> = LruCache::new(100);
+        c.insert("a", 30, SimTime(1));
+        c.insert("b", 30, SimTime(2));
+        c.insert("c", 30, SimTime(3));
+        c.touch(&"a", SimTime(4)); // recency now b < c < a
+        let ev = c.insert("d", 90, SimTime(5));
+        assert_eq!(ev, vec!["b", "c", "a"], "evictions must run in LRU order");
+        assert_eq!(c.used(), 90);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn eviction_ties_break_by_key() {
+        let mut c: LruCache<u32> = LruCache::new(100);
+        c.insert(2, 50, SimTime(1));
+        c.insert(1, 50, SimTime(1)); // same last_use as 2
+        let ev = c.insert(3, 100, SimTime(2));
+        assert_eq!(ev, vec![1, 2], "equal recency must evict in key order");
+    }
+
+    #[test]
+    fn pinned_entries_survive_eviction_and_expiry() {
+        let mut c: LruCache<&'static str> = LruCache::new(100);
+        c.insert("pinned", 40, SimTime(1));
+        assert!(c.pin(&"pinned"));
+        c.insert("old", 30, SimTime(2));
+        // "pinned" is LRU but protected: "old" must be the victim.
+        let ev = c.try_insert("new", 50, SimTime(10)).unwrap();
+        assert_eq!(ev, vec!["old"]);
+        assert!(c.contains(&"pinned"));
+        // Expiry also skips pins.
+        let ex = c.expire(SimTime::from_secs(100.0), SimTime::from_secs(1.0));
+        assert!(ex.iter().all(|(k, _)| *k != "pinned"), "pinned entry expired: {ex:?}");
+        assert!(c.contains(&"pinned"));
+        // Unpinning makes it reclaimable again.
+        assert!(c.unpin(&"pinned"));
+        let ex = c.expire(SimTime::from_secs(200.0), SimTime::from_secs(1.0));
+        assert!(ex.iter().any(|(k, _)| *k == "pinned"));
+    }
+
+    #[test]
+    fn try_insert_fails_under_pinned_pressure() {
+        let mut c: LruCache<u32> = LruCache::new(100);
+        c.insert(1, 80, SimTime(1));
+        c.pin(&1);
+        assert_eq!(c.try_insert(2, 30, SimTime(2)), Err(InsertError::PinnedPressure));
+        assert_eq!(c.try_insert(2, 101, SimTime(2)), Err(InsertError::TooLarge));
+        // Within the unpinned headroom it still works.
+        assert_eq!(c.try_insert(2, 20, SimTime(2)), Ok(vec![]));
+        assert_eq!(c.used(), 100);
+        assert_eq!(c.pinned_bytes(), 80);
+    }
+
+    #[test]
+    fn refresh_keeps_pin_state() {
+        let mut c: LruCache<u32> = LruCache::new(100);
+        c.insert(1, 50, SimTime(1));
+        c.pin(&1);
+        assert_eq!(c.try_insert(1, 50, SimTime(5)), Ok(vec![]));
+        assert!(c.is_pinned(&1));
+        // remove() ignores pins by contract.
+        assert!(c.remove(&1));
+        assert_eq!(c.used(), 0);
+    }
+
+    #[test]
     fn property_used_matches_sum_and_capacity_respected() {
         check("LRU accounting invariants", 100, |rng| {
             let cap = rng.range(50, 500);
@@ -174,16 +307,30 @@ mod tests {
                 t += 1;
                 let k = rng.below(30);
                 let sz = rng.range(1, cap.min(100));
-                match rng.below(3) {
+                match rng.below(5) {
                     0 => {
                         c.insert(k, sz, SimTime(t));
                     }
                     1 => {
                         c.remove(&k);
                     }
+                    2 => {
+                        let was_pinned = c.is_pinned(&k);
+                        let _ = c.try_insert(k, sz, SimTime(t));
+                        // try_insert evicts around pins and never drops one.
+                        assert!(!was_pinned || c.contains(&k), "pinned entry vanished");
+                    }
+                    3 => {
+                        if rng.below(2) == 0 {
+                            c.pin(&k);
+                        } else {
+                            c.unpin(&k);
+                        }
+                    }
                     _ => c.touch(&k, SimTime(t)),
                 }
                 assert!(c.used() <= cap, "over capacity");
+                assert!(c.pinned_bytes() <= c.used(), "pinned exceeds used");
             }
         });
     }

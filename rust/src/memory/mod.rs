@@ -3,14 +3,15 @@
 //! experiments), and pre-allocated block pools.
 
 pub mod lru;
+pub mod manager;
 pub mod pool;
 
-pub use lru::LruCache;
+pub use lru::{InsertError, LruCache};
+pub use manager::{Demotion, MemoryManager};
 pub use pool::BlockPool;
 
 use crate::sim::time::SimTime;
 use crate::sim::transfer::Tier;
-use std::collections::HashMap;
 
 /// Where a model can be fetched from, best first (locality-driven startup).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -75,6 +76,53 @@ impl NodeMemory {
         self.host.insert(model.to_string(), bytes, now)
     }
 
+    /// Capacity- and pin-aware GPU insert: evicts unpinned LRU models,
+    /// errors when the model cannot fit without displacing pinned replicas.
+    pub fn try_load_gpu(
+        &mut self,
+        model: &str,
+        bytes: u64,
+        now: SimTime,
+    ) -> Result<Vec<String>, InsertError> {
+        self.gpu.try_insert(model.to_string(), bytes, now)
+    }
+
+    /// Capacity- and pin-aware host insert.
+    pub fn try_load_host(
+        &mut self,
+        model: &str,
+        bytes: u64,
+        now: SimTime,
+    ) -> Result<Vec<String>, InsertError> {
+        self.host.try_insert(model.to_string(), bytes, now)
+    }
+
+    /// Pin the GPU-resident copy of `model` (a serving replica: never
+    /// evicted, never expired). Returns whether the model was GPU-resident.
+    pub fn pin_gpu(&mut self, model: &str) -> bool {
+        self.gpu.pin(&model.to_string())
+    }
+
+    pub fn unpin_gpu(&mut self, model: &str) -> bool {
+        self.gpu.unpin(&model.to_string())
+    }
+
+    pub fn gpu_pinned(&self, model: &str) -> bool {
+        self.gpu.is_pinned(&model.to_string())
+    }
+
+    pub fn gpu_contains(&self, model: &str) -> bool {
+        self.gpu.contains(&model.to_string())
+    }
+
+    pub fn host_contains(&self, model: &str) -> bool {
+        self.host.contains(&model.to_string())
+    }
+
+    pub fn in_ssd(&self, model: &str) -> bool {
+        self.ssd.contains(model)
+    }
+
     pub fn touch(&mut self, model: &str, now: SimTime) {
         self.gpu.touch(&model.to_string(), now);
         self.host.touch(&model.to_string(), now);
@@ -109,21 +157,6 @@ impl NodeMemory {
     pub fn host_models(&self) -> Vec<String> {
         self.host.keys()
     }
-}
-
-/// Cluster-wide view used by the locality-driven startup scheme (§5):
-/// classify every node by its locality for a model, best sources first.
-pub fn rank_sources(nodes: &HashMap<usize, NodeMemory>, model: &str) -> Vec<(usize, Locality)> {
-    let mut v: Vec<(usize, Locality)> =
-        nodes.iter().map(|(&n, m)| (n, m.locality(model))).collect();
-    let rank = |l: Locality| match l {
-        Locality::Gpu => 0,
-        Locality::HostMem => 1,
-        Locality::Ssd => 2,
-        Locality::Remote => 3,
-    };
-    v.sort_by_key(|&(n, l)| (rank(l), n));
-    v
 }
 
 /// Map [`Locality`] to the simulator's source tier.
@@ -180,21 +213,4 @@ mod tests {
         assert_eq!(m.locality("b"), Locality::Gpu);
     }
 
-    #[test]
-    fn rank_sources_orders_by_tier() {
-        let mut nodes = HashMap::new();
-        let mut a = NodeMemory::new(gb(80), gb(100));
-        a.put_ssd("m");
-        let mut b = NodeMemory::new(gb(80), gb(100));
-        b.load_gpu("m", gb(10), SimTime::ZERO);
-        let mut c = NodeMemory::new(gb(80), gb(100));
-        c.load_host("m", gb(10), SimTime::ZERO);
-        nodes.insert(0, a);
-        nodes.insert(1, b);
-        nodes.insert(2, c);
-        let ranked = rank_sources(&nodes, "m");
-        assert_eq!(ranked[0], (1, Locality::Gpu));
-        assert_eq!(ranked[1], (2, Locality::HostMem));
-        assert_eq!(ranked[2], (0, Locality::Ssd));
-    }
 }

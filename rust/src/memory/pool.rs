@@ -123,6 +123,42 @@ mod tests {
     }
 
     #[test]
+    fn released_blocks_are_reused_lifo() {
+        // Recycling must hand back the most recently released slab (warm
+        // cache lines) and restore full availability after a churn cycle.
+        let mut p = BlockPool::new(1 << 20, 3);
+        let a = p.acquire(100);
+        let b = p.acquire(100);
+        let c = p.acquire(100);
+        let (ia, ib) = (a.id, b.id);
+        p.release(b);
+        p.release(a);
+        let r1 = p.acquire(100);
+        assert_eq!(r1.id, ia, "LIFO reuse: last released comes back first");
+        let r2 = p.acquire(100);
+        assert_eq!(r2.id, ib);
+        p.release(r1);
+        p.release(r2);
+        p.release(c);
+        assert_eq!(p.available(), 3, "all slabs back in the pool");
+        assert_eq!(p.capacity(), 3);
+    }
+
+    #[test]
+    fn fallback_release_never_pollutes_pool() {
+        let mut p = BlockPool::new(100, 1);
+        let a = p.acquire(50);
+        let big = p.acquire(500); // oversized: fallback allocation
+        assert!(!big.from_pool);
+        p.release(big); // dropped, must not enter the free list
+        assert_eq!(p.available(), 0);
+        p.release(a);
+        assert_eq!(p.available(), 1);
+        let again = p.acquire(50);
+        assert!(again.from_pool);
+    }
+
+    #[test]
     fn property_never_double_hands_a_slab() {
         check("pool never double-allocates a slab", 100, |rng| {
             let mut p = BlockPool::new(100, rng.range(1, 8) as u32);

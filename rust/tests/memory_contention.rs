@@ -1,0 +1,167 @@
+//! Cross-tenant memory-contention integration tests for the cluster-wide
+//! `MemoryManager`: with bounded per-node host capacity, one tenant's
+//! reclaim-time GPU→host demotion evicts another tenant's warm copy, and
+//! the victim's next scale-up pays the cold (SSD) path. With the unbounded
+//! defaults the manager must be invisible: reports match the seed behavior
+//! exactly.
+//!
+//! (The byte-accounting invariants themselves — residency ≤ capacity per
+//! node and tier, pinned replicas never evicted — are debug-asserted
+//! inside every `MemoryManager` operation, so every event of every run in
+//! this file exercises them under `cargo test`.)
+
+use lambda_scale::config::ClusterConfig;
+use lambda_scale::coordinator::{SessionReport, ServingSession, SystemKind};
+use lambda_scale::model::ModelSpec;
+use lambda_scale::sim::time::SimTime;
+use lambda_scale::util::rng::Rng;
+use lambda_scale::util::stats::Samples;
+use lambda_scale::workload::{burst_trace, Trace};
+
+const GB: u64 = 1_000_000_000;
+
+/// Tenant A's trace: a burst at t=0 (forces a scale-out whose replicas are
+/// later reclaimed into host memory) and a re-burst at `t2` (the scale-up
+/// whose warmth is under test). `Trace::merge` keeps ids unique.
+fn two_burst_trace(n: usize, t2: f64, model: &str, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut trace = burst_trace(n, 0.0, model, 128, 64, &mut rng);
+    let again = burst_trace(n, t2, model, 128, 64, &mut rng);
+    trace.merge(&again, SimTime::ZERO);
+    trace
+}
+
+/// Two ServerlessLLM-style tenants on a 4-node cluster. Tenant A (13B)
+/// bursts at t=0 and re-bursts at t=70; tenant B (7B) bursts at t=25,
+/// exactly inside the window where A's scale-out replicas have been
+/// reclaimed into host memory. `host_cap` bounds each node's managed
+/// host-memory model cache. Bursts are deep (128 requests) so scale-up
+/// loading latency — not the keep-alive floor replica — dominates TTFT.
+fn run_two_tenants(host_cap: u64) -> SessionReport {
+    let mut cluster = ClusterConfig::testbed1();
+    cluster.n_nodes = 4;
+    ServingSession::builder()
+        .cluster(cluster)
+        .host_capacity_bytes(host_cap)
+        .model(ModelSpec::llama2_13b())
+        .system(SystemKind::ServerlessLlm)
+        .max_batch(8)
+        .keep_alive(5.0)
+        .trace(two_burst_trace(128, 70.0, "llama2-13b", 3))
+        .model(ModelSpec::llama2_7b())
+        .system(SystemKind::ServerlessLlm)
+        .max_batch(8)
+        .keep_alive(5.0)
+        .trace(burst_trace(128, 25.0, "llama2-7b", 96, 48, &mut Rng::new(4)))
+        .run()
+}
+
+fn reburst_ttfts(report: &SessionReport) -> Samples {
+    let mut s = Samples::new();
+    for r in &report.models[0].metrics.requests {
+        if r.arrival.as_secs() >= 70.0 {
+            s.push(r.ttft());
+        }
+    }
+    s
+}
+
+/// The headline scenario: bounding host memory flips tenant A's re-scale
+/// from warm (host-memory loads, ~0.4 s for 26 GB) to cold (SSD loads,
+/// ~5.2 s), because tenant B's reclaim demoted its copy into the same
+/// bounded host tier and evicted A's.
+#[test]
+fn bounded_host_capacity_turns_the_other_tenant_cold() {
+    // Control: unbounded host memory — A's warm copies survive B.
+    let control = run_two_tenants(u64::MAX);
+    // Contended: 30 GB host per node holds A's 26 GB copy *or* leaves room
+    // for B's 13.5 GB demotion, not both.
+    let contended = run_two_tenants(30 * GB);
+
+    // Conservation in both runs, for both tenants.
+    for rep in [&control, &contended] {
+        assert_eq!(rep.models[0].metrics.requests.len(), 256, "tenant A lost requests");
+        assert_eq!(rep.models[1].metrics.requests.len(), 128, "tenant B lost requests");
+    }
+
+    let mut warm = reburst_ttfts(&control);
+    let mut cold = reburst_ttfts(&contended);
+    assert_eq!(warm.len(), 128);
+    assert_eq!(cold.len(), 128);
+    // Under contention every recruitable node lost its warm copy, so the
+    // whole backlog rides on the floor replica until SSD loads land: both
+    // the median and the tail must be measurably slower than the control
+    // run, where recruits come up from host memory an order of magnitude
+    // sooner.
+    assert!(
+        cold.p50() > warm.p50() + 1.0,
+        "contended re-scale p50 {:.3}s not measurably colder than warm {:.3}s",
+        cold.p50(),
+        warm.p50()
+    );
+    assert!(
+        cold.p90() > warm.p90() + 1.5,
+        "contended re-scale p90 {:.3}s not measurably colder than warm {:.3}s",
+        cold.p90(),
+        warm.p90()
+    );
+}
+
+/// With the unbounded defaults the memory manager must be invisible:
+/// explicitly passing u64::MAX capacities reproduces the default-config
+/// run event for event.
+#[test]
+fn unbounded_caps_match_default_behavior() {
+    let run = |explicit: bool| {
+        let mut cluster = ClusterConfig::testbed1();
+        cluster.n_nodes = 6;
+        let mut b = ServingSession::builder().cluster(cluster);
+        if explicit {
+            b = b.gpu_capacity_bytes(u64::MAX).host_capacity_bytes(u64::MAX);
+        }
+        let mut rng = Rng::new(9);
+        b.model(ModelSpec::llama2_13b())
+            .system(SystemKind::LambdaScale { k: 2 })
+            .max_batch(8)
+            .trace(burst_trace(30, 0.0, "llama2-13b", 128, 64, &mut rng))
+            .run()
+    };
+    let a = run(false);
+    let b = run(true);
+    assert_eq!(a.models[0].metrics.requests, b.models[0].metrics.requests);
+    assert_eq!(
+        a.models[0].metrics.gpu_series(1.0, 90.0),
+        b.models[0].metrics.gpu_series(1.0, 90.0)
+    );
+}
+
+/// Bounded-capacity runs still conserve requests for every backend (no
+/// wedge, no loss) as long as one replica can fit.
+#[test]
+fn bounded_caps_conserve_requests_across_backends() {
+    for sys in [
+        SystemKind::LambdaScale { k: 2 },
+        SystemKind::FaasNet,
+        SystemKind::ServerlessLlm,
+        SystemKind::Ideal,
+    ] {
+        let mut cluster = ClusterConfig::testbed1();
+        cluster.n_nodes = 6;
+        let mut rng = Rng::new(13);
+        let report = ServingSession::builder()
+            .cluster(cluster)
+            .gpu_capacity_bytes(40 * GB) // one 26 GB replica per node
+            .host_capacity_bytes(30 * GB)
+            .model(ModelSpec::llama2_13b())
+            .system(sys)
+            .max_batch(8)
+            .trace(burst_trace(40, 0.0, "llama2-13b", 128, 64, &mut rng))
+            .run();
+        assert_eq!(
+            report.models[0].metrics.requests.len(),
+            40,
+            "{}: lost requests under bounded capacity",
+            report.models[0].system
+        );
+    }
+}

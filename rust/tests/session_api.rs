@@ -194,3 +194,51 @@ fn batched_admission_respects_max_batch() {
 fn builder_requires_model_scope() {
     let _ = ServingSession::builder().system(SystemKind::Ideal);
 }
+
+/// `ScalingBackend` docs promise determinism; this enforces it end to end:
+/// two identical multi-tenant sessions (bounded memory capacities included,
+/// so eviction/demotion order is covered too) must produce *identical*
+/// `SessionReport`s — every request record, completion count, token total
+/// and GPU-allocation series, not just a sampled key.
+#[test]
+fn identical_sessions_produce_identical_session_reports() {
+    let run = || {
+        let mut cluster = ClusterConfig::testbed1();
+        cluster.n_nodes = 6;
+        ServingSession::builder()
+            .cluster(cluster)
+            .host_capacity_bytes(30_000_000_000)
+            .model(ModelSpec::llama2_13b())
+            .system(SystemKind::LambdaScale { k: 2 })
+            .max_batch(8)
+            .trace(burst(40, 0.0, "llama2-13b", 31))
+            .model(ModelSpec::llama2_7b())
+            .system(SystemKind::ServerlessLlm)
+            .router(Box::new(LeastLoaded))
+            .max_batch(8)
+            .trace(burst(30, 3.0, "llama2-7b", 32))
+            .run()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.models.len(), b.models.len());
+    for (ma, mb) in a.models.iter().zip(b.models.iter()) {
+        assert_eq!(ma.model, mb.model);
+        assert_eq!(ma.system, mb.system);
+        assert_eq!(ma.router, mb.router);
+        assert_eq!(ma.completed, mb.completed);
+        assert_eq!(
+            ma.metrics.requests,
+            mb.metrics.requests,
+            "{}: request records differ",
+            ma.model
+        );
+        assert_eq!(ma.metrics.total_tokens(), mb.metrics.total_tokens());
+        assert_eq!(
+            ma.metrics.gpu_series(1.0, 120.0),
+            mb.metrics.gpu_series(1.0, 120.0),
+            "{}: GPU allocation timelines differ",
+            ma.model
+        );
+    }
+}
