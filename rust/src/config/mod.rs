@@ -63,10 +63,13 @@ pub struct NodeConfig {
     pub host_mem_gb: f64,
     /// Local NVMe capacity (GB). Paper: 4 TB.
     pub ssd_gb: f64,
-    /// Managed GPU model-memory budget per node, in bytes, enforced by the
-    /// `MemoryManager` (model weights only; KV/activations are outside the
-    /// managed budget). `u64::MAX` = unbounded, the seed behavior — bound
-    /// it to make keep-alive eviction and multi-tenant contention real.
+    /// Managed GPU memory budget per node, in bytes, enforced by the
+    /// `MemoryManager`. Model weights always charge against it; with the
+    /// kvcache subsystem on (`KvCacheConfig::block_tokens > 0`) paged KV
+    /// pools charge the same budget, so KV and pinned weights genuinely
+    /// compete. `u64::MAX` = unbounded, the seed behavior — bound it to
+    /// make keep-alive eviction, multi-tenant contention and KV pressure
+    /// real.
     pub gpu_capacity_bytes: u64,
     /// Managed host-memory model-cache budget per node, in bytes
     /// (`u64::MAX` = unbounded).
@@ -118,6 +121,29 @@ impl Default for ComputeConfig {
     }
 }
 
+/// Paged KV-cache + iteration-level continuous batching knobs (the
+/// `crate::kvcache` subsystem).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvCacheConfig {
+    /// Tokens of context per KV block. **0 disables the subsystem** and
+    /// keeps the legacy processor-sharing fluid model (the seed default,
+    /// bit-identical figures). Paper-shaped runs use 16.
+    pub block_tokens: usize,
+    /// Context cap a per-instance pool provisions for: the pool targets
+    /// `max_batch × blocks_for(max_ctx_tokens)` blocks, clamped to the
+    /// memory manager's per-node GPU headroom.
+    pub max_ctx_tokens: usize,
+    /// Prompt tokens of prefill work admitted per iteration (chunked
+    /// prefill budget).
+    pub prefill_budget_tokens: usize,
+}
+
+impl Default for KvCacheConfig {
+    fn default() -> Self {
+        KvCacheConfig { block_tokens: 0, max_ctx_tokens: 4096, prefill_budget_tokens: 512 }
+    }
+}
+
 /// Top-level cluster configuration.
 #[derive(Clone, Debug, PartialEq, Default)]
 pub struct ClusterConfig {
@@ -125,6 +151,7 @@ pub struct ClusterConfig {
     pub node: NodeConfig,
     pub network: NetworkConfig,
     pub compute: ComputeConfig,
+    pub kv: KvCacheConfig,
 }
 
 impl ClusterConfig {
@@ -190,9 +217,24 @@ impl ClusterConfig {
             cfg.network.nccl_group_init_s =
                 getf(sec, "nccl_group_init_s", cfg.network.nccl_group_init_s)?;
         }
+        if let Some(sec) = doc.get("kvcache") {
+            let geti = |k: &str, cur: usize| -> Result<usize, String> {
+                match sec.get(k) {
+                    None => Ok(cur),
+                    Some(v) => {
+                        Ok(v.as_int().ok_or_else(|| format!("kvcache.{k} must be int"))? as usize)
+                    }
+                }
+            };
+            cfg.kv.block_tokens = geti("block_tokens", cfg.kv.block_tokens)?;
+            cfg.kv.max_ctx_tokens = geti("max_ctx_tokens", cfg.kv.max_ctx_tokens)?;
+            cfg.kv.prefill_budget_tokens =
+                geti("prefill_budget_tokens", cfg.kv.prefill_budget_tokens)?;
+        }
         if let Some(sec) = doc.get("compute") {
             cfg.compute.gpu_tflops = getf(sec, "gpu_tflops", cfg.compute.gpu_tflops)?;
-            cfg.compute.layer_overhead_s = getf(sec, "layer_overhead_s", cfg.compute.layer_overhead_s)?;
+            cfg.compute.layer_overhead_s =
+                getf(sec, "layer_overhead_s", cfg.compute.layer_overhead_s)?;
             cfg.compute.pipeline_hop_s = getf(sec, "pipeline_hop_s", cfg.compute.pipeline_hop_s)?;
         }
         Ok(cfg)
@@ -248,6 +290,19 @@ mod tests {
         let cfg = ClusterConfig::from_toml(&doc).unwrap();
         assert_eq!(cfg.node.gpu_capacity_bytes, 80_000_000_000);
         assert_eq!(cfg.node.host_capacity_bytes, 52_500_000_000);
+    }
+
+    #[test]
+    fn from_toml_reads_kvcache_section() {
+        let doc =
+            parse_toml("[kvcache]\nblock_tokens = 16\nprefill_budget_tokens = 256\n").unwrap();
+        let cfg = ClusterConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.kv.block_tokens, 16);
+        assert_eq!(cfg.kv.prefill_budget_tokens, 256);
+        assert_eq!(cfg.kv.max_ctx_tokens, 4096, "untouched knob keeps its default");
+        // The subsystem stays off unless asked for.
+        let off = ClusterConfig::from_toml(&parse_toml("").unwrap()).unwrap();
+        assert_eq!(off.kv.block_tokens, 0);
     }
 
     #[test]

@@ -34,6 +34,13 @@ impl<T> DynamicBatcher<T> {
         self.queue.push_back(Pending { item, enqueued: now });
     }
 
+    /// Put a request back at the head of the line — KV-pressure
+    /// preemption resumes LIFO (preempted last, resumed first), ahead of
+    /// requests that never held a decode slot.
+    pub fn push_front(&mut self, item: T, enqueued: SimTime) {
+        self.queue.push_front(Pending { item, enqueued });
+    }
+
     pub fn len(&self) -> usize {
         self.queue.len()
     }
@@ -147,6 +154,18 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn push_front_resumes_ahead_of_queue() {
+        let mut b = DynamicBatcher::new(4, t(1.0));
+        b.push("queued", t(1.0));
+        b.push_front("preempted", t(0.2));
+        let got = b.admit(2);
+        assert_eq!(got[0].item, "preempted");
+        assert_eq!(got[1].item, "queued");
+        // The restored head keeps its original clock for the HOL trigger.
+        assert_eq!(got[0].enqueued, t(0.2));
     }
 
     #[test]

@@ -34,11 +34,12 @@ use super::batcher::DynamicBatcher;
 use super::scaling::{NewInstance, ScalingOutcome, Source};
 use super::session::{ModelReport, ModelSession, SessionReport};
 use crate::config::ClusterConfig;
+use crate::kvcache::{ContinuousScheduler, KvGeometry, KvPool, KvVictimAction, ReqView};
 use crate::memory::{Locality, MemoryManager};
 use crate::metrics::RequestMetrics;
 use crate::multicast::NodeId;
 use crate::pipeline::execution::ExecPipeline;
-use crate::pipeline::mode_switch::plan_switch;
+use crate::pipeline::mode_switch::plan_switch_pipeline;
 use crate::sim::event::EventQueue;
 use crate::sim::time::SimTime;
 use crate::sim::transfer::Tier;
@@ -47,14 +48,45 @@ use std::collections::{HashMap, HashSet};
 #[derive(Clone, Debug)]
 struct ActiveReq {
     idx: usize,
-    /// Work done so far, token units.
+    /// Work done so far in this admission, token units.
     done: f64,
     /// Work needed before the first token (prefill + 1 token).
     w_first: f64,
-    /// Total work (prefill + all output tokens).
+    /// Total work this admission must execute (stall + remaining tokens).
     w_total: f64,
     first_emitted: bool,
     admitted: SimTime,
+    // ---- kvcache-mode bookkeeping (zero/ignored under the legacy fluid
+    // model, which this struct must not perturb) ----------------------------
+    /// Prefill/recompute/swap work units ahead of decode this admission.
+    stall_work: f64,
+    /// Tokens generated in *previous* admissions (survive preemption).
+    decode_base: usize,
+    /// KV blocks currently held from the instance pool.
+    kv_blocks: usize,
+    /// Planned work rate (units/s) for the current iteration.
+    rate: f64,
+    /// Whether the planned rate is decode (token-emitting) work.
+    decoding: bool,
+}
+
+impl ActiveReq {
+    /// Total tokens generated so far (kvcache mode).
+    fn generated(&self) -> usize {
+        self.decode_base + ((self.done - self.stall_work).max(0.0) + 1e-9).floor() as usize
+    }
+}
+
+/// A serving instance's paged KV pool and its memory-manager charge.
+struct InstKv {
+    pool: KvPool,
+    /// Residency key of the KV arena entries in the [`MemoryManager`].
+    key: String,
+    /// Per member node: (node, layer fraction, bytes currently charged).
+    /// Pipeline stages hold KV shards proportional to their layer range.
+    charges: Vec<(NodeId, f64, u64)>,
+    /// Last sampled pool utilization (per-instance dedup of the series).
+    last_util: f64,
 }
 
 struct Inst {
@@ -67,6 +99,28 @@ struct Inst {
     idle_since: SimTime,
     version: u64,
     token_accum: f64,
+    /// Paged KV state (kvcache mode only).
+    kv: Option<InstKv>,
+}
+
+/// A displaced request's saved progress, awaiting re-admission.
+#[derive(Clone, Copy, Debug)]
+struct PreemptedReq {
+    generated: usize,
+    /// How the KV must be rebuilt at re-admission. `None` when it already
+    /// was — a pipeline dissolve prices the rebuild of *all* in-flight
+    /// state in its mode-switch stall, so the resumed request owes no
+    /// further per-request stall.
+    action: Option<KvVictimAction>,
+}
+
+/// Per-request KV accounting accumulated until completion.
+#[derive(Clone, Copy, Debug, Default)]
+struct KvReqStats {
+    preemptions: u32,
+    recompute_s: f64,
+    swap_s: f64,
+    wait_s: f64,
 }
 
 /// Events carry the index of the model they belong to.
@@ -120,6 +174,16 @@ struct ModelRuntime {
     next_stash_id: u64,
     /// Nodes claimed as GPU-resident sources at t=0 (spawned in `run`).
     initial_gpu_nodes: Vec<NodeId>,
+    /// KV block geometry (None = legacy fluid model for this session).
+    kv_geom: Option<KvGeometry>,
+    /// Iteration-level budgets (consulted only in kvcache mode).
+    kv_sched: ContinuousScheduler,
+    /// Preemption victims awaiting re-admission, by trace index.
+    preempted: HashMap<usize, PreemptedReq>,
+    /// First instant each waiting request was blocked on KV blocks.
+    kv_blocked_since: HashMap<usize, SimTime>,
+    /// Per-request KV stats, folded into `RequestMetrics` at completion.
+    kv_stats: HashMap<usize, KvReqStats>,
 }
 
 impl ModelRuntime {
@@ -141,6 +205,9 @@ impl ModelRuntime {
         );
         let backend_name = ms.backend.name();
         let mem_key = format!("{}#{tenant}", ms.params.spec.name);
+        let kv_geom = KvGeometry::for_model(&p.spec, cluster.kv.block_tokens);
+        let kv_sched =
+            ContinuousScheduler::new(prefill_ratio, cluster.kv.prefill_budget_tokens as f64);
         ModelRuntime {
             ms,
             backend_name,
@@ -160,6 +227,11 @@ impl ModelRuntime {
             pending: HashMap::new(),
             next_stash_id: 1_000_000,
             initial_gpu_nodes: Vec::new(),
+            kv_geom,
+            kv_sched,
+            preempted: HashMap::new(),
+            kv_blocked_since: HashMap::new(),
+            kv_stats: HashMap::new(),
         }
     }
 }
@@ -319,9 +391,17 @@ impl ServingEngine {
                 idle_since: now,
                 version: 0,
                 token_accum: 0.0,
+                kv: None,
             },
         );
         md.ms.router.add_instance(id, weight.max(1e-6));
+        // kvcache mode: carve a per-instance paged KV pool out of the
+        // manager's remaining GPU headroom on every member node — KV and
+        // pinned weights compete for the same per-node byte budget.
+        if let Some(geom) = self.models[m].kv_geom {
+            let kv = self.build_kv_pool(m, id, geom, now);
+            self.models[m].instances.get_mut(&id).unwrap().kv = Some(kv);
+        }
         if let Some(d) = dissolve_at {
             self.q.push(d.max(now), Ev::Dissolve(m, id));
         } else {
@@ -337,6 +417,146 @@ impl ServingEngine {
         self.rebalance(now, m);
         self.account_gpus(m, now);
         id
+    }
+
+    // ---- paged KV pools (kvcache mode) --------------------------------------
+
+    /// Size and charge a new instance's KV pool: target
+    /// `max_batch × blocks_for(max_ctx_tokens)` blocks, clamped to the
+    /// smallest per-node headroom across the pipeline's members (each
+    /// stage holds the shard of every block matching its layer range).
+    /// Zero headroom yields an empty pool — admission then grows it
+    /// explicitly or overflows with a counter, never silently.
+    fn build_kv_pool(&mut self, m: usize, id: u64, geom: KvGeometry, now: SimTime) -> InstKv {
+        let (members, desired, key) = {
+            let md = &self.models[m];
+            let inst = &md.instances[&id];
+            // Coalesce per node: a (scripted) pipeline may put several
+            // stages on one node, but the manager keys the whole arena by
+            // one string per node — duplicate charge rows would silently
+            // desynchronize the byte accounting.
+            let mut by_node: std::collections::BTreeMap<NodeId, f64> =
+                std::collections::BTreeMap::new();
+            for s in 0..inst.pipe.n_stages() {
+                *by_node.entry(inst.pipe.stages[s].node).or_insert(0.0) +=
+                    inst.pipe.layer_frac(s);
+            }
+            let members: Vec<(NodeId, f64)> = by_node.into_iter().collect();
+            let desired =
+                md.ms.params.max_batch.max(1) * geom.blocks_for(self.cluster.kv.max_ctx_tokens);
+            (members, desired, format!("__kv__/{}/inst{}", md.mem_key, id))
+        };
+        let mut blocks = desired;
+        for &(n, frac) in &members {
+            if frac <= 0.0 || n >= self.mem.n_nodes() {
+                continue;
+            }
+            let per_block = (geom.block_bytes as f64 * frac).ceil().max(1.0) as u64;
+            blocks = blocks.min((self.mem.gpu_headroom(n) / per_block) as usize);
+        }
+        let mut charges: Vec<(NodeId, f64, u64)> = Vec::new();
+        let mut ok = blocks > 0;
+        if ok {
+            for &(n, frac) in &members {
+                let bytes = (geom.block_bytes as f64 * frac * blocks as f64).ceil() as u64;
+                if bytes == 0 || n >= self.mem.n_nodes() {
+                    charges.push((n, frac, 0));
+                    continue;
+                }
+                if self.mem.reserve_kv(n, &key, bytes, now).is_ok() {
+                    charges.push((n, frac, bytes));
+                } else {
+                    // Headroom vanished between sizing and charging (can
+                    // only happen through rounding at the boundary): no
+                    // pool rather than a half-charged one.
+                    for &(pn, _, pb) in &charges {
+                        if pb > 0 {
+                            self.mem.release_kv(pn, &key);
+                        }
+                    }
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if !ok {
+            blocks = 0;
+            charges = members.iter().map(|&(n, f)| (n, f, 0)).collect();
+        }
+        InstKv { pool: KvPool::new(blocks), key, charges, last_util: -1.0 }
+    }
+
+    /// Hand a dying instance's KV arena back to the manager. Always runs
+    /// *before* the instance's weights are unpinned, so scale-down
+    /// releases KV first.
+    fn release_kv_pool(&mut self, kv: &InstKv) {
+        for &(n, _, bytes) in &kv.charges {
+            if bytes > 0 && n < self.mem.n_nodes() {
+                self.mem.release_kv(n, &kv.key);
+            }
+        }
+    }
+
+    /// Grow an instance's pool by `extra_blocks`, charging every member
+    /// node; rolls back and reports failure when any node lacks headroom.
+    fn try_grow_kv(&mut self, now: SimTime, m: usize, id: u64, extra_blocks: usize) -> bool {
+        let Some(geom) = self.models[m].kv_geom else { return false };
+        let (key, plan): (String, Vec<(NodeId, f64, u64, u64)>) = {
+            let inst = self.models[m].instances.get(&id).unwrap();
+            let kv = inst.kv.as_ref().unwrap();
+            let new_blocks = kv.pool.capacity() + extra_blocks;
+            let plan = kv
+                .charges
+                .iter()
+                .map(|&(n, frac, old)| {
+                    let new =
+                        (geom.block_bytes as f64 * frac * new_blocks as f64).ceil() as u64;
+                    (n, frac, old, new.max(old))
+                })
+                .collect();
+            (kv.key.clone(), plan)
+        };
+        let mut grown: Vec<(NodeId, u64, u64)> = Vec::new();
+        let mut ok = true;
+        for &(n, _, old, new) in &plan {
+            if new == old || n >= self.mem.n_nodes() {
+                continue;
+            }
+            let res = if old == 0 {
+                self.mem.reserve_kv(n, &key, new, now).map(|_| ())
+            } else {
+                self.mem.grow_pinned(n, &key, new, now).map(|_| ())
+            };
+            match res {
+                Ok(()) => grown.push((n, old, new)),
+                Err(_) => {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if !ok {
+            for &(n, old, _) in &grown {
+                if old == 0 {
+                    self.mem.release_kv(n, &key);
+                } else {
+                    // Shrinking back to a size that fit moments ago.
+                    let _ = self.mem.grow_pinned(n, &key, old, now);
+                }
+            }
+            return false;
+        }
+        let inst = self.models[m].instances.get_mut(&id).unwrap();
+        let kv = inst.kv.as_mut().unwrap();
+        kv.pool.grow(extra_blocks);
+        for c in kv.charges.iter_mut() {
+            if let Some(&(_, _, _, new)) = plan.iter().find(|p| p.0 == c.0) {
+                if new > c.2 {
+                    c.2 = new;
+                }
+            }
+        }
+        true
     }
 
     /// Pull every queued-but-not-admitted request back and re-route.
@@ -397,6 +617,11 @@ impl ServingEngine {
         let mem_key = md.mem_key.clone();
         let inst = md.instances.remove(&id).unwrap();
         md.ms.router.remove_instance(id);
+        // Scale-down ordering: the KV arena's bytes are released first,
+        // so the weights' GPU→host demotion below sees the full headroom.
+        if let Some(kv) = &inst.kv {
+            self.release_kv_pool(kv);
+        }
         for n in inst.pipe.nodes() {
             if n < self.node_state.len() {
                 self.node_state[n] = NodeUse::Free;
@@ -446,24 +671,13 @@ impl ServingEngine {
             return;
         }
         self.advance(now, m, id);
+        let changed = if self.models[m].kv_geom.is_some() {
+            self.admit_kv(now, m, id)
+        } else {
+            self.admit_fluid(now, m, id)
+        };
         let md = &mut self.models[m];
         let Some(inst) = md.instances.get_mut(&id) else { return };
-        let n = md.ms.admission.admit(now, &inst.queue, inst.active.len(), md.ms.params.max_batch);
-        let mut changed = false;
-        for p in inst.queue.admit(n) {
-            let idx = p.item;
-            let r = &md.ms.trace.requests[idx];
-            let w_prefill = r.prompt_tokens as f64 * md.prefill_ratio;
-            inst.active.push(ActiveReq {
-                idx,
-                done: 0.0,
-                w_first: w_prefill + 1.0,
-                w_total: w_prefill + r.output_tokens as f64,
-                first_emitted: false,
-                admitted: now,
-            });
-            changed = true;
-        }
         // Time-triggered admission (e.g. batching max_wait): wake up when
         // the policy's deadline passes.
         let deadline = if inst.queue.is_empty() {
@@ -481,10 +695,230 @@ impl ServingEngine {
         }
     }
 
-    // ---- processor-sharing mechanics ----------------------------------------
+    /// Legacy admission: the policy's slot count moves straight into the
+    /// processor-sharing batch (the seed engine's exact behavior).
+    fn admit_fluid(&mut self, now: SimTime, m: usize, id: u64) -> bool {
+        let md = &mut self.models[m];
+        let Some(inst) = md.instances.get_mut(&id) else { return false };
+        let n = md.ms.admission.admit(now, &inst.queue, inst.active.len(), md.ms.params.max_batch);
+        let mut changed = false;
+        for p in inst.queue.admit(n) {
+            let idx = p.item;
+            let r = &md.ms.trace.requests[idx];
+            let w_prefill = r.prompt_tokens as f64 * md.prefill_ratio;
+            inst.active.push(ActiveReq {
+                idx,
+                done: 0.0,
+                w_first: w_prefill + 1.0,
+                w_total: w_prefill + r.output_tokens as f64,
+                first_emitted: false,
+                admitted: now,
+                stall_work: w_prefill,
+                decode_base: 0,
+                kv_blocks: 0,
+                rate: 0.0,
+                decoding: false,
+            });
+            changed = true;
+        }
+        changed
+    }
 
-    /// Advance PS progress of instance `id` up to `now`, emitting tokens.
+    /// KV-gated admission: the policy grants decode slots, but a request
+    /// is seated only when its context's KV blocks are acquirable — FIFO,
+    /// one at a time, never skipping the head of the line. Blocked
+    /// requests accrue queued-on-KV time.
+    fn admit_kv(&mut self, now: SimTime, m: usize, id: u64) -> bool {
+        let Some(geom) = self.models[m].kv_geom else { return false };
+        let mut changed = false;
+        let mut slots = {
+            let md = &mut self.models[m];
+            let Some(inst) = md.instances.get_mut(&id) else { return false };
+            md.ms.admission.admit(now, &inst.queue, inst.active.len(), md.ms.params.max_batch)
+        };
+        while slots > 0 {
+            // The head of the line and the blocks its context needs.
+            let (idx, need) = {
+                let md = &self.models[m];
+                let Some(inst) = md.instances.get(&id) else { break };
+                let Some(head) = inst.queue.iter().next() else { break };
+                let idx = head.item;
+                let generated = md.preempted.get(&idx).map_or(0, |p| p.generated);
+                let ctx = md.ms.trace.requests[idx].prompt_tokens + generated;
+                (idx, geom.blocks_for(ctx))
+            };
+            if !self.kv_acquire_for_head(now, m, id, need) {
+                self.models[m].kv_blocked_since.entry(idx).or_insert(now);
+                break;
+            }
+            slots -= 1;
+            changed = true;
+            let md = &mut self.models[m];
+            let inst = md.instances.get_mut(&id).unwrap();
+            let p = inst.queue.admit(1).pop().expect("admitted head vanished");
+            debug_assert_eq!(p.item, idx);
+            let r = &md.ms.trace.requests[idx];
+            let pre = md.preempted.remove(&idx);
+            let stats = md.kv_stats.entry(idx).or_default();
+            if let Some(t0) = md.kv_blocked_since.remove(&idx) {
+                stats.wait_s += now.saturating_sub(t0).as_secs();
+            }
+            // Time-priced stalls (swap) convert to work units at the
+            // request's expected share of the post-admission batch.
+            let batch = inst.active.len() + 1;
+            let per_req_rate = (inst
+                .pipe
+                .service_rate(batch, &md.ms.params.spec, &self.cluster.compute)
+                / batch as f64)
+                .max(1e-9);
+            let (decode_base, stall_work) = match pre {
+                None => (0, r.prompt_tokens as f64 * md.prefill_ratio),
+                // Displaced by a pipeline dissolve: KV was rebuilt inside
+                // the mode-switch stall; resume decoding directly.
+                Some(PreemptedReq { generated, action: None }) => (generated, 0.0),
+                Some(pr) => {
+                    let ctx = r.prompt_tokens + pr.generated;
+                    match pr.action.unwrap() {
+                        KvVictimAction::Recompute => {
+                            // Replay prefill over prompt + generated: the
+                            // recompute cost lands in this request's latency.
+                            let w = ctx as f64 * md.prefill_ratio;
+                            stats.recompute_s += w / per_req_rate;
+                            (pr.generated, w)
+                        }
+                        KvVictimAction::SwapToHost => {
+                            let s = crate::kvcache::swap_cost_s(
+                                ctx,
+                                &md.ms.params.spec,
+                                &self.cluster.network,
+                            );
+                            stats.swap_s += s;
+                            (pr.generated, s * per_req_rate)
+                        }
+                    }
+                }
+            };
+            let first_emitted = md.first_tokens.contains_key(&idx);
+            let remaining_out = r.output_tokens.saturating_sub(decode_base) as f64;
+            inst.active.push(ActiveReq {
+                idx,
+                done: 0.0,
+                w_first: stall_work + 1.0,
+                w_total: stall_work + remaining_out,
+                first_emitted,
+                admitted: now,
+                stall_work,
+                decode_base,
+                kv_blocks: need,
+                rate: 0.0,
+                decoding: false,
+            });
+        }
+        changed
+    }
+
+    /// Acquire `need` blocks for the queue head. An idle instance whose
+    /// pool can never seat the head grows the pool from manager headroom,
+    /// or — headroom exhausted — overflows with an explicit counter
+    /// rather than wedging the line forever.
+    fn kv_acquire_for_head(&mut self, now: SimTime, m: usize, id: u64, need: usize) -> bool {
+        let must_force = {
+            let md = &mut self.models[m];
+            let Some(inst) = md.instances.get_mut(&id) else { return false };
+            let kv = inst.kv.as_mut().expect("kvcache instance without a pool");
+            if kv.pool.try_acquire(need) {
+                return true;
+            }
+            if !inst.active.is_empty() || need <= kv.pool.capacity() {
+                return false;
+            }
+            need - kv.pool.capacity()
+        };
+        if self.try_grow_kv(now, m, id, must_force) {
+            let inst = self.models[m].instances.get_mut(&id).unwrap();
+            return inst.kv.as_mut().unwrap().pool.try_acquire(need);
+        }
+        let md = &mut self.models[m];
+        let inst = md.instances.get_mut(&id).unwrap();
+        let kv = inst.kv.as_mut().unwrap();
+        let before = kv.pool.overcommit_blocks;
+        kv.pool.force_acquire(need);
+        md.ms.metrics.record_kv_overcommit(kv.pool.overcommit_blocks - before);
+        true
+    }
+
+    // ---- progress mechanics -------------------------------------------------
+
+    /// Advance instance `id` up to `now`: the legacy processor-sharing
+    /// fluid, or planned per-request iteration rates in kvcache mode.
     fn advance(&mut self, now: SimTime, m: usize, id: u64) {
+        if self.models[m].kv_geom.is_some() {
+            self.advance_kv(now, m, id);
+        } else {
+            self.advance_fluid(now, m, id);
+        }
+    }
+
+    /// Apply iteration-planned rates linearly up to `now` (kvcache mode).
+    /// Mid-iteration calls (arrivals, dissolves) see partial progress;
+    /// the boundary tick then re-plans.
+    fn advance_kv(&mut self, now: SimTime, m: usize, id: u64) {
+        let md = &mut self.models[m];
+        let Some(inst) = md.instances.get_mut(&id) else { return };
+        let dt = (now.saturating_sub(inst.last_update)).as_secs();
+        inst.last_update = now;
+        if dt <= 0.0 || inst.active.is_empty() {
+            return;
+        }
+        let mut decode_rate = 0.0;
+        for a in &mut inst.active {
+            a.done += a.rate * dt;
+            if a.decoding {
+                decode_rate += a.rate;
+            }
+            if !a.first_emitted && a.done + 1e-9 >= a.w_first {
+                a.first_emitted = true;
+                md.first_tokens.insert(a.idx, now);
+            }
+        }
+        // Only decode work emits tokens (prefill/stall work does not).
+        let mut token_accum = inst.token_accum + decode_rate * dt;
+        let emitted_tokens = token_accum as usize;
+        token_accum -= emitted_tokens as f64;
+        inst.token_accum = token_accum;
+        let mut finished: Vec<ActiveReq> = Vec::new();
+        let mut i = 0;
+        while i < inst.active.len() {
+            if inst.active[i].done + 1e-9 >= inst.active[i].w_total {
+                finished.push(inst.active.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        // Completed requests hand their KV blocks straight back.
+        if let Some(kv) = inst.kv.as_mut() {
+            for f in &finished {
+                kv.pool.release(f.kv_blocks);
+            }
+        }
+        let went_idle = inst.active.is_empty() && inst.queue.is_empty();
+        if went_idle {
+            inst.idle_since = now;
+        }
+        if emitted_tokens > 0 {
+            md.ms.metrics.record_tokens(now, emitted_tokens);
+        }
+        for f in finished {
+            self.complete_request(now, m, id, &f);
+        }
+        if went_idle {
+            self.schedule_reclaim(m, id, now);
+        }
+    }
+
+    /// Advance PS progress of instance `id` up to `now`, emitting tokens
+    /// (the seed fluid model, byte-identical when kvcache is off).
+    fn advance_fluid(&mut self, now: SimTime, m: usize, id: u64) {
         let md = &mut self.models[m];
         let Some(inst) = md.instances.get_mut(&id) else { return };
         let dt = (now.saturating_sub(inst.last_update)).as_secs();
@@ -535,12 +969,19 @@ impl ServingEngine {
         let md = &mut self.models[m];
         let r = &md.ms.trace.requests[a.idx];
         let first = md.first_tokens.get(&a.idx).copied().unwrap_or(now);
+        let kv = md.kv_stats.remove(&a.idx).unwrap_or_default();
+        md.preempted.remove(&a.idx);
+        md.kv_blocked_since.remove(&a.idx);
         md.ms.metrics.record_request(RequestMetrics {
             id: r.id,
             arrival: r.arrival,
             first_token: first,
             completion: now,
             output_tokens: r.output_tokens,
+            kv_wait_s: kv.wait_s,
+            kv_preemptions: kv.preemptions,
+            kv_recompute_s: kv.recompute_s,
+            kv_swap_s: kv.swap_s,
         });
         md.ms.router.complete(inst_id);
         md.req_inst.remove(&a.idx);
@@ -548,9 +989,56 @@ impl ServingEngine {
         self.try_admit(now, m, inst_id);
     }
 
-    /// Schedule the next progress event: earliest threshold crossing or a
-    /// coarse tick for throughput sampling.
+    /// Schedule the next progress event. Legacy: earliest threshold
+    /// crossing or a coarse tick. kvcache mode: the next iteration
+    /// boundary, with per-request rates from the planned budgets.
     fn reschedule(&mut self, now: SimTime, m: usize, id: u64) {
+        if self.models[m].kv_geom.is_some() {
+            self.plan_kv_iteration(now, m, id);
+        } else {
+            self.reschedule_fluid(now, m, id);
+        }
+    }
+
+    /// Plan one iteration (kvcache mode): every decode-phase request gets
+    /// one token, prefill-phase requests share the chunked-prefill budget
+    /// FIFO, and the iteration's wall time prices the planned work at the
+    /// pipeline's service rate.
+    fn plan_kv_iteration(&mut self, now: SimTime, m: usize, id: u64) {
+        let md = &mut self.models[m];
+        let Some(inst) = md.instances.get_mut(&id) else { return };
+        inst.version += 1;
+        let ver = inst.version;
+        if inst.active.is_empty() {
+            return;
+        }
+        let views: Vec<ReqView> = inst
+            .active
+            .iter()
+            .map(|a| ReqView {
+                remaining_stall: (a.stall_work - a.done).max(0.0),
+                remaining_total: (a.w_total - a.done).max(0.0),
+                admitted: a.admitted,
+                idx: a.idx,
+            })
+            .collect();
+        let plan = md.kv_sched.plan(&views);
+        let rate_total = inst
+            .pipe
+            .service_rate(inst.active.len(), &md.ms.params.spec, &self.cluster.compute)
+            .max(1e-9);
+        let iter_s = (plan.total_work / rate_total).max(1e-6);
+        for (a, (w, dec)) in
+            inst.active.iter_mut().zip(plan.work.iter().zip(plan.decoding.iter()))
+        {
+            a.rate = w / iter_s;
+            a.decoding = *dec;
+        }
+        self.q.push(now + SimTime::from_secs(iter_s), Ev::InstTick(m, id, ver));
+    }
+
+    /// Legacy threshold-crossing scheduler (seed behavior).
+    fn reschedule_fluid(&mut self, now: SimTime, m: usize, id: u64) {
         let md = &mut self.models[m];
         let Some(inst) = md.instances.get_mut(&id) else { return };
         inst.version += 1;
@@ -580,8 +1068,123 @@ impl ServingEngine {
             }
         }
         self.advance(now, m, id);
+        if self.models[m].kv_geom.is_some() {
+            // Iteration boundary: grow KV for the tokens just generated,
+            // preempting the youngest under pressure, then sample the pool.
+            self.kv_enforce(now, m, id);
+            let md = &mut self.models[m];
+            if let Some(inst) = md.instances.get_mut(&id) {
+                if let Some(kv) = inst.kv.as_mut() {
+                    let util = kv.pool.utilization();
+                    if (util - kv.last_util).abs() > 1e-9 {
+                        kv.last_util = util;
+                        md.ms.metrics.record_kv_util(now, id, util);
+                    }
+                }
+            }
+        }
         self.try_admit(now, m, id);
         self.reschedule(now, m, id);
+    }
+
+    /// Make every active request's KV holdings match its context, growing
+    /// from the pool and preempting the youngest request when it runs
+    /// dry. The sole survivor overflows with an explicit counter instead
+    /// of preempting itself forever.
+    fn kv_enforce(&mut self, now: SimTime, m: usize, id: u64) {
+        let Some(geom) = self.models[m].kv_geom else { return };
+        loop {
+            let (pos, deficit) = {
+                let md = &self.models[m];
+                let Some(inst) = md.instances.get(&id) else { return };
+                if inst.kv.is_none() {
+                    return;
+                }
+                let mut found = None;
+                for (i, a) in inst.active.iter().enumerate() {
+                    let ctx = md.ms.trace.requests[a.idx].prompt_tokens + a.generated();
+                    let need = geom.blocks_for(ctx);
+                    if need > a.kv_blocks {
+                        found = Some((i, need - a.kv_blocks));
+                        break;
+                    }
+                }
+                match found {
+                    Some(f) => f,
+                    None => return,
+                }
+            };
+            {
+                let md = &mut self.models[m];
+                let inst = md.instances.get_mut(&id).unwrap();
+                let kv = inst.kv.as_mut().unwrap();
+                if kv.pool.try_acquire(deficit) {
+                    inst.active[pos].kv_blocks += deficit;
+                    continue;
+                }
+                if inst.active.len() == 1 {
+                    // Record only what actually lands beyond capacity
+                    // (part of the deficit may fit in remaining free).
+                    let before = kv.pool.overcommit_blocks;
+                    kv.pool.force_acquire(deficit);
+                    inst.active[pos].kv_blocks += deficit;
+                    md.ms.metrics.record_kv_overcommit(kv.pool.overcommit_blocks - before);
+                    continue;
+                }
+            }
+            // The youngest request yields its blocks; its KV is rebuilt
+            // on resume per the model's KvSwitch policy.
+            let victim = {
+                let inst = self.models[m].instances.get(&id).unwrap();
+                let order: Vec<(SimTime, usize)> =
+                    inst.active.iter().map(|a| (a.admitted, a.idx)).collect();
+                ContinuousScheduler::youngest(&order).unwrap()
+            };
+            self.preempt(now, m, id, victim);
+        }
+    }
+
+    /// Preempt `pos`: release its KV, pick the rebuild action, and put it
+    /// back at the head of this instance's waiting queue (LIFO resume).
+    fn preempt(&mut self, now: SimTime, m: usize, id: u64, pos: usize) {
+        let md = &mut self.models[m];
+        let inst = md.instances.get_mut(&id).unwrap();
+        let a = inst.active.remove(pos);
+        if let Some(kv) = inst.kv.as_mut() {
+            kv.pool.release(a.kv_blocks);
+        }
+        // The fraction of an in-progress decode token already flowed into
+        // the emission accumulator but is not preserved in `generated` —
+        // take it back out so the re-decode after resume is not counted
+        // twice. (The accumulator may dip below zero; it nets out against
+        // future decode work before anything is emitted.)
+        let progressed = (a.done - a.stall_work).max(0.0);
+        let frac = (progressed - (progressed + 1e-9).floor()).max(0.0);
+        inst.token_accum -= frac;
+        let r = &md.ms.trace.requests[a.idx];
+        let generated = a.generated().min(r.output_tokens);
+        let ctx = r.prompt_tokens + generated;
+        // A victim still inside its stall (prefill or a rebuild replay)
+        // holds only *partial* KV — there is nothing complete to swap, so
+        // it must resume by recomputation regardless of policy. Victims
+        // with finished stalls hold KV for exactly `ctx` tokens, which is
+        // what the policy's cost comparison (and any swap) is priced on.
+        let action = if a.done + 1e-9 < a.stall_work {
+            KvVictimAction::Recompute
+        } else {
+            md.ms.kv_switch.choose(
+                ctx,
+                &md.ms.params.spec,
+                &self.cluster.compute,
+                &self.cluster.network,
+            )
+        };
+        md.preempted.insert(a.idx, PreemptedReq { generated, action: Some(action) });
+        md.kv_stats.entry(a.idx).or_default().preemptions += 1;
+        md.ms.metrics.record_kv_preemption(action == KvVictimAction::SwapToHost);
+        // Original arrival keeps the head-of-line clock honest.
+        inst.queue.push_front(a.idx, r.arrival);
+        md.kv_blocked_since.entry(a.idx).or_insert(now);
     }
 
     // ---- scaling -------------------------------------------------------------
@@ -803,20 +1406,36 @@ impl ServingEngine {
         let _ = outstanding;
         // Mode switch: redistribute in-flight + queued requests with the KV
         // rebuild stall.
+        let kv_mode = md.kv_geom.is_some();
         let mut to_reroute: Vec<usize> = inst.queue.iter().map(|p| p.item).collect();
         let mut in_flight: Vec<(u64, usize)> = Vec::new();
         for a in &inst.active {
             let r = &md.ms.trace.requests[a.idx];
-            let ctx = r.prompt_tokens + a.done.floor() as usize;
+            // kvcache mode tracks real generated tokens; the fluid model
+            // approximates context with raw work units (seed behavior).
+            let ctx = if kv_mode {
+                let generated = a.generated().min(r.output_tokens);
+                // The mode-switch stall below prices rebuilding this
+                // request's KV, so it resumes with its progress intact and
+                // owes no further per-request stall (`action: None`) —
+                // already-emitted tokens are never decoded (or counted)
+                // twice.
+                md.preempted.insert(a.idx, PreemptedReq { generated, action: None });
+                r.prompt_tokens + generated
+            } else {
+                r.prompt_tokens + a.done.floor() as usize
+            };
             in_flight.push((r.id, ctx));
             to_reroute.push(a.idx);
         }
         for idx in &to_reroute {
             md.req_inst.remove(idx);
         }
-        let stall = plan_switch(
+        // Mode-switch stall priced from the pipeline's actual per-stage
+        // KV shard bytes (uneven stages ship uneven shards).
+        let stall = plan_switch_pipeline(
             &in_flight,
-            &inst.pipe.nodes(),
+            &inst.pipe,
             &md.ms.params.spec,
             &self.cluster.compute,
             &self.cluster.network,
@@ -824,6 +1443,10 @@ impl ServingEngine {
         )
         .stall_s;
         let mem_key = md.mem_key.clone();
+        // KV shards die with the pipeline (before any weight accounting).
+        if let Some(kv) = &inst.kv {
+            self.release_kv_pool(kv);
+        }
         // A dissolving pipeline's nodes are mid-mode-switch: nothing
         // serveable there until their local replicas spawn, so they must
         // not linger as multicast sources. (No-op for real multi-stage

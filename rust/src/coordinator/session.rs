@@ -43,6 +43,7 @@ use super::router::Router;
 use super::scaling::SystemKind;
 use super::serving::ServingConfig;
 use crate::config::ClusterConfig;
+use crate::kvcache::{AdaptiveKvSwitch, KvSwitchPolicy};
 use crate::metrics::MetricsCollector;
 use crate::model::ModelSpec;
 use crate::pipeline::mode_switch::SwitchStrategy;
@@ -91,6 +92,8 @@ pub struct ModelSession {
     pub(crate) backend: Box<dyn ScalingBackend>,
     pub(crate) router: Router,
     pub(crate) admission: Box<dyn AdmissionPolicy>,
+    /// Rebuild policy for KV-pressure preemption victims (kvcache mode).
+    pub(crate) kv_switch: Box<dyn KvSwitchPolicy>,
     pub(crate) trace: Trace,
     pub(crate) metrics: MetricsCollector,
 }
@@ -102,6 +105,7 @@ impl ModelSession {
             backend: SystemKind::LambdaScale { k: 1 }.backend(),
             router: Router::new(),
             admission: Box::new(ImmediateAdmission),
+            kv_switch: Box::new(AdaptiveKvSwitch),
             trace: Trace::default(),
             metrics: MetricsCollector::new(),
         }
@@ -186,6 +190,29 @@ impl ServingSessionBuilder {
     /// Admission policy (default: immediate continuous batching).
     pub fn admission(mut self, policy: Box<dyn AdmissionPolicy>) -> Self {
         self.current().admission = policy;
+        self
+    }
+
+    /// KV preemption-rebuild policy for this model (default:
+    /// [`AdaptiveKvSwitch`] — cheaper of recompute vs. host swap). Only
+    /// consulted when the kvcache subsystem is on.
+    pub fn kv_switch(mut self, policy: Box<dyn KvSwitchPolicy>) -> Self {
+        self.current().kv_switch = policy;
+        self
+    }
+
+    /// Enable the paged-KV subsystem cluster-wide: tokens per KV block
+    /// (0 = legacy fluid model, the default). Cluster-scoped: call after
+    /// `.cluster(..)` — replacing the cluster resets it.
+    pub fn kv_block_tokens(mut self, tokens: usize) -> Self {
+        self.cluster.kv.block_tokens = tokens;
+        self
+    }
+
+    /// Context cap (tokens) a per-instance KV pool provisions for.
+    /// Cluster-scoped; call after `.cluster(..)`.
+    pub fn kv_max_ctx_tokens(mut self, tokens: usize) -> Self {
+        self.cluster.kv.max_ctx_tokens = tokens;
         self
     }
 

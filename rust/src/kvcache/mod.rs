@@ -1,0 +1,105 @@
+//! Paged KV-cache residency and iteration-level continuous batching.
+//!
+//! The serving engine's seed model treats decode as a processor-sharing
+//! fluid and keeps KV/activations outside the managed memory budget, so
+//! GPU memory pressure — the thing that actually bounds batch size and
+//! forces preemption (ServerlessLLM, arXiv 2401.14351; DeepServe, arXiv
+//! 2501.14417) — is invisible. This subsystem makes it real:
+//!
+//! * [`KvGeometry`] — block geometry derived from the model spec: a block
+//!   holds `block_tokens` tokens of per-layer K/V bytes
+//!   ([`crate::pipeline::mode_switch::kv_bytes_per_token`]).
+//! * [`KvPool`] — a per-instance paged block allocator whose bytes are
+//!   charged against `NodeConfig::gpu_capacity_bytes` through the
+//!   [`crate::memory::MemoryManager`], so KV genuinely competes with
+//!   pinned model weights for the same per-node byte budget.
+//! * [`ContinuousScheduler`] — iteration-level scheduling: per iteration,
+//!   every decode-phase request generates one token and prefill-phase
+//!   requests share a bounded chunked-prefill token budget (Orca-style
+//!   iteration scheduling with Sarathi-style chunking).
+//! * [`KvSwitchPolicy`] — what happens to a preempted request's KV:
+//!   recompute it from the already-generated tokens (λScale's §4.4 choice
+//!   for mode switches, applied to preemption) or swap it to host memory
+//!   at host-bandwidth cost.
+//!
+//! The whole subsystem is off by default: `kv_block_tokens = 0`
+//! ([`crate::config::KvCacheConfig`]) keeps the legacy fluid model and
+//! the seed figures bit-identical.
+
+pub mod pool;
+pub mod sched;
+pub mod switch;
+
+pub use pool::KvPool;
+pub use sched::{ContinuousScheduler, IterationPlan, ReqView};
+pub use switch::{
+    swap_cost_s, AdaptiveKvSwitch, AlwaysRecompute, AlwaysSwapToHost, KvSwitchPolicy,
+    KvVictimAction,
+};
+
+use crate::model::ModelSpec;
+use crate::pipeline::mode_switch::kv_bytes_per_token;
+
+/// KV block geometry for one model: `block_tokens` tokens of full-depth
+/// K/V per block. Pipeline stages hold only their layer range's shard of
+/// each block; [`crate::pipeline::execution::ExecPipeline::kv_shard_bytes`]
+/// gives the per-stage split.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KvGeometry {
+    /// Tokens of context one block holds.
+    pub block_tokens: usize,
+    /// Bytes of one block across all layers.
+    pub block_bytes: u64,
+}
+
+impl KvGeometry {
+    /// Geometry for `spec`, or `None` when the subsystem is disabled
+    /// (`block_tokens == 0`, the legacy default).
+    pub fn for_model(spec: &ModelSpec, block_tokens: usize) -> Option<KvGeometry> {
+        if block_tokens == 0 {
+            return None;
+        }
+        let block_bytes = (block_tokens as f64 * kv_bytes_per_token(spec)).ceil() as u64;
+        Some(KvGeometry { block_tokens, block_bytes: block_bytes.max(1) })
+    }
+
+    /// Blocks needed to hold `tokens` of context. Never zero: even an
+    /// empty prompt owns one block for its first decode step.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.max(1).div_ceil(self.block_tokens)
+    }
+
+    pub fn bytes_for(&self, blocks: usize) -> u64 {
+        blocks as u64 * self.block_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_block_tokens_disables() {
+        assert!(KvGeometry::for_model(&ModelSpec::llama2_13b(), 0).is_none());
+    }
+
+    #[test]
+    fn geometry_matches_kv_bytes() {
+        let spec = ModelSpec::llama2_13b();
+        let g = KvGeometry::for_model(&spec, 16).unwrap();
+        // ~0.83 MB/token for 13B ⇒ a 16-token block lands near 13 MB.
+        assert!(g.block_bytes > 4_000_000 && g.block_bytes < 48_000_000, "{}", g.block_bytes);
+        assert_eq!(g.blocks_for(1), 1);
+        assert_eq!(g.blocks_for(16), 1);
+        assert_eq!(g.blocks_for(17), 2);
+        assert_eq!(g.blocks_for(0), 1, "an admitted request always owns a block");
+        assert_eq!(g.bytes_for(3), 3 * g.block_bytes);
+    }
+
+    #[test]
+    fn bigger_models_need_bigger_blocks() {
+        let small = KvGeometry::for_model(&ModelSpec::llama2_7b(), 16).unwrap();
+        let big = KvGeometry::for_model(&ModelSpec::llama2_70b(), 16).unwrap();
+        assert!(big.block_bytes > small.block_bytes);
+    }
+}

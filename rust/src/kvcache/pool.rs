@@ -1,0 +1,134 @@
+//! Per-instance paged KV block pool.
+//!
+//! The pool itself is a block *counter* — every KV block of one instance
+//! is interchangeable, so there is no per-block identity to track (unlike
+//! the transfer-layer [`crate::memory::BlockPool`], whose slab ids model
+//! reuse). What matters is exact accounting: acquisition fails cleanly on
+//! exhaustion, growth is explicit (the serving engine charges the
+//! [`crate::memory::MemoryManager`] before calling [`KvPool::grow`]), and
+//! the only way past capacity is [`KvPool::force_acquire`], which records
+//! the overflow instead of hiding it.
+
+/// A counted pool of identical KV blocks.
+#[derive(Clone, Debug)]
+pub struct KvPool {
+    capacity: usize,
+    used: usize,
+    /// High-water mark of `used` (utilization reporting).
+    pub peak_used: usize,
+    /// Blocks handed out beyond capacity via [`KvPool::force_acquire`].
+    pub overcommit_blocks: u64,
+}
+
+impl KvPool {
+    pub fn new(capacity: usize) -> Self {
+        KvPool { capacity, used: 0, peak_used: 0, overcommit_blocks: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    /// Blocks still available (zero while overcommitted).
+    pub fn free(&self) -> usize {
+        self.capacity.saturating_sub(self.used)
+    }
+
+    /// Acquire `n` blocks, or fail cleanly without acquiring any.
+    pub fn try_acquire(&mut self, n: usize) -> bool {
+        if n > self.free() {
+            return false;
+        }
+        self.used += n;
+        self.peak_used = self.peak_used.max(self.used);
+        true
+    }
+
+    /// Acquire `n` blocks unconditionally, recording any overflow past
+    /// capacity. Used only to keep the sole resident request progressing
+    /// when the manager has no headroom left — never silently.
+    pub fn force_acquire(&mut self, n: usize) {
+        let before = self.used.max(self.capacity);
+        self.used += n;
+        self.overcommit_blocks += (self.used.max(self.capacity) - before) as u64;
+        self.peak_used = self.peak_used.max(self.used);
+    }
+
+    /// Return `n` blocks to the pool.
+    pub fn release(&mut self, n: usize) {
+        debug_assert!(n <= self.used, "released {n} blocks with only {} in use", self.used);
+        self.used = self.used.saturating_sub(n);
+    }
+
+    /// Extend capacity by `n` blocks (caller has already charged the
+    /// memory manager for the bytes).
+    pub fn grow(&mut self, n: usize) {
+        self.capacity += n;
+    }
+
+    /// Fraction of capacity in use, clamped to 1.0 while overcommitted.
+    pub fn utilization(&self) -> f64 {
+        if self.capacity == 0 {
+            return if self.used > 0 { 1.0 } else { 0.0 };
+        }
+        (self.used as f64 / self.capacity as f64).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_accounting() {
+        let mut p = KvPool::new(10);
+        assert!(p.try_acquire(4));
+        assert!(p.try_acquire(6));
+        assert_eq!(p.free(), 0);
+        assert!(!p.try_acquire(1), "exhausted pool must refuse");
+        assert_eq!(p.used(), 10, "failed acquire must not leak blocks");
+        p.release(4);
+        assert!(p.try_acquire(3));
+        assert_eq!(p.used(), 9);
+        assert_eq!(p.peak_used, 10);
+        assert_eq!(p.overcommit_blocks, 0);
+    }
+
+    #[test]
+    fn grow_extends_capacity() {
+        let mut p = KvPool::new(2);
+        assert!(!p.try_acquire(3));
+        p.grow(4);
+        assert_eq!(p.capacity(), 6);
+        assert!(p.try_acquire(3));
+    }
+
+    #[test]
+    fn force_acquire_counts_overflow() {
+        let mut p = KvPool::new(3);
+        assert!(p.try_acquire(3));
+        p.force_acquire(2);
+        assert_eq!(p.used(), 5);
+        assert_eq!(p.overcommit_blocks, 2);
+        assert_eq!(p.free(), 0);
+        assert!((p.utilization() - 1.0).abs() < 1e-12);
+        p.release(5);
+        assert_eq!(p.used(), 0);
+        // Overflow history is cumulative, not a live balance.
+        assert_eq!(p.overcommit_blocks, 2);
+    }
+
+    #[test]
+    fn zero_capacity_pool() {
+        let mut p = KvPool::new(0);
+        assert!(!p.try_acquire(1));
+        assert_eq!(p.utilization(), 0.0);
+        p.force_acquire(1);
+        assert_eq!(p.overcommit_blocks, 1);
+        assert_eq!(p.utilization(), 1.0);
+    }
+}

@@ -1,0 +1,183 @@
+//! Iteration-level continuous batching (Orca-style scheduling with
+//! Sarathi-style chunked prefill).
+//!
+//! One *iteration* is one model step: every decode-phase request
+//! generates exactly one token, and prefill-phase requests (including
+//! post-preemption recompute/swap stalls, which are prefill-shaped work)
+//! share a bounded prefill budget, allocated FIFO so the head of the
+//! line always progresses. The serving engine converts the planned work
+//! units into wall time with the pipeline's service rate, so the §4.3
+//! performance model still prices every token.
+//!
+//! Work units are the engine's currency: one decode token = 1 unit, one
+//! prompt token = `prefill_ratio` units.
+
+use crate::sim::time::SimTime;
+
+/// The scheduler's view of one active request.
+#[derive(Clone, Copy, Debug)]
+pub struct ReqView {
+    /// Stall (prefill/recompute/swap) work units left before decode.
+    pub remaining_stall: f64,
+    /// Total work units left until completion.
+    pub remaining_total: f64,
+    /// When the request entered its decode slot (FIFO order for the
+    /// prefill budget; ties broken by `idx`).
+    pub admitted: SimTime,
+    /// Trace index (deterministic tie-break).
+    pub idx: usize,
+}
+
+const EPS: f64 = 1e-9;
+
+impl ReqView {
+    /// Prefill complete — this iteration generates a token.
+    pub fn is_decoding(&self) -> bool {
+        self.remaining_stall <= EPS
+    }
+}
+
+/// Planned work for one iteration, parallel to the input slice.
+#[derive(Clone, Debug)]
+pub struct IterationPlan {
+    /// Work units each request executes this iteration (0 = waits).
+    pub work: Vec<f64>,
+    /// Whether each request's work is decode (token-emitting) work.
+    pub decoding: Vec<bool>,
+    /// Total work units this iteration executes.
+    pub total_work: f64,
+}
+
+/// Iteration-level scheduler: fixed prefill/decode token budgets per
+/// iteration for one serving instance.
+#[derive(Clone, Copy, Debug)]
+pub struct ContinuousScheduler {
+    /// Work units per prompt token (relative to one decode token).
+    pub prefill_ratio: f64,
+    /// Prompt tokens of prefill work admitted per iteration.
+    pub prefill_budget_tokens: f64,
+}
+
+impl ContinuousScheduler {
+    pub fn new(prefill_ratio: f64, prefill_budget_tokens: f64) -> Self {
+        ContinuousScheduler {
+            prefill_ratio: prefill_ratio.max(EPS),
+            prefill_budget_tokens: prefill_budget_tokens.max(1.0),
+        }
+    }
+
+    /// Plan one iteration over the active requests. Guarantees progress:
+    /// if `reqs` is non-empty, `total_work > 0` (every decoding request
+    /// advances one token; the FIFO-first prefilling request always gets
+    /// a chunk).
+    pub fn plan(&self, reqs: &[ReqView]) -> IterationPlan {
+        let n = reqs.len();
+        let mut work = vec![0.0; n];
+        let mut decoding = vec![false; n];
+        for (i, r) in reqs.iter().enumerate() {
+            if r.is_decoding() {
+                decoding[i] = true;
+                // One token, or less if the request is about to finish.
+                work[i] = r.remaining_total.clamp(0.0, 1.0);
+            }
+        }
+        // Chunked prefill: FIFO by (admitted, idx) within the budget.
+        let mut order: Vec<usize> = (0..n).filter(|&i| !decoding[i]).collect();
+        order.sort_by_key(|&i| (reqs[i].admitted, reqs[i].idx));
+        let mut budget = self.prefill_budget_tokens * self.prefill_ratio;
+        for i in order {
+            if budget <= EPS {
+                break;
+            }
+            let w = reqs[i].remaining_stall.min(budget);
+            work[i] = w;
+            budget -= w;
+        }
+        let total_work = work.iter().sum();
+        IterationPlan { work, decoding, total_work }
+    }
+
+    /// The preemption victim under KV pressure: the youngest request —
+    /// latest `(admitted, idx)`, ties to the highest trace index. Takes
+    /// the bare ordering keys so callers need not build full views;
+    /// returns the victim's position in `order`.
+    pub fn youngest(order: &[(SimTime, usize)]) -> Option<usize> {
+        order.iter().enumerate().max_by_key(|(_, &key)| key).map(|(i, _)| i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: f64) -> SimTime {
+        SimTime::from_secs(s)
+    }
+
+    fn decode(idx: usize, remaining: f64, at: f64) -> ReqView {
+        ReqView { remaining_stall: 0.0, remaining_total: remaining, admitted: t(at), idx }
+    }
+
+    fn prefill(idx: usize, stall: f64, total: f64, at: f64) -> ReqView {
+        ReqView { remaining_stall: stall, remaining_total: total, admitted: t(at), idx }
+    }
+
+    #[test]
+    fn every_decoder_gets_one_token() {
+        let s = ContinuousScheduler::new(0.01, 512.0);
+        let reqs = vec![decode(0, 10.0, 0.0), decode(1, 0.4, 0.1), decode(2, 30.0, 0.2)];
+        let p = s.plan(&reqs);
+        assert_eq!(p.work, vec![1.0, 0.4, 1.0]);
+        assert!(p.decoding.iter().all(|&d| d));
+        assert!((p.total_work - 2.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefill_budget_is_chunked_fifo() {
+        let ratio = 0.01;
+        let s = ContinuousScheduler::new(ratio, 100.0); // 1.0 work units/iter
+        // Head needs 2.5 units of prefill: three iterations' worth.
+        let reqs =
+            vec![prefill(0, 2.5, 66.5, 0.0), prefill(1, 1.0, 65.0, 0.1), decode(2, 5.0, 0.2)];
+        let p = s.plan(&reqs);
+        assert!((p.work[0] - 1.0).abs() < 1e-12, "head takes the whole budget");
+        assert_eq!(p.work[1], 0.0, "second prefiller waits its turn");
+        assert_eq!(p.work[2], 1.0, "decode is never starved by prefill");
+        assert!(!p.decoding[0] && p.decoding[2]);
+    }
+
+    #[test]
+    fn budget_spreads_to_later_prefills() {
+        let s = ContinuousScheduler::new(0.01, 100.0);
+        let reqs = vec![prefill(0, 0.3, 64.3, 0.0), prefill(1, 2.0, 66.0, 0.1)];
+        let p = s.plan(&reqs);
+        assert!((p.work[0] - 0.3).abs() < 1e-12);
+        assert!((p.work[1] - 0.7).abs() < 1e-12, "leftover budget flows to the next in line");
+    }
+
+    #[test]
+    fn head_always_progresses() {
+        // Budget smaller than the head's stall: it still gets a chunk.
+        let s = ContinuousScheduler::new(1.0, 1.0);
+        let reqs = vec![prefill(7, 500.0, 564.0, 0.0)];
+        let p = s.plan(&reqs);
+        assert!(p.total_work > 0.0);
+        assert!((p.work[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_plan_is_empty() {
+        let s = ContinuousScheduler::new(0.01, 512.0);
+        let p = s.plan(&[]);
+        assert_eq!(p.total_work, 0.0);
+        assert!(p.work.is_empty());
+    }
+
+    #[test]
+    fn youngest_by_admission_then_idx() {
+        let order = vec![(t(0.0), 3), (t(0.5), 1), (t(0.5), 2)];
+        // Latest admitted wins; the 0.5s tie breaks to the higher idx.
+        assert_eq!(ContinuousScheduler::youngest(&order), Some(2));
+        assert_eq!(ContinuousScheduler::youngest(&[]), None);
+    }
+}

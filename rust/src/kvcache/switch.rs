@@ -1,0 +1,151 @@
+//! `KvSwitch` — what happens to a preempted request's KV cache.
+//!
+//! λScale's §4.4 mode switch faces the same trade-off at scale-in:
+//! rebuild KV state by recomputation, or move the bytes. Preemption under
+//! KV pressure is the per-request version of that decision, so the policy
+//! is pluggable along the same axis:
+//!
+//! * [`AlwaysRecompute`] — drop the KV, replay prefill over
+//!   prompt + generated tokens on resume (no memory traffic, costs
+//!   compute; λScale's production choice for mode switches).
+//! * [`AlwaysSwapToHost`] — stream the KV to host memory and back at
+//!   host-link bandwidth (no recompute, costs two transfers; the
+//!   vLLM-style swap path).
+//! * [`AdaptiveKvSwitch`] — whichever the cost models price cheaper for
+//!   this request's context (the default).
+
+use crate::config::{ComputeConfig, NetworkConfig};
+use crate::model::ModelSpec;
+use crate::pipeline::mode_switch::{kv_bytes_per_token, recompute_cost_s};
+
+/// How a preemption victim's KV state is rebuilt on resume.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvVictimAction {
+    /// Drop the KV; replay prefill over prompt + generated tokens.
+    Recompute,
+    /// Swap the KV to host memory; swap it back in on resume.
+    SwapToHost,
+}
+
+/// Round-trip cost of swapping `ctx_tokens` of KV to host memory and
+/// back (GPU↔host over `hostmem_gbps`, both directions).
+pub fn swap_cost_s(ctx_tokens: usize, spec: &ModelSpec, net: &NetworkConfig) -> f64 {
+    2.0 * ctx_tokens as f64 * kv_bytes_per_token(spec) / 1e9 / net.hostmem_gbps.max(1e-9)
+}
+
+/// Pluggable preemption-rebuild policy.
+pub trait KvSwitchPolicy {
+    fn name(&self) -> &'static str;
+
+    /// Pick the rebuild action for a victim holding `ctx_tokens`
+    /// (prompt + generated) of KV. Must be deterministic.
+    fn choose(
+        &self,
+        ctx_tokens: usize,
+        spec: &ModelSpec,
+        compute: &ComputeConfig,
+        net: &NetworkConfig,
+    ) -> KvVictimAction;
+}
+
+/// Always replay prefill (λScale §4.4 applied to preemption).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AlwaysRecompute;
+
+impl KvSwitchPolicy for AlwaysRecompute {
+    fn name(&self) -> &'static str {
+        "recompute"
+    }
+
+    fn choose(
+        &self,
+        _: usize,
+        _: &ModelSpec,
+        _: &ComputeConfig,
+        _: &NetworkConfig,
+    ) -> KvVictimAction {
+        KvVictimAction::Recompute
+    }
+}
+
+/// Always swap to host memory.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AlwaysSwapToHost;
+
+impl KvSwitchPolicy for AlwaysSwapToHost {
+    fn name(&self) -> &'static str {
+        "swap-to-host"
+    }
+
+    fn choose(
+        &self,
+        _: usize,
+        _: &ModelSpec,
+        _: &ComputeConfig,
+        _: &NetworkConfig,
+    ) -> KvVictimAction {
+        KvVictimAction::SwapToHost
+    }
+}
+
+/// Cost-model arbitration: recompute vs. round-trip swap, ties to
+/// recompute (no cross-tier traffic).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdaptiveKvSwitch;
+
+impl KvSwitchPolicy for AdaptiveKvSwitch {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn choose(
+        &self,
+        ctx_tokens: usize,
+        spec: &ModelSpec,
+        compute: &ComputeConfig,
+        net: &NetworkConfig,
+    ) -> KvVictimAction {
+        if recompute_cost_s(ctx_tokens, spec, compute) <= swap_cost_s(ctx_tokens, spec, net) {
+            KvVictimAction::Recompute
+        } else {
+            KvVictimAction::SwapToHost
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (ModelSpec, ComputeConfig, NetworkConfig) {
+        (ModelSpec::llama2_13b(), ComputeConfig::default(), NetworkConfig::default())
+    }
+
+    #[test]
+    fn fixed_policies_ignore_costs() {
+        let (m, c, n) = setup();
+        assert_eq!(AlwaysRecompute.choose(1_000_000, &m, &c, &n), KvVictimAction::Recompute);
+        assert_eq!(AlwaysSwapToHost.choose(1, &m, &c, &n), KvVictimAction::SwapToHost);
+    }
+
+    #[test]
+    fn swap_cost_scales_with_context_and_bandwidth() {
+        let (m, _, mut n) = setup();
+        assert!(swap_cost_s(1000, &m, &n) > swap_cost_s(10, &m, &n));
+        let slow = swap_cost_s(500, &m, &n);
+        n.hostmem_gbps *= 4.0;
+        assert!(swap_cost_s(500, &m, &n) < slow);
+    }
+
+    #[test]
+    fn adaptive_follows_the_cheaper_cost() {
+        let (m, mut c, mut n) = setup();
+        // Make compute nearly free: recompute must win.
+        c.gpu_tflops = 1e9;
+        assert_eq!(AdaptiveKvSwitch.choose(512, &m, &c, &n), KvVictimAction::Recompute);
+        // Make compute glacial and the host link fast: swap must win.
+        c.gpu_tflops = 1e-3;
+        n.hostmem_gbps = 1e6;
+        assert_eq!(AdaptiveKvSwitch.choose(512, &m, &c, &n), KvVictimAction::SwapToHost);
+    }
+}

@@ -22,6 +22,9 @@
 //! * [`pipeline`] — execution-pipeline generation (Algorithm 2), 2D
 //!   pipelined decode, mode switching with KV recomputation.
 //! * [`memory`] — GPU/host/SSD tier manager, LRU keep-alive, pre-allocation.
+//! * [`kvcache`] — paged KV residency (block pools charged against the
+//!   managed GPU budget) + iteration-level continuous batching with
+//!   pluggable recompute-vs-swap preemption; off when `kv_block_tokens = 0`.
 //! * [`coordinator`] — the trait-based serving stack: a policy-free
 //!   multi-model [`coordinator::engine::ServingEngine`] driven through the
 //!   builder-style [`coordinator::session::ServingSession`] API, with
@@ -38,6 +41,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod figures;
+pub mod kvcache;
 pub mod memory;
 pub mod metrics;
 pub mod model;

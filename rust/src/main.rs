@@ -3,8 +3,11 @@
 //! ```text
 //! lambda-scale figures [--only figNN]      regenerate paper figures
 //! lambda-scale session [--requests N] [--gpu-cap GB] [--host-cap GB]
+//!                      [--kv-block-tokens B]
 //!                                          two-tenant ServingSession demo
 //!                                          (caps bound the shared MemoryManager)
+//! lambda-scale bench [--out FILE] [--requests N] [--seed S]
+//!                    [--kv-block-tokens B] serving perf snapshot → BENCH_serving.json
 //! lambda-scale trace-gen --out FILE        emit a BurstGPT-like CSV trace
 //! lambda-scale serve [--artifacts DIR]     serve a demo generation on real PJRT
 //! lambda-scale info                        print testbed presets + model zoo
@@ -92,8 +95,11 @@ fn main() {
             let n: usize = flag("--requests").and_then(|s| s.parse().ok()).unwrap_or(80);
             let gpu_cap_gb: Option<f64> = flag("--gpu-cap").and_then(|s| s.parse().ok());
             let host_cap_gb: Option<f64> = flag("--host-cap").and_then(|s| s.parse().ok());
+            let kv_block_tokens: usize =
+                flag("--kv-block-tokens").and_then(|s| s.parse().ok()).unwrap_or(0);
             let mut cluster = ClusterConfig::testbed1();
             cluster.n_nodes = 12;
+            cluster.kv.block_tokens = kv_block_tokens;
             if let Some(g) = gpu_cap_gb {
                 cluster.node.gpu_capacity_bytes = (g * 1e9) as u64;
             }
@@ -161,6 +167,13 @@ fn main() {
                 println!("\n(try --host-cap 30 to watch the tenants fight over warm memory)");
             }
         }
+        "bench" => {
+            let out = flag("--out").unwrap_or_else(|| "BENCH_serving.json".into());
+            let n: usize = flag("--requests").and_then(|s| s.parse().ok()).unwrap_or(64);
+            let seed: u64 = flag("--seed").and_then(|s| s.parse().ok()).unwrap_or(7);
+            let kv: usize = flag("--kv-block-tokens").and_then(|s| s.parse().ok()).unwrap_or(0);
+            run_bench(&out, n, seed, kv);
+        }
         "trace-gen" => {
             let out = flag("--out").unwrap_or_else(|| "/tmp/burstgpt.csv".into());
             let duration: f64 =
@@ -207,18 +220,89 @@ fn main() {
         _ => {
             eprintln!(
                 "λScale — fast model scaling for serverless LLM inference\n\n\
-                 usage: lambda-scale <figures|session|trace-gen|serve|info> [flags]\n\
+                 usage: lambda-scale <figures|session|bench|trace-gen|serve|info> [flags]\n\
                  \x20 figures   [--only figNN]              regenerate paper figures\n\
                  \x20 session   [--requests N] [--gpu-cap GB] [--host-cap GB]\n\
-                 \x20                                       two-tenant memory-contention demo\n\
+                 \x20           [--kv-block-tokens B]       two-tenant memory-contention demo\n\
+                 \x20 bench     [--out F] [--requests N] [--seed S] [--kv-block-tokens B]\n\
+                 \x20                                       perf snapshot → BENCH_serving.json\n\
                  \x20 trace-gen [--out F] [--duration S]    emit a BurstGPT-like CSV trace\n\
                  \x20 serve     [--artifacts D] [--prompt P] [--tokens N]\n\
                  \x20 info                                  testbed presets + model zoo\n\n\
-                 examples: quickstart, multicast_demo, spike_serving, trace_replay\n\
-                 \x20 (cargo run --release --example <name>)"
+                 examples: quickstart, multicast_demo, spike_serving, trace_replay,\n\
+                 \x20 memory_pressure, kv_pressure (cargo run --release --example <name>)"
             );
         }
     }
+}
+
+/// `lambda-scale bench`: a fixed-seed serving snapshot for the perf
+/// trajectory. Times the simulator itself on the in-repo bench harness
+/// (`util::bench`), then reports serving quality (p50/p99 TTFT,
+/// tokens/s) for the same trace and writes everything as JSON.
+fn run_bench(out: &str, n: usize, seed: u64, kv_block_tokens: usize) {
+    use lambda_scale::util::bench::bench;
+    use lambda_scale::util::json::Json;
+    use std::collections::BTreeMap;
+    use std::time::Duration;
+
+    let mut cluster = ClusterConfig::testbed1();
+    cluster.n_nodes = 8;
+    cluster.kv.block_tokens = kv_block_tokens;
+    let trace = {
+        let mut rng = Rng::new(seed);
+        let mut t = burst_trace(n, 0.0, "llama2-13b", 128, 64, &mut rng);
+        let steady = burst_trace(n / 2, 20.0, "llama2-13b", 128, 64, &mut rng);
+        t.merge(&steady, SimTime::ZERO);
+        t
+    };
+    let run = || {
+        ServingSession::builder()
+            .cluster(cluster.clone())
+            .model(ModelSpec::llama2_13b())
+            .system(SystemKind::LambdaScale { k: 2 })
+            .max_batch(8)
+            .trace(trace.clone())
+            .run()
+            .into_single()
+    };
+    println!(
+        "bench: {} (+{}) requests, seed {seed}, kv_block_tokens {kv_block_tokens}\n",
+        n,
+        n / 2
+    );
+    let wall = bench("serving-session-sim", Duration::from_millis(400), || {
+        std::hint::black_box(run());
+    });
+    let m = run();
+    let mut ttft = m.ttft_samples();
+    let makespan =
+        m.requests.iter().map(|r| r.completion).max().unwrap_or(SimTime::ZERO).as_secs();
+    let tokens_per_s = m.total_tokens() as f64 / makespan.max(1e-9);
+
+    let mut obj: BTreeMap<String, Json> = BTreeMap::new();
+    obj.insert("bench".into(), Json::Str("serving".into()));
+    obj.insert("seed".into(), Json::Num(seed as f64));
+    obj.insert("requests".into(), Json::Num(trace.len() as f64));
+    obj.insert("kv_block_tokens".into(), Json::Num(kv_block_tokens as f64));
+    obj.insert("completed".into(), Json::Num(m.requests.len() as f64));
+    obj.insert("p50_ttft_s".into(), Json::Num(ttft.p50()));
+    obj.insert("p99_ttft_s".into(), Json::Num(ttft.p99()));
+    obj.insert("tokens_per_s".into(), Json::Num(tokens_per_s));
+    obj.insert("kv_preemptions".into(), Json::Num(m.kv_preemptions as f64));
+    obj.insert("sim_wall_p50_ms".into(), Json::Num(wall.p50.as_secs_f64() * 1e3));
+    obj.insert("sim_wall_p99_ms".into(), Json::Num(wall.p99.as_secs_f64() * 1e3));
+    let json = Json::Obj(obj);
+    if let Err(e) = std::fs::write(out, format!("{json}\n")) {
+        eprintln!("writing {out}: {e}");
+        std::process::exit(1);
+    }
+    println!(
+        "\np50 TTFT {:.3}s  p99 TTFT {:.3}s  {:.0} tokens/s  → {out}",
+        ttft.p50(),
+        ttft.p99(),
+        tokens_per_s
+    );
 }
 
 fn serve_demo(dir: &str, prompt: &str, n: usize) -> anyhow::Result<()> {

@@ -43,6 +43,11 @@ impl<K: std::hash::Hash + Eq + Clone + Ord> LruCache<K> {
         self.used
     }
 
+    /// Bytes held by `k`, if resident.
+    pub fn size_of(&self, k: &K) -> Option<u64> {
+        self.entries.get(k).map(|e| e.bytes)
+    }
+
     pub fn len(&self) -> usize {
         self.entries.len()
     }

@@ -145,6 +145,90 @@ impl MemoryManager {
         self.nodes[node].evict_gpu(model);
     }
 
+    // ---- KV arenas (the `crate::kvcache` subsystem) -------------------------
+    //
+    // A serving instance's paged KV pool is a pinned GPU-tier entry with an
+    // explicit byte size, distinguished from model weights only by its key
+    // (the engine uses a `__kv__/…` prefix). KV arenas therefore compete
+    // with pinned weights for the same per-node byte budget, can displace
+    // *unpinned* warm model copies host-ward on allocation, are never
+    // themselves evicted or demoted, and die with their instance.
+
+    /// Per-node GPU bytes still unclaimed by weights and KV arenas — what
+    /// a new instance's KV pool can be sized from.
+    pub fn gpu_headroom(&self, node: usize) -> u64 {
+        let nm = &self.nodes[node];
+        nm.gpu_capacity.saturating_sub(nm.gpu_used())
+    }
+
+    /// Reserve a pinned KV arena of exactly `bytes` on `node`. Displaced
+    /// unpinned GPU residents cascade host-ward like any other insertion.
+    /// Errors (no state change) when the arena cannot fit next to the
+    /// node's pinned residents.
+    pub fn reserve_kv(
+        &mut self,
+        node: usize,
+        key: &str,
+        bytes: u64,
+        now: SimTime,
+    ) -> Result<Vec<Demotion>, InsertError> {
+        let evicted = self.nodes[node].try_load_gpu(key, bytes, now)?;
+        self.nodes[node].pin_gpu(key);
+        let mut demotions = Vec::new();
+        for e in evicted {
+            self.gpu_ready[node].remove(&e);
+            demotions.extend(self.demote_to_host(node, e, now));
+        }
+        debug_assert!(self.invariants_ok());
+        Ok(demotions)
+    }
+
+    /// Resize a pinned KV arena in place. On failure the old reservation
+    /// is intact (shrinking always succeeds).
+    pub fn grow_pinned(
+        &mut self,
+        node: usize,
+        key: &str,
+        new_bytes: u64,
+        now: SimTime,
+    ) -> Result<Vec<Demotion>, InsertError> {
+        let old = self.nodes[node].gpu_size_of(key).expect("grow_pinned on absent KV arena");
+        self.nodes[node].unpin_gpu(key);
+        self.nodes[node].evict_gpu(key);
+        match self.nodes[node].try_load_gpu(key, new_bytes, now) {
+            Ok(evicted) => {
+                self.nodes[node].pin_gpu(key);
+                let mut demotions = Vec::new();
+                for e in evicted {
+                    self.gpu_ready[node].remove(&e);
+                    demotions.extend(self.demote_to_host(node, e, now));
+                }
+                debug_assert!(self.invariants_ok());
+                Ok(demotions)
+            }
+            Err(e) => {
+                // The old size fit a moment ago and nothing was evicted on
+                // the failed attempt, so restoring it cannot fail.
+                self.nodes[node]
+                    .try_load_gpu(key, old, now)
+                    .expect("restoring prior KV arena size");
+                self.nodes[node].pin_gpu(key);
+                debug_assert!(self.invariants_ok());
+                Err(e)
+            }
+        }
+    }
+
+    /// Drop a KV arena outright: KV dies with its instance (no host
+    /// demotion — per-request swap traffic is modeled by the scheduler,
+    /// not as residency).
+    pub fn release_kv(&mut self, node: usize, key: &str) {
+        self.gpu_ready[node].remove(key);
+        self.nodes[node].unpin_gpu(key);
+        self.nodes[node].evict_gpu(key);
+        debug_assert!(self.invariants_ok());
+    }
+
     /// Admit a warm host-memory copy (initial host sources, prefetch).
     /// Evicted host residents cascade to SSD/Remote.
     pub fn admit_host(
@@ -447,6 +531,45 @@ mod tests {
     fn out_of_range_node_is_remote() {
         let m = mgr(2, gb(80), gb(100));
         assert_eq!(m.locality(99, "a"), Locality::Remote);
+    }
+
+    #[test]
+    fn kv_arena_competes_with_pinned_weights() {
+        // 30 GB GPU: tenant a's pinned 26 GB leaves 4 GB of headroom.
+        let mut m = mgr(1, gb(30), gb(100));
+        m.reserve_gpu(0, "a", SimTime::ZERO).unwrap();
+        assert_eq!(m.gpu_headroom(0), gb(4));
+        m.reserve_kv(0, "__kv__/a/inst0", gb(3), SimTime::ZERO).unwrap();
+        assert_eq!(m.gpu_headroom(0), gb(1));
+        // Neither the pinned weights nor the KV arena can be displaced.
+        assert_eq!(m.reserve_kv(0, "__kv__/a/inst1", gb(2), SimTime::ZERO),
+            Err(InsertError::PinnedPressure));
+        // Growth within headroom succeeds; beyond it fails and preserves
+        // the old reservation.
+        m.grow_pinned(0, "__kv__/a/inst0", gb(4), SimTime::ZERO).unwrap();
+        assert_eq!(m.gpu_headroom(0), 0);
+        assert_eq!(
+            m.grow_pinned(0, "__kv__/a/inst0", gb(5), SimTime::ZERO),
+            Err(InsertError::PinnedPressure)
+        );
+        assert_eq!(m.node(0).gpu_size_of("__kv__/a/inst0"), Some(gb(4)));
+        // Release frees the bytes without any host-side residue.
+        m.release_kv(0, "__kv__/a/inst0");
+        assert_eq!(m.gpu_headroom(0), gb(4));
+        assert_eq!(m.locality(0, "__kv__/a/inst0"), Locality::Remote);
+        m.assert_invariants();
+    }
+
+    #[test]
+    fn kv_arena_displaces_unpinned_warm_copy() {
+        // An idle (unpinned, raw-loaded) GPU copy of b yields to a KV
+        // arena and cascades host-ward, like any capacity eviction.
+        let mut m = mgr(1, gb(40), gb(100));
+        m.load_gpu(0, "b", gb(14), SimTime::ZERO);
+        let d = m.reserve_kv(0, "__kv__/a/inst0", gb(30), SimTime::from_secs(1.0)).unwrap();
+        assert_eq!(d[0], Demotion { node: 0, model: "b".into(), to: Locality::HostMem });
+        assert_eq!(m.locality(0, "b"), Locality::HostMem);
+        m.assert_invariants();
     }
 
     #[test]

@@ -115,6 +115,11 @@ impl NodeMemory {
         self.gpu.contains(&model.to_string())
     }
 
+    /// Bytes a GPU-resident entry occupies (weights or a KV arena).
+    pub fn gpu_size_of(&self, key: &str) -> Option<u64> {
+        self.gpu.size_of(&key.to_string())
+    }
+
     pub fn host_contains(&self, model: &str) -> bool {
         self.host.contains(&model.to_string())
     }

@@ -49,18 +49,38 @@ impl BlockPool {
 
     /// Acquire a buffer of `bytes`. Pool slabs serve any request that fits;
     /// larger requests and pool exhaustion fall back to a (counted) fresh
-    /// allocation.
+    /// allocation — the transfer model prices each miss at
+    /// `alloc_overhead_s`. Callers that must not allocate implicitly use
+    /// [`BlockPool::try_acquire`] instead.
     pub fn acquire(&mut self, bytes: u64) -> Slab {
-        if bytes <= self.slab_bytes {
-            if let Some(id) = self.free.pop() {
-                self.hits += 1;
-                return Slab { id, from_pool: true };
-            }
+        if let Some(slab) = self.try_acquire(bytes) {
+            return slab;
         }
         self.misses += 1;
-        // Fallback ids live above the pool range.
-        let id = self.total + self.misses as u32;
+        // Fallback ids descend from the top of the id space so explicit
+        // growth can keep extending the pool range upward.
+        let id = u32::MAX - self.misses as u32;
         Slab { id, from_pool: false }
+    }
+
+    /// Acquire strictly from the pool: `None` on exhaustion or an
+    /// oversized request, acquiring nothing. The caller decides whether
+    /// to [`grow`](BlockPool::grow) or queue — there is no silent
+    /// fallback allocation on this path.
+    pub fn try_acquire(&mut self, bytes: u64) -> Option<Slab> {
+        if bytes > self.slab_bytes {
+            return None;
+        }
+        let id = self.free.pop()?;
+        self.hits += 1;
+        Some(Slab { id, from_pool: true })
+    }
+
+    /// Grow the pool by `extra` slabs (explicit, caller-accounted — e.g.
+    /// after reserving the bytes with the memory manager).
+    pub fn grow(&mut self, extra: u32) {
+        self.free.extend((self.total..self.total + extra).rev());
+        self.total += extra;
     }
 
     /// Return a slab to the pool. Fallback allocations are simply dropped.
@@ -156,6 +176,45 @@ mod tests {
         assert_eq!(p.available(), 1);
         let again = p.acquire(50);
         assert!(again.from_pool);
+    }
+
+    #[test]
+    fn try_acquire_fails_cleanly_on_exhaustion() {
+        // Regression: the strict path must refuse — not silently hand out
+        // a fallback allocation — when the pool is empty or the request
+        // is oversized, and must not disturb the hit/miss accounting.
+        let mut p = BlockPool::new(100, 1);
+        let a = p.try_acquire(50).expect("first slab");
+        assert!(a.from_pool);
+        assert!(p.try_acquire(50).is_none(), "exhausted pool must refuse");
+        assert!(p.try_acquire(500).is_none(), "oversized must refuse");
+        assert_eq!((p.hits, p.misses), (1, 0), "clean failures are not misses");
+        p.release(a);
+        assert!(p.try_acquire(50).is_some());
+    }
+
+    #[test]
+    fn grow_extends_pool_without_id_collisions() {
+        let mut p = BlockPool::new(100, 2);
+        let a = p.try_acquire(10).unwrap();
+        let b = p.try_acquire(10).unwrap();
+        let fallback = p.acquire(10); // miss while exhausted
+        assert!(!fallback.from_pool);
+        p.grow(2);
+        assert_eq!(p.capacity(), 4);
+        assert_eq!(p.available(), 2);
+        let c = p.try_acquire(10).unwrap();
+        let d = p.try_acquire(10).unwrap();
+        let mut ids = vec![a.id, b.id, c.id, d.id];
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 4, "grown slabs must not reuse live ids");
+        assert_ne!(fallback.id, c.id);
+        assert_ne!(fallback.id, d.id);
+        for s in [a, b, c, d] {
+            p.release(s);
+        }
+        assert_eq!(p.available(), 4);
     }
 
     #[test]

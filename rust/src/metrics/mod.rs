@@ -7,7 +7,10 @@ use crate::sim::time::SimTime;
 use crate::util::stats::Samples;
 
 /// Outcome of one served request.
-#[derive(Clone, Debug, PartialEq)]
+///
+/// The `kv_*` fields are populated by the kvcache subsystem
+/// (`kv_block_tokens > 0`) and stay zero under the legacy fluid model.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct RequestMetrics {
     pub id: u64,
     pub arrival: SimTime,
@@ -16,6 +19,18 @@ pub struct RequestMetrics {
     /// Time the last output token was produced.
     pub completion: SimTime,
     pub output_tokens: usize,
+    /// Seconds spent queued solely because KV blocks were unavailable
+    /// (from first KV-blocked admission attempt, or preemption, to the
+    /// admission that finally seated the request).
+    pub kv_wait_s: f64,
+    /// Times this request was preempted for KV pressure.
+    pub kv_preemptions: u32,
+    /// Estimated seconds of KV recompute stall paid after preemptions
+    /// (the work is charged exactly, in work units; this is its
+    /// at-admission time estimate).
+    pub kv_recompute_s: f64,
+    /// Estimated seconds of KV host-swap stall paid after preemptions.
+    pub kv_swap_s: f64,
 }
 
 impl RequestMetrics {
@@ -36,6 +51,18 @@ pub struct MetricsCollector {
     token_events: Vec<(SimTime, usize)>,
     /// (time, gpus-allocated) step series for cost accounting.
     gpu_alloc: Vec<(SimTime, usize)>,
+    /// kvcache: preemptions for KV pressure, total and by rebuild kind.
+    pub kv_preemptions: u64,
+    pub kv_recomputes: u64,
+    pub kv_swaps: u64,
+    /// kvcache: blocks served beyond pool capacity — always an explicit,
+    /// counted overflow (the sole-resident escape hatch), never silent.
+    pub kv_overcommit_blocks: u64,
+    /// kvcache: (time, instance id, pool utilization 0..=1) samples at
+    /// iteration boundaries. The engine records a sample only when an
+    /// instance's utilization actually changed, so interleaved instances
+    /// never suppress or garble each other's series.
+    pub kv_util: Vec<(SimTime, u64, f64)>,
 }
 
 impl MetricsCollector {
@@ -132,6 +159,32 @@ impl MetricsCollector {
     pub fn total_tokens(&self) -> usize {
         self.token_events.iter().map(|&(_, n)| n).sum()
     }
+
+    /// Record one KV-pressure preemption and its rebuild kind.
+    pub fn record_kv_preemption(&mut self, swapped: bool) {
+        self.kv_preemptions += 1;
+        if swapped {
+            self.kv_swaps += 1;
+        } else {
+            self.kv_recomputes += 1;
+        }
+    }
+
+    /// Record blocks handed out beyond a pool's capacity.
+    pub fn record_kv_overcommit(&mut self, blocks: u64) {
+        self.kv_overcommit_blocks += blocks;
+    }
+
+    /// Sample one instance's KV pool utilization.
+    pub fn record_kv_util(&mut self, t: SimTime, instance: u64, utilization: f64) {
+        self.kv_util.push((t, instance, utilization));
+    }
+
+    /// Peak sampled KV pool utilization across all instances (0 when the
+    /// subsystem is off).
+    pub fn kv_util_peak(&self) -> f64 {
+        self.kv_util.iter().map(|&(_, _, u)| u).fold(0.0, f64::max)
+    }
 }
 
 #[cfg(test)]
@@ -145,6 +198,7 @@ mod tests {
             first_token: SimTime::from_secs(first),
             completion: SimTime::from_secs(done),
             output_tokens: 4,
+            ..Default::default()
         }
     }
 
@@ -188,6 +242,23 @@ mod tests {
         let s = c.gpu_series(1.0, 2.0);
         assert_eq!(s[0].1, 4); // peak within first window
         assert_eq!(s[1].1, 1);
+    }
+
+    #[test]
+    fn kv_counters_and_util_samples() {
+        let mut c = MetricsCollector::new();
+        assert_eq!(c.kv_util_peak(), 0.0);
+        c.record_kv_preemption(false);
+        c.record_kv_preemption(true);
+        c.record_kv_preemption(false);
+        assert_eq!((c.kv_preemptions, c.kv_recomputes, c.kv_swaps), (3, 2, 1));
+        c.record_kv_overcommit(5);
+        assert_eq!(c.kv_overcommit_blocks, 5);
+        c.record_kv_util(SimTime::from_secs(1.0), 0, 0.5);
+        c.record_kv_util(SimTime::from_secs(2.0), 1, 0.7);
+        c.record_kv_util(SimTime::from_secs(3.0), 0, 0.9);
+        assert_eq!(c.kv_util.len(), 3);
+        assert!((c.kv_util_peak() - 0.9).abs() < 1e-12);
     }
 
     #[test]

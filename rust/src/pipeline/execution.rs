@@ -66,9 +66,36 @@ impl ExecPipeline {
         self.stages.iter().map(|s| s.node).collect()
     }
 
+    /// Fraction of the pipeline's layers this stage owns (1.0 for a local
+    /// replica). KV caches shard along the same boundary: a stage holds
+    /// exactly the K/V of its layer range.
+    pub fn layer_frac(&self, stage: usize) -> f64 {
+        let total: usize = self.stages.iter().map(|s| s.n_layers).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.stages[stage].n_layers as f64 / total as f64
+    }
+
+    /// KV bytes this stage holds for one request with `ctx_tokens` of
+    /// context — the actual shard size mode switching and KV pools are
+    /// priced from (uneven stages hold uneven shards).
+    pub fn kv_shard_bytes(&self, stage: usize, ctx_tokens: usize, model: &ModelSpec) -> u64 {
+        (ctx_tokens as f64
+            * crate::pipeline::mode_switch::kv_bytes_per_token(model)
+            * self.layer_frac(stage))
+        .ceil() as u64
+    }
+
     /// Decode-step time of one stage for a given batch size (seconds):
     /// memory-bound weight read vs compute-bound GEMM, whichever dominates.
-    pub fn stage_time(&self, stage: usize, batch: usize, model: &ModelSpec, cfg: &ComputeConfig) -> f64 {
+    pub fn stage_time(
+        &self,
+        stage: usize,
+        batch: usize,
+        model: &ModelSpec,
+        cfg: &ComputeConfig,
+    ) -> f64 {
         let s = &self.stages[stage];
         if s.n_layers == 0 {
             return 0.0;
@@ -212,6 +239,26 @@ mod tests {
         let p = ExecPipeline::from_assignment(&asn, &part);
         assert_eq!(p.stages[0].n_layers + p.stages[1].n_layers, md.n_layers);
         assert_eq!(p.stages[0].bytes + p.stages[1].bytes, md.bytes);
+    }
+
+    #[test]
+    fn kv_shards_follow_layer_split() {
+        let md = model();
+        let part = md.partition(8);
+        // Uneven split: stage 0 owns 6 of 8 blocks.
+        let asn: Vec<(NodeId, Vec<usize>)> = vec![(0, (0..6).collect()), (1, vec![6, 7])];
+        let p = ExecPipeline::from_assignment(&asn, &part);
+        assert!((p.layer_frac(0) + p.layer_frac(1) - 1.0).abs() < 1e-12);
+        assert!(p.layer_frac(0) > p.layer_frac(1));
+        let s0 = p.kv_shard_bytes(0, 192, &md);
+        let s1 = p.kv_shard_bytes(1, 192, &md);
+        assert!(s0 > s1, "more layers ⇒ bigger KV shard ({s0} vs {s1})");
+        let total = crate::pipeline::mode_switch::kv_bytes_per_token(&md) * 192.0;
+        let sum = (s0 + s1) as f64;
+        assert!((sum - total).abs() < 4.0, "shards cover the full KV: {sum} vs {total}");
+        // A local replica holds everything.
+        let local = ExecPipeline::local(0, &md);
+        assert_eq!(local.layer_frac(0), 1.0);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 use crate::config::{ComputeConfig, NetworkConfig};
 use crate::model::ModelSpec;
 use crate::multicast::NodeId;
+use crate::pipeline::execution::ExecPipeline;
 
 /// How to rebuild request state on the switch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -65,6 +66,119 @@ pub fn transfer_cost_s(
     let fragmentation =
         model.n_layers as f64 * (m - 1.0) / m * net.per_tensor_overhead_s;
     bytes / 1e9 / incast_bw + fragmentation + m * net.rdma_setup_s
+}
+
+/// Transfer cost priced from a pipeline's *actual* KV shards: every
+/// member ships its own layer range's K/V
+/// ([`ExecPipeline::kv_shard_bytes`]) to the request's new owner, so the
+/// owner receives everything but its own shard. Uneven stages therefore
+/// make uneven owners — consolidating onto a thin stage costs more than
+/// onto a fat one. Incast and per-layer fragmentation terms match
+/// [`transfer_cost_s`], which this generalizes (even shards give
+/// identical numbers).
+pub fn transfer_cost_for_stage(
+    context_tokens: usize,
+    pipe: &ExecPipeline,
+    owner: usize,
+    model: &ModelSpec,
+    net: &NetworkConfig,
+) -> f64 {
+    let m = pipe.n_stages().max(1) as f64;
+    let bytes = context_tokens as f64 * kv_bytes_per_token(model) * (1.0 - pipe.layer_frac(owner));
+    let layers_shipped =
+        model.n_layers.saturating_sub(pipe.stages[owner].n_layers) as f64;
+    let incast_bw = net.rdma_gbps / m;
+    bytes / 1e9 / incast_bw + layers_shipped * net.per_tensor_overhead_s + m * net.rdma_setup_s
+}
+
+/// Smallest context (tokens) at which all-to-all KV transfer onto the
+/// pipeline's worst-placed owner becomes no more expensive than
+/// recompute, or `None` if recompute stays cheaper up to `max_ctx`.
+///
+/// Both costs are affine in context with transfer carrying the fixed
+/// setup/fragmentation term, so recompute always wins at tiny contexts
+/// and the choice flips at most once — the crossover is a single point,
+/// moving with the cost slopes (down as the link gets faster, up as the
+/// GPU gets faster).
+pub fn crossover_context(
+    pipe: &ExecPipeline,
+    model: &ModelSpec,
+    cfg: &ComputeConfig,
+    net: &NetworkConfig,
+    max_ctx: usize,
+) -> Option<usize> {
+    let worst_transfer = |ctx: usize| -> f64 {
+        (0..pipe.n_stages())
+            .map(|j| transfer_cost_for_stage(ctx, pipe, j, model, net))
+            .fold(0.0_f64, f64::max)
+    };
+    let transfer_wins = |ctx: usize| recompute_cost_s(ctx, model, cfg) >= worst_transfer(ctx);
+    if !transfer_wins(max_ctx) {
+        return None;
+    }
+    let (mut lo, mut hi) = (0usize, max_ctx); // invariant: !wins(lo), wins(hi)
+    if transfer_wins(lo) {
+        return Some(lo);
+    }
+    while hi - lo > 1 {
+        let mid = lo + (hi - lo) / 2;
+        if transfer_wins(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    Some(hi)
+}
+
+/// [`plan_switch`] priced from a pipeline's actual per-stage KV shard
+/// bytes rather than the even-shard approximation: the stall is the
+/// worst per-owner cost of the round-robin assignment. Identical to
+/// [`plan_switch`] for evenly partitioned pipelines.
+pub fn plan_switch_pipeline(
+    requests: &[(u64, usize)],
+    pipe: &ExecPipeline,
+    model: &ModelSpec,
+    cfg: &ComputeConfig,
+    net: &NetworkConfig,
+    strategy: Option<SwitchStrategy>,
+) -> ModeSwitchPlan {
+    assert!(pipe.n_stages() >= 1);
+    let members = pipe.nodes();
+    let mut assignments = Vec::with_capacity(requests.len());
+    let mut per_owner = vec![0usize; members.len()];
+    for (i, &(rid, _)) in requests.iter().enumerate() {
+        let owner = i % members.len();
+        assignments.push((rid, members[owner]));
+        per_owner[owner] += 1;
+    }
+    if requests.is_empty() {
+        let strategy = strategy.unwrap_or(SwitchStrategy::Recompute);
+        return ModeSwitchPlan { assignments, strategy, stall_s: 0.0 };
+    }
+    let avg_ctx = (requests.iter().map(|&(_, c)| c as f64).sum::<f64>()
+        / requests.len() as f64)
+        .ceil() as usize;
+    // Per-owner recompute runs batched; the stall is the slowest owner.
+    let recompute = per_owner
+        .iter()
+        .map(|&n| n as f64 * recompute_cost_s(avg_ctx, model, cfg))
+        .fold(0.0_f64, f64::max);
+    let transfer = per_owner
+        .iter()
+        .enumerate()
+        .map(|(j, &n)| n as f64 * transfer_cost_for_stage(avg_ctx, pipe, j, model, net))
+        .fold(0.0_f64, f64::max);
+    let strategy = strategy.unwrap_or(if recompute <= transfer {
+        SwitchStrategy::Recompute
+    } else {
+        SwitchStrategy::TransferKv
+    });
+    let stall_s = match strategy {
+        SwitchStrategy::Recompute => recompute,
+        SwitchStrategy::TransferKv => transfer,
+    };
+    ModeSwitchPlan { assignments, strategy, stall_s }
 }
 
 /// Plan the switch: distribute `requests` (id, context_tokens) evenly over
@@ -185,5 +299,127 @@ mod tests {
         let (m, c, n) = setup();
         assert!(recompute_cost_s(1000, &m, &c) > recompute_cost_s(10, &m, &c));
         assert!(transfer_cost_s(1000, 4, &m, &n) > transfer_cost_s(10, 4, &m, &n));
+    }
+
+    use crate::pipeline::execution::{ExecPipeline, StageSpec};
+    use crate::util::minicheck::check;
+    use crate::util::rng::Rng;
+
+    /// A random pipeline with (possibly very) uneven stages.
+    fn random_pipeline(rng: &mut Rng, model: &ModelSpec) -> ExecPipeline {
+        let m = rng.range(2, 6) as usize;
+        let mut cuts: Vec<usize> =
+            (0..m - 1).map(|_| rng.range(1, model.n_layers as u64 - 1) as usize).collect();
+        cuts.push(0);
+        cuts.push(model.n_layers);
+        cuts.sort_unstable();
+        cuts.dedup();
+        let stages: Vec<StageSpec> = cuts
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| {
+                let nl = w[1] - w[0];
+                StageSpec {
+                    node: i,
+                    n_layers: nl,
+                    bytes: model.bytes * nl as u64 / model.n_layers as u64,
+                }
+            })
+            .collect();
+        ExecPipeline { stages }
+    }
+
+    #[test]
+    fn pipeline_costs_match_even_shard_model() {
+        // The shard-accurate cost generalizes transfer_cost_s: an evenly
+        // partitioned pipeline must price identically.
+        let (m, _, n) = setup();
+        let part = m.partition(4);
+        let asn: Vec<(NodeId, Vec<usize>)> =
+            (0..4).map(|i| (i, vec![i])).collect();
+        let p = ExecPipeline::from_assignment(&asn, &part);
+        for ctx in [32, 192, 1024] {
+            let even = transfer_cost_s(ctx, 4, &m, &n);
+            for j in 0..4 {
+                let exact = transfer_cost_for_stage(ctx, &p, j, &m, &n);
+                assert!((even - exact).abs() < 1e-12, "ctx {ctx} stage {j}: {even} vs {exact}");
+            }
+        }
+    }
+
+    #[test]
+    fn uneven_shards_make_thin_owners_expensive() {
+        let (m, _, n) = setup();
+        let part = m.partition(8);
+        let asn: Vec<(NodeId, Vec<usize>)> = vec![(0, (0..6).collect()), (1, vec![6, 7])];
+        let p = ExecPipeline::from_assignment(&asn, &part);
+        // Consolidating onto the thin stage receives the fat shard.
+        assert!(
+            transfer_cost_for_stage(512, &p, 1, &m, &n)
+                > transfer_cost_for_stage(512, &p, 0, &m, &n)
+        );
+    }
+
+    #[test]
+    fn property_mode_choice_is_monotone_in_context() {
+        // Once transfer beats recompute it must keep beating it for every
+        // longer context (a single crossover point), under random uneven
+        // pipelines and randomly scaled fabrics.
+        check("mode choice flips at most once over context", 60, |rng| {
+            let m = ModelSpec::llama2_13b();
+            let c = ComputeConfig::default();
+            let n = NetworkConfig {
+                rdma_gbps: rng.range(1, 400) as f64,
+                per_tensor_overhead_s: NetworkConfig::default().per_tensor_overhead_s
+                    * rng.range(1, 20) as f64,
+                ..Default::default()
+            };
+            let pipe = random_pipeline(rng, &m);
+            let worst = |ctx: usize| {
+                (0..pipe.n_stages())
+                    .map(|j| transfer_cost_for_stage(ctx, &pipe, j, &m, &n))
+                    .fold(0.0_f64, f64::max)
+            };
+            let mut flipped = false;
+            for ctx in (0..40).map(|i| 1 + i * 97) {
+                let wins = recompute_cost_s(ctx, &m, &c) >= worst(ctx);
+                if flipped {
+                    assert!(wins, "transfer lost again at ctx {ctx} after winning earlier");
+                }
+                flipped |= wins;
+            }
+            // crossover_context agrees with the scan.
+            match crossover_context(&pipe, &m, &c, &n, 1 + 39 * 97) {
+                Some(x) => {
+                    assert!(recompute_cost_s(x, &m, &c) >= worst(x));
+                    assert!(x == 0 || recompute_cost_s(x - 1, &m, &c) < worst(x - 1));
+                }
+                None => assert!(!flipped, "scan found a crossover the search missed"),
+            }
+        });
+    }
+
+    #[test]
+    fn property_crossover_monotone_in_link_bandwidth() {
+        // A faster link can only pull the crossover earlier (or leave it):
+        // transfer's slope falls with bandwidth while recompute's is fixed.
+        check("crossover non-increasing in rdma bandwidth", 40, |rng| {
+            let m = ModelSpec::llama2_13b();
+            let c = ComputeConfig::default();
+            let pipe = random_pipeline(rng, &m);
+            let max_ctx = 2_000_000;
+            let mut prev: Option<usize> = None;
+            for gbps in [2.0, 10.0, 50.0, 200.0, 800.0] {
+                let n = NetworkConfig { rdma_gbps: gbps, ..Default::default() };
+                let x = crossover_context(&pipe, &m, &c, &n, max_ctx);
+                if let Some(p) = prev {
+                    // A crossover that exists at a slower link must exist
+                    // (and come no later) at a faster one.
+                    let cur = x.expect("crossover vanished as the link got faster");
+                    assert!(cur <= p, "crossover rose with bandwidth: {cur} > {p}");
+                }
+                prev = x.or(prev);
+            }
+        });
     }
 }

@@ -1,0 +1,202 @@
+//! kvcache subsystem integration: paged KV residency charged against the
+//! managed GPU budget, iteration-level continuous batching, KV-gated
+//! admission, and youngest-first preemption with pluggable rebuild.
+//!
+//! The `MemoryManager`'s byte-accounting invariants are debug-asserted
+//! inside every manager operation, so these tests (built with
+//! `debug_assertions`) exercise them on every reserve/grow/release along
+//! the way.
+
+use lambda_scale::config::ClusterConfig;
+use lambda_scale::coordinator::{ServingSession, SessionReport, SystemKind};
+use lambda_scale::kvcache::{AlwaysRecompute, AlwaysSwapToHost};
+use lambda_scale::metrics::MetricsCollector;
+use lambda_scale::model::ModelSpec;
+use lambda_scale::sim::time::SimTime;
+use lambda_scale::util::rng::Rng;
+use lambda_scale::workload::{burst_trace, Request, Trace};
+
+/// Deterministic burst: exact token counts so KV demand is predictable.
+fn exact_burst(n: usize, prompt: usize, output: usize) -> Trace {
+    Trace {
+        requests: (0..n)
+            .map(|i| Request {
+                id: i as u64,
+                arrival: SimTime::ZERO,
+                model: "llama2-13b".into(),
+                prompt_tokens: prompt,
+                output_tokens: output,
+            })
+            .collect(),
+    }
+}
+
+/// One 13B tenant on a single node; `gpu_cap` bounds weights + KV.
+fn run_single(gpu_cap: u64, trace: Trace, recompute: bool) -> MetricsCollector {
+    let mut cluster = ClusterConfig::testbed1();
+    cluster.n_nodes = 1;
+    cluster.kv.block_tokens = 16;
+    let b = ServingSession::builder()
+        .cluster(cluster)
+        .gpu_capacity_bytes(gpu_cap)
+        .model(ModelSpec::llama2_13b())
+        .system(SystemKind::ServerlessLlm)
+        .max_batch(8)
+        .trace(trace);
+    let b = if recompute {
+        b.kv_switch(Box::new(AlwaysRecompute))
+    } else {
+        b.kv_switch(Box::new(AlwaysSwapToHost))
+    };
+    b.run().into_single()
+}
+
+fn completion_key(m: &MetricsCollector) -> Vec<(u64, u64, u64)> {
+    let mut v: Vec<(u64, u64, u64)> =
+        m.requests.iter().map(|r| (r.id, r.first_token.0, r.completion.0)).collect();
+    v.sort_unstable();
+    v
+}
+
+/// Under a GPU budget that leaves ~2 GB of KV headroom next to the 26 GB
+/// pinned weights, long decodes must exhaust the pool and preempt; with
+/// `AlwaysRecompute` the victim replays prefill over prompt + generated
+/// tokens, and that stall must show up in *that request's* latency
+/// relative to an unbounded run of the identical workload.
+#[test]
+fn preemption_recompute_cost_lands_in_request_latency() {
+    let trace = exact_burst(16, 128, 256);
+    let roomy = run_single(u64::MAX, trace.clone(), true);
+    let tight = run_single(28_000_000_000, trace, true);
+
+    assert_eq!(roomy.requests.len(), 16, "unbounded run must serve everything");
+    assert_eq!(tight.requests.len(), 16, "bounded run must still serve everything");
+    assert_eq!(roomy.kv_preemptions, 0, "no pressure without a byte bound");
+    assert!(tight.kv_preemptions >= 1, "tight budget must preempt at least once");
+    assert_eq!(tight.kv_swaps, 0, "AlwaysRecompute must never swap");
+    assert!(tight.kv_util_peak() > 0.9, "the pool should run essentially full");
+
+    let lat_roomy: std::collections::HashMap<u64, f64> =
+        roomy.requests.iter().map(|r| (r.id, r.latency())).collect();
+    let preempted: Vec<_> =
+        tight.requests.iter().filter(|r| r.kv_preemptions > 0).collect();
+    assert!(!preempted.is_empty(), "some served request must record its preemption");
+    for r in &preempted {
+        assert!(r.kv_recompute_s > 0.0, "recompute stall must be priced (req {})", r.id);
+        assert_eq!(r.kv_swap_s, 0.0);
+        let baseline = lat_roomy[&r.id];
+        assert!(
+            r.latency() > baseline,
+            "req {}: preempted latency {:.3}s not above unbounded {:.3}s",
+            r.id,
+            r.latency(),
+            baseline
+        );
+    }
+}
+
+/// The same pressure with `AlwaysSwapToHost` pays host-bandwidth
+/// round-trips for decode-phase victims. (Victims caught mid-stall hold
+/// only partial KV and are forced onto the recompute path regardless of
+/// policy, so recomputes may legitimately coexist with the swaps.)
+#[test]
+fn swap_policy_prices_host_round_trips() {
+    let m = run_single(28_000_000_000, exact_burst(16, 128, 256), false);
+    assert_eq!(m.requests.len(), 16);
+    assert!(m.kv_swaps >= 1, "swap policy must record swaps");
+    assert!(
+        m.requests.iter().any(|r| r.kv_swap_s > 0.0),
+        "some served request must carry a priced swap stall"
+    );
+}
+
+/// With a sliver of KV headroom (~22 blocks), admission must gate on
+/// block availability: later requests queue on KV and report the wait,
+/// and the sole-survivor escape hatch overflows with an explicit counter
+/// instead of deadlocking or silently over-allocating.
+#[test]
+fn kv_blocked_admission_reports_wait_and_overflow_is_counted() {
+    let m = run_single(26_300_000_000, exact_burst(6, 128, 256), true);
+    assert_eq!(m.requests.len(), 6, "everything still completes");
+    assert!(
+        m.requests.iter().any(|r| r.kv_wait_s > 0.0),
+        "someone must have queued on KV blocks"
+    );
+    assert!(
+        m.kv_overcommit_blocks > 0,
+        "a 22-block pool cannot hold one 24-block context without counted overflow"
+    );
+}
+
+/// kvcache-mode runs are deterministic: identical traces give identical
+/// per-request timings, preemptions included.
+#[test]
+fn kv_mode_is_deterministic() {
+    let a = run_single(28_000_000_000, exact_burst(16, 128, 256), true);
+    let b = run_single(28_000_000_000, exact_burst(16, 128, 256), true);
+    assert_eq!(completion_key(&a), completion_key(&b));
+    assert_eq!(a.kv_preemptions, b.kv_preemptions);
+    assert_eq!(a.kv_overcommit_blocks, b.kv_overcommit_blocks);
+}
+
+/// Request conservation and causality hold with KV enabled across
+/// scaling backends — including λScale's execute-while-load pipelines,
+/// whose stages charge KV shards fractionally and release them at the
+/// mode-switch dissolve.
+#[test]
+fn kv_conservation_across_backends() {
+    let mut rng = Rng::new(5);
+    let trace = burst_trace(40, 0.0, "llama2-13b", 128, 64, &mut rng);
+    for sys in [SystemKind::LambdaScale { k: 2 }, SystemKind::ServerlessLlm] {
+        let mut cluster = ClusterConfig::testbed1();
+        cluster.n_nodes = 8;
+        cluster.kv.block_tokens = 16;
+        cluster.node.gpu_capacity_bytes = 40_000_000_000;
+        let m = ServingSession::builder()
+            .cluster(cluster)
+            .model(ModelSpec::llama2_13b())
+            .system(sys)
+            .max_batch(8)
+            .trace(trace.clone())
+            .run()
+            .into_single();
+        assert_eq!(m.requests.len(), trace.len(), "{}: lost/duplicated requests", sys.name());
+        let mut ids: Vec<u64> = m.requests.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), trace.len(), "{}: duplicate completions", sys.name());
+        for r in &m.requests {
+            assert!(r.first_token >= r.arrival, "{}: token before arrival", sys.name());
+            assert!(r.completion >= r.first_token, "{}: completion before first token", sys.name());
+        }
+        // Decode-only token accounting still covers the trace's outputs.
+        let expected: usize = trace.requests.iter().map(|r| r.output_tokens).sum();
+        assert!(
+            m.total_tokens() as f64 >= 0.7 * expected as f64,
+            "{}: counted {} of {expected} tokens",
+            sys.name(),
+            m.total_tokens()
+        );
+    }
+}
+
+/// The multi-model report surface carries KV metrics per tenant, and the
+/// legacy fluid model (kv off) reports all-zero KV fields.
+#[test]
+fn kv_metrics_stay_zero_when_disabled() {
+    let report: SessionReport = ServingSession::builder()
+        .cluster(ClusterConfig::testbed1().with_nodes(4))
+        .model(ModelSpec::llama2_13b())
+        .system(SystemKind::ServerlessLlm)
+        .max_batch(8)
+        .trace(exact_burst(8, 128, 256))
+        .run();
+    let m = &report.models[0].metrics;
+    assert_eq!(m.requests.len(), 8);
+    assert_eq!(m.kv_preemptions, 0);
+    assert_eq!(m.kv_overcommit_blocks, 0);
+    assert!(m.kv_util.is_empty());
+    assert!(m.requests.iter().all(|r| {
+        r.kv_wait_s == 0.0 && r.kv_preemptions == 0 && r.kv_recompute_s == 0.0
+    }));
+}
