@@ -56,6 +56,7 @@ impl Default for NetworkConfig {
 /// Per-node hardware. Defaults = Testbed1 nodes.
 #[derive(Clone, Debug, PartialEq)]
 pub struct NodeConfig {
+    /// GPUs per node (Testbed1: 1, Testbed2: 4).
     pub gpus_per_node: usize,
     /// HBM per GPU (GB). H800: 80 GB.
     pub gpu_mem_gb: f64,
@@ -144,14 +145,110 @@ impl Default for KvCacheConfig {
     }
 }
 
+/// Which [`crate::coordinator::autoscaler::ScalingPolicy`] implementation
+/// drives instance counts (the `[autoscaler] policy` config key).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ScalerKind {
+    /// Sliding-window reactive scaling (the seed behavior, the default).
+    #[default]
+    ReactiveWindow,
+    /// Scale from observed p99 TTFT versus `target_ttft_s`.
+    SloAware,
+    /// EWMA ramp detection with pre-warming over `horizon_s`.
+    PredictiveEwma,
+}
+
+impl ScalerKind {
+    /// Parse a config/CLI policy name. Accepted:
+    /// `reactive`/`reactive-window`, `slo`/`slo-aware`,
+    /// `predictive`/`predictive-ewma`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "reactive" | "reactive-window" => Ok(ScalerKind::ReactiveWindow),
+            "slo" | "slo-aware" => Ok(ScalerKind::SloAware),
+            "predictive" | "predictive-ewma" => Ok(ScalerKind::PredictiveEwma),
+            other => Err(format!(
+                "unknown autoscaler policy `{other}` (want reactive|slo-aware|predictive)"
+            )),
+        }
+    }
+
+    /// Canonical policy name (matches the `ScalingPolicy::name` strings).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScalerKind::ReactiveWindow => "reactive-window",
+            ScalerKind::SloAware => "slo-aware",
+            ScalerKind::PredictiveEwma => "predictive-ewma",
+        }
+    }
+}
+
+/// Autoscaling-policy knobs (the TOML `[autoscaler]` section). Turned into
+/// a boxed policy by
+/// [`crate::coordinator::autoscaler::scaler_from_config`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AutoscalerConfig {
+    /// Which scaling policy to run.
+    pub policy: ScalerKind,
+    /// TTFT target (seconds) the `SloAware` policy defends; also the
+    /// default SLO-attainment threshold in `lambda-scale eval`.
+    pub target_ttft_s: f64,
+    /// Pre-warm lookahead (seconds) for the `PredictiveEwma` policy.
+    pub horizon_s: f64,
+}
+
+impl Default for AutoscalerConfig {
+    fn default() -> Self {
+        AutoscalerConfig { policy: ScalerKind::default(), target_ttft_s: 2.5, horizon_s: 10.0 }
+    }
+}
+
+/// Resource prices (the TOML `[cost]` section) applied to the engine's
+/// metered GPU·seconds and host-memory GB·seconds — the paper's Fig 14
+/// "cost" axis in dollars instead of raw GPU time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostModel {
+    /// USD per GPU-hour (defaults to an H800-class on-demand rate).
+    pub gpu_usd_per_hour: f64,
+    /// USD per GB-hour of host memory held as warm model cache.
+    pub host_usd_per_gb_hour: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel { gpu_usd_per_hour: 2.5, host_usd_per_gb_hour: 0.005 }
+    }
+}
+
+impl CostModel {
+    /// Price `gpu_seconds` of GPU time.
+    pub fn gpu_usd(&self, gpu_seconds: f64) -> f64 {
+        gpu_seconds / 3600.0 * self.gpu_usd_per_hour
+    }
+
+    /// Price `host_gb_seconds` of warm host-memory cache.
+    pub fn host_usd(&self, host_gb_seconds: f64) -> f64 {
+        host_gb_seconds / 3600.0 * self.host_usd_per_gb_hour
+    }
+}
+
 /// Top-level cluster configuration.
 #[derive(Clone, Debug, PartialEq, Default)]
 pub struct ClusterConfig {
+    /// Number of nodes in the cluster.
     pub n_nodes: usize,
+    /// Per-node hardware.
     pub node: NodeConfig,
+    /// Network fabric parameters.
     pub network: NetworkConfig,
+    /// Simulated-GPU inference-speed model.
     pub compute: ComputeConfig,
+    /// Paged KV-cache subsystem knobs (off when `block_tokens == 0`).
     pub kv: KvCacheConfig,
+    /// Default autoscaling policy for sessions that set none explicitly.
+    pub autoscaler: AutoscalerConfig,
+    /// Resource prices for cost accounting.
+    pub cost: CostModel,
 }
 
 impl ClusterConfig {
@@ -169,11 +266,13 @@ impl ClusterConfig {
         }
     }
 
+    /// Same cluster with a different node count.
     pub fn with_nodes(mut self, n: usize) -> Self {
         self.n_nodes = n;
         self
     }
 
+    /// Total GPUs across all nodes.
     pub fn total_gpus(&self) -> usize {
         self.n_nodes * self.node.gpus_per_node
     }
@@ -237,9 +336,25 @@ impl ClusterConfig {
                 getf(sec, "layer_overhead_s", cfg.compute.layer_overhead_s)?;
             cfg.compute.pipeline_hop_s = getf(sec, "pipeline_hop_s", cfg.compute.pipeline_hop_s)?;
         }
+        if let Some(sec) = doc.get("autoscaler") {
+            if let Some(v) = sec.get("policy") {
+                let s = v.as_str().ok_or("autoscaler.policy must be a string")?;
+                cfg.autoscaler.policy = ScalerKind::parse(s)?;
+            }
+            cfg.autoscaler.target_ttft_s =
+                getf(sec, "target_ttft_s", cfg.autoscaler.target_ttft_s)?;
+            cfg.autoscaler.horizon_s = getf(sec, "horizon_s", cfg.autoscaler.horizon_s)?;
+        }
+        if let Some(sec) = doc.get("cost") {
+            cfg.cost.gpu_usd_per_hour = getf(sec, "gpu_usd_per_hour", cfg.cost.gpu_usd_per_hour)?;
+            cfg.cost.host_usd_per_gb_hour =
+                getf(sec, "host_usd_per_gb_hour", cfg.cost.host_usd_per_gb_hour)?;
+        }
         Ok(cfg)
     }
 
+    /// Load a TOML-subset config file (see [`parse_toml`]), starting from
+    /// the Testbed1 defaults.
     pub fn load(path: &str) -> Result<Self, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
         let doc = parse_toml(&text).map_err(|e| format!("{path}: {e}"))?;
@@ -309,5 +424,47 @@ mod tests {
     fn from_toml_rejects_bad_types() {
         let doc = parse_toml("[network]\nrdma_gbps = \"fast\"\n").unwrap();
         assert!(ClusterConfig::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn from_toml_reads_autoscaler_section() {
+        let doc = parse_toml(
+            "[autoscaler]\npolicy = \"slo-aware\"\ntarget_ttft_s = 1.5\nhorizon_s = 20\n",
+        )
+        .unwrap();
+        let cfg = ClusterConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.autoscaler.policy, ScalerKind::SloAware);
+        assert_eq!(cfg.autoscaler.target_ttft_s, 1.5);
+        assert_eq!(cfg.autoscaler.horizon_s, 20.0);
+        // Default: the reactive policy, untouched thresholds.
+        let off = ClusterConfig::from_toml(&parse_toml("").unwrap()).unwrap();
+        assert_eq!(off.autoscaler, AutoscalerConfig::default());
+        // Unknown policy names are a config error.
+        let bad = parse_toml("[autoscaler]\npolicy = \"magic\"\n").unwrap();
+        assert!(ClusterConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn from_toml_reads_cost_section() {
+        let doc =
+            parse_toml("[cost]\ngpu_usd_per_hour = 4.0\nhost_usd_per_gb_hour = 0.01\n").unwrap();
+        let cfg = ClusterConfig::from_toml(&doc).unwrap();
+        assert_eq!(cfg.cost.gpu_usd_per_hour, 4.0);
+        assert_eq!(cfg.cost.host_usd_per_gb_hour, 0.01);
+        // Pricing helpers: one GPU-hour and one GB-hour at those rates.
+        assert!((cfg.cost.gpu_usd(3600.0) - 4.0).abs() < 1e-12);
+        assert!((cfg.cost.host_usd(3600.0) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaler_kind_parse_roundtrip() {
+        for kind in [ScalerKind::ReactiveWindow, ScalerKind::SloAware, ScalerKind::PredictiveEwma]
+        {
+            assert_eq!(ScalerKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert_eq!(ScalerKind::parse("reactive").unwrap(), ScalerKind::ReactiveWindow);
+        assert_eq!(ScalerKind::parse("slo").unwrap(), ScalerKind::SloAware);
+        assert_eq!(ScalerKind::parse("predictive").unwrap(), ScalerKind::PredictiveEwma);
+        assert!(ScalerKind::parse("none").is_err());
     }
 }

@@ -4,15 +4,21 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed configuration value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TomlValue {
+    /// A signed integer literal.
     Int(i64),
+    /// A float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A double-quoted string.
     Str(String),
 }
 
 impl TomlValue {
+    /// The integer value, if this is an [`TomlValue::Int`].
     pub fn as_int(&self) -> Option<i64> {
         match self {
             TomlValue::Int(i) => Some(*i),
@@ -20,6 +26,7 @@ impl TomlValue {
         }
     }
 
+    /// The numeric value as a float (ints coerce).
     pub fn as_float(&self) -> Option<f64> {
         match self {
             TomlValue::Float(f) => Some(*f),
@@ -28,6 +35,7 @@ impl TomlValue {
         }
     }
 
+    /// The string value, if this is a [`TomlValue::Str`].
     pub fn as_str(&self) -> Option<&str> {
         match self {
             TomlValue::Str(s) => Some(s),
@@ -36,9 +44,12 @@ impl TomlValue {
     }
 }
 
+/// A parse failure with its 1-based source line.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TomlError {
+    /// 1-based line number of the offending line.
     pub line: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
@@ -50,6 +61,7 @@ impl fmt::Display for TomlError {
 
 impl std::error::Error for TomlError {}
 
+/// A parsed document: section name → key → value.
 pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
 
 /// Parse the TOML subset. Keys before any `[section]` land in section `""`.

@@ -1,13 +1,94 @@
-//! Reactive autoscaling policy: decide how many serving instances a model
-//! needs from observed arrivals and backlog, and when idle instances may be
-//! reclaimed (keep-alive).
+//! Pluggable autoscaling: the [`ScalingPolicy`] trait decides how many
+//! serving instances a model needs and when idle instances may be
+//! reclaimed (keep-alive), completing the coordinator's trait surface
+//! next to `ScalingBackend`, `RoutingPolicy` and `AdmissionPolicy`.
+//!
+//! Three shipped policies:
+//!
+//! * [`ReactiveWindow`] (= [`Autoscaler`], the seed behavior) — sliding-
+//!   window arrival-rate estimation plus backlog-triggered scale-out.
+//! * [`SloAware`] — scales from *observed* p99 TTFT versus a target: while
+//!   the measured tail exceeds the SLO it over-provisions proportionally
+//!   to the violation and refuses keep-alive reclaims.
+//! * [`PredictiveEwma`] — fast/slow EWMA ramp detection: when the fast
+//!   rate estimate pulls ahead of the slow one, it extrapolates the ramp
+//!   over a pre-warm horizon and recruits capacity before the backlog
+//!   materializes.
 //!
 //! The policy itself is system-agnostic — λScale and the baselines differ
 //! in how *fast* a scaling decision materializes (multicast vs SSD load),
-//! which is exactly what Fig 14 measures.
+//! which is exactly what Fig 14 measures. Every implementation must be
+//! deterministic: reproducible simulation runs (and the `lambda-scale
+//! eval` scoreboard) depend on identical decisions for identical inputs.
+//!
+//! Wiring: `ServingSession::builder().scaler(..)` per model, the TOML
+//! `[autoscaler]` section ([`AutoscalerConfig`] → [`scaler_from_config`]),
+//! or `lambda-scale session --scaler <name>` on the CLI (`lambda-scale
+//! eval` takes no `--scaler`: it always runs every policy in its matrix).
 
+use crate::config::{AutoscalerConfig, ScalerKind};
 use crate::sim::time::SimTime;
+use crate::util::stats::Samples;
 use std::collections::VecDeque;
+
+/// An instance-count policy consulted by the serving engine.
+///
+/// The engine feeds a policy three observation streams — arrivals
+/// ([`ScalingPolicy::observe_arrival`]), first-token latencies
+/// ([`ScalingPolicy::observe_ttft`]) and the derived per-instance
+/// capacity ([`ScalingPolicy::configure`], called once before serving) —
+/// and asks two questions: how many instances are wanted now
+/// ([`ScalingPolicy::desired`]), and whether an idle instance may be
+/// reclaimed ([`ScalingPolicy::should_reclaim`]).
+///
+/// Implementations must be deterministic (no wall clock, no RNG): the
+/// engine replays traces for reproducible figures and A/B evaluation.
+pub trait ScalingPolicy {
+    /// Stable policy name (used in reports and the eval scoreboard).
+    fn name(&self) -> &'static str;
+
+    /// Called once by the engine before serving starts, with the demand a
+    /// single instance can absorb (requests/s, derived from the execution
+    /// pipeline's performance model) and the configured keep-alive.
+    fn configure(&mut self, instance_rps: f64, keep_alive: SimTime);
+
+    /// Record one request arrival.
+    fn observe_arrival(&mut self, now: SimTime);
+
+    /// Record one served first token and its TTFT (seconds since the
+    /// request arrived). Default: ignored.
+    fn observe_ttft(&mut self, _now: SimTime, _ttft_s: f64) {}
+
+    /// Desired instance count given `queued` waiting requests and
+    /// `current` live-or-loading instances.
+    fn desired(&mut self, now: SimTime, queued: usize, current: usize) -> usize;
+
+    /// Should an instance idle since `idle_since` be reclaimed at `now`?
+    ///
+    /// Contract: a refusal must not last forever. The engine re-probes a
+    /// refused reclaim periodically and relies on holds expiring once new
+    /// observations stop arriving (e.g. an SLO window draining, a ramp
+    /// going quiet); a policy that refuses unconditionally would keep the
+    /// session's event loop alive indefinitely.
+    fn should_reclaim(&self, now: SimTime, idle_since: SimTime) -> bool;
+}
+
+/// Build the boxed [`ScalingPolicy`] a config section names.
+///
+/// [`ScalerKind::SloAware`] takes its TTFT target and
+/// [`ScalerKind::PredictiveEwma`] its pre-warm horizon from the same
+/// [`AutoscalerConfig`].
+pub fn scaler_from_config(cfg: &AutoscalerConfig) -> Box<dyn ScalingPolicy> {
+    match cfg.policy {
+        ScalerKind::ReactiveWindow => Box::new(ReactiveWindow::default()),
+        ScalerKind::SloAware => Box::new(SloAware::new(cfg.target_ttft_s)),
+        ScalerKind::PredictiveEwma => Box::new(PredictiveEwma::new(cfg.horizon_s)),
+    }
+}
+
+/// The reactive sliding-window policy — today's (seed) behavior, kept as
+/// the concrete [`Autoscaler`] struct for backwards compatibility.
+pub type ReactiveWindow = Autoscaler;
 
 /// Sliding-window reactive autoscaler.
 #[derive(Clone, Debug)]
@@ -25,7 +106,17 @@ pub struct Autoscaler {
     arrivals: VecDeque<SimTime>,
 }
 
+impl Default for Autoscaler {
+    /// Placeholder capacity (1 req/s, 15 s keep-alive); the engine
+    /// overwrites both through [`ScalingPolicy::configure`].
+    fn default() -> Self {
+        Autoscaler::new(1.0, SimTime::from_secs(15.0))
+    }
+}
+
 impl Autoscaler {
+    /// Policy absorbing `instance_rps` per instance, reclaiming after
+    /// `keep_alive` idle.
     pub fn new(instance_rps: f64, keep_alive: SimTime) -> Self {
         Autoscaler {
             window: SimTime::from_secs(10.0),
@@ -77,6 +168,258 @@ impl Autoscaler {
     }
 }
 
+impl ScalingPolicy for Autoscaler {
+    fn name(&self) -> &'static str {
+        "reactive-window"
+    }
+
+    fn configure(&mut self, instance_rps: f64, keep_alive: SimTime) {
+        self.instance_rps = instance_rps.max(1e-9);
+        self.keep_alive = keep_alive;
+    }
+
+    fn observe_arrival(&mut self, now: SimTime) {
+        self.observe(now);
+    }
+
+    fn desired(&mut self, now: SimTime, queued: usize, current: usize) -> usize {
+        Autoscaler::desired(self, now, queued, current)
+    }
+
+    fn should_reclaim(&self, now: SimTime, idle_since: SimTime) -> bool {
+        Autoscaler::should_reclaim(self, now, idle_since)
+    }
+}
+
+/// SLO-aware scaling: reactive sizing plus a feedback term from observed
+/// first-token latency.
+///
+/// While the p99 TTFT measured over the trailing window exceeds the
+/// target, `desired` multiplies the reactive answer by the violation
+/// ratio (capped at [`SloAware::max_boost`]) and always asks for at least
+/// one more instance than currently exists; keep-alive reclaims are
+/// refused until the tail is back inside the SLO. When the window is
+/// empty or inside the target, behavior is exactly the reactive policy.
+#[derive(Clone, Debug)]
+pub struct SloAware {
+    base: Autoscaler,
+    /// TTFT target (seconds) this policy defends.
+    pub target_ttft_s: f64,
+    /// Trailing observation window for the p99 estimate.
+    pub window: SimTime,
+    /// Cap on the violation-proportional capacity multiplier.
+    pub max_boost: f64,
+    ttfts: VecDeque<(SimTime, f64)>,
+    /// Memo of the last p99 computed, keyed by its timestamp: the engine
+    /// consults `desired` and `should_reclaim` (often for several
+    /// instances) at the same instant, and the window only changes
+    /// between observations — no need to re-sort it per question.
+    p99_memo: std::cell::Cell<Option<(SimTime, Option<f64>)>>,
+}
+
+impl SloAware {
+    /// SLO-aware policy defending a p99-TTFT target of `target_ttft_s`
+    /// seconds (clamped to at least 1 ms).
+    pub fn new(target_ttft_s: f64) -> Self {
+        SloAware {
+            base: Autoscaler::default(),
+            target_ttft_s: target_ttft_s.max(1e-3),
+            window: SimTime::from_secs(30.0),
+            max_boost: 4.0,
+            ttfts: VecDeque::new(),
+            p99_memo: std::cell::Cell::new(None),
+        }
+    }
+
+    /// p99 of the TTFT observations still inside the window, if any.
+    /// Memoized per `now` (invalidated by `observe_ttft`).
+    fn p99_in_window(&self, now: SimTime) -> Option<f64> {
+        if let Some((at, p99)) = self.p99_memo.get() {
+            if at == now {
+                return p99;
+            }
+        }
+        let mut s = Samples::new();
+        for &(t, v) in &self.ttfts {
+            if now.saturating_sub(t) <= self.window {
+                s.push(v);
+            }
+        }
+        let p99 = if s.is_empty() {
+            None
+        } else {
+            Some(s.percentile(99.0))
+        };
+        self.p99_memo.set(Some((now, p99)));
+        p99
+    }
+
+    fn out_of_slo(&self, now: SimTime) -> bool {
+        self.p99_in_window(now).map_or(false, |p99| p99 > self.target_ttft_s)
+    }
+}
+
+impl ScalingPolicy for SloAware {
+    fn name(&self) -> &'static str {
+        "slo-aware"
+    }
+
+    fn configure(&mut self, instance_rps: f64, keep_alive: SimTime) {
+        self.base.configure(instance_rps, keep_alive);
+    }
+
+    fn observe_arrival(&mut self, now: SimTime) {
+        self.base.observe(now);
+    }
+
+    fn observe_ttft(&mut self, now: SimTime, ttft_s: f64) {
+        self.ttfts.push_back((now, ttft_s));
+        self.p99_memo.set(None);
+        while let Some(&(t, _)) = self.ttfts.front() {
+            if now.saturating_sub(t) > self.window {
+                self.ttfts.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn desired(&mut self, now: SimTime, queued: usize, current: usize) -> usize {
+        let base = self.base.desired(now, queued, current);
+        match self.p99_in_window(now) {
+            Some(p99) if p99 > self.target_ttft_s => {
+                let factor = (p99 / self.target_ttft_s).min(self.max_boost);
+                let boosted = (base.max(current) as f64 * factor).ceil() as usize;
+                boosted.max(current + 1)
+            }
+            _ => base,
+        }
+    }
+
+    fn should_reclaim(&self, now: SimTime, idle_since: SimTime) -> bool {
+        // Out of SLO: hold every replica — reclaiming while the tail is
+        // blown only deepens the violation on the next burst.
+        !self.out_of_slo(now) && self.base.should_reclaim(now, idle_since)
+    }
+}
+
+/// Predictive scaling: fast/slow exponentially-weighted arrival-rate
+/// estimates detect a ramp before the sliding window fully reflects it,
+/// and pre-warm capacity for where the ramp will be `horizon_s` seconds
+/// from now.
+///
+/// A ramp is "fast estimate > [`PredictiveEwma::ramp_ratio`] × slow
+/// estimate". While ramping, `desired` extrapolates the rate gap over the
+/// horizon (capped at 4× the fast estimate) and sizes capacity for the
+/// projected rate; keep-alive reclaims are refused — but only while
+/// arrivals keep coming (a ramp quiet for a full fast time constant
+/// counts as over, so holds can't outlive their evidence). Off-ramp,
+/// behavior is exactly the reactive policy.
+#[derive(Clone, Debug)]
+pub struct PredictiveEwma {
+    base: Autoscaler,
+    /// Pre-warm lookahead (seconds) the ramp is extrapolated over.
+    pub horizon_s: f64,
+    /// Fast estimator time constant (seconds).
+    pub tau_fast_s: f64,
+    /// Slow estimator time constant (seconds).
+    pub tau_slow_s: f64,
+    /// fast/slow ratio that counts as a ramp.
+    pub ramp_ratio: f64,
+    fast: f64,
+    slow: f64,
+    last_arrival: Option<SimTime>,
+}
+
+impl PredictiveEwma {
+    /// Predictive policy pre-warming `horizon_s` seconds ahead of a
+    /// detected ramp.
+    pub fn new(horizon_s: f64) -> Self {
+        PredictiveEwma {
+            base: Autoscaler::default(),
+            horizon_s: horizon_s.max(0.0),
+            tau_fast_s: 5.0,
+            tau_slow_s: 60.0,
+            ramp_ratio: 1.5,
+            fast: 0.0,
+            slow: 0.0,
+            last_arrival: None,
+        }
+    }
+
+    /// Whether the fast rate estimate has pulled ahead of the slow one.
+    pub fn ramping(&self) -> bool {
+        self.slow > 1e-9 && self.fast > self.slow * self.ramp_ratio
+    }
+}
+
+impl ScalingPolicy for PredictiveEwma {
+    fn name(&self) -> &'static str {
+        "predictive-ewma"
+    }
+
+    fn configure(&mut self, instance_rps: f64, keep_alive: SimTime) {
+        self.base.configure(instance_rps, keep_alive);
+    }
+
+    fn observe_arrival(&mut self, now: SimTime) {
+        self.base.observe(now);
+        if let Some(prev) = self.last_arrival {
+            // Exponentially-decayed event-count rate estimators: the state
+            // decays by e^(-dt/τ) and every arrival adds 1/τ, so the
+            // stationary mean equals the true arrival rate for Poisson
+            // traffic. Unlike an EWMA of 1/dt this is not heavy-tailed
+            // (one freak 1 ms gap cannot spike the estimate), yet a
+            // same-instant burst still registers: each of its arrivals
+            // adds a full 1/τ with no decay in between.
+            let dt = now.saturating_sub(prev).as_secs();
+            if self.fast == 0.0 && self.slow == 0.0 && dt > 0.0 {
+                // Warm start: seed both estimators at the first observed
+                // inter-arrival rate. Growing from zero would leave the
+                // slow one lagging for minutes, and that cold-start
+                // transient (fast > slow) is indistinguishable from a
+                // real ramp. (A same-instant first gap skips the seed and
+                // grows count-wise instead — an opening burst *should*
+                // read as a ramp.)
+                let inst = (1.0 / dt).min(1e4);
+                self.fast = inst;
+                self.slow = inst;
+            } else {
+                self.fast = self.fast * (-dt / self.tau_fast_s).exp() + 1.0 / self.tau_fast_s;
+                self.slow = self.slow * (-dt / self.tau_slow_s).exp() + 1.0 / self.tau_slow_s;
+            }
+        }
+        self.last_arrival = Some(now);
+    }
+
+    fn desired(&mut self, now: SimTime, queued: usize, current: usize) -> usize {
+        let base = self.base.desired(now, queued, current);
+        if !self.ramping() {
+            return base;
+        }
+        // Extrapolate the ramp: the fast/slow gap closed over tau_slow
+        // approximates the rate's growth per second.
+        let growth_per_s = (self.fast - self.slow) / self.tau_slow_s.max(1e-9);
+        let projected = (self.fast + growth_per_s * self.horizon_s).min(self.fast * 4.0);
+        let pred =
+            (projected * self.base.headroom / self.base.instance_rps.max(1e-9)).ceil() as usize;
+        base.max(pred)
+    }
+
+    fn should_reclaim(&self, now: SimTime, idle_since: SimTime) -> bool {
+        // Mid-ramp, keep warm capacity: the next wave is already visible
+        // in the fast estimator. But the estimators only move on
+        // arrivals, so a ramp with no arrival for a full fast time
+        // constant is treated as over — otherwise a frozen ramp state
+        // would hold replicas forever (the `should_reclaim` contract).
+        let ramp_live = self.ramping()
+            && self
+                .last_arrival
+                .is_some_and(|t| now.saturating_sub(t).as_secs() <= self.tau_fast_s);
+        !ramp_live && self.base.should_reclaim(now, idle_since)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,10 +462,179 @@ mod tests {
         assert_eq!(a.rate(t(100.0)), 0.0);
     }
 
+    /// The window GC keeps an arrival aged exactly `window` and drops it
+    /// one nanosecond later (the `>` boundary in `gc`).
+    #[test]
+    fn window_gc_exact_boundary() {
+        let mut a = Autoscaler::new(2.0, t(15.0));
+        a.observe(t(0.0));
+        assert!(a.rate(a.window) > 0.0, "arrival aged exactly `window` must still count");
+        let just_past = SimTime(a.window.0 + 1);
+        assert_eq!(a.rate(just_past), 0.0, "one ns past the window must be forgotten");
+    }
+
+    /// `desired` backlog trigger at the exact per-instance threshold:
+    /// `backlog_per_instance` queued adds one replica, one fewer does not.
+    #[test]
+    fn desired_backlog_exact_threshold() {
+        let mut a = Autoscaler::new(1000.0, t(15.0)); // rate term ≈ 0
+        let per = a.backlog_per_instance;
+        assert_eq!(a.desired(t(0.0), per, 3), 4, "exactly one backlog unit adds one");
+        assert_eq!(a.desired(t(0.0), per - 1, 3), 3, "below the unit keeps current");
+        // Zero current still serves a backlog: the floor is one instance.
+        assert_eq!(a.desired(t(0.0), 1, 0), 1);
+    }
+
     #[test]
     fn keep_alive_reclaim() {
         let a = Autoscaler::new(2.0, t(15.0));
         assert!(!a.should_reclaim(t(10.0), t(0.0)));
         assert!(a.should_reclaim(t(15.0), t(0.0)));
+    }
+
+    /// Reclaim is `>=`: idle for exactly `keep_alive` reclaims, one
+    /// nanosecond less does not.
+    #[test]
+    fn keep_alive_reclaim_exact_edge() {
+        let a = Autoscaler::new(2.0, t(15.0));
+        let idle_since = t(3.0);
+        let exactly = idle_since + a.keep_alive;
+        assert!(a.should_reclaim(exactly, idle_since));
+        assert!(!a.should_reclaim(SimTime(exactly.0 - 1), idle_since));
+    }
+
+    #[test]
+    fn configure_overrides_capacity_and_keep_alive() {
+        let mut a = Autoscaler::default();
+        a.configure(8.0, t(3.0));
+        assert_eq!(a.instance_rps, 8.0);
+        assert_eq!(a.keep_alive, t(3.0));
+        assert_eq!(a.name(), "reactive-window");
+    }
+
+    #[test]
+    fn slo_aware_matches_reactive_inside_target() {
+        // With an unreachably high target the feedback term never fires:
+        // the decision sequence is bit-identical to the reactive policy.
+        let mut slo = SloAware::new(1e9);
+        let mut base = Autoscaler::default();
+        ScalingPolicy::configure(&mut slo, 2.0, t(15.0));
+        ScalingPolicy::configure(&mut base, 2.0, t(15.0));
+        for i in 0..50 {
+            let now = t(i as f64 * 0.1);
+            slo.observe_arrival(now);
+            ScalingPolicy::observe_arrival(&mut base, now);
+            slo.observe_ttft(now, 0.5);
+            assert_eq!(
+                ScalingPolicy::desired(&mut slo, now, 3, 1),
+                ScalingPolicy::desired(&mut base, now, 3, 1)
+            );
+        }
+    }
+
+    #[test]
+    fn slo_aware_boosts_and_holds_replicas_when_violated() {
+        let mut slo = SloAware::new(0.5);
+        let mut base = Autoscaler::default();
+        ScalingPolicy::configure(&mut slo, 2.0, t(15.0));
+        ScalingPolicy::configure(&mut base, 2.0, t(15.0));
+        let now = t(20.0);
+        for i in 0..20 {
+            slo.observe_arrival(t(19.0 + i as f64 * 0.05));
+            ScalingPolicy::observe_arrival(&mut base, t(19.0 + i as f64 * 0.05));
+            slo.observe_ttft(now, 4.0); // 8× over target
+        }
+        let b = ScalingPolicy::desired(&mut base, now, 0, 2);
+        let s = ScalingPolicy::desired(&mut slo, now, 0, 2);
+        assert!(s > b, "violated SLO must over-provision: slo {s} vs reactive {b}");
+        assert!(s >= 3, "must ask for more than current while violated");
+        // Keep-alive is suspended while out of SLO...
+        assert!(!ScalingPolicy::should_reclaim(&slo, t(40.0), t(0.0)));
+        // ...and resumes once the observations age out of the window.
+        assert!(ScalingPolicy::should_reclaim(&slo, t(120.0), t(0.0)));
+    }
+
+    #[test]
+    fn predictive_prewarms_on_ramp() {
+        let mut pred = PredictiveEwma::new(10.0);
+        let mut base = Autoscaler::default();
+        ScalingPolicy::configure(&mut pred, 2.0, t(15.0));
+        ScalingPolicy::configure(&mut base, 2.0, t(15.0));
+        // 60 s of slow traffic (1 every 2 s), then a sharp ramp.
+        let mut now = t(0.0);
+        for i in 0..30 {
+            now = t(i as f64 * 2.0);
+            pred.observe_arrival(now);
+            ScalingPolicy::observe_arrival(&mut base, now);
+        }
+        assert!(!pred.ramping(), "steady traffic must not look like a ramp");
+        for i in 0..40 {
+            now = t(60.0 + i as f64 * 0.05); // 20 rps
+            pred.observe_arrival(now);
+            ScalingPolicy::observe_arrival(&mut base, now);
+        }
+        assert!(pred.ramping(), "20× rate surge must register as a ramp");
+        let p = ScalingPolicy::desired(&mut pred, now, 0, 1);
+        let b = ScalingPolicy::desired(&mut base, now, 0, 1);
+        assert!(p >= b, "pre-warming must never ask for less: pred {p} vs reactive {b}");
+        // Mid-ramp (an arrival within the fast time constant) the hold is
+        // on; once the ramp goes quiet it expires and the plain keep-alive
+        // rule applies again — holds must not outlive their evidence.
+        assert!(!ScalingPolicy::should_reclaim(&pred, now + t(2.0), t(0.0)));
+        assert!(ScalingPolicy::should_reclaim(&pred, now + t(100.0), t(0.0)));
+    }
+
+    /// A synchronized same-instant burst must register in the estimators
+    /// (the per-event floor weights): 48 arrivals at one instant flip the
+    /// ramp detector even though they carry almost no time mass.
+    #[test]
+    fn predictive_detects_same_instant_burst() {
+        let mut pred = PredictiveEwma::new(10.0);
+        ScalingPolicy::configure(&mut pred, 2.0, t(15.0));
+        // Light background: 1 request every 2 s for 60 s.
+        for i in 0..30 {
+            pred.observe_arrival(t(i as f64 * 2.0));
+        }
+        assert!(!pred.ramping(), "background traffic is not a ramp");
+        // The spike-trace shape: a 48-request burst at one instant.
+        for _ in 0..48 {
+            pred.observe_arrival(t(60.0));
+        }
+        assert!(pred.ramping(), "a synchronized burst must register as a ramp");
+        let d = ScalingPolicy::desired(&mut pred, t(60.0), 0, 1);
+        assert!(d > 1, "burst must demand pre-warmed capacity, got {d}");
+    }
+
+    /// Replaying an identical observation stream into two fresh policy
+    /// instances yields identical decision sequences (determinism — the
+    /// serving engine's reproducibility depends on it).
+    #[test]
+    fn policies_deterministic_under_replay() {
+        let cfgs = [ScalerKind::ReactiveWindow, ScalerKind::SloAware, ScalerKind::PredictiveEwma];
+        for kind in cfgs {
+            let cfg = AutoscalerConfig { policy: kind, ..Default::default() };
+            let mut a = scaler_from_config(&cfg);
+            let mut b = scaler_from_config(&cfg);
+            a.configure(2.0, t(15.0));
+            b.configure(2.0, t(15.0));
+            let mut decisions_a = Vec::new();
+            let mut decisions_b = Vec::new();
+            for i in 0..200u64 {
+                // A deterministic but irregular schedule.
+                let now = SimTime(i * 37_000_000 + (i % 7) * 1_000_000);
+                a.observe_arrival(now);
+                b.observe_arrival(now);
+                if i % 3 == 0 {
+                    let ttft = (i % 11) as f64 * 0.3;
+                    a.observe_ttft(now, ttft);
+                    b.observe_ttft(now, ttft);
+                }
+                let da = a.desired(now, (i % 5) as usize, 2);
+                let db = b.desired(now, (i % 5) as usize, 2);
+                decisions_a.push((da, a.should_reclaim(now, SimTime::ZERO)));
+                decisions_b.push((db, b.should_reclaim(now, SimTime::ZERO)));
+            }
+            assert_eq!(decisions_a, decisions_b, "{} must be deterministic", a.name());
+        }
     }
 }

@@ -43,17 +43,24 @@ pub struct ScalingRequest<'a> {
     pub sources: Vec<Source>,
     /// Cold nodes that need the model delivered.
     pub dests: Vec<NodeId>,
+    /// The model being scaled.
     pub spec: &'a ModelSpec,
+    /// Its multicast block partition.
     pub partition: &'a Partition,
+    /// Transfer tuning (packing, pre-allocation).
     pub opts: TransferOpts,
+    /// KV rebuild strategy priced into the mode switch.
     pub switch: SwitchStrategy,
 }
 
 /// Per-node occupancy as seen by a backend.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum NodeStatus {
+    /// No model owns the node's GPU.
     Free,
+    /// A scaling operation is streaming a model in.
     Loading,
+    /// A serving instance occupies the GPU.
     Serving,
 }
 
@@ -62,7 +69,9 @@ pub enum NodeStatus {
 /// `plan_scaling` compatibility shim); `config` is always present.
 #[derive(Clone, Copy, Debug)]
 pub struct ClusterState<'a> {
+    /// The static cluster configuration.
     pub config: &'a ClusterConfig,
+    /// Per-node occupancy (may be empty).
     pub nodes: &'a [NodeStatus],
     /// Per-node residency of the model being scaled, from the serving
     /// engine's `MemoryManager` (`Locality::Gpu` only for fully-loaded
@@ -420,6 +429,7 @@ pub struct MockBackend {
 }
 
 impl MockBackend {
+    /// A backend that replays `outcomes` in order (then repeats the last).
     pub fn new(outcomes: Vec<ScalingOutcome>) -> Self {
         MockBackend {
             script: std::cell::RefCell::new(outcomes.into()),

@@ -12,7 +12,9 @@ use std::collections::VecDeque;
 /// A queued unit of work.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Pending<T> {
+    /// The queued payload (the engine queues trace indices).
     pub item: T,
+    /// When the item entered the queue (head-of-line clock).
     pub enqueued: SimTime,
 }
 
@@ -20,16 +22,21 @@ pub struct Pending<T> {
 #[derive(Clone, Debug)]
 pub struct DynamicBatcher<T> {
     queue: VecDeque<Pending<T>>,
+    /// Batch-size flush trigger.
     pub max_batch: usize,
+    /// Head-of-line latency flush trigger.
     pub max_wait: SimTime,
 }
 
 impl<T> DynamicBatcher<T> {
+    /// A queue flushing on `max_batch` items or `max_wait` head-of-line
+    /// latency.
     pub fn new(max_batch: usize, max_wait: SimTime) -> Self {
         assert!(max_batch >= 1);
         DynamicBatcher { queue: VecDeque::new(), max_batch, max_wait }
     }
 
+    /// Enqueue at the back of the line.
     pub fn push(&mut self, item: T, now: SimTime) {
         self.queue.push_back(Pending { item, enqueued: now });
     }
@@ -41,10 +48,12 @@ impl<T> DynamicBatcher<T> {
         self.queue.push_front(Pending { item, enqueued });
     }
 
+    /// Waiting requests.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// Whether the queue is empty.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }

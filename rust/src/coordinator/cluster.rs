@@ -14,11 +14,14 @@ use std::collections::HashMap;
 
 /// Multi-tenant cluster state.
 pub struct ClusterManager {
+    /// Published models.
     pub registry: ModelRegistry,
+    /// Cluster-wide tiered residency.
     pub mem: MemoryManager,
 }
 
 impl ClusterManager {
+    /// A manager over `n_nodes` with uniform per-node tier capacities.
     pub fn new(n_nodes: usize, gpu_capacity: u64, host_capacity: u64) -> Self {
         ClusterManager {
             registry: ModelRegistry::new(),

@@ -97,11 +97,22 @@ struct Inst {
     queue: DynamicBatcher<usize>,
     last_update: SimTime,
     idle_since: SimTime,
+    /// Reclaim probes refused by the scaling policy past the keep-alive
+    /// in the current idle period (reset on each new idle); bounded by
+    /// [`RECLAIM_PROBE_CAP`] so an ill-behaved policy cannot keep the
+    /// event loop alive forever.
+    reclaim_probes: u32,
     version: u64,
     token_accum: f64,
     /// Paged KV state (kvcache mode only).
     kv: Option<InstKv>,
 }
+
+/// Forced-reclaim backstop: after this many policy-refused probes past
+/// the keep-alive within one idle period, the instance is reclaimed
+/// regardless. Far above any legitimate hold (the shipped policies
+/// release within one observation window, a handful of probes).
+const RECLAIM_PROBE_CAP: u32 = 64;
 
 /// A displaced request's saved progress, awaiting re-admission.
 #[derive(Clone, Copy, Debug)]
@@ -159,7 +170,9 @@ struct ModelRuntime {
     /// Global queue when no instance exists yet.
     unrouted: std::collections::VecDeque<usize>,
     req_inst: HashMap<usize, u64>,
-    autoscaler: super::autoscaler::Autoscaler,
+    /// The model's scaling policy (from the session builder, or the
+    /// cluster config's `[autoscaler]` section when none was set).
+    scaler: Box<dyn super::autoscaler::ScalingPolicy>,
     /// A ScaleCheck event is already queued.
     scale_check_pending: bool,
     /// Earliest time the next scaling operation may start (cooldown).
@@ -187,7 +200,7 @@ struct ModelRuntime {
 }
 
 impl ModelRuntime {
-    fn new(ms: ModelSession, cluster: &ClusterConfig, tenant: usize) -> Self {
+    fn new(mut ms: ModelSession, cluster: &ClusterConfig, tenant: usize) -> Self {
         let p = &ms.params;
         let partition = p.spec.partition(p.n_blocks);
         // Work-units: prefill cost per prompt token relative to one decode
@@ -199,15 +212,17 @@ impl ModelRuntime {
 
         let per_inst_rps = local.peak_tps(p.max_batch, &p.spec, &cluster.compute)
             / cluster.compute.avg_output_tokens.max(1.0);
-        let autoscaler = super::autoscaler::Autoscaler::new(
-            per_inst_rps.max(0.1),
-            SimTime::from_secs(p.keep_alive_s),
-        );
+        let keep_alive = SimTime::from_secs(p.keep_alive_s);
         let backend_name = ms.backend.name();
         let mem_key = format!("{}#{tenant}", ms.params.spec.name);
-        let kv_geom = KvGeometry::for_model(&p.spec, cluster.kv.block_tokens);
+        let kv_geom = KvGeometry::for_model(&ms.params.spec, cluster.kv.block_tokens);
         let kv_sched =
             ContinuousScheduler::new(prefill_ratio, cluster.kv.prefill_budget_tokens as f64);
+        let mut scaler = ms
+            .scaler
+            .take()
+            .unwrap_or_else(|| super::autoscaler::scaler_from_config(&cluster.autoscaler));
+        scaler.configure(per_inst_rps.max(0.1), keep_alive);
         ModelRuntime {
             ms,
             backend_name,
@@ -216,7 +231,7 @@ impl ModelRuntime {
             next_inst_id: 0,
             unrouted: std::collections::VecDeque::new(),
             req_inst: HashMap::new(),
-            autoscaler,
+            scaler,
             scale_check_pending: false,
             next_op_at: SimTime::ZERO,
             last_gpu_count: 0,
@@ -236,6 +251,23 @@ impl ModelRuntime {
     }
 }
 
+/// Record a request's first token: remember the emission time and feed the
+/// TTFT observation to the scaling policy. Shared by both advance paths
+/// (fluid and kvcache) so the TTFT definition cannot drift between them;
+/// takes the runtime's fields split apart because callers hold a mutable
+/// borrow of `instances` at the call site.
+fn note_first_token(
+    first_tokens: &mut HashMap<usize, SimTime>,
+    trace: &crate::workload::Trace,
+    scaler: &mut dyn super::autoscaler::ScalingPolicy,
+    idx: usize,
+    now: SimTime,
+) {
+    first_tokens.insert(idx, now);
+    let ttft = now.saturating_sub(trace.requests[idx].arrival).as_secs();
+    scaler.observe_ttft(now, ttft);
+}
+
 /// The multi-model serving engine. Construct with [`ServingEngine::new`],
 /// add models (in priority order for initial node claims), then [`run`].
 ///
@@ -247,13 +279,53 @@ pub struct ServingEngine {
     models: Vec<ModelRuntime>,
     /// Cluster-wide tiered residency, shared across all tenants (§5).
     mem: MemoryManager,
+    /// Per-node GPU-cost meter: `Some((model, since))` while a node is
+    /// reserved for (loading) or serving a tenant; billed on release.
+    node_busy: Vec<Option<(usize, SimTime)>>,
+    /// Latest event timestamp seen — the metering horizon at run end.
+    horizon: SimTime,
 }
 
 impl ServingEngine {
+    /// An engine over `cluster` with no models registered yet.
     pub fn new(cluster: ClusterConfig) -> Self {
         let node_state = vec![NodeUse::Free; cluster.n_nodes];
+        let node_busy = vec![None; cluster.n_nodes];
         let mem = MemoryManager::from_cluster(&cluster);
-        ServingEngine { cluster, q: EventQueue::new(), node_state, models: Vec::new(), mem }
+        ServingEngine {
+            cluster,
+            q: EventQueue::new(),
+            node_state,
+            models: Vec::new(),
+            mem,
+            node_busy,
+            horizon: SimTime::ZERO,
+        }
+    }
+
+    /// Update a node's occupancy and meter per-node GPU·seconds: a tenant
+    /// is billed for a node from the moment a scaling operation reserves
+    /// it (loading included — the reason slow loading costs money in
+    /// Fig 14) through serving and idle keep-alive, until the node
+    /// returns to the free pool. Same-tenant transitions (loading →
+    /// serving) keep one open interval.
+    fn set_node_use(&mut self, n: usize, u: NodeUse, now: SimTime) {
+        self.node_state[n] = u;
+        let owner = match u {
+            NodeUse::Free => None,
+            NodeUse::Loading(m) | NodeUse::Serving(m) => Some(m),
+        };
+        if let Some((m, since)) = self.node_busy[n] {
+            if owner == Some(m) {
+                return; // same tenant: the billing interval keeps running
+            }
+            let secs = now.saturating_sub(since).as_secs();
+            if secs > 0.0 {
+                let gpus = self.cluster.node.gpus_per_node.max(1) as f64;
+                self.models[m].ms.metrics.record_node_busy(n, secs * gpus);
+            }
+        }
+        self.node_busy[n] = owner.map(|m| (m, now));
     }
 
     /// The shared residency manager (read-only; inspect before `run`).
@@ -281,7 +353,7 @@ impl ServingEngine {
             }
             if want_gpu > 0 {
                 if self.mem.reserve_gpu(n, &rt.mem_key, SimTime::ZERO).is_ok() {
-                    self.node_state[n] = NodeUse::Serving(m);
+                    self.set_node_use(n, NodeUse::Serving(m), SimTime::ZERO);
                     rt.initial_gpu_nodes.push(n);
                     want_gpu -= 1;
                 }
@@ -316,6 +388,7 @@ impl ServingEngine {
             }
         }
         while let Some((t, ev)) = self.q.pop() {
+            self.horizon = self.horizon.max(t);
             match ev {
                 Ev::Arrival(m, i) => self.on_arrival(t, m, i),
                 Ev::ScaleCheck(m) => {
@@ -334,6 +407,28 @@ impl ServingEngine {
                 Ev::Reclaim(m, id) => self.on_reclaim(t, m, id),
             }
         }
+        // Close the cost meters at the simulation horizon: nodes still
+        // held (keep-alive floor replicas) bill their final interval, and
+        // each tenant's warm host-cache occupancy integral is folded into
+        // its metrics.
+        let horizon = self.horizon;
+        let gpus = self.cluster.node.gpus_per_node.max(1) as f64;
+        let models = &mut self.models;
+        for (n, slot) in self.node_busy.iter_mut().enumerate() {
+            if let Some((m, since)) = slot.take() {
+                let secs = horizon.saturating_sub(since).as_secs();
+                if secs > 0.0 {
+                    models[m].ms.metrics.record_node_busy(n, secs * gpus);
+                }
+            }
+        }
+        self.mem.accrue_host(horizon);
+        for rt in models.iter_mut() {
+            let gb_s = self.mem.host_gb_seconds(&rt.mem_key);
+            if gb_s > 0.0 {
+                rt.ms.metrics.record_host_gb_seconds(gb_s);
+            }
+        }
         SessionReport {
             models: self
                 .models
@@ -342,6 +437,7 @@ impl ServingEngine {
                     model: rt.ms.params.spec.name.clone(),
                     system: rt.backend_name,
                     router: rt.ms.router.policy_name(),
+                    scaler: rt.scaler.name(),
                     completed: rt.completed,
                     metrics: rt.ms.metrics,
                 })
@@ -364,7 +460,7 @@ impl ServingEngine {
         let mem_key = self.models[m].mem_key.clone();
         for &n in &pipe.nodes() {
             if n < self.node_state.len() {
-                self.node_state[n] = NodeUse::Serving(m);
+                self.set_node_use(n, NodeUse::Serving(m), now);
                 // Usually a refresh of the reservation made at recruit
                 // time; scripted (mock) plans may land on unreserved nodes,
                 // where a full node is simply not charged.
@@ -389,6 +485,7 @@ impl ServingEngine {
                 queue,
                 last_update: now,
                 idle_since: now,
+                reclaim_probes: 0,
                 version: 0,
                 token_accum: 0.0,
                 kv: None,
@@ -590,22 +687,51 @@ impl ServingEngine {
     }
 
     fn on_reclaim(&mut self, now: SimTime, m: usize, id: u64) {
-        let md = &self.models[m];
-        let Some(inst) = md.instances.get(&id) else { return };
-        if !inst.active.is_empty() || !inst.queue.is_empty() {
-            // Busy: advance() will schedule a fresh reclaim when it next
-            // goes idle. (No self-rescheduling here — it would keep the
-            // event queue alive forever.)
-            return;
-        }
-        if !md.autoscaler.should_reclaim(now, inst.idle_since) {
-            // Idle but not long enough: one bounded re-check.
-            let at = inst.idle_since + SimTime::from_secs(md.ms.params.keep_alive_s);
-            if at > now {
-                self.q.push(at, Ev::Reclaim(m, id));
+        // Decide with shared borrows only: `Some((at, is_hold))` re-checks
+        // later, `None` proceeds to reclaim.
+        let probe = {
+            let md = &self.models[m];
+            let Some(inst) = md.instances.get(&id) else { return };
+            if !inst.active.is_empty() || !inst.queue.is_empty() {
+                // Busy: advance() will schedule a fresh reclaim when it
+                // next goes idle. (No self-rescheduling here — it would
+                // keep the event queue alive forever.)
+                return;
             }
+            if md.scaler.should_reclaim(now, inst.idle_since) {
+                None
+            } else {
+                let keep_alive = SimTime::from_secs(md.ms.params.keep_alive_s);
+                let natural = inst.idle_since + keep_alive;
+                if natural > now {
+                    // Not idle long enough (the reactive path): re-check
+                    // exactly when the keep-alive elapses, preserving the
+                    // seed event schedule.
+                    Some((natural, false))
+                } else if inst.reclaim_probes < RECLAIM_PROBE_CAP {
+                    // The policy is deliberately holding capacity past the
+                    // keep-alive (SLO violated / mid-ramp): probe again one
+                    // keep-alive from now. Holds expire once the policy's
+                    // observation windows age out (a `ScalingPolicy`
+                    // contract), so legitimate chains end well short of
+                    // the cap.
+                    Some((now + keep_alive.max(SimTime::from_secs(1.0)), true))
+                } else {
+                    // A policy that refused this many consecutive probes
+                    // has broken the contract; force the reclaim rather
+                    // than keep the event loop alive forever.
+                    None
+                }
+            }
+        };
+        if let Some((at, hold)) = probe {
+            if hold {
+                self.models[m].instances.get_mut(&id).unwrap().reclaim_probes += 1;
+            }
+            self.q.push(at, Ev::Reclaim(m, id));
             return;
         }
+        let md = &self.models[m];
         // Keep at least one replica alive so k >= 1 (paper footnote 2):
         // the floor instance simply stays; if another instance appears and
         // this one idles again, a new reclaim will be scheduled.
@@ -624,7 +750,7 @@ impl ServingEngine {
         }
         for n in inst.pipe.nodes() {
             if n < self.node_state.len() {
-                self.node_state[n] = NodeUse::Free;
+                self.set_node_use(n, NodeUse::Free, now);
                 // GPU→host demotion through the shared manager: the model
                 // stays warm if the node's host tier has room — possibly by
                 // evicting another tenant's warm copy (whose next scale-up
@@ -639,7 +765,7 @@ impl ServingEngine {
     // ---- arrivals & routing -------------------------------------------------
 
     fn on_arrival(&mut self, now: SimTime, m: usize, idx: usize) {
-        self.models[m].autoscaler.observe(now);
+        self.models[m].scaler.observe_arrival(now);
         self.route_request(now, m, idx);
         // Defer the scaling decision: same-instant arrivals (a burst) are
         // coalesced into one decision that sees the full backlog.
@@ -878,7 +1004,13 @@ impl ServingEngine {
             }
             if !a.first_emitted && a.done + 1e-9 >= a.w_first {
                 a.first_emitted = true;
-                md.first_tokens.insert(a.idx, now);
+                note_first_token(
+                    &mut md.first_tokens,
+                    &md.ms.trace,
+                    md.scaler.as_mut(),
+                    a.idx,
+                    now,
+                );
             }
         }
         // Only decode work emits tokens (prefill/stall work does not).
@@ -904,6 +1036,7 @@ impl ServingEngine {
         let went_idle = inst.active.is_empty() && inst.queue.is_empty();
         if went_idle {
             inst.idle_since = now;
+            inst.reclaim_probes = 0;
         }
         if emitted_tokens > 0 {
             md.ms.metrics.record_tokens(now, emitted_tokens);
@@ -936,7 +1069,13 @@ impl ServingEngine {
             a.done += per_req * dt;
             if !a.first_emitted && a.done + 1e-9 >= a.w_first {
                 a.first_emitted = true;
-                md.first_tokens.insert(a.idx, now);
+                note_first_token(
+                    &mut md.first_tokens,
+                    &md.ms.trace,
+                    md.scaler.as_mut(),
+                    a.idx,
+                    now,
+                );
             }
         }
         emitted_tokens += token_accum as usize;
@@ -953,6 +1092,7 @@ impl ServingEngine {
         let went_idle = inst.active.is_empty() && inst.queue.is_empty();
         if went_idle {
             inst.idle_since = now;
+            inst.reclaim_probes = 0;
         }
         if emitted_tokens > 0 {
             md.ms.metrics.record_tokens(now, emitted_tokens);
@@ -1212,7 +1352,7 @@ impl ServingEngine {
         } else {
             0
         };
-        let desired = md.autoscaler.desired(now, queued, current).max(by_backlog);
+        let desired = md.scaler.desired(now, queued, current).max(by_backlog);
         if desired <= current {
             return;
         }
@@ -1330,7 +1470,7 @@ impl ServingEngine {
         }
         for &d in dests_net.iter().chain(recruited_warm.iter()) {
             if referenced.contains(&d) {
-                self.node_state[d] = NodeUse::Loading(m);
+                self.set_node_use(d, NodeUse::Loading(m), now);
             } else {
                 self.mem.cancel_gpu_reservation(d, &mem_key);
             }

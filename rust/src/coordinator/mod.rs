@@ -1,7 +1,7 @@
 //! Layer-3 coordinator — the paper's system contribution, structured as a
 //! trait-based serving engine with pluggable policies.
 //!
-//! The three extension points (see `docs/ARCHITECTURE.md` for a guide):
+//! The four extension points (see `docs/ARCHITECTURE.md` for a guide):
 //!
 //! * [`backend::ScalingBackend`] — plans scaling operations. One impl per
 //!   evaluated system: λPipe multicast + execute-while-load
@@ -14,6 +14,9 @@
 //! * [`policy::AdmissionPolicy`] — moves queued requests into decode slots
 //!   through each instance's [`DynamicBatcher`] (immediate continuous
 //!   batching, or batched flush on full-batch / `max_wait`).
+//! * [`autoscaler::ScalingPolicy`] — decides instance counts and
+//!   keep-alive reclaims (reactive sliding window, SLO-aware feedback, or
+//!   predictive EWMA pre-warming).
 //!
 //! Around them:
 //!
@@ -24,7 +27,7 @@
 //! * [`router`] — per-instance load accounting, dispatching via a
 //!   `RoutingPolicy`.
 //! * [`batcher`] — the FIFO waiting queue with size/latency flush triggers.
-//! * [`autoscaler`] — reactive instance-count policy with keep-alive.
+//! * [`autoscaler`] — the [`autoscaler::ScalingPolicy`] trait + impls.
 //! * [`scaling`] — scaling outcome types + `SystemKind` factory +
 //!   `plan_scaling` compatibility shim.
 //! * [`serving`] — legacy `run_serving(cfg, trace)` shim.
@@ -42,7 +45,9 @@ pub mod scaling;
 pub mod serving;
 pub mod session;
 
-pub use autoscaler::Autoscaler;
+pub use autoscaler::{
+    scaler_from_config, Autoscaler, PredictiveEwma, ReactiveWindow, ScalingPolicy, SloAware,
+};
 pub use backend::{ClusterState, MockBackend, ScalingBackend, ScalingRequest};
 pub use batcher::DynamicBatcher;
 pub use cluster::ClusterManager;

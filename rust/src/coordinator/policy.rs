@@ -21,6 +21,7 @@ use crate::sim::time::SimTime;
 /// One routing candidate: a live instance and its current load.
 #[derive(Clone, Copy, Debug)]
 pub struct InstanceView {
+    /// The instance's id.
     pub id: u64,
     /// Requests routed to the instance and not yet completed.
     pub outstanding: usize,
@@ -30,6 +31,7 @@ pub struct InstanceView {
 
 /// Request-routing policy: pick an instance for the next request.
 pub trait RoutingPolicy {
+    /// Stable policy name (used in reports).
     fn name(&self) -> &'static str;
 
     /// Pick among `candidates` (sorted by id ascending, never empty entries
@@ -107,6 +109,7 @@ impl RoutingPolicy for RoundRobin {
 /// the flush triggers) and asks `admit` how many head-of-line requests to
 /// move into the instance's batch whenever slots may be free.
 pub trait AdmissionPolicy {
+    /// Stable policy name (used in reports).
     fn name(&self) -> &'static str;
 
     /// Build the per-instance waiting queue. `max_batch` is the instance's
@@ -165,10 +168,12 @@ impl AdmissionPolicy for ImmediateAdmission {
 /// latency for denser batches (higher decode throughput per step).
 #[derive(Clone, Copy, Debug)]
 pub struct BatchedAdmission {
+    /// Head-of-line latency bound before a partial batch flushes.
     pub max_wait: SimTime,
 }
 
 impl BatchedAdmission {
+    /// Batched admission flushing partial batches after `max_wait`.
     pub fn new(max_wait: SimTime) -> Self {
         BatchedAdmission { max_wait }
     }

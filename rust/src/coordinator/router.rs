@@ -42,10 +42,12 @@ impl Router {
         Router { instances: BTreeMap::new(), policy }
     }
 
+    /// The active routing policy's name.
     pub fn policy_name(&self) -> &'static str {
         self.policy.name()
     }
 
+    /// Register a routable instance with capacity `weight`.
     pub fn add_instance(&mut self, id: u64, weight: f64) {
         assert!(weight > 0.0, "instance weight must be positive");
         self.instances.insert(id, InstanceLoad { outstanding: 0, weight });
@@ -57,18 +59,22 @@ impl Router {
         self.instances.remove(&id).map(|l| l.outstanding)
     }
 
+    /// Whether instance `id` is registered.
     pub fn contains(&self, id: u64) -> bool {
         self.instances.contains_key(&id)
     }
 
+    /// Registered instance count.
     pub fn n_instances(&self) -> usize {
         self.instances.len()
     }
 
+    /// Requests routed to `id` and not yet completed.
     pub fn outstanding(&self, id: u64) -> usize {
         self.instances.get(&id).map_or(0, |l| l.outstanding)
     }
 
+    /// Outstanding requests across all instances.
     pub fn total_outstanding(&self) -> usize {
         self.instances.values().map(|l| l.outstanding).sum()
     }

@@ -26,15 +26,22 @@ use crate::sim::transfer::{Tier, TransferOpts};
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SystemKind {
     /// λScale with k-way transmission.
-    LambdaScale { k: usize },
+    LambdaScale {
+        /// The k-way transmission degree (Algorithm 1).
+        k: usize,
+    },
+    /// FaaSNet-style binary-tree distribution.
     FaasNet,
+    /// NCCL-like chained broadcast.
     Nccl,
+    /// ServerlessLLM-style local-tier loads (host memory or SSD).
     ServerlessLlm,
     /// Zero-cost instantaneous scaling (Fig 14's Ideal line).
     Ideal,
 }
 
 impl SystemKind {
+    /// The system's report name (e.g. `lambdascale-k2`).
     pub fn name(&self) -> String {
         match self {
             SystemKind::LambdaScale { k } => format!("lambdascale-k{k}"),
@@ -45,6 +52,7 @@ impl SystemKind {
         }
     }
 
+    /// The multicast algorithm this system uses (None for `Ideal`).
     pub fn algorithm(&self) -> Option<Algorithm> {
         match self {
             SystemKind::LambdaScale { k } => Some(Algorithm::LambdaScale { k: *k }),
@@ -72,9 +80,17 @@ impl SystemKind {
 #[derive(Clone, Debug)]
 pub enum NewInstance {
     /// λPipe distributed pipeline (dissolves at mode switch).
-    Pipeline { pipeline: ExecPipeline, dissolve_at: SimTime },
+    Pipeline {
+        /// The execution pipeline's stage/node layout.
+        pipeline: ExecPipeline,
+        /// When the pipeline dissolves into local replicas.
+        dissolve_at: SimTime,
+    },
     /// A node holding the full model, serving locally.
-    Local { node: NodeId },
+    Local {
+        /// The serving node.
+        node: NodeId,
+    },
 }
 
 /// The timed outcome of one scaling operation (times relative to its start).
@@ -91,7 +107,9 @@ pub struct ScalingOutcome {
 /// Source descriptor for a scaling operation.
 #[derive(Clone, Copy, Debug)]
 pub struct Source {
+    /// The node holding the model.
     pub node: NodeId,
+    /// The best tier it holds the model in.
     pub tier: Tier,
 }
 

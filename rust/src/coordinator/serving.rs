@@ -19,14 +19,21 @@ use crate::workload::Trace;
 /// the same knobs per model).
 #[derive(Clone, Debug)]
 pub struct ServingConfig {
+    /// The cluster to serve on.
     pub cluster: ClusterConfig,
+    /// The served model.
     pub spec: ModelSpec,
+    /// Multicast partition granularity (blocks per model).
     pub n_blocks: usize,
+    /// Which system's scaling semantics to apply.
     pub system: SystemKind,
     /// Concurrent decode slots per instance.
     pub max_batch: usize,
+    /// Idle seconds before instance reclaim.
     pub keep_alive_s: f64,
+    /// Transfer tuning (packing, pre-allocation).
     pub opts: TransferOpts,
+    /// KV rebuild strategy priced into mode switches.
     pub switch: SwitchStrategy,
     /// Nodes holding the model in GPU memory at t=0 (serving immediately).
     pub initial_gpu_sources: usize,
@@ -38,6 +45,7 @@ pub struct ServingConfig {
 }
 
 impl ServingConfig {
+    /// Seed-default serving parameters for `spec` under `system`.
     pub fn new(system: SystemKind, cluster: ClusterConfig, spec: ModelSpec) -> Self {
         ServingConfig {
             cluster,

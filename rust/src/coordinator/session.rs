@@ -36,6 +36,7 @@
 //! legacy single-model entrypoint [`super::serving::run_serving`] is a
 //! thin shim over [`ServingSession::from_config`].
 
+use super::autoscaler::ScalingPolicy;
 use super::backend::ScalingBackend;
 use super::engine::ServingEngine;
 use super::policy::{AdmissionPolicy, ImmediateAdmission, RoutingPolicy};
@@ -53,12 +54,17 @@ use crate::workload::Trace;
 /// Per-model serving parameters (defaults match the seed engine).
 #[derive(Clone, Debug)]
 pub struct ModelParams {
+    /// The served model.
     pub spec: ModelSpec,
+    /// Multicast partition granularity (blocks per model).
     pub n_blocks: usize,
     /// Concurrent decode slots per instance.
     pub max_batch: usize,
+    /// Idle seconds before an instance may be reclaimed.
     pub keep_alive_s: f64,
+    /// Transfer tuning (packing, pre-allocation) for scaling operations.
     pub opts: TransferOpts,
+    /// KV rebuild strategy priced into pipeline mode switches.
     pub switch: SwitchStrategy,
     /// Nodes holding the model in GPU memory at t=0 (serving immediately).
     pub initial_gpu_sources: usize,
@@ -70,6 +76,7 @@ pub struct ModelParams {
 }
 
 impl ModelParams {
+    /// Seed-default parameters for `spec`.
     pub fn new(spec: ModelSpec) -> Self {
         ModelParams {
             spec,
@@ -94,6 +101,9 @@ pub struct ModelSession {
     pub(crate) admission: Box<dyn AdmissionPolicy>,
     /// Rebuild policy for KV-pressure preemption victims (kvcache mode).
     pub(crate) kv_switch: Box<dyn KvSwitchPolicy>,
+    /// Scaling policy; `None` defers to the cluster config's
+    /// `[autoscaler]` section (the reactive default).
+    pub(crate) scaler: Option<Box<dyn ScalingPolicy>>,
     pub(crate) trace: Trace,
     pub(crate) metrics: MetricsCollector,
 }
@@ -106,6 +116,7 @@ impl ModelSession {
             router: Router::new(),
             admission: Box::new(ImmediateAdmission),
             kv_switch: Box::new(AdaptiveKvSwitch),
+            scaler: None,
             trace: Trace::default(),
             metrics: MetricsCollector::new(),
         }
@@ -193,6 +204,16 @@ impl ServingSessionBuilder {
         self
     }
 
+    /// Scaling policy deciding this model's instance counts and
+    /// keep-alive reclaims (default: the cluster config's `[autoscaler]`
+    /// section, i.e. the reactive sliding-window policy). The engine
+    /// calls [`ScalingPolicy::configure`] with the derived per-instance
+    /// capacity before serving starts.
+    pub fn scaler(mut self, policy: Box<dyn ScalingPolicy>) -> Self {
+        self.current().scaler = Some(policy);
+        self
+    }
+
     /// KV preemption-rebuild policy for this model (default:
     /// [`AdaptiveKvSwitch`] — cheaper of recompute vs. host swap). Only
     /// consulted when the kvcache subsystem is on.
@@ -222,46 +243,55 @@ impl ServingSessionBuilder {
         self
     }
 
+    /// Concurrent decode slots per instance (default 16).
     pub fn max_batch(mut self, slots: usize) -> Self {
         self.current().params.max_batch = slots;
         self
     }
 
+    /// Idle seconds before an instance may be reclaimed (default 15).
     pub fn keep_alive(mut self, seconds: f64) -> Self {
         self.current().params.keep_alive_s = seconds;
         self
     }
 
+    /// Multicast partition granularity (blocks per model).
     pub fn n_blocks(mut self, blocks: usize) -> Self {
         self.current().params.n_blocks = blocks;
         self
     }
 
+    /// Transfer tuning (packing, pre-allocation) for scaling operations.
     pub fn transfer_opts(mut self, opts: TransferOpts) -> Self {
         self.current().params.opts = opts;
         self
     }
 
+    /// KV rebuild strategy priced into pipeline mode switches.
     pub fn switch_strategy(mut self, switch: SwitchStrategy) -> Self {
         self.current().params.switch = switch;
         self
     }
 
+    /// Nodes holding the model in GPU memory at t=0 (default 1).
     pub fn initial_gpu_sources(mut self, n: usize) -> Self {
         self.current().params.initial_gpu_sources = n;
         self
     }
 
+    /// Nodes holding the model in host memory at t=0 (default 0).
     pub fn initial_host_sources(mut self, n: usize) -> Self {
         self.current().params.initial_host_sources = n;
         self
     }
 
+    /// Whether every node has the model on its local SSD (default true).
     pub fn ssd_everywhere(mut self, yes: bool) -> Self {
         self.current().params.ssd_everywhere = yes;
         self
     }
 
+    /// Finish the builder without running.
     pub fn build(self) -> ServingSession {
         ServingSession { cluster: self.cluster, models: self.models }
     }
@@ -279,6 +309,7 @@ pub struct ServingSession {
 }
 
 impl ServingSession {
+    /// Start a builder over the default Testbed1 cluster.
     pub fn builder() -> ServingSessionBuilder {
         ServingSessionBuilder { cluster: ClusterConfig::testbed1(), models: Vec::new() }
     }
@@ -314,18 +345,23 @@ impl ServingSession {
 
 /// One model's results from a session run.
 pub struct ModelReport {
+    /// The model's name.
     pub model: String,
     /// The scaling backend's name (e.g. `lambdascale-k2`).
     pub system: String,
     /// The routing policy's name (e.g. `join-shortest-queue`).
     pub router: &'static str,
+    /// The scaling policy's name (e.g. `reactive-window`).
+    pub scaler: &'static str,
     /// Requests fully served.
     pub completed: usize,
+    /// Everything measured for this model (latency, throughput, cost).
     pub metrics: MetricsCollector,
 }
 
 /// Results of a session run, one report per model (in `.model(..)` order).
 pub struct SessionReport {
+    /// Per-model reports, in `.model(..)` order.
     pub models: Vec<ModelReport>,
 }
 

@@ -35,11 +35,20 @@
 //!   manager, router, batcher and autoscaler (see docs/ARCHITECTURE.md).
 //! * [`runtime`] — PJRT client, artifact manifest, block-wise decode engine.
 //! * [`workload`] — BurstGPT-like traces, Poisson/burst arrivals.
-//! * [`metrics`] — TTFT/TPS/GPU-time collection, CDFs.
+//! * [`metrics`] — TTFT/TPS/GPU-time collection, cost accounting, CDFs.
 //! * [`figures`] — one generator per paper figure (benches + CLI call these).
+//! * [`eval`] — the `lambda-scale eval` SLO/cost scoreboard (backends ×
+//!   scaling policies × traces).
+
+// Enforced rustdoc: every public item must be documented. CI runs
+// `cargo doc --no-deps` with `RUSTDOCFLAGS="-D warnings"`; layers that
+// predate the gate opt out locally with `#![allow(missing_docs)]` until
+// their sweep lands.
+#![warn(missing_docs)]
 
 pub mod config;
 pub mod coordinator;
+pub mod eval;
 pub mod figures;
 pub mod kvcache;
 pub mod memory;

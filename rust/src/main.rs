@@ -3,9 +3,13 @@
 //! ```text
 //! lambda-scale figures [--only figNN]      regenerate paper figures
 //! lambda-scale session [--requests N] [--gpu-cap GB] [--host-cap GB]
-//!                      [--kv-block-tokens B]
+//!                      [--kv-block-tokens B] [--scaler P] [--slo-ttft S]
 //!                                          two-tenant ServingSession demo
 //!                                          (caps bound the shared MemoryManager)
+//! lambda-scale eval [--duration S] [--seed N] [--slo-ttft S] [--config F]
+//!                   [--out BENCH_eval.json] [--md RESULTS.md]
+//!                                          backends × scaling policies × traces
+//!                                          SLO/cost scoreboard (Fig 14/15 analogue)
 //! lambda-scale bench [--out FILE] [--requests N] [--seed S]
 //!                    [--kv-block-tokens B] serving perf snapshot → BENCH_serving.json
 //! lambda-scale trace-gen --out FILE        emit a BurstGPT-like CSV trace
@@ -15,9 +19,10 @@
 //!
 //! (No clap offline — a small hand-rolled parser below.)
 
-use lambda_scale::config::ClusterConfig;
+use lambda_scale::config::{AutoscalerConfig, ClusterConfig, ScalerKind};
 use lambda_scale::coordinator::policy::{BatchedAdmission, LeastLoaded};
-use lambda_scale::coordinator::{ServingSession, SystemKind};
+use lambda_scale::coordinator::{scaler_from_config, ServingSession, SystemKind};
+use lambda_scale::eval::{EvalConfig, EvalReport};
 use lambda_scale::figures;
 use lambda_scale::model::ModelSpec;
 use lambda_scale::sim::time::SimTime;
@@ -97,6 +102,22 @@ fn main() {
             let host_cap_gb: Option<f64> = flag("--host-cap").and_then(|s| s.parse().ok());
             let kv_block_tokens: usize =
                 flag("--kv-block-tokens").and_then(|s| s.parse().ok()).unwrap_or(0);
+            // Both tenants run the named scaling policy (default: the
+            // reactive window; try `--scaler slo-aware --slo-ttft 1.0`).
+            let scaler_kind = match flag("--scaler").as_deref().map(ScalerKind::parse) {
+                None => ScalerKind::ReactiveWindow,
+                Some(Ok(k)) => k,
+                Some(Err(e)) => {
+                    eprintln!("{e}");
+                    std::process::exit(2);
+                }
+            };
+            let slo_ttft: f64 = flag("--slo-ttft").and_then(|s| s.parse().ok()).unwrap_or(2.5);
+            let scaler_cfg = AutoscalerConfig {
+                policy: scaler_kind,
+                target_ttft_s: slo_ttft,
+                ..Default::default()
+            };
             let mut cluster = ClusterConfig::testbed1();
             cluster.n_nodes = 12;
             cluster.kv.block_tokens = kv_block_tokens;
@@ -114,10 +135,12 @@ fn main() {
             let rejoin = burst_trace(n / 2, 45.0, "llama2-13b", 128, 64, &mut rng);
             trace13.merge(&rejoin, SimTime::ZERO);
             let trace7 = burst_trace(n, 5.0, "llama2-7b", 96, 48, &mut rng);
+            let price = cluster.cost;
             let report = ServingSession::builder()
                 .cluster(cluster)
                 .model(ModelSpec::llama2_13b())
                 .system(SystemKind::LambdaScale { k: 2 })
+                .scaler(scaler_from_config(&scaler_cfg))
                 .max_batch(8)
                 .keep_alive(10.0)
                 .trace(trace13)
@@ -125,6 +148,7 @@ fn main() {
                 .system(SystemKind::ServerlessLlm)
                 .router(Box::new(LeastLoaded))
                 .admission(Box::new(BatchedAdmission::new(SimTime::from_secs(0.05))))
+                .scaler(scaler_from_config(&scaler_cfg))
                 .max_batch(8)
                 .keep_alive(10.0)
                 .trace(trace7)
@@ -140,8 +164,8 @@ fn main() {
                 cap_str(host_cap_gb)
             );
             let mut t = Table::new(&[
-                "model", "backend", "router", "served", "p50 TTFT (s)", "p90 TTFT (s)",
-                "GPU·s (60s)",
+                "model", "backend", "router", "scaler", "served", "p50 TTFT (s)",
+                "p90 TTFT (s)", "GPU·s (60s)", "cost ($)",
             ]);
             for m in &report.models {
                 let mut s = m.metrics.ttft_samples();
@@ -149,10 +173,12 @@ fn main() {
                     m.model.clone(),
                     m.system.clone(),
                     m.router.to_string(),
+                    m.scaler.to_string(),
                     format!("{}", m.completed),
                     format!("{:.3}", s.p50()),
                     format!("{:.3}", s.p90()),
                     format!("{:.0}", m.metrics.gpu_time(SimTime::from_secs(60.0))),
+                    format!("{:.4}", m.metrics.cost(&price).total_usd()),
                 ]);
             }
             t.print();
@@ -166,6 +192,36 @@ fn main() {
             } else {
                 println!("\n(try --host-cap 30 to watch the tenants fight over warm memory)");
             }
+        }
+        "eval" => {
+            let out = flag("--out").unwrap_or_else(|| "BENCH_eval.json".into());
+            let md = flag("--md").unwrap_or_else(|| "RESULTS.md".into());
+            let mut cfg = EvalConfig::default();
+            if let Some(path) = flag("--config") {
+                match ClusterConfig::load(&path) {
+                    Ok(c) => {
+                        // The config's SLO target is the eval SLO target
+                        // (one number drives both attainment scoring and
+                        // the slo-aware policy); --slo-ttft still wins.
+                        cfg.slo_ttft_s = c.autoscaler.target_ttft_s;
+                        cfg.cluster = c;
+                    }
+                    Err(e) => {
+                        eprintln!("{e}");
+                        std::process::exit(2);
+                    }
+                }
+            }
+            if let Some(d) = flag("--duration").and_then(|s| s.parse().ok()) {
+                cfg.duration_s = d;
+            }
+            if let Some(s) = flag("--seed").and_then(|s| s.parse().ok()) {
+                cfg.seed = s;
+            }
+            if let Some(t) = flag("--slo-ttft").and_then(|s| s.parse().ok()) {
+                cfg.slo_ttft_s = t;
+            }
+            run_eval(&cfg, &out, &md);
         }
         "bench" => {
             let out = flag("--out").unwrap_or_else(|| "BENCH_serving.json".into());
@@ -220,10 +276,14 @@ fn main() {
         _ => {
             eprintln!(
                 "λScale — fast model scaling for serverless LLM inference\n\n\
-                 usage: lambda-scale <figures|session|bench|trace-gen|serve|info> [flags]\n\
+                 usage: lambda-scale <figures|session|eval|bench|trace-gen|serve|info> [flags]\n\
                  \x20 figures   [--only figNN]              regenerate paper figures\n\
                  \x20 session   [--requests N] [--gpu-cap GB] [--host-cap GB]\n\
-                 \x20           [--kv-block-tokens B]       two-tenant memory-contention demo\n\
+                 \x20           [--kv-block-tokens B] [--scaler reactive|slo-aware|predictive]\n\
+                 \x20           [--slo-ttft S]              two-tenant memory-contention demo\n\
+                 \x20 eval      [--duration S] [--seed N] [--slo-ttft S] [--config F]\n\
+                 \x20           [--out F] [--md F]          SLO/cost scoreboard → BENCH_eval.json\n\
+                 \x20                                       + RESULTS.md (Fig 14/15 analogue)\n\
                  \x20 bench     [--out F] [--requests N] [--seed S] [--kv-block-tokens B]\n\
                  \x20                                       perf snapshot → BENCH_serving.json\n\
                  \x20 trace-gen [--out F] [--duration S]    emit a BurstGPT-like CSV trace\n\
@@ -234,6 +294,42 @@ fn main() {
             );
         }
     }
+}
+
+/// `lambda-scale eval`: run the backends × scaling-policies × traces
+/// matrix, print the scoreboard, and write `BENCH_eval.json` +
+/// `RESULTS.md` (see `docs/EVALUATION.md` for what each cell means).
+fn run_eval(cfg: &EvalConfig, out: &str, md: &str) {
+    println!(
+        "eval: model {}, {:.0}s traces, seed {}, SLO TTFT ≤ {:.2}s",
+        cfg.model.name, cfg.duration_s, cfg.seed, cfg.slo_ttft_s
+    );
+    println!("(3 traces × 3 backends × 3 scaling policies; deterministic per seed)\n");
+    let report: EvalReport = lambda_scale::eval::run_matrix(cfg);
+    let mut t = Table::new(&[
+        "trace", "backend", "scaler", "served", "p50 TTFT", "p99 TTFT", "SLO att.", "GPU·s",
+        "cost ($)", "norm",
+    ]);
+    for c in &report.cells {
+        t.row(&[
+            c.trace.clone(),
+            c.system.clone(),
+            c.scaler.clone(),
+            format!("{}/{}", c.completed, c.requests),
+            format!("{:.3}", c.p50_ttft_s),
+            format!("{:.3}", c.p99_ttft_s),
+            format!("{:.1}%", c.slo_attainment * 100.0),
+            format!("{:.0}", c.gpu_seconds),
+            format!("{:.4}", c.cost_usd),
+            format!("{:.3}", c.norm_cost),
+        ]);
+    }
+    t.print();
+    if let Err(e) = report.write_files(out, md) {
+        eprintln!("writing report: {e}");
+        std::process::exit(1);
+    }
+    println!("\nwrote {out} and {md}");
 }
 
 /// `lambda-scale bench`: a fixed-seed serving snapshot for the perf

@@ -47,6 +47,11 @@ pub struct MemoryManager {
     gpu_ready: Vec<BTreeSet<String>>,
     /// Registered per-model sizes for the serving ops.
     model_bytes: HashMap<String, u64>,
+    /// Host-tier occupancy integral per residency key (GB·seconds) — the
+    /// cost of keep-alive warmth, accrued by [`MemoryManager::accrue_host`].
+    host_gb_s: HashMap<String, f64>,
+    /// Upper bound of the accrued host-occupancy integral.
+    host_accrued_to: SimTime,
 }
 
 impl MemoryManager {
@@ -57,6 +62,8 @@ impl MemoryManager {
             nodes: (0..n_nodes).map(|_| NodeMemory::new(gpu_capacity, host_capacity)).collect(),
             gpu_ready: vec![BTreeSet::new(); n_nodes],
             model_bytes: HashMap::new(),
+            host_gb_s: HashMap::new(),
+            host_accrued_to: SimTime::ZERO,
         }
     }
 
@@ -71,6 +78,35 @@ impl MemoryManager {
 
     pub fn node(&self, n: usize) -> &NodeMemory {
         &self.nodes[n]
+    }
+
+    // ---- host-occupancy cost accounting -------------------------------------
+
+    /// Advance the host-tier occupancy integral to `now`: every key warm in
+    /// any node's host tier accrues `bytes × Δt` (as GB·seconds). Called
+    /// internally before every host-mutating operation; the serving engine
+    /// calls it once more at the end of a run to close the integral at the
+    /// simulation horizon. Times earlier than the last accrual are no-ops
+    /// (the integral never runs backwards).
+    pub fn accrue_host(&mut self, now: SimTime) {
+        let dt = now.saturating_sub(self.host_accrued_to).as_secs();
+        if dt <= 0.0 {
+            return;
+        }
+        self.host_accrued_to = now;
+        for nm in &self.nodes {
+            for key in nm.host_models() {
+                if let Some(bytes) = nm.host_size_of(&key) {
+                    *self.host_gb_s.entry(key).or_insert(0.0) += bytes as f64 / 1e9 * dt;
+                }
+            }
+        }
+    }
+
+    /// GB·seconds `key` has spent warm in host memory, summed across all
+    /// nodes, up to the last [`MemoryManager::accrue_host`] call.
+    pub fn host_gb_seconds(&self, key: &str) -> f64 {
+        self.host_gb_s.get(key).copied().unwrap_or(0.0)
     }
 
     // ---- serving ops --------------------------------------------------------
@@ -94,6 +130,7 @@ impl MemoryManager {
         model: &str,
         now: SimTime,
     ) -> Result<Vec<Demotion>, InsertError> {
+        self.accrue_host(now);
         let bytes = self.bytes_of(model);
         let evicted = self.nodes[node].try_load_gpu(model, bytes, now)?;
         self.nodes[node].pin_gpu(model);
@@ -125,6 +162,7 @@ impl MemoryManager {
     /// tenant's); everything displaced cascades to SSD or drops to Remote.
     /// Returns the full demotion report, the released model first.
     pub fn release_gpu(&mut self, node: usize, model: &str, now: SimTime) -> Vec<Demotion> {
+        self.accrue_host(now);
         self.gpu_ready[node].remove(model);
         if !self.nodes[node].gpu_contains(model) {
             return vec![];
@@ -172,6 +210,7 @@ impl MemoryManager {
         bytes: u64,
         now: SimTime,
     ) -> Result<Vec<Demotion>, InsertError> {
+        self.accrue_host(now);
         let evicted = self.nodes[node].try_load_gpu(key, bytes, now)?;
         self.nodes[node].pin_gpu(key);
         let mut demotions = Vec::new();
@@ -192,6 +231,7 @@ impl MemoryManager {
         new_bytes: u64,
         now: SimTime,
     ) -> Result<Vec<Demotion>, InsertError> {
+        self.accrue_host(now);
         let old = self.nodes[node].gpu_size_of(key).expect("grow_pinned on absent KV arena");
         self.nodes[node].unpin_gpu(key);
         self.nodes[node].evict_gpu(key);
@@ -237,6 +277,7 @@ impl MemoryManager {
         model: &str,
         now: SimTime,
     ) -> Result<Vec<Demotion>, InsertError> {
+        self.accrue_host(now);
         let bytes = self.bytes_of(model);
         let evicted = self.nodes[node].try_load_host(model, bytes, now)?;
         let out = evicted.into_iter().map(|e| self.landing_tier(node, e)).collect();
@@ -343,6 +384,7 @@ impl MemoryManager {
 
     /// Raw host insert with an explicit size; no cascade.
     pub fn load_host(&mut self, node: usize, model: &str, bytes: u64, now: SimTime) -> Vec<String> {
+        self.accrue_host(now);
         self.nodes[node].load_host(model, bytes, now)
     }
 
@@ -372,6 +414,7 @@ impl MemoryManager {
         now: SimTime,
         keep_alive: SimTime,
     ) -> Vec<(String, SimTime)> {
+        self.accrue_host(now);
         self.nodes[node].expire_host(now, keep_alive)
     }
 
@@ -501,6 +544,27 @@ mod tests {
         let d = m.release_gpu(0, "x", SimTime::from_secs(1.0));
         assert_eq!(d, vec![Demotion { node: 0, model: "x".into(), to: Locality::Remote }]);
         assert_eq!(m.locality(0, "x"), Locality::Remote);
+    }
+
+    #[test]
+    fn host_occupancy_integral_accrues_gb_seconds() {
+        let mut m = mgr(2, gb(80), gb(100));
+        m.reserve_gpu(0, "a", SimTime::ZERO).unwrap();
+        // Warm in host memory from t = 10 s (the reclaim-time demotion).
+        m.release_gpu(0, "a", SimTime::from_secs(10.0));
+        assert_eq!(m.host_gb_seconds("a"), 0.0, "nothing accrued before warmth");
+        m.accrue_host(SimTime::from_secs(70.0)); // 60 s warm × 26 GB
+        assert!((m.host_gb_seconds("a") - 26.0 * 60.0).abs() < 1e-6);
+        // Re-accrual at the same instant adds nothing (idempotent close).
+        m.accrue_host(SimTime::from_secs(70.0));
+        assert!((m.host_gb_seconds("a") - 26.0 * 60.0).abs() < 1e-6);
+        // Second tenant on another node meters independently.
+        m.reserve_gpu(1, "b", SimTime::from_secs(70.0)).unwrap();
+        m.release_gpu(1, "b", SimTime::from_secs(80.0));
+        m.accrue_host(SimTime::from_secs(90.0));
+        assert!((m.host_gb_seconds("b") - 14.0 * 10.0).abs() < 1e-6);
+        assert!((m.host_gb_seconds("a") - 26.0 * 80.0).abs() < 1e-6, "a stayed warm throughout");
+        assert_eq!(m.host_gb_seconds("never-seen"), 0.0);
     }
 
     #[test]

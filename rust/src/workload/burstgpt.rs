@@ -31,8 +31,9 @@ pub struct BurstGptGen {
     pub attack_s: f64,
     /// Spike decay time constant (s).
     pub decay_s: f64,
-    /// Mean prompt/output tokens.
+    /// Mean prompt tokens.
     pub avg_prompt: usize,
+    /// Mean output tokens.
     pub avg_output: usize,
     /// Slow modulation amplitude (0 = flat baseline).
     pub wobble: f64,

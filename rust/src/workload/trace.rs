@@ -8,28 +8,37 @@ use crate::sim::time::SimTime;
 /// One inference request.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Request {
+    /// Unique id within the trace.
     pub id: u64,
+    /// Arrival time.
     pub arrival: SimTime,
+    /// The model the request targets.
     pub model: String,
+    /// Prompt length in tokens.
     pub prompt_tokens: usize,
+    /// Output length in tokens.
     pub output_tokens: usize,
 }
 
 /// A time-ordered request trace.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Trace {
+    /// The requests, sorted by arrival.
     pub requests: Vec<Request>,
 }
 
 impl Trace {
+    /// Number of requests.
     pub fn len(&self) -> usize {
         self.requests.len()
     }
 
+    /// Whether the trace has no requests.
     pub fn is_empty(&self) -> bool {
         self.requests.is_empty()
     }
 
+    /// The last arrival time (zero for an empty trace).
     pub fn duration(&self) -> SimTime {
         self.requests.iter().map(|r| r.arrival).max().unwrap_or(SimTime::ZERO)
     }
@@ -73,6 +82,7 @@ impl Trace {
         self.sort();
     }
 
+    /// Serialize to the CSV schema in the module docs.
     pub fn to_csv(&self) -> String {
         let mut s = String::from("id,arrival_s,model,prompt_tokens,output_tokens\n");
         for r in &self.requests {
@@ -88,6 +98,7 @@ impl Trace {
         s
     }
 
+    /// Parse the CSV schema in the module docs (sorts by arrival).
     pub fn from_csv(text: &str) -> Result<Trace, String> {
         let mut lines = text.lines();
         let header = lines.next().ok_or("empty trace file")?;
@@ -119,10 +130,12 @@ impl Trace {
         Ok(t)
     }
 
+    /// Write the trace as CSV.
     pub fn save(&self, path: &str) -> std::io::Result<()> {
         std::fs::write(path, self.to_csv())
     }
 
+    /// Read a CSV trace file.
     pub fn load(path: &str) -> Result<Trace, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
         Trace::from_csv(&text)

@@ -1,0 +1,117 @@
+//! End-to-end tests for pluggable scaling policies: determinism under
+//! replayed traces, reactive-equivalence of the default wiring, and the
+//! SLO-aware policy's capacity behavior inside a full serving session.
+
+use lambda_scale::config::{AutoscalerConfig, ClusterConfig, ScalerKind};
+use lambda_scale::coordinator::{scaler_from_config, ServingSession, SystemKind};
+use lambda_scale::metrics::MetricsCollector;
+use lambda_scale::model::ModelSpec;
+use lambda_scale::sim::time::SimTime;
+use lambda_scale::util::rng::Rng;
+use lambda_scale::workload::{burst_trace, poisson_trace, Trace};
+
+fn cluster(n: usize) -> ClusterConfig {
+    let mut c = ClusterConfig::testbed1();
+    c.n_nodes = n;
+    c
+}
+
+/// A burst plus continuing Poisson arrivals, so scale checks keep firing
+/// after the first coalesced decision.
+fn mixed_trace(seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let mut t = burst_trace(32, 0.0, "llama2-13b", 128, 64, &mut rng);
+    let tail = poisson_trace(2.0, 30.0, "llama2-13b", 128, 64, &mut rng);
+    t.merge(&tail, SimTime::from_secs(0.5));
+    t
+}
+
+fn run_with(kind: ScalerKind, target_ttft_s: f64) -> MetricsCollector {
+    let cfg = AutoscalerConfig { policy: kind, target_ttft_s, ..Default::default() };
+    ServingSession::builder()
+        .cluster(cluster(8))
+        .model(ModelSpec::llama2_13b())
+        .system(SystemKind::LambdaScale { k: 2 })
+        .scaler(scaler_from_config(&cfg))
+        .max_batch(8)
+        .trace(mixed_trace(42))
+        .run()
+        .into_single()
+}
+
+fn timing_key(m: &MetricsCollector) -> Vec<(u64, u64, u64)> {
+    let mut v: Vec<(u64, u64, u64)> =
+        m.requests.iter().map(|r| (r.id, r.first_token.0, r.completion.0)).collect();
+    v.sort_unstable();
+    v
+}
+
+fn peak_gpus(m: &MetricsCollector) -> usize {
+    m.gpu_series(5.0, 120.0).iter().map(|&(_, g)| g).max().unwrap_or(0)
+}
+
+/// Replaying the same trace under the same policy yields bit-identical
+/// request timings and cost meters, for every shipped policy.
+#[test]
+fn policies_deterministic_under_replayed_traces() {
+    for kind in [ScalerKind::ReactiveWindow, ScalerKind::SloAware, ScalerKind::PredictiveEwma] {
+        let a = run_with(kind, 2.5);
+        let b = run_with(kind, 2.5);
+        assert_eq!(timing_key(&a), timing_key(&b), "{} not deterministic", kind.name());
+        assert_eq!(a.gpu_seconds(), b.gpu_seconds(), "{} cost meter drifted", kind.name());
+        assert_eq!(a.host_gb_s, b.host_gb_s, "{} host meter drifted", kind.name());
+        assert_eq!(a.requests.len(), mixed_trace(42).len(), "{} lost requests", kind.name());
+    }
+}
+
+/// A session that never calls `.scaler(..)` runs the cluster config's
+/// default policy — bit-identical to an explicit reactive window.
+#[test]
+fn default_scaler_is_reactive_window() {
+    let explicit = run_with(ScalerKind::ReactiveWindow, 2.5);
+    let defaulted = ServingSession::builder()
+        .cluster(cluster(8))
+        .model(ModelSpec::llama2_13b())
+        .system(SystemKind::LambdaScale { k: 2 })
+        .max_batch(8)
+        .trace(mixed_trace(42))
+        .run();
+    assert_eq!(defaulted.models[0].scaler, "reactive-window");
+    assert_eq!(timing_key(&explicit), timing_key(&defaulted.models[0].metrics));
+}
+
+/// With an unreachably high TTFT target the SLO feedback term never
+/// fires: the whole session replays exactly like the reactive policy.
+#[test]
+fn slo_aware_inside_target_matches_reactive() {
+    let slo = run_with(ScalerKind::SloAware, 1e9);
+    let reactive = run_with(ScalerKind::ReactiveWindow, 2.5);
+    assert_eq!(timing_key(&slo), timing_key(&reactive));
+}
+
+/// With an impossible target the SLO-aware policy over-provisions: its
+/// peak GPU allocation is at least the reactive policy's.
+#[test]
+fn slo_aware_violated_target_holds_more_capacity() {
+    let slo = run_with(ScalerKind::SloAware, 0.05);
+    let reactive = run_with(ScalerKind::ReactiveWindow, 0.05);
+    let (ps, pr) = (peak_gpus(&slo), peak_gpus(&reactive));
+    assert!(ps >= pr, "slo-aware peak {ps} must be >= reactive peak {pr}");
+    assert_eq!(slo.requests.len(), mixed_trace(42).len(), "over-provisioning lost requests");
+}
+
+/// The cost meters are live in every session: GPU·seconds are metered
+/// per node and the totals are positive wherever anything was served.
+#[test]
+fn cost_meters_populated() {
+    let m = run_with(ScalerKind::ReactiveWindow, 2.5);
+    assert!(!m.node_gpu_s.is_empty(), "no per-node GPU accounting");
+    let makespan =
+        m.requests.iter().map(|r| r.completion).max().unwrap_or(SimTime::ZERO).as_secs();
+    // The keep-alive floor replica alone is billed from t=0 through the
+    // horizon, so the total must cover at least the makespan — and no
+    // node can be billed past the horizon (makespan + keep-alive tail).
+    assert!(m.gpu_seconds() >= makespan, "meter {} < makespan {makespan}", m.gpu_seconds());
+    let bound = 8.0 * (makespan + 16.0);
+    assert!(m.gpu_seconds() <= bound, "meter {} exceeds bound {bound}", m.gpu_seconds());
+}

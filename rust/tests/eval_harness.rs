@@ -1,0 +1,104 @@
+//! End-to-end tests for the `lambda-scale eval` SLO/cost harness: the
+//! acceptance bar (λPipe beats the ServerlessLLM baseline on both p99
+//! TTFT and total cost on the bursty trace), matrix determinism, and the
+//! shape of the emitted `BENCH_eval.json` / `RESULTS.md` documents.
+
+use lambda_scale::config::ScalerKind;
+use lambda_scale::coordinator::SystemKind;
+use lambda_scale::eval::{run_cell, run_matrix, trace_matrix, EvalConfig};
+
+/// The Fig 14/15 headline, enforced: with identical traces and the same
+/// reactive policy, λPipe multicast must beat ServerlessLLM's local
+/// loads on tail latency *and* on the dollar bill.
+#[test]
+fn bursty_lambdapipe_beats_serverlessllm_on_p99_and_cost() {
+    let cfg = EvalConfig::default();
+    let traces = trace_matrix(&cfg);
+    let (name, bursty) = &traces[0];
+    assert_eq!(*name, "bursty");
+    let ls = run_cell(
+        &cfg,
+        name,
+        bursty,
+        SystemKind::LambdaScale { k: 2 },
+        ScalerKind::ReactiveWindow,
+    );
+    let sl = run_cell(&cfg, name, bursty, SystemKind::ServerlessLlm, ScalerKind::ReactiveWindow);
+    assert!(
+        ls.completed as f64 >= 0.95 * bursty.len() as f64,
+        "λPipe completed only {}/{}",
+        ls.completed,
+        bursty.len()
+    );
+    assert!(
+        sl.completed as f64 >= 0.95 * bursty.len() as f64,
+        "ServerlessLLM completed only {}/{}",
+        sl.completed,
+        bursty.len()
+    );
+    assert!(
+        ls.p99_ttft_s < sl.p99_ttft_s,
+        "λPipe p99 TTFT {:.3}s must beat ServerlessLLM {:.3}s",
+        ls.p99_ttft_s,
+        sl.p99_ttft_s
+    );
+    assert!(
+        ls.cost_usd < sl.cost_usd,
+        "λPipe cost ${:.4} must beat ServerlessLLM ${:.4}",
+        ls.cost_usd,
+        sl.cost_usd
+    );
+    assert!(
+        ls.slo_attainment >= sl.slo_attainment,
+        "λPipe SLO attainment {:.3} must not trail ServerlessLLM {:.3}",
+        ls.slo_attainment,
+        sl.slo_attainment
+    );
+}
+
+/// `run_matrix` is deterministic per seed and emits one cell per
+/// (trace × backend × policy) combination, with valid normalization.
+#[test]
+fn eval_matrix_deterministic_and_complete() {
+    let cfg = EvalConfig { duration_s: 40.0, ..Default::default() };
+    let a = run_matrix(&cfg);
+    let b = run_matrix(&cfg);
+    assert_eq!(a, b, "matrix must be deterministic per seed");
+    assert_eq!(a.cells.len(), 27, "3 traces × 3 backends × 3 policies");
+    assert_eq!(format!("{}", a.to_json()), format!("{}", b.to_json()));
+    for c in &a.cells {
+        assert!((0.0..=1.0).contains(&c.slo_attainment), "{c:?}");
+        assert!(c.norm_cost > 0.0, "{c:?}");
+        assert!(c.cost_usd > 0.0, "{c:?}");
+    }
+    // Every baseline cell normalizes to exactly 1.
+    let base = |c: &&lambda_scale::eval::EvalCell| {
+        c.system == "serverlessllm" && c.scaler == "reactive-window"
+    };
+    for c in a.cells.iter().filter(base) {
+        assert!((c.norm_cost - 1.0).abs() < 1e-9, "{c:?}");
+    }
+}
+
+/// The markdown scoreboard lists every trace section and every cell row,
+/// and the JSON document carries the cell array under `cells`.
+#[test]
+fn report_documents_have_expected_shape() {
+    let cfg = EvalConfig { duration_s: 40.0, ..Default::default() };
+    let report = run_matrix(&cfg);
+    let md = report.to_markdown();
+    for trace in ["bursty", "steady", "spike"] {
+        assert!(md.contains(&format!("## Trace: {trace}")), "missing section {trace}");
+    }
+    for system in ["lambdascale-k2", "serverlessllm", "faasnet"] {
+        assert!(md.contains(system), "missing backend {system}");
+    }
+    for scaler in ["reactive-window", "slo-aware", "predictive-ewma"] {
+        assert!(md.contains(scaler), "missing policy {scaler}");
+    }
+    assert!(md.contains("## Headline"), "missing headline comparison");
+    let json = format!("{}", report.to_json());
+    assert!(json.contains("\"cells\""));
+    assert!(json.contains("\"norm_cost\""));
+    assert!(json.contains("\"slo_attainment\""));
+}
