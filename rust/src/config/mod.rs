@@ -35,6 +35,14 @@ pub struct NetworkConfig {
     /// NCCL-style communicator (re)initialization cost (s) — the paper
     /// observes "up to hundreds of milliseconds" (NCCL issue #534).
     pub nccl_group_init_s: f64,
+    /// Aggregate cross-node RDMA capacity of the shared fabric
+    /// (bisection bandwidth), GB/s. When the summed nominal demand of all
+    /// in-flight inter-node RDMA transfers exceeds it, every flow slows
+    /// proportionally — the knob that makes two tenants' overlapping
+    /// scale-ups genuinely contend. `0.0` (the default) means unbounded
+    /// (a non-blocking switch), which keeps single-operation timings
+    /// bit-identical to the static per-op executor.
+    pub fabric_gbps: f64,
 }
 
 impl Default for NetworkConfig {
@@ -49,6 +57,7 @@ impl Default for NetworkConfig {
             per_tensor_overhead_s: 40e-6,
             alloc_overhead_s: 3e-3,
             nccl_group_init_s: 0.25,
+            fabric_gbps: 0.0,
         }
     }
 }
@@ -315,6 +324,7 @@ impl ClusterConfig {
             cfg.network.rdma_setup_s = getf(sec, "rdma_setup_s", cfg.network.rdma_setup_s)?;
             cfg.network.nccl_group_init_s =
                 getf(sec, "nccl_group_init_s", cfg.network.nccl_group_init_s)?;
+            cfg.network.fabric_gbps = getf(sec, "fabric_gbps", cfg.network.fabric_gbps)?;
         }
         if let Some(sec) = doc.get("kvcache") {
             let geti = |k: &str, cur: usize| -> Result<usize, String> {
@@ -395,6 +405,11 @@ mod tests {
         assert_eq!(cfg.network.rdma_gbps, 25.0);
         // Untouched fields keep defaults.
         assert_eq!(cfg.network.ssd_gbps, 5.0);
+        assert_eq!(cfg.network.fabric_gbps, 0.0, "shared fabric defaults to unbounded");
+        let bounded =
+            ClusterConfig::from_toml(&parse_toml("[network]\nfabric_gbps = 100\n").unwrap())
+                .unwrap();
+        assert_eq!(bounded.network.fabric_gbps, 100.0);
         assert_eq!(cfg.node.gpu_capacity_bytes, u64::MAX, "default is unbounded");
         assert_eq!(cfg.node.host_capacity_bytes, u64::MAX);
     }

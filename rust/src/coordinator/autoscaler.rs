@@ -61,6 +61,14 @@ pub trait ScalingPolicy {
 
     /// Desired instance count given `queued` waiting requests and
     /// `current` live-or-loading instances.
+    ///
+    /// Contract: repeated calls at the same (or advancing) `now` with no
+    /// intervening observations must not change future answers — the
+    /// engine consults `desired` not only on arrivals but also from its
+    /// periodic mid-scale-up cancellation probe (a drop below `current`
+    /// while recruits are still in flight revokes the surplus), so any
+    /// internal mutation here must be limited to time-based window
+    /// housekeeping that later calls would perform anyway.
     fn desired(&mut self, now: SimTime, queued: usize, current: usize) -> usize;
 
     /// Should an instance idle since `idle_since` be reclaimed at `now`?

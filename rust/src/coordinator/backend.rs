@@ -25,7 +25,7 @@ use super::scaling::{NewInstance, ScalingOutcome, Source};
 use crate::config::ClusterConfig;
 use crate::memory::Locality;
 use crate::model::{ModelSpec, Partition};
-use crate::multicast::{self, Algorithm, NodeId};
+use crate::multicast::{self, Algorithm, BlockId, NodeId};
 use crate::pipeline::execution::ExecPipeline;
 use crate::pipeline::generation::{
     generate_pipelines, pipeline_block_assignment, pipeline_ready_time,
@@ -92,6 +92,58 @@ impl<'a> ClusterState<'a> {
     }
 }
 
+/// An execute-while-load pipeline awaiting its blocks on the fabric.
+#[derive(Clone, Debug)]
+pub struct PlannedPipeline {
+    /// Blocks each member must hold before the pipeline can run.
+    pub assignment: Vec<(NodeId, Vec<BlockId>)>,
+    /// The pipeline's stage/node layout.
+    pub pipeline: ExecPipeline,
+}
+
+/// A transfer schedule for *live* execution on the serving engine's shared
+/// fabric ([`crate::sim::fabric::Fabric`]), in place of a plan-time
+/// [`ScalingOutcome`] with precomputed instance times.
+///
+/// Instance availability is event-driven: `immediate` nodes serve at the
+/// operation's start, `local_on_complete` nodes serve when they
+/// individually hold every block, each pipeline spawns when its block
+/// assignment has arrived (dissolving at operation finish), and
+/// `dest_locals` become local replicas `switch_stall_s` after the whole
+/// operation finishes. `recruits` lists the cold destinations the engine
+/// may revoke mid-flight while they are still untouched.
+#[derive(Clone, Debug, Default)]
+pub struct LiveSchedule {
+    /// Initial holdings `(node, block, tier)`.
+    pub initial: Vec<(NodeId, BlockId, Tier)>,
+    /// Ordered send intents (per-node FIFO).
+    pub intents: Vec<SendIntent>,
+    /// Whole-model local loads `(node, medium, duration_s)` priced at plan
+    /// time (kept as one float so live replay matches the static plan).
+    pub loads: Vec<(NodeId, Medium, f64)>,
+    /// Per-block sizes.
+    pub block_bytes: Vec<u64>,
+    /// One-off startup delay before any send (NCCL group init).
+    pub start_delay: SimTime,
+    /// Nodes gating operation finish (must end holding every block).
+    pub expect_full: Vec<NodeId>,
+    /// Extra nodes whose individual completion matters but does not gate
+    /// finish (self-loading surplus replicas).
+    pub watch: Vec<NodeId>,
+    /// Nodes serving a full local replica from the operation's start.
+    pub immediate: Vec<NodeId>,
+    /// Nodes that become local replicas at their own completion.
+    pub local_on_complete: Vec<NodeId>,
+    /// Execute-while-load pipelines (λPipe only).
+    pub pipelines: Vec<PlannedPipeline>,
+    /// Recruits that become local replicas at finish + `switch_stall_s`.
+    pub dest_locals: Vec<NodeId>,
+    /// Mode-switch stall applied to `dest_locals` after finish, seconds.
+    pub switch_stall_s: f64,
+    /// Cold recruits revocable while untouched (cancellation targets).
+    pub recruits: Vec<NodeId>,
+}
+
 /// A scaling policy: plans when pipelines / local replicas become available
 /// after a scale-out decision. Implementations must be deterministic —
 /// the serving engine's reproducibility depends on it.
@@ -102,6 +154,17 @@ pub trait ScalingBackend {
     /// Plan one scaling operation. Times in the returned outcome are
     /// relative to the operation's start.
     fn plan(&self, req: &ScalingRequest, cluster: &ClusterState) -> ScalingOutcome;
+
+    /// Plan one scaling operation for live execution on the engine's
+    /// shared fabric. `None` (the default) makes the engine fall back to
+    /// the static [`ScalingBackend::plan`] with precomputed times — no
+    /// contention, no cancellation, no re-planning. Implementations must
+    /// produce schedules whose uncontended, failure-free execution is
+    /// bit-identical to their static plan (enforced by
+    /// `rust/tests/fabric_replay.rs`).
+    fn plan_live(&self, _req: &ScalingRequest, _cluster: &ClusterState) -> Option<LiveSchedule> {
+        None
+    }
 }
 
 // ---- shared planning helpers ------------------------------------------------
@@ -142,6 +205,51 @@ fn plan_warmup(req: &ScalingRequest, cluster: &ClusterState) -> ScalingOutcome {
         out.finish = out.finish.max(t);
     }
     out
+}
+
+/// Live-schedule analogue of [`plan_tree_multicast`]: sources serve at
+/// operation start, every destination serves at its own completion.
+fn plan_tree_live(
+    alg: Algorithm,
+    req: &ScalingRequest,
+    cluster: &ClusterState,
+) -> Option<LiveSchedule> {
+    if req.dests.is_empty() {
+        return None; // pure warm-up stays on the static path
+    }
+    let n_blocks = req.partition.n_blocks();
+    let block_bytes = req.partition.block_bytes();
+    let mut nodes: Vec<NodeId> = req.sources.iter().map(|s| s.node).collect();
+    nodes.extend_from_slice(&req.dests);
+    let mut plan = multicast::build_plan(
+        alg,
+        &nodes,
+        req.sources.len(),
+        n_blocks,
+        req.sources[0].tier,
+        &cluster.config.network,
+    );
+    plan.initial.clear();
+    for s in &req.sources {
+        for b in 0..n_blocks {
+            plan.initial.push((s.node, b, s.tier));
+        }
+    }
+    Some(LiveSchedule {
+        initial: plan.initial,
+        intents: plan.intents,
+        loads: vec![],
+        block_bytes,
+        start_delay: plan.start_delay,
+        expect_full: req.dests.clone(),
+        watch: vec![],
+        immediate: req.sources.iter().map(|s| s.node).collect(),
+        local_on_complete: req.dests.clone(),
+        pipelines: vec![],
+        dest_locals: vec![],
+        switch_stall_s: 0.0,
+        recruits: req.dests.clone(),
+    })
 }
 
 /// Tree/chain multicast plan shared by FaaSNet and NCCL-like baselines:
@@ -293,6 +401,104 @@ impl ScalingBackend for LambdaPipe {
         }
         out
     }
+
+    /// The same λPipe flow, issued incrementally: the k-way multicast and
+    /// source staging run as fabric events; pipelines spawn when their
+    /// complementary chunks arrive; dest replicas spawn at finish + the
+    /// mode-switch stall. Mirrors [`ScalingBackend::plan`] exactly for
+    /// uncontended failure-free execution.
+    fn plan_live(&self, req: &ScalingRequest, cluster: &ClusterState) -> Option<LiveSchedule> {
+        let sources = &req.sources;
+        assert!(!sources.is_empty(), "scaling requires at least one source replica");
+        if req.dests.is_empty() {
+            return None; // pure warm-up stays on the static path
+        }
+        let dests = &req.dests;
+        let n_blocks = req.partition.n_blocks();
+        let block_bytes = req.partition.block_bytes();
+        let net = &cluster.config.network;
+
+        let k_eff = self.k.clamp(1, sources.len()).min(dests.len().max(1));
+        let active_sources = &sources[..k_eff];
+        let mut nodes: Vec<NodeId> = active_sources.iter().map(|s| s.node).collect();
+        nodes.extend_from_slice(dests);
+        let mut plan = multicast::kway::kway_plan(&nodes, k_eff, n_blocks, active_sources[0].tier);
+        plan.initial.clear();
+        for s in active_sources {
+            for b in 0..n_blocks {
+                plan.initial.push((s.node, b, s.tier));
+            }
+        }
+        // Sources also stage into their own GPU to serve locally.
+        for s in active_sources {
+            if s.tier != Tier::Gpu {
+                let medium = medium_of(s.tier);
+                for b in 0..n_blocks {
+                    plan.intents.push(SendIntent { src: s.node, dst: s.node, block: b, medium });
+                }
+            }
+        }
+        let mut immediate: Vec<NodeId> = Vec::new();
+        let mut local_on_complete: Vec<NodeId> = Vec::new();
+        for s in active_sources {
+            if s.tier == Tier::Gpu {
+                immediate.push(s.node);
+            } else {
+                local_on_complete.push(s.node);
+            }
+        }
+        // Sources beyond the k-way senders self-load from their local tier
+        // (whole-model loads priced exactly as the static plan does).
+        let sim = TransferSim::new(net, req.opts);
+        let mut loads: Vec<(NodeId, Medium, f64)> = Vec::new();
+        let mut watch: Vec<NodeId> = Vec::new();
+        for s in &sources[k_eff..] {
+            match s.tier {
+                Tier::Gpu => immediate.push(s.node),
+                tier => {
+                    let d = local_load_time(&sim, tier, &block_bytes);
+                    loads.push((s.node, medium_of(tier), d.as_secs()));
+                    watch.push(s.node);
+                    local_on_complete.push(s.node);
+                }
+            }
+        }
+        // Execute-while-load pipelines over the destination sub-groups.
+        let groups = multicast::kway::split_subgroups(dests, k_eff);
+        let mut pipelines: Vec<PlannedPipeline> = Vec::new();
+        for p in generate_pipelines(&groups) {
+            if p.len() < 2 {
+                continue;
+            }
+            let assignment = pipeline_block_assignment(&p, n_blocks, k_eff);
+            let pipeline = ExecPipeline::from_assignment(&assignment, req.partition);
+            pipelines.push(PlannedPipeline { assignment, pipeline });
+        }
+        let stall = plan_switch(
+            &[],
+            &nodes,
+            req.spec,
+            &cluster.config.compute,
+            net,
+            Some(req.switch),
+        )
+        .stall_s;
+        Some(LiveSchedule {
+            initial: plan.initial,
+            intents: plan.intents,
+            loads,
+            block_bytes,
+            start_delay: plan.start_delay,
+            expect_full: nodes,
+            watch,
+            immediate,
+            local_on_complete,
+            pipelines,
+            dest_locals: dests.clone(),
+            switch_stall_s: stall,
+            recruits: dests.clone(),
+        })
+    }
 }
 
 // ---- FaaSNet ---------------------------------------------------------------
@@ -312,6 +518,11 @@ impl ScalingBackend for FaasNet {
             return plan_warmup(req, cluster);
         }
         plan_tree_multicast(Algorithm::FaasNet, req, cluster)
+    }
+
+    fn plan_live(&self, req: &ScalingRequest, cluster: &ClusterState) -> Option<LiveSchedule> {
+        assert!(!req.sources.is_empty(), "scaling requires at least one source replica");
+        plan_tree_live(Algorithm::FaasNet, req, cluster)
     }
 }
 
@@ -333,9 +544,43 @@ impl ScalingBackend for NcclBcast {
         }
         plan_tree_multicast(Algorithm::Nccl, req, cluster)
     }
+
+    fn plan_live(&self, req: &ScalingRequest, cluster: &ClusterState) -> Option<LiveSchedule> {
+        assert!(!req.sources.is_empty(), "scaling requires at least one source replica");
+        plan_tree_live(Algorithm::Nccl, req, cluster)
+    }
 }
 
 // ---- ServerlessLLM ---------------------------------------------------------
+
+/// Shared ServerlessLLM recruitment: warm host-memory sources become
+/// self-loading recruits (deduplicated against the cold dests), each
+/// resolved to the cheapest local tier it loads from — the request's
+/// source tag if present, else the cluster residency view, else SSD.
+/// `plan` and `plan_live` must agree exactly on this derivation (the live
+/// path's replay identity depends on it), so both call here.
+fn sllm_load_dests(req: &ScalingRequest, cluster: &ClusterState) -> Vec<(NodeId, Tier)> {
+    let warm: Vec<NodeId> =
+        req.sources.iter().filter(|s| s.tier == Tier::HostMem).map(|s| s.node).collect();
+    let src_tier = |n: NodeId| {
+        req.sources
+            .iter()
+            .find(|s| s.node == n)
+            .map(|s| s.tier)
+            .or_else(|| {
+                cluster.locality_of(n).map(|l| match l {
+                    Locality::Gpu | Locality::HostMem => Tier::HostMem,
+                    Locality::Ssd | Locality::Remote => Tier::Ssd,
+                })
+            })
+            .unwrap_or(Tier::Ssd)
+    };
+    warm.iter()
+        .copied()
+        .chain(req.dests.iter().copied().filter(|d| !warm.contains(d)))
+        .map(|d| (d, src_tier(d)))
+        .collect()
+}
 
 /// ServerlessLLM-style scaling: every recruit loads from its own local tier
 /// (host memory if cached there, SSD otherwise); never multicasts.
@@ -357,37 +602,57 @@ impl ScalingBackend for ServerlessLlm {
         // load from the best local tier the cluster's residency view
         // reports for them (host cache beats SSD), defaulting to SSD when
         // the caller tracks no residency.
-        let warm: Vec<NodeId> =
-            sources.iter().filter(|s| s.tier == Tier::HostMem).map(|s| s.node).collect();
-        let load_dests: Vec<NodeId> = warm
-            .iter()
-            .copied()
-            .chain(req.dests.iter().copied().filter(|d| !warm.contains(d)))
-            .collect();
-        let src_tier = |n: NodeId| {
-            sources
-                .iter()
-                .find(|s| s.node == n)
-                .map(|s| s.tier)
-                .or_else(|| {
-                    cluster.locality_of(n).map(|l| match l {
-                        Locality::Gpu | Locality::HostMem => Tier::HostMem,
-                        Locality::Ssd | Locality::Remote => Tier::Ssd,
-                    })
-                })
-                .unwrap_or(Tier::Ssd)
-        };
+        let load_dests = sllm_load_dests(req, cluster);
         let sim = TransferSim::new(&cluster.config.network, req.opts);
         for s in sources.iter().filter(|s| s.tier == Tier::Gpu) {
             out.instances.push((SimTime::ZERO, NewInstance::Local { node: s.node }));
         }
-        for &d in &load_dests {
-            let t = local_load_time(&sim, src_tier(d), &block_bytes);
+        for &(d, tier) in &load_dests {
+            let t = local_load_time(&sim, tier, &block_bytes);
             out.instances.push((t, NewInstance::Local { node: d }));
             out.nodes_loading.push((d, t));
             out.finish = out.finish.max(t);
         }
         out
+    }
+
+    /// Local-tier loads issued as live storage-port flows: each recruit's
+    /// whole-model load is one fabric flow priced by the exact plan-time
+    /// `local_load_time`, so failure-free replay is bit-identical while
+    /// node failures mid-load are observable and recoverable.
+    fn plan_live(&self, req: &ScalingRequest, cluster: &ClusterState) -> Option<LiveSchedule> {
+        let sources = &req.sources;
+        assert!(!sources.is_empty(), "scaling requires at least one source replica");
+        let block_bytes = req.partition.block_bytes();
+        let load_dests = sllm_load_dests(req, cluster);
+        if load_dests.is_empty() {
+            return None; // only GPU-resident sources: nothing to execute
+        }
+        let sim = TransferSim::new(&cluster.config.network, req.opts);
+        let immediate: Vec<NodeId> =
+            sources.iter().filter(|s| s.tier == Tier::Gpu).map(|s| s.node).collect();
+        let loads: Vec<(NodeId, Medium, f64)> = load_dests
+            .iter()
+            .map(|&(d, tier)| {
+                (d, medium_of(tier), local_load_time(&sim, tier, &block_bytes).as_secs())
+            })
+            .collect();
+        let dests: Vec<NodeId> = load_dests.iter().map(|&(d, _)| d).collect();
+        Some(LiveSchedule {
+            initial: vec![],
+            intents: vec![],
+            loads,
+            block_bytes,
+            start_delay: SimTime::ZERO,
+            expect_full: dests.clone(),
+            watch: vec![],
+            immediate,
+            local_on_complete: dests.clone(),
+            pipelines: vec![],
+            dest_locals: vec![],
+            switch_stall_s: 0.0,
+            recruits: dests,
+        })
     }
 }
 

@@ -29,7 +29,7 @@
 //! warmth and tier-tagged sources from manager queries instead of any
 //! per-model bookkeeping.
 
-use super::backend::{ClusterState, NodeStatus, ScalingRequest};
+use super::backend::{ClusterState, LiveSchedule, NodeStatus, ScalingRequest};
 use super::batcher::DynamicBatcher;
 use super::scaling::{NewInstance, ScalingOutcome, Source};
 use super::session::{ModelReport, ModelSession, SessionReport};
@@ -37,13 +37,14 @@ use crate::config::ClusterConfig;
 use crate::kvcache::{ContinuousScheduler, KvGeometry, KvPool, KvVictimAction, ReqView};
 use crate::memory::{Locality, MemoryManager};
 use crate::metrics::RequestMetrics;
-use crate::multicast::NodeId;
+use crate::multicast::{BlockId, NodeId};
 use crate::pipeline::execution::ExecPipeline;
 use crate::pipeline::mode_switch::plan_switch_pipeline;
 use crate::sim::event::EventQueue;
+use crate::sim::fabric::{Fabric, FabricOp, FabricUpdate, OpId};
 use crate::sim::time::SimTime;
 use crate::sim::transfer::Tier;
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, HashMap, HashSet};
 
 #[derive(Clone, Debug)]
 struct ActiveReq {
@@ -146,6 +147,55 @@ enum Ev {
     Dissolve(usize, u64),
     DissolveDone(usize, Vec<usize>),
     Reclaim(usize, u64),
+    /// Shared-fabric wakeup (version-stamped; stale versions are no-ops).
+    Fabric(u64),
+    /// Injected permanent node failure.
+    NodeFail(NodeId),
+    /// Periodic scale-down probe while a model has cancellable recruits.
+    CancelCheck(usize),
+}
+
+/// How often a model with in-flight cancellable recruits re-evaluates its
+/// scaler's `desired` for mid-op scale-down (seconds).
+const CANCEL_CHECK_S: f64 = 0.25;
+
+/// One execute-while-load pipeline awaiting its blocks on the fabric.
+struct LivePipeline {
+    /// `(node, block)` deliveries still missing.
+    needs: HashSet<(NodeId, BlockId)>,
+    pipe: ExecPipeline,
+}
+
+/// Engine-side bookkeeping for one live fabric operation.
+struct LiveOp {
+    model: usize,
+    /// Mode-switch stall applied to `dest_locals` after op finish.
+    switch_stall_s: f64,
+    /// Recruits that become local replicas at finish + stall.
+    dest_locals: Vec<NodeId>,
+    /// Nodes that become local replicas at their own completion.
+    local_on_complete: HashSet<NodeId>,
+    /// Pipelines awaiting their block assignments, in spawn-priority order.
+    pipelines: Vec<LivePipeline>,
+    /// Instance ids of pipelines spawned by this op (dissolved at finish).
+    spawned_pipes: Vec<u64>,
+    /// Cold recruits revocable while untouched.
+    recruits: Vec<NodeId>,
+    /// The op's finish actions ran; the entry only lingers for watch
+    /// nodes (self-loads outlasting the multicast) still completing.
+    finished: bool,
+}
+
+impl LiveOp {
+    /// Drop every pending trigger referencing `node` — revocation, orphan
+    /// handling and node failure share this scrub, so any new per-node
+    /// trigger must be cleared in exactly one place.
+    fn scrub_node(&mut self, node: NodeId) {
+        self.dest_locals.retain(|&d| d != node);
+        self.local_on_complete.remove(&node);
+        self.recruits.retain(|&d| d != node);
+        self.pipelines.retain(|p| !p.pipe.nodes().contains(&node));
+    }
 }
 
 /// Shared-node occupancy: at most one model owns a node's GPU at a time;
@@ -175,6 +225,8 @@ struct ModelRuntime {
     scaler: Box<dyn super::autoscaler::ScalingPolicy>,
     /// A ScaleCheck event is already queued.
     scale_check_pending: bool,
+    /// A CancelCheck event is already queued.
+    cancel_check_pending: bool,
     /// Earliest time the next scaling operation may start (cooldown).
     next_op_at: SimTime,
     last_gpu_count: usize,
@@ -233,6 +285,7 @@ impl ModelRuntime {
             req_inst: HashMap::new(),
             scaler,
             scale_check_pending: false,
+            cancel_check_pending: false,
             next_op_at: SimTime::ZERO,
             last_gpu_count: 0,
             first_tokens: HashMap::new(),
@@ -284,6 +337,18 @@ pub struct ServingEngine {
     node_busy: Vec<Option<(usize, SimTime)>>,
     /// Latest event timestamp seen — the metering horizon at run end.
     horizon: SimTime,
+    /// The cluster-wide transfer scheduler every live scaling operation's
+    /// sends execute on (shared across tenants — §4.2 under real load).
+    fabric: Fabric,
+    /// Engine-side state of live fabric operations, by op id.
+    live: BTreeMap<OpId, LiveOp>,
+    /// Permanently failed nodes (never recruited or spawned on again).
+    failed: HashSet<NodeId>,
+    /// Failure injections queued before `run` (node, time).
+    pending_failures: Vec<(NodeId, SimTime)>,
+    /// Last recorded per-model fabric throughput sample (GB/s), to dedup
+    /// the utilization series.
+    fab_util_last: Vec<f64>,
 }
 
 impl ServingEngine {
@@ -292,6 +357,7 @@ impl ServingEngine {
         let node_state = vec![NodeUse::Free; cluster.n_nodes];
         let node_busy = vec![None; cluster.n_nodes];
         let mem = MemoryManager::from_cluster(&cluster);
+        let fabric = Fabric::new(cluster.network.clone());
         ServingEngine {
             cluster,
             q: EventQueue::new(),
@@ -300,7 +366,20 @@ impl ServingEngine {
             mem,
             node_busy,
             horizon: SimTime::ZERO,
+            fabric,
+            live: BTreeMap::new(),
+            failed: HashSet::new(),
+            pending_failures: Vec::new(),
+            fab_util_last: Vec::new(),
         }
+    }
+
+    /// Inject a permanent node failure at `at`: in-flight transfers
+    /// touching the node abort and their operations re-plan from surviving
+    /// block-holders; instances on the node die and their requests are
+    /// re-routed; the node is never recruited again.
+    pub fn inject_failure(&mut self, node: NodeId, at: SimTime) {
+        self.pending_failures.push((node, at));
     }
 
     /// Update a node's occupancy and meter per-node GPU·seconds: a tenant
@@ -345,6 +424,7 @@ impl ServingEngine {
         if rt.ms.params.ssd_everywhere {
             self.mem.seed_ssd_everywhere(&rt.mem_key);
         }
+        self.fab_util_last.push(0.0);
         let mut want_gpu = rt.ms.params.initial_gpu_sources;
         let mut want_host = rt.ms.params.initial_host_sources;
         for n in 0..self.node_state.len() {
@@ -387,6 +467,9 @@ impl ServingEngine {
                 self.q.push(r.arrival, Ev::Arrival(m, i));
             }
         }
+        for (node, at) in std::mem::take(&mut self.pending_failures) {
+            self.q.push(at, Ev::NodeFail(node));
+        }
         while let Some((t, ev)) = self.q.pop() {
             self.horizon = self.horizon.max(t);
             match ev {
@@ -405,6 +488,12 @@ impl ServingEngine {
                     }
                 }
                 Ev::Reclaim(m, id) => self.on_reclaim(t, m, id),
+                Ev::Fabric(ver) => {
+                    let upd = self.fabric.on_wakeup(t, ver);
+                    self.handle_fabric_update(t, upd);
+                }
+                Ev::NodeFail(n) => self.on_node_fail(t, n),
+                Ev::CancelCheck(m) => self.on_cancel_check(t, m),
             }
         }
         // Close the cost meters at the simulation horizon: nodes still
@@ -500,7 +589,12 @@ impl ServingEngine {
             self.models[m].instances.get_mut(&id).unwrap().kv = Some(kv);
         }
         if let Some(d) = dissolve_at {
-            self.q.push(d.max(now), Ev::Dissolve(m, id));
+            // `SimTime::MAX` is the live-fabric sentinel: the pipeline
+            // dissolves when its operation finishes (the engine pushes the
+            // Dissolve event then), not at a plan-time instant.
+            if d != SimTime::MAX {
+                self.q.push(d.max(now), Ev::Dissolve(m, id));
+            }
         } else {
             self.schedule_reclaim(m, id, now);
         }
@@ -1329,6 +1423,27 @@ impl ServingEngine {
 
     // ---- scaling -------------------------------------------------------------
 
+    /// Demand sizing shared by the scale-out path and the mid-op
+    /// cancellation probe — the two must agree on what "wanted capacity"
+    /// means. Returns `(desired, current)` where `current` counts live
+    /// instances plus recruits still loading; `desired` folds the
+    /// scaler's answer with backlog-driven sizing (each instance absorbs
+    /// `max_batch` concurrent decodes).
+    fn demand(&mut self, now: SimTime, m: usize) -> (usize, usize) {
+        let md = &mut self.models[m];
+        let queued =
+            md.unrouted.len() + md.instances.values().map(|i| i.queue.len()).sum::<usize>();
+        let loading =
+            self.node_state.iter().filter(|s| **s == NodeUse::Loading(m)).count();
+        let current = md.instances.len() + loading;
+        let by_backlog = if queued > 0 {
+            md.instances.len() + queued.div_ceil(md.ms.params.max_batch.max(1))
+        } else {
+            0
+        };
+        (md.scaler.desired(now, queued, current).max(by_backlog), current)
+    }
+
     fn maybe_scale(&mut self, now: SimTime, m: usize) {
         if now < self.models[m].next_op_at {
             // Cooldown: re-check when the window opens.
@@ -1339,33 +1454,27 @@ impl ServingEngine {
             }
             return;
         }
-        let md = &mut self.models[m];
-        let queued =
-            md.unrouted.len() + md.instances.values().map(|i| i.queue.len()).sum::<usize>();
-        let loading =
-            self.node_state.iter().filter(|s| **s == NodeUse::Loading(m)).count();
-        let current = md.instances.len() + loading;
-        // Capacity sizing: each instance absorbs max_batch concurrent
-        // decodes; backlog beyond the in-flight slots demands new replicas.
-        let by_backlog = if queued > 0 {
-            md.instances.len() + queued.div_ceil(md.ms.params.max_batch.max(1))
-        } else {
-            0
-        };
-        let desired = md.scaler.desired(now, queued, current).max(by_backlog);
+        let (desired, current) = self.demand(now, m);
         if desired <= current {
+            if desired < current && self.models[m].ms.params.cancel_recruits {
+                // The scaler changed its mind while recruits are still in
+                // flight: revoke surplus recruits that have not received
+                // their first block (they never bill GPU·s).
+                self.cancel_surplus_recruits(now, m, current - desired);
+            }
             return;
         }
-        // Free nodes to recruit (shared across models: first claim wins).
+        // Free nodes to recruit (shared across models: first claim wins;
+        // failed nodes are never recruited again).
         let free: Vec<NodeId> = (0..self.cluster.n_nodes)
-            .filter(|&n| self.node_state[n] == NodeUse::Free)
+            .filter(|&n| self.node_state[n] == NodeUse::Free && !self.failed.contains(&n))
             .collect();
         let want = (desired - current).min(free.len());
         if want == 0 {
             return;
         }
-        let mem_key = md.mem_key.clone();
-        md.next_op_at = now + SimTime::from_millis(100.0);
+        let mem_key = self.models[m].mem_key.clone();
+        self.models[m].next_op_at = now + SimTime::from_millis(100.0);
 
         // Locality-driven recruitment (§5), answered by the shared memory
         // manager: host-warm nodes are the most valuable recruits — they
@@ -1441,20 +1550,36 @@ impl ServingEngine {
             })
             .collect();
         let residency = self.mem.residency(&mem_key);
-        let md = &mut self.models[m];
-        let req = ScalingRequest {
-            sources: sources_for_plan,
-            dests: dests_net.clone(),
-            spec: &md.ms.params.spec,
-            partition: &md.partition,
-            opts: md.ms.params.opts,
-            switch: md.ms.params.switch,
+        enum Planned {
+            Live(LiveSchedule),
+            Static(ScalingOutcome),
+        }
+        let planned = {
+            let md = &mut self.models[m];
+            let req = ScalingRequest {
+                sources: sources_for_plan,
+                dests: dests_net.clone(),
+                spec: &md.ms.params.spec,
+                partition: &md.partition,
+                opts: md.ms.params.opts,
+                switch: md.ms.params.switch,
+            };
+            let cs =
+                ClusterState { config: &self.cluster, nodes: &statuses, residency: &residency };
+            // Live-capable backends execute on the shared fabric; the rest
+            // (mocks, Ideal, warm-ups) keep the static precomputed path.
+            match md.ms.backend.plan_live(&req, &cs) {
+                Some(sched) => Planned::Live(sched),
+                None => Planned::Static(md.ms.backend.plan(&req, &cs)),
+            }
         };
-        let outcome: ScalingOutcome = md.ms.backend.plan(
-            &req,
-            &ClusterState { config: &self.cluster, nodes: &statuses, residency: &residency },
-        );
-        drop(req);
+        let outcome: ScalingOutcome = match planned {
+            Planned::Live(sched) => {
+                self.launch_live_op(now, m, sched, &dests_net, &recruited_warm, &mem_key);
+                return;
+            }
+            Planned::Static(outcome) => outcome,
+        };
         // Recruits the plan actually uses start loading; a recruit the
         // outcome never references (possible with scripted or partial
         // plans — every shipped backend covers all recruits) hands its
@@ -1498,6 +1623,466 @@ impl ServingEngine {
         }
     }
 
+    // ---- live fabric operations ----------------------------------------------
+
+    /// Launch a [`LiveSchedule`] on the shared fabric: recruits it
+    /// references start loading, immediate replicas spawn, the transfer op
+    /// registers with the fabric, and — while cancellable recruits are in
+    /// flight — a periodic scale-down probe is armed.
+    fn launch_live_op(
+        &mut self,
+        now: SimTime,
+        m: usize,
+        sched: LiveSchedule,
+        dests_net: &[NodeId],
+        recruited_warm: &[NodeId],
+        mem_key: &str,
+    ) {
+        // A recruit the schedule never references hands its reservation
+        // back (mirrors the static path).
+        let mut referenced: HashSet<NodeId> = HashSet::new();
+        referenced.extend(sched.immediate.iter().copied());
+        referenced.extend(sched.local_on_complete.iter().copied());
+        referenced.extend(sched.dest_locals.iter().copied());
+        referenced.extend(sched.recruits.iter().copied());
+        for p in &sched.pipelines {
+            referenced.extend(p.pipeline.nodes());
+        }
+        for &d in dests_net.iter().chain(recruited_warm.iter()) {
+            if referenced.contains(&d) {
+                self.set_node_use(d, NodeUse::Loading(m), now);
+            } else {
+                self.mem.cancel_gpu_reservation(d, mem_key);
+            }
+        }
+        self.account_gpus(m, now);
+        // Immediate local replicas (GPU-resident sources): skip nodes
+        // already serving, exactly as the static path does at t=0.
+        for &n in &sched.immediate {
+            if matches!(self.node_state.get(n), Some(NodeUse::Serving(_))) {
+                continue;
+            }
+            let stash = self.stash_local(m, n);
+            self.q.push(now, Ev::InstanceUp(m, stash));
+        }
+        // The replan fallback: nodes that could self-repair from local SSD.
+        let ssd_fallback: HashSet<NodeId> = (0..self.mem.n_nodes())
+            .filter(|&n| !self.failed.contains(&n) && self.mem.node(n).in_ssd(mem_key))
+            .collect();
+        let pipelines: Vec<LivePipeline> = sched
+            .pipelines
+            .into_iter()
+            .map(|p| LivePipeline {
+                needs: p
+                    .assignment
+                    .iter()
+                    .flat_map(|(n, bs)| bs.iter().map(move |&b| (*n, b)))
+                    .collect(),
+                pipe: p.pipeline,
+            })
+            .collect();
+        let has_recruits = !sched.recruits.is_empty();
+        let opts = self.models[m].ms.params.opts;
+        let (op, upd) = self.fabric.begin_op(
+            now,
+            FabricOp {
+                model: m,
+                initial: sched.initial,
+                intents: sched.intents,
+                loads: sched.loads,
+                block_bytes: sched.block_bytes,
+                opts,
+                start_delay: sched.start_delay,
+                expect_full: sched.expect_full,
+                watch: sched.watch,
+                ssd_fallback,
+            },
+        );
+        self.live.insert(
+            op,
+            LiveOp {
+                model: m,
+                switch_stall_s: sched.switch_stall_s,
+                dest_locals: sched.dest_locals,
+                local_on_complete: sched.local_on_complete.into_iter().collect(),
+                pipelines,
+                spawned_pipes: Vec::new(),
+                recruits: sched.recruits,
+                finished: false,
+            },
+        );
+        self.handle_fabric_update(now, upd);
+        if has_recruits && self.models[m].ms.params.cancel_recruits {
+            self.schedule_cancel_check(now, m);
+        }
+    }
+
+    /// Apply a [`FabricUpdate`]: schedule the wakeup, record utilization
+    /// and replan counters, spawn pipelines whose blocks arrived, locals
+    /// for completed nodes, finish operations (dest locals + pipeline
+    /// dissolves), and revoke orphaned recruits.
+    fn handle_fabric_update(&mut self, now: SimTime, upd: FabricUpdate) {
+        if let Some((t, ver)) = upd.wakeup {
+            self.q.push(t, Ev::Fabric(ver));
+        }
+        if let Some(util) = &upd.util {
+            // The list is authoritative: a model absent from it has no
+            // transfers on the fabric, so its series drops to zero.
+            let mut covered = vec![false; self.fab_util_last.len()];
+            for &(m, gbps) in util {
+                if m >= self.fab_util_last.len() {
+                    continue;
+                }
+                covered[m] = true;
+                if (gbps - self.fab_util_last[m]).abs() > 1e-9 {
+                    self.fab_util_last[m] = gbps;
+                    self.models[m].ms.metrics.record_fabric_util(now, gbps);
+                }
+            }
+            for m in 0..self.fab_util_last.len() {
+                if !covered[m] && self.fab_util_last[m].abs() > 1e-9 {
+                    self.fab_util_last[m] = 0.0;
+                    self.models[m].ms.metrics.record_fabric_util(now, 0.0);
+                }
+            }
+        }
+        for &op in &upd.replanned {
+            if let Some(lo) = self.live.get(&op) {
+                let m = lo.model;
+                self.models[m].ms.metrics.record_transfer_replan();
+            }
+        }
+        // Deliveries → execute-while-load pipeline triggers.
+        let mut to_spawn: Vec<(OpId, usize, ExecPipeline)> = Vec::new();
+        for &(op, node, block) in &upd.deliveries {
+            if let Some(lo) = self.live.get_mut(&op) {
+                let mut i = 0;
+                while i < lo.pipelines.len() {
+                    lo.pipelines[i].needs.remove(&(node, block));
+                    if lo.pipelines[i].needs.is_empty() {
+                        let lp = lo.pipelines.remove(i);
+                        to_spawn.push((op, lo.model, lp.pipe));
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        }
+        for (op, m, pipe) in to_spawn {
+            if let Some(id) = self.spawn_live_pipeline(now, m, pipe) {
+                if let Some(lo) = self.live.get_mut(&op) {
+                    lo.spawned_pipes.push(id);
+                }
+            }
+        }
+        // Node completions → locals for self-loading sources/replicas. A
+        // finished op lingers only for these; drop it once they drain.
+        for &(op, node) in &upd.node_completions {
+            let mut spawn: Option<usize> = None;
+            let mut drained = false;
+            if let Some(lo) = self.live.get_mut(&op) {
+                if lo.local_on_complete.remove(&node) {
+                    spawn = Some(lo.model);
+                }
+                drained = lo.finished && lo.local_on_complete.is_empty();
+            }
+            if drained {
+                self.live.remove(&op);
+            }
+            if let Some(m) = spawn {
+                if !self.failed.contains(&node) {
+                    let stash = self.stash_local(m, node);
+                    self.q.push(now, Ev::InstanceUp(m, stash));
+                }
+            }
+        }
+        // Orphaned recruits: no surviving source can complete them.
+        for &(op, node) in &upd.orphaned {
+            let m = match self.live.get_mut(&op) {
+                Some(lo) => {
+                    lo.scrub_node(node);
+                    lo.model
+                }
+                None => continue,
+            };
+            // A spawned execute-while-load pipeline serving on the node
+            // dies with it (its other members revert to loading if they
+            // still expect deliveries); otherwise the node would return to
+            // the free pool while an instance still routed requests to it.
+            let ids: Vec<u64> = self.models[m]
+                .instances
+                .iter()
+                .filter(|(_, i)| i.pipe.nodes().contains(&node))
+                .map(|(&id, _)| id)
+                .collect();
+            for id in ids {
+                self.kill_instance(now, m, id, node);
+            }
+            let mem_key = self.models[m].mem_key.clone();
+            self.mem.cancel_gpu_reservation(node, &mem_key);
+            if !self.failed.contains(&node) {
+                // The node did receive bytes: it bills until revocation.
+                self.set_node_use(node, NodeUse::Free, now);
+            }
+            self.account_gpus(m, now);
+        }
+        // Operation finish: dest locals at finish + stall, then pipeline
+        // dissolves (this push order preserves the static tie-break when
+        // the stall is zero). The entry survives — marked finished — while
+        // watch nodes (self-loads outlasting the multicast) still owe
+        // their completions.
+        for &(op, contended_s) in &upd.op_completions {
+            let Some(lo) = self.live.get_mut(&op) else { continue };
+            if lo.finished {
+                // Drain residual from a lingering finished op: late
+                // contention (stray flows, watch-node loads) folds in.
+                let m = lo.model;
+                if contended_s > 0.0 {
+                    self.models[m].ms.metrics.record_fabric_contended(contended_s);
+                }
+                continue;
+            }
+            lo.finished = true;
+            // The cancellation window closes at finish: remaining
+            // recruits are materializing into replicas right now.
+            lo.recruits.clear();
+            let m = lo.model;
+            let at = now + SimTime::from_secs(lo.switch_stall_s);
+            let dest_locals = std::mem::take(&mut lo.dest_locals);
+            let spawned_pipes = std::mem::take(&mut lo.spawned_pipes);
+            // Drop the entry outright when nothing more can arrive: no
+            // watch nodes pending, or the fabric op itself is gone (a
+            // drained-without-finish close-out after failures).
+            let drained = lo.local_on_complete.is_empty() || !self.fabric.op_active(op);
+            if drained {
+                self.live.remove(&op);
+            }
+            if contended_s > 0.0 {
+                self.models[m].ms.metrics.record_fabric_contended(contended_s);
+            }
+            for &d in &dest_locals {
+                if self.failed.contains(&d) {
+                    continue;
+                }
+                let stash = self.stash_local(m, d);
+                self.q.push(at, Ev::InstanceUp(m, stash));
+            }
+            for id in spawned_pipes {
+                if self.models[m].instances.contains_key(&id) {
+                    self.q.push(now, Ev::Dissolve(m, id));
+                }
+            }
+        }
+    }
+
+    /// Spawn an execute-while-load pipeline the instant its blocks arrive
+    /// (the live analogue of `on_instance_up` for scheduled pipelines),
+    /// returning the instance id for dissolve-at-finish bookkeeping.
+    fn spawn_live_pipeline(&mut self, now: SimTime, m: usize, pipe: ExecPipeline) -> Option<u64> {
+        if pipe.nodes().iter().any(|n| self.failed.contains(n)) {
+            return None;
+        }
+        let md = &self.models[m];
+        let clash = pipe.nodes().iter().any(|&n| {
+            md.instances.values().any(|i| {
+                i.dissolve_at.is_none() && i.pipe.nodes().contains(&n) && i.pipe.n_stages() == 1
+            })
+        });
+        if clash {
+            return None;
+        }
+        Some(self.spawn_instance(m, pipe, Some(SimTime::MAX), now))
+    }
+
+    /// Arm the periodic mid-op scale-down probe for model `m`.
+    fn schedule_cancel_check(&mut self, now: SimTime, m: usize) {
+        if !self.models[m].cancel_check_pending {
+            self.models[m].cancel_check_pending = true;
+            self.q.push(now + SimTime::from_secs(CANCEL_CHECK_S), Ev::CancelCheck(m));
+        }
+    }
+
+    /// Periodic probe: while a live op still has cancellable recruits,
+    /// re-evaluate the scaler's `desired` and revoke the surplus. The
+    /// `desired` consultation is idempotent at a fixed instant (a
+    /// [`super::autoscaler::ScalingPolicy`] contract), so these extra
+    /// probes never perturb the policy's decisions.
+    fn on_cancel_check(&mut self, now: SimTime, m: usize) {
+        self.models[m].cancel_check_pending = false;
+        let has_recruits = self
+            .live
+            .values()
+            .any(|lo| lo.model == m && !lo.finished && !lo.recruits.is_empty());
+        if !has_recruits {
+            return;
+        }
+        let (desired, current) = self.demand(now, m);
+        if desired < current {
+            self.cancel_surplus_recruits(now, m, current - desired);
+        }
+        self.schedule_cancel_check(now, m);
+    }
+
+    /// Revoke up to `surplus` untouched recruits of model `m`, newest
+    /// operation first, last recruit first. A revoked recruit's queued
+    /// sends are cancelled on the fabric (the remaining schedule repairs
+    /// around it), its GPU reservation is handed back, and its open cost
+    /// interval is dropped — revoked before the first block, it never
+    /// bills GPU·seconds.
+    fn cancel_surplus_recruits(&mut self, now: SimTime, m: usize, surplus: usize) {
+        let mut remaining = surplus;
+        let op_ids: Vec<OpId> = self
+            .live
+            .iter()
+            .filter(|(_, lo)| lo.model == m)
+            .map(|(&id, _)| id)
+            .rev()
+            .collect();
+        'ops: for opid in op_ids {
+            loop {
+                if remaining == 0 {
+                    break 'ops;
+                }
+                let victim = match self.live.get(&opid) {
+                    Some(lo) => lo
+                        .recruits
+                        .iter()
+                        .rev()
+                        .copied()
+                        .find(|&d| {
+                            !self.failed.contains(&d) && self.fabric.dest_untouched(opid, d)
+                        }),
+                    None => None,
+                };
+                let Some(node) = victim else { break };
+                self.live.get_mut(&opid).unwrap().scrub_node(node);
+                let upd = self.fabric.cancel_dest(now, opid, node);
+                let mem_key = self.models[m].mem_key.clone();
+                self.mem.cancel_gpu_reservation(node, &mem_key);
+                // Refund: the open cost interval is dropped un-billed.
+                self.node_busy[node] = None;
+                self.node_state[node] = NodeUse::Free;
+                self.models[m].ms.metrics.record_transfer_cancel();
+                self.handle_fabric_update(now, upd);
+                self.account_gpus(m, now);
+                remaining -= 1;
+                if !self.live.contains_key(&opid) {
+                    break; // cancellation completed (or drained) the op
+                }
+            }
+        }
+    }
+
+    /// Permanent node failure: abort + re-plan fabric work, tear down
+    /// instances on the node (their requests re-route and restart), hand
+    /// back its memory claims, and blacklist it from future recruitment.
+    fn on_node_fail(&mut self, now: SimTime, node: NodeId) {
+        if node >= self.node_state.len() || !self.failed.insert(node) {
+            return;
+        }
+        let upd = self.fabric.fail_node(now, node);
+        // Scrub the dead node from every live op's pending triggers before
+        // applying the update (so nothing spawns on it). An already
+        // finished op that was lingering only for this node's completion
+        // has nothing left to wait for — drop it, or its entry (and the
+        // cancellation probe keyed on it) would leak to the horizon.
+        for lo in self.live.values_mut() {
+            lo.scrub_node(node);
+        }
+        self.live.retain(|_, lo| !(lo.finished && lo.local_on_complete.is_empty()));
+        // Tear down instances (local replicas and pipelines) on the node.
+        for m in 0..self.models.len() {
+            let ids: Vec<u64> = self.models[m]
+                .instances
+                .iter()
+                .filter(|(_, i)| i.pipe.nodes().contains(&node))
+                .map(|(&id, _)| id)
+                .collect();
+            for id in ids {
+                self.kill_instance(now, m, id, node);
+            }
+        }
+        // Whoever still owns the node releases it (billed until failure).
+        match self.node_state[node] {
+            NodeUse::Loading(m) | NodeUse::Serving(m) => {
+                let mem_key = self.models[m].mem_key.clone();
+                self.mem.cancel_gpu_reservation(node, &mem_key);
+                self.set_node_use(node, NodeUse::Free, now);
+                self.account_gpus(m, now);
+            }
+            NodeUse::Free => {}
+        }
+        self.handle_fabric_update(now, upd);
+        // Let every scaler react to the lost capacity.
+        for m in 0..self.models.len() {
+            if !self.models[m].scale_check_pending {
+                self.models[m].scale_check_pending = true;
+                self.q.push(now, Ev::ScaleCheck(m));
+            }
+        }
+    }
+
+    /// Tear down an instance whose node died: queued and in-flight
+    /// requests re-route (in-flight work restarts — kvcache mode resumes
+    /// by recomputation), KV and weight claims are released on surviving
+    /// member nodes, and the failed node itself is left to the caller.
+    ///
+    /// Fluid-mode re-routed requests restart with the legacy dissolve
+    /// semantics: a request past its first token re-emits it after
+    /// re-admission, updating `first_tokens` and feeding the scaler a
+    /// fresh TTFT observation — deliberately identical to the seed
+    /// engine's mode-switch re-route path (kvcache mode tracks emission
+    /// exactly and never double-counts).
+    fn kill_instance(&mut self, now: SimTime, m: usize, id: u64, failed_node: NodeId) {
+        self.advance(now, m, id);
+        let md = &mut self.models[m];
+        let Some(inst) = md.instances.remove(&id) else { return };
+        md.ms.router.remove_instance(id);
+        let kv_mode = md.kv_geom.is_some();
+        let mut to_reroute: Vec<usize> = inst.queue.iter().map(|p| p.item).collect();
+        for a in &inst.active {
+            let r = &md.ms.trace.requests[a.idx];
+            if kv_mode {
+                let generated = a.generated().min(r.output_tokens);
+                md.preempted
+                    .insert(a.idx, PreemptedReq { generated, action: Some(KvVictimAction::Recompute) });
+            }
+            to_reroute.push(a.idx);
+        }
+        for idx in &to_reroute {
+            md.req_inst.remove(idx);
+        }
+        let mem_key = md.mem_key.clone();
+        if let Some(kv) = &inst.kv {
+            self.release_kv_pool(kv);
+        }
+        for n in inst.pipe.nodes() {
+            if n >= self.node_state.len() || n == failed_node {
+                continue;
+            }
+            // A surviving member that is still an in-flight destination of
+            // a live scaling op goes back to Loading (same tenant, the
+            // billing interval continues) and keeps its pinned reservation
+            // for the deliveries still coming; only members with no
+            // pending role return to the free pool.
+            let still_loading = self.live.values().any(|lo| {
+                lo.model == m
+                    && (lo.dest_locals.contains(&n) || lo.local_on_complete.contains(&n))
+            });
+            if still_loading {
+                self.set_node_use(n, NodeUse::Loading(m), now);
+                self.mem.clear_gpu_ready(n, &mem_key);
+            } else {
+                self.set_node_use(n, NodeUse::Free, now);
+                let _ = self.mem.release_gpu(n, &mem_key, now);
+            }
+        }
+        for idx in to_reroute {
+            self.route_request(now, m, idx);
+        }
+        self.account_gpus(m, now);
+    }
+
     // Pending instance stash: instances created at InstanceUp time.
     fn stash_pipeline(&mut self, m: usize, pipe: ExecPipeline, dissolve: Option<SimTime>) -> u64 {
         let md = &mut self.models[m];
@@ -1519,6 +2104,11 @@ impl ServingEngine {
     fn on_instance_up(&mut self, now: SimTime, m: usize, stash_id: u64) {
         let md = &mut self.models[m];
         let Some((pipe, dissolve)) = md.pending.remove(&stash_id) else { return };
+        // An instance scheduled before a node failure must not come up on
+        // the dead node (the event outlived the failure).
+        if pipe.nodes().iter().any(|n| self.failed.contains(n)) {
+            return;
+        }
         // A node may have been reused; only bring up if its nodes aren't
         // already serving via another live instance of this model.
         let clash = pipe.nodes().iter().any(|&n| {

@@ -48,7 +48,9 @@ pub mod session;
 pub use autoscaler::{
     scaler_from_config, Autoscaler, PredictiveEwma, ReactiveWindow, ScalingPolicy, SloAware,
 };
-pub use backend::{ClusterState, MockBackend, ScalingBackend, ScalingRequest};
+pub use backend::{
+    ClusterState, LiveSchedule, MockBackend, PlannedPipeline, ScalingBackend, ScalingRequest,
+};
 pub use batcher::DynamicBatcher;
 pub use cluster::ClusterManager;
 pub use engine::ServingEngine;

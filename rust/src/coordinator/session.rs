@@ -73,6 +73,11 @@ pub struct ModelParams {
     /// Whether every node has the model on its local SSD (multi-tenant
     /// platforms keep models on NVMe; ServerlessLLM depends on this).
     pub ssd_everywhere: bool,
+    /// Whether the engine may revoke this model's in-flight recruits when
+    /// the scaler's `desired` drops mid-scale-up (recruits revoked before
+    /// their first block never bill GPU·s). Default true; disable for A/B
+    /// cost comparisons of the cancellation path.
+    pub cancel_recruits: bool,
 }
 
 impl ModelParams {
@@ -88,6 +93,7 @@ impl ModelParams {
             initial_gpu_sources: 1,
             initial_host_sources: 0,
             ssd_everywhere: true,
+            cancel_recruits: true,
         }
     }
 }
@@ -138,6 +144,7 @@ impl ModelSession {
 pub struct ServingSessionBuilder {
     cluster: ClusterConfig,
     models: Vec<ModelSession>,
+    failures: Vec<(usize, f64)>,
 }
 
 impl ServingSessionBuilder {
@@ -169,6 +176,25 @@ impl ServingSessionBuilder {
     /// `.cluster(..)`.
     pub fn host_capacity_bytes(mut self, bytes: u64) -> Self {
         self.cluster.node.host_capacity_bytes = bytes;
+        self
+    }
+
+    /// Aggregate cross-node RDMA capacity of the shared fabric (bisection
+    /// bandwidth), GB/s; `0.0` (the default) = unbounded. Bounding it makes
+    /// concurrent scale-ups — including other tenants' — genuinely slow
+    /// each other down. Cluster-scoped; call after `.cluster(..)`.
+    pub fn fabric_gbps(mut self, gbps: f64) -> Self {
+        self.cluster.network.fabric_gbps = gbps;
+        self
+    }
+
+    /// Inject a permanent node failure at `at_s` seconds: in-flight
+    /// transfers touching the node abort and their operations re-plan from
+    /// surviving block-holders; instances on the node die (requests
+    /// re-route); the node is never recruited again. Session-scoped (not
+    /// per model); may be called multiple times.
+    pub fn fail_node(mut self, node: usize, at_s: f64) -> Self {
+        self.failures.push((node, at_s));
         self
     }
 
@@ -291,9 +317,16 @@ impl ServingSessionBuilder {
         self
     }
 
+    /// Whether the engine may revoke this model's in-flight recruits when
+    /// its scaler's `desired` drops mid-scale-up (default true).
+    pub fn cancel_recruits(mut self, yes: bool) -> Self {
+        self.current().params.cancel_recruits = yes;
+        self
+    }
+
     /// Finish the builder without running.
     pub fn build(self) -> ServingSession {
-        ServingSession { cluster: self.cluster, models: self.models }
+        ServingSession { cluster: self.cluster, models: self.models, failures: self.failures }
     }
 
     /// Build and run in one step.
@@ -306,12 +339,17 @@ impl ServingSessionBuilder {
 pub struct ServingSession {
     cluster: ClusterConfig,
     models: Vec<ModelSession>,
+    failures: Vec<(usize, f64)>,
 }
 
 impl ServingSession {
     /// Start a builder over the default Testbed1 cluster.
     pub fn builder() -> ServingSessionBuilder {
-        ServingSessionBuilder { cluster: ClusterConfig::testbed1(), models: Vec::new() }
+        ServingSessionBuilder {
+            cluster: ClusterConfig::testbed1(),
+            models: Vec::new(),
+            failures: Vec::new(),
+        }
     }
 
     /// Single-model session from a legacy [`ServingConfig`] (the
@@ -338,6 +376,9 @@ impl ServingSession {
         let mut engine = ServingEngine::new(self.cluster);
         for ms in self.models {
             engine.add_model(ms);
+        }
+        for (node, at_s) in self.failures {
+            engine.inject_failure(node, crate::sim::time::SimTime::from_secs(at_s));
         }
         engine.run()
     }

@@ -38,6 +38,33 @@ use crate::util::rng::Rng;
 use crate::workload::{burst_trace, poisson_trace, BurstGptGen, Trace};
 use std::collections::BTreeMap;
 
+/// The shared-fabric probe rows: a two-tenant overlapping burst on a
+/// bisection-limited fabric (concurrent multicasts genuinely contend) and
+/// a scale-up cancellation A/B (the scaler's `desired` drops mid-flight;
+/// revoked recruits never bill GPU·s).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ContentionReport {
+    /// Worst per-tenant p99 TTFT when each burst runs alone, seconds.
+    pub isolated_p99_ttft_s: f64,
+    /// Worst per-tenant p99 TTFT when both bursts overlap, seconds.
+    pub concurrent_p99_ttft_s: f64,
+    /// `concurrent / isolated` — >1 means the shared fabric bit.
+    pub slowdown: f64,
+    /// Flow-seconds below nominal NIC rate across both tenants
+    /// (concurrent run).
+    pub concurrent_contended_s: f64,
+    /// Metered GPU·s of the cancellation scenario with revocation on.
+    pub cancel_on_gpu_s: f64,
+    /// Same scenario with revocation disabled.
+    pub cancel_off_gpu_s: f64,
+    /// GPU·s saved by revoking surplus recruits mid-flight.
+    pub gpu_s_saved: f64,
+    /// Recruits revoked in the cancellation scenario.
+    pub cancels: u64,
+    /// Schedule repairs triggered (revoked relays leave delivery holes).
+    pub replans: u64,
+}
+
 /// Harness configuration: the cluster every cell runs on and the shared
 /// trace/SLO parameters.
 #[derive(Clone, Debug)]
@@ -110,6 +137,9 @@ pub struct EvalCell {
     pub cost_usd: f64,
     /// Cost relative to ServerlessLLM + reactive-window on this trace.
     pub norm_cost: f64,
+    /// Flow-seconds this cell's transfers spent below nominal NIC rate
+    /// (back-to-back scale-ups overlapping on the shared fabric).
+    pub contended_s: f64,
 }
 
 /// The full scoreboard plus the parameters that produced it.
@@ -125,6 +155,8 @@ pub struct EvalReport {
     pub slo_ttft_s: f64,
     /// All cells, grouped by trace in matrix order.
     pub cells: Vec<EvalCell>,
+    /// Shared-fabric contention + cancellation probe rows.
+    pub contention: Option<ContentionReport>,
 }
 
 /// The trace matrix: deterministic per [`EvalConfig::seed`].
@@ -210,6 +242,94 @@ pub fn run_cell(
         host_gb_seconds: cost.host_gb_seconds,
         cost_usd: cost.total_usd(),
         norm_cost: 1.0,
+        contended_s: m.fabric_contended_s,
+    }
+}
+
+/// Run the shared-fabric probes: the two-tenant overlapping burst and the
+/// scale-up cancellation A/B (see [`ContentionReport`]).
+pub fn run_contention(cfg: &EvalConfig) -> ContentionReport {
+    // Two-tenant overlapping burst: bisection-limited shared fabric.
+    let mut cluster = cfg.cluster.clone();
+    cluster.network.fabric_gbps = cluster.network.rdma_gbps;
+    let model = &cfg.model.name;
+    let trace_a =
+        burst_trace(40, 0.0, model, 128, 64, &mut Rng::new(cfg.seed.wrapping_add(100)));
+    let trace_b =
+        burst_trace(40, 0.0, model, 128, 64, &mut Rng::new(cfg.seed.wrapping_add(101)));
+    let isolated_p99 = |trace: &Trace| -> f64 {
+        let m = ServingSession::builder()
+            .cluster(cluster.clone())
+            .model(cfg.model.clone())
+            .system(SystemKind::LambdaScale { k: 2 })
+            .max_batch(cfg.max_batch)
+            .keep_alive(cfg.keep_alive_s)
+            .initial_gpu_sources(1)
+            .trace(trace.clone())
+            .run()
+            .into_single();
+        let mut s = m.ttft_samples();
+        s.p99()
+    };
+    let iso = isolated_p99(&trace_a).max(isolated_p99(&trace_b));
+    let both = ServingSession::builder()
+        .cluster(cluster.clone())
+        .model(cfg.model.clone())
+        .system(SystemKind::LambdaScale { k: 2 })
+        .max_batch(cfg.max_batch)
+        .keep_alive(cfg.keep_alive_s)
+        .initial_gpu_sources(1)
+        .trace(trace_a)
+        .model(cfg.model.clone())
+        .system(SystemKind::LambdaScale { k: 2 })
+        .max_batch(cfg.max_batch)
+        .keep_alive(cfg.keep_alive_s)
+        .initial_gpu_sources(1)
+        .trace(trace_b)
+        .run();
+    let conc = both
+        .models
+        .iter()
+        .map(|r| {
+            let mut s = r.metrics.ttft_samples();
+            s.p99()
+        })
+        .fold(0.0_f64, f64::max);
+    let contended: f64 = both.models.iter().map(|r| r.metrics.fabric_contended_s).sum();
+
+    // Cancellation A/B: a slow fabric stretches one big scale-up past the
+    // scaler's window, so `desired` drops while deep-tree recruits are
+    // still untouched — with revocation on they are released un-billed.
+    let mut slow = cfg.cluster.clone();
+    slow.network.rdma_gbps = 0.25;
+    let burst =
+        burst_trace(48, 0.0, model, 128, 64, &mut Rng::new(cfg.seed.wrapping_add(102)));
+    let run_cancel = |on: bool| {
+        let m = ServingSession::builder()
+            .cluster(slow.clone())
+            .model(cfg.model.clone())
+            .system(SystemKind::LambdaScale { k: 1 })
+            .max_batch(cfg.max_batch)
+            .keep_alive(cfg.keep_alive_s)
+            .initial_gpu_sources(1)
+            .cancel_recruits(on)
+            .trace(burst.clone())
+            .run()
+            .into_single();
+        (m.gpu_seconds(), m.transfer_cancels, m.transfer_replans)
+    };
+    let (cancel_on_gpu_s, cancels, replans) = run_cancel(true);
+    let (cancel_off_gpu_s, _, _) = run_cancel(false);
+    ContentionReport {
+        isolated_p99_ttft_s: iso,
+        concurrent_p99_ttft_s: conc,
+        slowdown: conc / iso.max(1e-9),
+        concurrent_contended_s: contended,
+        cancel_on_gpu_s,
+        cancel_off_gpu_s,
+        gpu_s_saved: (cancel_off_gpu_s - cancel_on_gpu_s).max(0.0),
+        cancels,
+        replans,
     }
 }
 
@@ -241,6 +361,7 @@ pub fn run_matrix(cfg: &EvalConfig) -> EvalReport {
         duration_s: cfg.duration_s,
         slo_ttft_s: cfg.slo_ttft_s,
         cells,
+        contention: Some(run_contention(cfg)),
     }
 }
 
@@ -259,6 +380,23 @@ impl EvalCell {
         o.insert("host_gb_seconds".into(), Json::Num(self.host_gb_seconds));
         o.insert("cost_usd".into(), Json::Num(self.cost_usd));
         o.insert("norm_cost".into(), Json::Num(self.norm_cost));
+        o.insert("contended_s".into(), Json::Num(self.contended_s));
+        Json::Obj(o)
+    }
+}
+
+impl ContentionReport {
+    fn to_json(&self) -> Json {
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        o.insert("isolated_p99_ttft_s".into(), Json::Num(self.isolated_p99_ttft_s));
+        o.insert("concurrent_p99_ttft_s".into(), Json::Num(self.concurrent_p99_ttft_s));
+        o.insert("slowdown".into(), Json::Num(self.slowdown));
+        o.insert("concurrent_contended_s".into(), Json::Num(self.concurrent_contended_s));
+        o.insert("cancel_on_gpu_s".into(), Json::Num(self.cancel_on_gpu_s));
+        o.insert("cancel_off_gpu_s".into(), Json::Num(self.cancel_off_gpu_s));
+        o.insert("gpu_s_saved".into(), Json::Num(self.gpu_s_saved));
+        o.insert("cancels".into(), Json::Num(self.cancels as f64));
+        o.insert("replans".into(), Json::Num(self.replans as f64));
         Json::Obj(o)
     }
 }
@@ -273,6 +411,9 @@ impl EvalReport {
         o.insert("duration_s".into(), Json::Num(self.duration_s));
         o.insert("slo_ttft_s".into(), Json::Num(self.slo_ttft_s));
         o.insert("cells".into(), Json::Arr(self.cells.iter().map(|c| c.to_json()).collect()));
+        if let Some(c) = &self.contention {
+            o.insert("contention".into(), c.to_json());
+        }
         Json::Obj(o)
     }
 
@@ -302,13 +443,13 @@ impl EvalReport {
             s.push_str(&format!("\n## Trace: {trace}\n\n"));
             s.push_str(
                 "| backend | scaler | served | p50 TTFT (s) | p99 TTFT (s) | SLO att. \
-                 | GPU·s | host GB·s | cost (USD) | norm cost |\n",
+                 | GPU·s | host GB·s | cost (USD) | norm cost | contention (s) |\n",
             );
-            s.push_str("|---|---|---:|---:|---:|---:|---:|---:|---:|---:|\n");
+            s.push_str("|---|---|---:|---:|---:|---:|---:|---:|---:|---:|---:|\n");
             for c in self.cells.iter().filter(|c| c.trace == trace) {
                 s.push_str(&format!(
                     "| {} | {} | {}/{} | {:.3} | {:.3} | {:.1}% | {:.0} | {:.0} | \
-                     {:.4} | {:.3} |\n",
+                     {:.4} | {:.3} | {:.2} |\n",
                     c.system,
                     c.scaler,
                     c.completed,
@@ -320,8 +461,28 @@ impl EvalReport {
                     c.host_gb_seconds,
                     c.cost_usd,
                     c.norm_cost,
+                    c.contended_s,
                 ));
             }
+        }
+        if let Some(c) = &self.contention {
+            s.push_str(&format!(
+                "\n## Shared fabric: contention & cancellation\n\n\
+                 Two-tenant overlapping burst (bisection-limited fabric): worst p99 TTFT \
+                 {:.3} s concurrent vs {:.3} s isolated ({:.2}× slowdown, {:.1} contended \
+                 flow-seconds). Scale-up cancellation A/B (slow fabric, burst drains before \
+                 the multicast finishes): {} recruits revoked, {} schedule repairs, \
+                 {:.0} GPU·s with revocation vs {:.0} without ({:.0} GPU·s saved).\n",
+                c.concurrent_p99_ttft_s,
+                c.isolated_p99_ttft_s,
+                c.slowdown,
+                c.concurrent_contended_s,
+                c.cancels,
+                c.replans,
+                c.cancel_on_gpu_s,
+                c.cancel_off_gpu_s,
+                c.gpu_s_saved,
+            ));
         }
         let find = |sys: &str, scaler: &str| {
             self.cells
@@ -381,6 +542,30 @@ mod tests {
             .filter(|r| r.arrival == SimTime::from_secs(30.0))
             .count();
         assert!(at_30 >= 48, "spike burst missing: {at_30}");
+    }
+
+    /// The shared-fabric probes: overlapping two-tenant bursts must be
+    /// slower than isolated runs, and the cancellation A/B must revoke at
+    /// least one recruit with visible GPU·s savings.
+    #[test]
+    fn contention_probe_shows_slowdown_and_cancellation_savings() {
+        let cfg = tiny();
+        let c = run_contention(&cfg);
+        assert!(
+            c.concurrent_p99_ttft_s > c.isolated_p99_ttft_s,
+            "concurrent p99 {:.3} must exceed isolated {:.3}",
+            c.concurrent_p99_ttft_s,
+            c.isolated_p99_ttft_s
+        );
+        assert!(c.slowdown > 1.0);
+        assert!(c.concurrent_contended_s > 0.0, "contention must be metered");
+        assert!(c.cancels >= 1, "the cancellation path must be exercised");
+        assert!(
+            c.gpu_s_saved > 0.0,
+            "revocation must save GPU·s ({} on vs {} off)",
+            c.cancel_on_gpu_s,
+            c.cancel_off_gpu_s
+        );
     }
 
     #[test]

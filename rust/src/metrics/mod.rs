@@ -104,6 +104,20 @@ pub struct MetricsCollector {
     /// Host-memory GB·seconds of warm model residency for this tenant,
     /// folded in from the session's `MemoryManager` at run end.
     pub host_gb_s: f64,
+    /// Shared fabric: recruits revoked mid-scale-up before their first
+    /// block (the scaler's `desired` dropped); revoked recruits never
+    /// bill GPU·seconds.
+    pub transfer_cancels: u64,
+    /// Shared fabric: times an in-flight operation's remaining schedule
+    /// was repaired (re-planned) after a node failure or a cancellation
+    /// left delivery holes.
+    pub transfer_replans: u64,
+    /// Shared fabric: flow-seconds this tenant's transfers spent below
+    /// their nominal NIC rate (contention with concurrent operations).
+    pub fabric_contended_s: f64,
+    /// Shared fabric: (time, aggregate transfer throughput GB/s) samples
+    /// for this tenant, recorded at rate-change points.
+    pub fabric_util: Vec<(SimTime, f64)>,
 }
 
 impl MetricsCollector {
@@ -261,6 +275,31 @@ impl MetricsCollector {
         self.kv_overcommit_blocks += blocks;
     }
 
+    /// Record one mid-scale-up recruit revocation (shared fabric).
+    pub fn record_transfer_cancel(&mut self) {
+        self.transfer_cancels += 1;
+    }
+
+    /// Record one in-flight schedule repair (shared fabric).
+    pub fn record_transfer_replan(&mut self) {
+        self.transfer_replans += 1;
+    }
+
+    /// Fold in flow-seconds spent below nominal rate for one operation.
+    pub fn record_fabric_contended(&mut self, seconds: f64) {
+        self.fabric_contended_s += seconds;
+    }
+
+    /// Sample this tenant's aggregate transfer throughput (GB/s).
+    pub fn record_fabric_util(&mut self, t: SimTime, gbps: f64) {
+        self.fabric_util.push((t, gbps));
+    }
+
+    /// Peak sampled transfer throughput (GB/s) across the run.
+    pub fn fabric_util_peak(&self) -> f64 {
+        self.fabric_util.iter().map(|&(_, g)| g).fold(0.0, f64::max)
+    }
+
     /// Sample one instance's KV pool utilization.
     pub fn record_kv_util(&mut self, t: SimTime, instance: u64, utilization: f64) {
         self.kv_util.push((t, instance, utilization));
@@ -345,6 +384,25 @@ mod tests {
         c.record_kv_util(SimTime::from_secs(3.0), 0, 0.9);
         assert_eq!(c.kv_util.len(), 3);
         assert!((c.kv_util_peak() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fabric_counters_and_util_samples() {
+        let mut c = MetricsCollector::new();
+        assert_eq!(c.fabric_util_peak(), 0.0);
+        c.record_transfer_cancel();
+        c.record_transfer_cancel();
+        c.record_transfer_replan();
+        c.record_fabric_contended(1.25);
+        c.record_fabric_contended(0.75);
+        assert_eq!(c.transfer_cancels, 2);
+        assert_eq!(c.transfer_replans, 1);
+        assert!((c.fabric_contended_s - 2.0).abs() < 1e-12);
+        c.record_fabric_util(SimTime::from_secs(1.0), 40.0);
+        c.record_fabric_util(SimTime::from_secs(2.0), 90.0);
+        c.record_fabric_util(SimTime::from_secs(3.0), 10.0);
+        assert_eq!(c.fabric_util.len(), 3);
+        assert!((c.fabric_util_peak() - 90.0).abs() < 1e-12);
     }
 
     #[test]

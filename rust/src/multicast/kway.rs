@@ -45,14 +45,34 @@ pub fn split_subgroups(dests: &[NodeId], k: usize) -> Vec<Vec<NodeId>> {
 }
 
 /// Build the full k→N plan: `nodes[0..k]` are sources each holding the
-/// complete model at `source_tier`; the rest are destinations.
+/// complete model at `source_tier`; the rest are destinations. With no
+/// destinations (`k == nodes.len()`, reachable through `build_plan`'s
+/// `k_eff = k.clamp(1, n_sources)` when every dest was deduplicated into
+/// the source set) the plan is trivially instant: initial holdings only,
+/// no intents — not a panic.
 pub fn kway_plan(
     nodes: &[NodeId],
     k: usize,
     n_blocks: usize,
     source_tier: Tier,
 ) -> MulticastPlan {
-    assert!(k >= 1 && k < nodes.len(), "k-way needs k sources and ≥1 destination");
+    assert!(k >= 1 && k <= nodes.len(), "k-way needs at least k participating sources");
+    if k == nodes.len() {
+        // Every participant is already a source: nothing to transfer.
+        let mut initial = Vec::new();
+        for &s in nodes {
+            for b in 0..n_blocks {
+                initial.push((s, b, source_tier));
+            }
+        }
+        return MulticastPlan {
+            name: format!("kway-{k}"),
+            initial,
+            intents: Vec::new(),
+            start_delay: SimTime::ZERO,
+            rounds: Some(0),
+        };
+    }
     let sources = &nodes[..k];
     let dests = &nodes[k..];
     let orders = chunk_orders(n_blocks, k);
@@ -144,6 +164,33 @@ mod tests {
             all.sort_unstable();
             assert_eq!(all, dests);
         });
+    }
+
+    /// Regression: a scale-up whose dests are all already sources (empty
+    /// destination set after dedup) must yield a trivial instant plan, not
+    /// panic — `build_plan`'s `k_eff = k.clamp(1, n_sources)` reaches it.
+    #[test]
+    fn all_sources_no_dests_is_trivial_instant_plan() {
+        use crate::config::NetworkConfig;
+        use crate::multicast::{build_plan, Algorithm};
+        use crate::sim::transfer::TransferOpts;
+        let nodes: Vec<NodeId> = (0..4).collect();
+        let plan = kway_plan(&nodes, 4, 8, Tier::Gpu);
+        assert!(plan.intents.is_empty());
+        assert_eq!(plan.rounds, Some(0));
+        let net = NetworkConfig::default();
+        let log = plan.execute(&net, TransferOpts::default(), &[1_000_000u64; 8]);
+        assert_eq!(log.all_complete(&nodes, 8), Some(SimTime::ZERO));
+        // And through build_plan's clamp path.
+        let via = build_plan(
+            Algorithm::LambdaScale { k: 4 },
+            &nodes,
+            nodes.len(),
+            8,
+            Tier::Gpu,
+            &net,
+        );
+        assert!(via.intents.is_empty());
     }
 
     #[test]

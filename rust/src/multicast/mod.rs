@@ -11,9 +11,9 @@
 //!   (re)initialization cost.
 //!
 //! All algorithms compile to a [`MulticastPlan`] — per-node ordered send
-//! intents — executed by [`crate::sim::TransferSim`].
-// Pre-dates the crate-wide rustdoc gate; sweep pending.
-#![allow(missing_docs)]
+//! intents — executed statically by [`crate::sim::TransferSim`] (figures,
+//! benches, the `plan_scaling` shim) or live on the serving engine's
+//! shared [`crate::sim::fabric::Fabric`].
 
 pub mod binomial;
 pub mod kway;
@@ -29,6 +29,7 @@ pub use crate::sim::transfer::{BlockId, Medium, NodeId};
 /// A compiled multicast: everything [`TransferSim`] needs plus bookkeeping.
 #[derive(Clone, Debug)]
 pub struct MulticastPlan {
+    /// Human-readable plan name (e.g. `kway-2`, `binary-tree`).
     pub name: String,
     /// Initial holdings (sources, local caches).
     pub initial: Vec<(NodeId, BlockId, Tier)>,
@@ -51,6 +52,9 @@ impl MulticastPlan {
         self.execute_with_failures(net, opts, block_bytes, &[])
     }
 
+    /// As [`MulticastPlan::execute`], with node failures injected at the
+    /// given times; in-flight and queued transfers touching a failed node
+    /// are aborted (observable in [`TransferLog::aborted`]).
     pub fn execute_with_failures(
         &self,
         net: &NetworkConfig,
@@ -62,9 +66,18 @@ impl MulticastPlan {
         let mut log = sim.run(&self.initial, &self.intents, block_bytes, failures);
         if self.start_delay > SimTime::ZERO {
             let d = self.start_delay;
-            for v in log.arrivals.values_mut() {
-                // Initial holdings stay at t=0; only transfers shift.
-                if *v > SimTime::ZERO {
+            // Initial GPU holdings stay at t=0; every *transferred* arrival
+            // shifts — identified by identity, not by timestamp, so a
+            // transfer legitimately completing at t=0 (zero-byte tail
+            // block under a zero-overhead config) still shifts.
+            let held_at_start: std::collections::HashSet<(NodeId, BlockId)> = self
+                .initial
+                .iter()
+                .filter(|&&(_, _, t)| t == Tier::Gpu)
+                .map(|&(n, b, _)| (n, b))
+                .collect();
+            for (k, v) in log.arrivals.iter_mut() {
+                if !held_at_start.contains(k) {
                     *v += d;
                 }
             }
@@ -72,7 +85,7 @@ impl MulticastPlan {
                 t.start += d;
                 t.end += d;
             }
-            if log.finish > SimTime::ZERO {
+            if !log.transfers.is_empty() {
                 log.finish += d;
             }
         }
@@ -94,6 +107,7 @@ pub enum Algorithm {
 }
 
 impl Algorithm {
+    /// The algorithm's report/figure name (e.g. `lambdascale-k2`).
     pub fn name(&self) -> String {
         match self {
             Algorithm::LambdaScale { k } => format!("lambdascale-k{k}"),
@@ -131,7 +145,10 @@ pub fn build_plan(
 }
 
 /// ServerlessLLM-style plan: every destination loads the model from its own
-/// local tier (host memory if warm, else SSD); no cross-node traffic.
+/// local tier (host memory if warm, else SSD); no cross-node traffic. A
+/// `Tier::Gpu` destination tier means the replica is already GPU-resident:
+/// it is an initial holding with no load intent (and must not be priced as
+/// an SSD read).
 pub fn local_load_plan(
     nodes: &[NodeId],
     n_sources: usize,
@@ -147,12 +164,22 @@ pub fn local_load_plan(
             }
         } else {
             let medium = match dest_tier {
-                Tier::HostMem => Medium::HostMem,
-                _ => Medium::Ssd,
+                Tier::Gpu => None,
+                Tier::HostMem => Some(Medium::HostMem),
+                Tier::Ssd => Some(Medium::Ssd),
             };
             for b in 0..n_blocks {
-                initial.push((n, b, if medium == Medium::HostMem { Tier::HostMem } else { Tier::Ssd }));
-                intents.push(SendIntent { src: n, dst: n, block: b, medium });
+                match medium {
+                    None => initial.push((n, b, Tier::Gpu)),
+                    Some(Medium::HostMem) => {
+                        initial.push((n, b, Tier::HostMem));
+                        intents.push(SendIntent { src: n, dst: n, block: b, medium: Medium::HostMem });
+                    }
+                    Some(m) => {
+                        initial.push((n, b, Tier::Ssd));
+                        intents.push(SendIntent { src: n, dst: n, block: b, medium: m });
+                    }
+                }
             }
         }
     }
@@ -197,5 +224,50 @@ mod tests {
     fn algorithm_names() {
         assert_eq!(Algorithm::LambdaScale { k: 2 }.name(), "lambdascale-k2");
         assert_eq!(Algorithm::Nccl.name(), "nccl");
+    }
+
+    /// Regression: a zero-byte tail block under a zero-overhead network
+    /// completes its transfer at t=0 and must *still* shift by
+    /// `start_delay` — transferred arrivals are identified by identity,
+    /// not by timestamp.
+    #[test]
+    fn start_delay_shifts_zero_time_transfers() {
+        let mut net = NetworkConfig::default();
+        net.rdma_setup_s = 0.0;
+        net.per_block_mgmt_s = 0.0;
+        let nodes: Vec<NodeId> = (0..2).collect();
+        let mut plan = binomial::binomial_plan(&nodes, 2, Tier::Gpu);
+        plan.start_delay = SimTime::from_millis(100.0);
+        // Both blocks are zero-byte tail blocks: their transfers complete
+        // at exactly t=0, the case the old timestamp test let escape.
+        let log = plan.execute(&net, TransferOpts::default(), &[0, 0]);
+        let delay = SimTime::from_millis(100.0);
+        for (&(n, b), &t) in &log.arrivals {
+            if n == 0 {
+                assert_eq!(t, SimTime::ZERO, "source holding must stay at t=0");
+            } else {
+                assert_eq!(t, delay, "transferred block {b} at node {n} escaped the shift: {t}");
+            }
+        }
+        assert_eq!(log.finish, delay);
+    }
+
+    /// Regression: a `Tier::Gpu` destination tier means already-resident —
+    /// an instant plan, not a full SSD read.
+    #[test]
+    fn local_load_plan_gpu_tier_is_instant() {
+        let net = NetworkConfig::default();
+        let nodes: Vec<NodeId> = (0..3).collect();
+        let plan = local_load_plan(&nodes, 1, 4, Tier::Gpu);
+        assert!(plan.intents.is_empty(), "GPU-resident replicas need no load");
+        let log = plan.execute(&net, TransferOpts::default(), &[1_000_000_000; 4]);
+        assert_eq!(log.finish, SimTime::ZERO);
+        for n in &nodes {
+            assert_eq!(log.node_complete(*n, 4), Some(SimTime::ZERO));
+        }
+        // And the SSD case still pays the full read.
+        let ssd = local_load_plan(&nodes, 1, 4, Tier::Ssd);
+        let ssd_log = ssd.execute(&net, TransferOpts::default(), &[1_000_000_000; 4]);
+        assert!(ssd_log.finish > SimTime::ZERO);
     }
 }

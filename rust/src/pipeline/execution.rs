@@ -20,7 +20,9 @@ use crate::multicast::NodeId;
 /// One pipeline stage: a node serving a contiguous layer range.
 #[derive(Clone, Debug, PartialEq)]
 pub struct StageSpec {
+    /// The node executing this stage.
     pub node: NodeId,
+    /// Contiguous transformer layers this stage owns.
     pub n_layers: usize,
     /// Weight bytes resident at this stage.
     pub bytes: u64,
@@ -29,6 +31,7 @@ pub struct StageSpec {
 /// An execution pipeline — a complete distributed model replica.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExecPipeline {
+    /// Stages in execution order (hidden state flows stage → stage).
     pub stages: Vec<StageSpec>,
 }
 
@@ -58,10 +61,12 @@ impl ExecPipeline {
         }
     }
 
+    /// Number of stages (1 for a local replica).
     pub fn n_stages(&self) -> usize {
         self.stages.len()
     }
 
+    /// Member nodes in stage order.
     pub fn nodes(&self) -> Vec<NodeId> {
         self.stages.iter().map(|s| s.node).collect()
     }

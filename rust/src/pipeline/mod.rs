@@ -1,8 +1,6 @@
 //! λPipe execution pipelines (§4.3–§4.4): dynamic construction of complete
 //! distributed model replicas during multicast, the 2D pipelined execution
 //! performance model, and the mode switch back to local execution.
-// Pre-dates the crate-wide rustdoc gate; sweep pending.
-#![allow(missing_docs)]
 
 pub mod execution;
 pub mod generation;

@@ -23,6 +23,7 @@ pub enum SwitchStrategy {
 pub struct ModeSwitchPlan {
     /// (request id, destination node) — requests spread evenly over members.
     pub assignments: Vec<(u64, NodeId)>,
+    /// The rebuild strategy the stall was priced under.
     pub strategy: SwitchStrategy,
     /// Estimated stall before local serving resumes (seconds).
     pub stall_s: f64,

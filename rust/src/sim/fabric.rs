@@ -1,0 +1,1050 @@
+//! Shared-fabric transfer scheduler: every in-flight scaling operation's
+//! sends execute as *simulation events* on one cluster-wide fabric, instead
+//! of being replayed against a private, uncontended [`TransferSim`].
+//!
+//! Semantics:
+//!
+//! * **Within one operation** the executor keeps [`TransferSim`]'s exact
+//!   discipline — per-node FIFO send queues, one tx + one rx slot per NIC
+//!   port class, head-of-line order per class, the §5 duration cost model —
+//!   so a single operation running alone on an unbounded fabric completes
+//!   with bit-identical timings to the static plan (enforced by
+//!   `rust/tests/fabric_replay.rs`).
+//! * **Across operations** concurrent flows share bandwidth fluidly (the
+//!   same fluid style as the decode model): a node's NIC port and the
+//!   cluster's aggregate RDMA capacity
+//!   ([`crate::config::NetworkConfig::fabric_gbps`], 0 = unbounded) are
+//!   split progress-proportionally among the flows crossing them, so two
+//!   tenants scaling at once genuinely slow each other down.
+//! * **Mid-flight control**: un-started sends toward a destination can be
+//!   [cancelled](Fabric::cancel_dest) (the autoscaler changed its mind), and
+//!   [node failure](Fabric::fail_node) aborts affected flows and *re-plans*
+//!   the remaining schedule from surviving block-holders — locality-aware
+//!   source re-selection with a local-SSD fallback (§4.2's repair path) —
+//!   instead of stalling the operation to the horizon.
+//!
+//! The fabric is driven by the owning event loop: every mutating call
+//! returns a [`FabricUpdate`] whose `wakeup` the caller must schedule; when
+//! the wakeup fires the caller hands it back via [`Fabric::on_wakeup`].
+//! Stale wakeups (superseded by a newer reallocation) are ignored by
+//! version stamp.
+
+use super::time::SimTime;
+use crate::config::NetworkConfig;
+use crate::sim::transfer::{
+    hol_class, ports, BlockId, Medium, NodeId, SendIntent, Tier, TransferOpts, TransferSim,
+    N_PORTS,
+};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+
+/// Identifier of one transfer operation registered with the fabric.
+pub type OpId = u64;
+/// Identifier of one in-flight transfer (internal; exposed for tests).
+pub type FlowId = u64;
+
+/// Specification of one transfer operation submitted to the fabric.
+pub struct FabricOp {
+    /// Owning tenant (model index) for metrics attribution.
+    pub model: usize,
+    /// Initial holdings: `(node, block, tier)`; GPU-tier holdings count as
+    /// arrivals at operation start.
+    pub initial: Vec<(NodeId, BlockId, Tier)>,
+    /// Ordered send intents (per-node FIFO, exactly as [`TransferSim`]).
+    pub intents: Vec<SendIntent>,
+    /// Whole-model local loads: `(node, medium, duration_s)` — executed as
+    /// one storage-port flow delivering every block on completion (the
+    /// plan-time `local_load_time` pricing, kept to the same float for
+    /// replay identity).
+    pub loads: Vec<(NodeId, Medium, f64)>,
+    /// Per-block sizes; `block_bytes.len()` is the block count.
+    pub block_bytes: Vec<u64>,
+    /// Transfer tuning applied to the §5 duration model.
+    pub opts: TransferOpts,
+    /// One-off startup delay before any send may start (NCCL group init).
+    pub start_delay: SimTime,
+    /// Nodes that must hold every block before the operation counts as
+    /// finished (drives [`FabricUpdate::op_completions`]).
+    pub expect_full: Vec<NodeId>,
+    /// Additional nodes whose individual completion should be notified
+    /// without gating operation finish (self-loading extra replicas).
+    pub watch: Vec<NodeId>,
+    /// Nodes holding a local SSD copy — the replan fallback source of last
+    /// resort when no surviving holder has a needed block.
+    pub ssd_fallback: HashSet<NodeId>,
+}
+
+struct OpState {
+    model: usize,
+    n_blocks: usize,
+    block_bytes: Vec<u64>,
+    opts: TransferOpts,
+    queues: BTreeMap<NodeId, VecDeque<SendIntent>>,
+    pending_loads: BTreeMap<NodeId, (Medium, f64)>,
+    tier: HashMap<(NodeId, BlockId), Tier>,
+    arrived: HashMap<NodeId, HashSet<BlockId>>,
+    busy: HashMap<NodeId, [bool; N_PORTS]>,
+    gate: SimTime,
+    gate_open: bool,
+    pending_full: HashSet<NodeId>,
+    notify: HashSet<NodeId>,
+    ssd_fallback: HashSet<NodeId>,
+    in_flight: usize,
+    contended_s: f64,
+    /// Portion of `contended_s` already reported through
+    /// [`FabricUpdate::op_completions`] (the drain residual reports the
+    /// rest).
+    contended_reported: f64,
+    finished_notified: bool,
+}
+
+impl OpState {
+    /// Remove every trace of `node` from this operation's schedule and
+    /// bookkeeping — cancellation and node failure share this scrub, so
+    /// any new per-node state must be cleared in exactly one place.
+    fn scrub_node(&mut self, node: NodeId) {
+        self.queues.remove(&node);
+        for q in self.queues.values_mut() {
+            q.retain(|it| it.dst != node && it.src != node);
+        }
+        self.pending_loads.remove(&node);
+        self.tier.retain(|&(n, _), _| n != node);
+        self.arrived.remove(&node);
+        self.pending_full.remove(&node);
+        self.notify.remove(&node);
+        self.ssd_fallback.remove(&node);
+        self.busy.remove(&node);
+    }
+}
+
+struct Flow {
+    op: OpId,
+    intent: SendIntent,
+    /// Whole-model load: delivers every block at completion.
+    bundle: bool,
+    /// Remaining work in seconds at nominal (uncontended) rate.
+    remaining_s: f64,
+    /// Relative rate in (0, 1]; 1.0 = the medium's full nominal bandwidth.
+    rate: f64,
+    /// When `remaining_s` was last trued up.
+    last: SimTime,
+    /// Projected completion at the current rate. While the rate stays 1.0
+    /// this is the exact `start + duration` sum [`TransferSim`] would
+    /// compute (no float drift), which is what replay identity rests on.
+    end: SimTime,
+}
+
+/// What changed as a result of one fabric call. The caller must schedule
+/// `wakeup` (if any) and feed it back through [`Fabric::on_wakeup`].
+#[derive(Debug, Default)]
+pub struct FabricUpdate {
+    /// Block deliveries `(op, node, block)`, in deterministic flow order.
+    pub deliveries: Vec<(OpId, NodeId, BlockId)>,
+    /// Nodes that now hold every block, from the op's notify set.
+    pub node_completions: Vec<(OpId, NodeId)>,
+    /// Operations whose expected nodes all completed (with the op's
+    /// accumulated contended flow-seconds).
+    pub op_completions: Vec<(OpId, f64)>,
+    /// Destinations dropped at replan time because no surviving holder (or
+    /// SSD fallback) can deliver some block.
+    pub orphaned: Vec<(OpId, NodeId)>,
+    /// Operations whose remaining schedule was repaired this call.
+    pub replanned: Vec<OpId>,
+    /// Next wakeup to schedule, when it changed: `(time, version)`.
+    pub wakeup: Option<(SimTime, u64)>,
+    /// Per-model aggregate transfer throughput (GB/s) after this change.
+    /// `Some` is authoritative — a model absent from the list has no
+    /// transfers on the fabric (its throughput is zero); `None` means the
+    /// call was a stale no-op and nothing may be inferred.
+    pub util: Option<Vec<(usize, f64)>>,
+}
+
+/// The cluster-wide transfer executor owned by the serving engine.
+pub struct Fabric {
+    net: NetworkConfig,
+    ops: BTreeMap<OpId, OpState>,
+    next_op: OpId,
+    flows: BTreeMap<FlowId, Flow>,
+    next_flow: FlowId,
+    version: u64,
+    scheduled: Option<SimTime>,
+}
+
+impl Fabric {
+    /// A fabric over the given network parameters.
+    pub fn new(net: NetworkConfig) -> Self {
+        Fabric {
+            net,
+            ops: BTreeMap::new(),
+            next_op: 0,
+            flows: BTreeMap::new(),
+            next_flow: 0,
+            version: 0,
+            scheduled: None,
+        }
+    }
+
+    /// Number of operations still registered (for tests/diagnostics).
+    pub fn active_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// Whether `op` is still registered (it may linger past its finish
+    /// notification while stray flows or watch-node loads drain).
+    pub fn op_active(&self, op: OpId) -> bool {
+        self.ops.contains_key(&op)
+    }
+
+    /// Register an operation and start whatever can start. Returns the op
+    /// id plus the resulting update (a trivial operation may complete
+    /// within this very call).
+    pub fn begin_op(&mut self, now: SimTime, spec: FabricOp) -> (OpId, FabricUpdate) {
+        let id = self.next_op;
+        self.next_op += 1;
+        let n_blocks = spec.block_bytes.len();
+        let mut queues: BTreeMap<NodeId, VecDeque<SendIntent>> = BTreeMap::new();
+        for it in spec.intents {
+            assert!(
+                it.src != it.dst || matches!(it.medium, Medium::HostMem | Medium::Ssd),
+                "self-send must be a local load: {it:?}"
+            );
+            assert!(it.block < n_blocks, "block id out of range: {it:?}");
+            queues.entry(it.src).or_default().push_back(it);
+        }
+        let mut tier: HashMap<(NodeId, BlockId), Tier> = HashMap::new();
+        let mut arrived: HashMap<NodeId, HashSet<BlockId>> = HashMap::new();
+        for (n, b, t) in spec.initial {
+            tier.insert((n, b), t);
+            if t == Tier::Gpu {
+                arrived.entry(n).or_default().insert(b);
+            }
+        }
+        let mut pending_full: HashSet<NodeId> = spec.expect_full.iter().copied().collect();
+        let mut notify: HashSet<NodeId> = pending_full.clone();
+        notify.extend(spec.watch.iter().copied());
+        // Nodes complete from their initial holdings finish silently.
+        for (n, held) in &arrived {
+            if held.len() == n_blocks {
+                pending_full.remove(n);
+                notify.remove(n);
+            }
+        }
+        let gate_open = spec.start_delay == SimTime::ZERO;
+        let op = OpState {
+            model: spec.model,
+            n_blocks,
+            block_bytes: spec.block_bytes,
+            opts: spec.opts,
+            queues,
+            pending_loads: spec.loads.into_iter().map(|(n, m, d)| (n, (m, d))).collect(),
+            tier,
+            arrived,
+            busy: HashMap::new(),
+            gate: now + spec.start_delay,
+            gate_open,
+            pending_full,
+            notify,
+            ssd_fallback: spec.ssd_fallback,
+            in_flight: 0,
+            contended_s: 0.0,
+            contended_reported: 0.0,
+            finished_notified: false,
+        };
+        self.ops.insert(id, op);
+        let mut upd = FabricUpdate::default();
+        if gate_open {
+            self.try_start_op(now, id);
+        }
+        self.advance(now, &mut upd);
+        self.settle(now, &mut upd);
+        upd.util = Some(self.util_by_model().into_iter().collect());
+        (id, upd)
+    }
+
+    /// Handle a scheduled wakeup. Stale versions are no-ops.
+    pub fn on_wakeup(&mut self, now: SimTime, version: u64) -> FabricUpdate {
+        let mut upd = FabricUpdate::default();
+        if version != self.version {
+            return upd;
+        }
+        self.scheduled = None;
+        let gated: Vec<OpId> = self
+            .ops
+            .iter()
+            .filter(|(_, o)| !o.gate_open && o.gate <= now)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in &gated {
+            self.ops.get_mut(id).unwrap().gate_open = true;
+        }
+        for id in gated {
+            self.try_start_op(now, id);
+        }
+        self.advance(now, &mut upd);
+        self.settle(now, &mut upd);
+        upd.util = Some(self.util_by_model().into_iter().collect());
+        upd
+    }
+
+    /// Whether `node` has received nothing for `op` — no arrived block and
+    /// no in-flight inbound transfer — i.e. whether revoking it wastes no
+    /// already-moved bytes.
+    pub fn dest_untouched(&self, op: OpId, node: NodeId) -> bool {
+        let Some(o) = self.ops.get(&op) else { return false };
+        o.arrived.get(&node).map_or(true, |s| s.is_empty())
+            && !self.flows.values().any(|f| f.op == op && f.intent.dst == node)
+    }
+
+    /// Revoke a destination whose sends have not started: its queued
+    /// inbound/outbound intents are dropped, it stops gating op finish, and
+    /// the remaining schedule is repaired around it. Callers should check
+    /// [`Fabric::dest_untouched`] first.
+    pub fn cancel_dest(&mut self, now: SimTime, op: OpId, node: NodeId) -> FabricUpdate {
+        let mut upd = FabricUpdate::default();
+        {
+            let Some(o) = self.ops.get_mut(&op) else { return upd };
+            o.scrub_node(node);
+        }
+        self.replan_op(op, &mut upd);
+        self.try_start_op(now, op);
+        self.advance(now, &mut upd);
+        self.settle(now, &mut upd);
+        upd.util = Some(self.util_by_model().into_iter().collect());
+        upd
+    }
+
+    /// Remove a failed node from every operation: in-flight flows touching
+    /// it abort (no delivery), its queues drop, and each affected
+    /// operation's remaining schedule is re-planned from surviving
+    /// block-holders.
+    pub fn fail_node(&mut self, now: SimTime, node: NodeId) -> FabricUpdate {
+        let mut upd = FabricUpdate::default();
+        let doomed: Vec<FlowId> = self
+            .flows
+            .iter()
+            .filter(|(_, f)| f.intent.src == node || f.intent.dst == node)
+            .map(|(&id, _)| id)
+            .collect();
+        for fid in doomed {
+            let fl = self.flows.remove(&fid).unwrap();
+            if let Some(o) = self.ops.get_mut(&fl.op) {
+                o.in_flight -= 1;
+                // True up contention accrued by the aborted flow.
+                o.contended_s += now.saturating_sub(fl.last).as_secs() * (1.0 - fl.rate);
+                let (tp, rp) = ports(fl.intent.medium);
+                if fl.intent.src != node {
+                    if let Some(b) = o.busy.get_mut(&fl.intent.src) {
+                        b[tp] = false;
+                    }
+                }
+                if fl.intent.dst != node && fl.intent.src != fl.intent.dst {
+                    if let Some(b) = o.busy.get_mut(&fl.intent.dst) {
+                        b[rp] = false;
+                    }
+                }
+            }
+        }
+        let ids: Vec<OpId> = self.ops.keys().copied().collect();
+        for id in ids {
+            self.ops.get_mut(&id).unwrap().scrub_node(node);
+            self.replan_op(id, &mut upd);
+            self.try_start_op(now, id);
+        }
+        self.advance(now, &mut upd);
+        self.settle(now, &mut upd);
+        upd.util = Some(self.util_by_model().into_iter().collect());
+        upd
+    }
+
+    // ---- internals ---------------------------------------------------------
+
+    /// Complete every flow due at `now` (in flow-id order, so same-instant
+    /// completions are deterministic), starting successors as they become
+    /// eligible; loops until no due flow remains.
+    fn advance(&mut self, now: SimTime, upd: &mut FabricUpdate) {
+        loop {
+            let due: Vec<FlowId> =
+                self.flows.iter().filter(|(_, f)| f.end <= now).map(|(&id, _)| id).collect();
+            if due.is_empty() {
+                break;
+            }
+            let mut affected: Vec<OpId> = Vec::new();
+            for fid in due {
+                let fl = self.flows.remove(&fid).unwrap();
+                let Some(op) = self.ops.get_mut(&fl.op) else { continue };
+                op.in_flight -= 1;
+                op.contended_s += now.saturating_sub(fl.last).as_secs() * (1.0 - fl.rate);
+                let (tp, rp) = ports(fl.intent.medium);
+                if let Some(b) = op.busy.get_mut(&fl.intent.src) {
+                    b[tp] = false;
+                }
+                if fl.intent.src != fl.intent.dst {
+                    if let Some(b) = op.busy.get_mut(&fl.intent.dst) {
+                        b[rp] = false;
+                    }
+                }
+                let dst = fl.intent.dst;
+                if fl.bundle {
+                    let held = op.arrived.entry(dst).or_default();
+                    for b in 0..op.n_blocks {
+                        if held.insert(b) {
+                            op.tier.insert((dst, b), Tier::Gpu);
+                        }
+                    }
+                } else {
+                    op.tier.insert((dst, fl.intent.block), Tier::Gpu);
+                    if op.arrived.entry(dst).or_default().insert(fl.intent.block) {
+                        upd.deliveries.push((fl.op, dst, fl.intent.block));
+                    }
+                }
+                let complete =
+                    op.arrived.get(&dst).is_some_and(|s| s.len() == op.n_blocks);
+                if complete {
+                    op.pending_full.remove(&dst);
+                    if op.notify.remove(&dst) {
+                        upd.node_completions.push((fl.op, dst));
+                    }
+                }
+                if !affected.contains(&fl.op) {
+                    affected.push(fl.op);
+                }
+            }
+            for opid in affected {
+                self.try_start_op(now, opid);
+            }
+        }
+    }
+
+    /// Start every eligible send of `op` — [`TransferSim`]'s exact
+    /// head-of-line discipline, with occupancy tracked per op.
+    fn try_start_op(&mut self, now: SimTime, id: OpId) {
+        let Fabric { ops, flows, next_flow, net, .. } = self;
+        let Some(op) = ops.get_mut(&id) else { return };
+        if !op.gate_open {
+            return;
+        }
+        loop {
+            let mut started = false;
+            let node_list: Vec<NodeId> = op.queues.keys().copied().collect();
+            for n in node_list {
+                let mut seen = [false; 3];
+                let mut start_at: Vec<usize> = Vec::new();
+                {
+                    let q = op.queues.get(&n).unwrap();
+                    for (qi, it) in q.iter().enumerate() {
+                        let class = hol_class(it.medium);
+                        if seen[class] {
+                            continue;
+                        }
+                        seen[class] = true;
+                        if !op.tier.contains_key(&(it.src, it.block)) {
+                            continue;
+                        }
+                        let (tp, rp) = ports(it.medium);
+                        let src_busy = op.busy.get(&it.src).is_some_and(|b| b[tp]);
+                        let dst_busy =
+                            it.src != it.dst && op.busy.get(&it.dst).is_some_and(|b| b[rp]);
+                        if src_busy || dst_busy {
+                            continue;
+                        }
+                        start_at.push(qi);
+                        if seen.iter().all(|&s| s) {
+                            break;
+                        }
+                    }
+                }
+                start_at.sort_unstable_by(|a, b| b.cmp(a));
+                for qi in start_at {
+                    let it = op.queues.get_mut(&n).unwrap().remove(qi).unwrap();
+                    let src_tier = op.tier[&(it.src, it.block)];
+                    let (tp, rp) = ports(it.medium);
+                    op.busy.entry(it.src).or_insert([false; N_PORTS])[tp] = true;
+                    if it.src != it.dst {
+                        op.busy.entry(it.dst).or_insert([false; N_PORTS])[rp] = true;
+                    }
+                    let d = TransferSim::new(net, op.opts).duration(
+                        op.block_bytes[it.block],
+                        it.medium,
+                        src_tier,
+                    );
+                    let slot = *next_flow;
+                    *next_flow += 1;
+                    flows.insert(
+                        slot,
+                        Flow {
+                            op: id,
+                            intent: it,
+                            bundle: false,
+                            remaining_s: d.as_secs(),
+                            rate: 1.0,
+                            last: now,
+                            end: now + d,
+                        },
+                    );
+                    op.in_flight += 1;
+                    started = true;
+                }
+            }
+            let load_nodes: Vec<NodeId> = op.pending_loads.keys().copied().collect();
+            for n in load_nodes {
+                let (medium, _) = *op.pending_loads.get(&n).unwrap();
+                let (sp, _) = ports(medium);
+                if op.busy.get(&n).is_some_and(|b| b[sp]) {
+                    continue;
+                }
+                let (medium, dur) = op.pending_loads.remove(&n).unwrap();
+                op.busy.entry(n).or_insert([false; N_PORTS])[sp] = true;
+                let slot = *next_flow;
+                *next_flow += 1;
+                flows.insert(
+                    slot,
+                    Flow {
+                        op: id,
+                        intent: SendIntent { src: n, dst: n, block: 0, medium },
+                        bundle: true,
+                        remaining_s: dur,
+                        rate: 1.0,
+                        last: now,
+                        end: now + SimTime::from_secs(dur),
+                    },
+                );
+                op.in_flight += 1;
+                started = true;
+            }
+            if !started {
+                break;
+            }
+        }
+    }
+
+    /// Patch the remaining schedule of `op`: every still-expected
+    /// `(dest, block)` with no scheduled or in-flight delivery gets a new
+    /// send from the best surviving holder (GPU tier first, then warmest,
+    /// least-loaded, lowest id), falling back to the destination's own SSD
+    /// copy; destinations that cannot be repaired are orphaned.
+    fn replan_op(&mut self, id: OpId, upd: &mut FabricUpdate) {
+        let Fabric { ops, flows, .. } = self;
+        let Some(o) = ops.get_mut(&id) else { return };
+        let mut covered: HashSet<(NodeId, BlockId)> = HashSet::new();
+        for q in o.queues.values() {
+            for it in q {
+                covered.insert((it.dst, it.block));
+            }
+        }
+        for n in o.pending_loads.keys() {
+            for b in 0..o.n_blocks {
+                covered.insert((*n, b));
+            }
+        }
+        for f in flows.values() {
+            if f.op != id {
+                continue;
+            }
+            if f.bundle {
+                for b in 0..o.n_blocks {
+                    covered.insert((f.intent.dst, b));
+                }
+            } else {
+                covered.insert((f.intent.dst, f.intent.block));
+            }
+        }
+        let mut extra_load: HashMap<NodeId, usize> = HashMap::new();
+        let mut added = false;
+        let mut orphans: Vec<NodeId> = Vec::new();
+        let dsts: Vec<NodeId> = {
+            let mut v: Vec<NodeId> = o.pending_full.iter().copied().collect();
+            v.sort_unstable();
+            v
+        };
+        'dst: for dst in dsts {
+            for b in 0..o.n_blocks {
+                if o.arrived.get(&dst).is_some_and(|s| s.contains(&b)) {
+                    continue;
+                }
+                if covered.contains(&(dst, b)) {
+                    continue;
+                }
+                let mut best: Option<(u8, usize, NodeId)> = None;
+                for (&(n, blk), &t) in o.tier.iter() {
+                    if blk != b {
+                        continue;
+                    }
+                    let rank = match t {
+                        Tier::Gpu => 0u8,
+                        Tier::HostMem => 1,
+                        Tier::Ssd => 2,
+                    };
+                    let load = o.queues.get(&n).map_or(0, |q| q.len())
+                        + extra_load.get(&n).copied().unwrap_or(0);
+                    let cand = (rank, load, n);
+                    if best.map_or(true, |bst| cand < bst) {
+                        best = Some(cand);
+                    }
+                }
+                match best {
+                    Some((_, _, src)) => {
+                        let medium = if src == dst {
+                            match o.tier[&(src, b)] {
+                                Tier::HostMem => Medium::HostMem,
+                                _ => Medium::Ssd,
+                            }
+                        } else {
+                            Medium::Rdma
+                        };
+                        o.queues
+                            .entry(src)
+                            .or_default()
+                            .push_back(SendIntent { src, dst, block: b, medium });
+                        *extra_load.entry(src).or_insert(0) += 1;
+                        covered.insert((dst, b));
+                        added = true;
+                    }
+                    None if o.ssd_fallback.contains(&dst) => {
+                        o.tier.insert((dst, b), Tier::Ssd);
+                        o.queues
+                            .entry(dst)
+                            .or_default()
+                            .push_back(SendIntent { src: dst, dst, block: b, medium: Medium::Ssd });
+                        *extra_load.entry(dst).or_insert(0) += 1;
+                        covered.insert((dst, b));
+                        added = true;
+                    }
+                    None => {
+                        orphans.push(dst);
+                        continue 'dst;
+                    }
+                }
+            }
+        }
+        for dst in orphans {
+            o.pending_full.remove(&dst);
+            o.notify.remove(&dst);
+            o.arrived.remove(&dst);
+            o.queues.remove(&dst);
+            for q in o.queues.values_mut() {
+                q.retain(|it| it.dst != dst);
+            }
+            upd.orphaned.push((id, dst));
+        }
+        if added {
+            upd.replanned.push(id);
+        }
+    }
+
+    /// Recompute every flow's relative rate from the shared constraints:
+    /// per-node port demand and the cluster's aggregate RDMA capacity.
+    /// Only flows whose rate actually changed are trued up and re-timed,
+    /// so uncontended flows keep their exact nominal completion instants.
+    fn realloc(&mut self, now: SimTime) {
+        let mut eg: HashMap<(NodeId, usize), u32> = HashMap::new();
+        let mut ig: HashMap<(NodeId, usize), u32> = HashMap::new();
+        let mut rdma_cross = 0u32;
+        for fl in self.flows.values() {
+            let c = hol_class(fl.intent.medium);
+            *eg.entry((fl.intent.src, c)).or_insert(0) += 1;
+            if fl.intent.src != fl.intent.dst {
+                *ig.entry((fl.intent.dst, c)).or_insert(0) += 1;
+                if fl.intent.medium == Medium::Rdma {
+                    rdma_cross += 1;
+                }
+            }
+        }
+        let fabric_cap = if self.net.fabric_gbps > 0.0 {
+            self.net.fabric_gbps / self.net.rdma_gbps
+        } else {
+            f64::INFINITY
+        };
+        let ops = &mut self.ops;
+        for fl in self.flows.values_mut() {
+            let c = hol_class(fl.intent.medium);
+            let mut share = 1.0 / f64::from(eg[&(fl.intent.src, c)]);
+            if fl.intent.src != fl.intent.dst {
+                share = share.min(1.0 / f64::from(ig[&(fl.intent.dst, c)]));
+                if fl.intent.medium == Medium::Rdma && rdma_cross > 0 {
+                    share = share.min((fabric_cap / f64::from(rdma_cross)).min(1.0));
+                }
+            }
+            if share != fl.rate {
+                let dt = now.saturating_sub(fl.last).as_secs();
+                if let Some(op) = ops.get_mut(&fl.op) {
+                    op.contended_s += dt * (1.0 - fl.rate);
+                }
+                fl.remaining_s = (fl.remaining_s - dt * fl.rate).max(0.0);
+                fl.last = now;
+                fl.rate = share;
+                fl.end = now + SimTime::from_secs(fl.remaining_s / share);
+            }
+        }
+    }
+
+    /// Emit finish notifications, drop drained operations, then reallocate
+    /// rates and (re)schedule the next wakeup.
+    fn settle(&mut self, now: SimTime, upd: &mut FabricUpdate) {
+        let ids: Vec<OpId> = self.ops.keys().copied().collect();
+        for id in ids {
+            let (finish, remove, contended) = {
+                let op = self.ops.get_mut(&id).unwrap();
+                let finish = !op.finished_notified && op.pending_full.is_empty();
+                if finish {
+                    op.finished_notified = true;
+                    op.contended_reported = op.contended_s;
+                }
+                let remove = op.in_flight == 0
+                    && op.queues.values().all(|q| q.is_empty())
+                    && op.pending_loads.is_empty();
+                (finish, remove, op.contended_s)
+            };
+            if finish {
+                upd.op_completions.push((id, contended));
+            }
+            if remove {
+                let op = self.ops.remove(&id).unwrap();
+                if !op.finished_notified {
+                    // Drained without finishing (everything orphaned):
+                    // still notify so the owner can close out the op.
+                    upd.op_completions.push((id, op.contended_s));
+                } else if op.contended_s > op.contended_reported {
+                    // Contention accrued after the finish notification
+                    // (stray flows, watch-node loads): report the residual.
+                    upd.op_completions.push((id, op.contended_s - op.contended_reported));
+                }
+            }
+        }
+        self.realloc(now);
+        self.schedule_wakeup(now, upd);
+    }
+
+    fn schedule_wakeup(&mut self, now: SimTime, upd: &mut FabricUpdate) {
+        let mut t: Option<SimTime> = self.flows.values().map(|f| f.end).min();
+        for op in self.ops.values() {
+            if !op.gate_open {
+                t = Some(t.map_or(op.gate, |x| x.min(op.gate)));
+            }
+        }
+        match t {
+            Some(t) => {
+                if self.scheduled != Some(t) {
+                    self.version += 1;
+                    self.scheduled = Some(t);
+                    upd.wakeup = Some((t.max(now), self.version));
+                }
+            }
+            None => self.scheduled = None,
+        }
+    }
+
+    fn util_by_model(&self) -> BTreeMap<usize, f64> {
+        let mut m: BTreeMap<usize, f64> = BTreeMap::new();
+        for op in self.ops.values() {
+            m.entry(op.model).or_insert(0.0);
+        }
+        for fl in self.flows.values() {
+            if let Some(op) = self.ops.get(&fl.op) {
+                let bw = match fl.intent.medium {
+                    Medium::Rdma => self.net.rdma_gbps,
+                    Medium::Nvlink => self.net.nvlink_gbps,
+                    Medium::HostMem => self.net.hostmem_gbps,
+                    Medium::Ssd => self.net.ssd_gbps,
+                };
+                *m.entry(op.model).or_insert(0.0) += fl.rate * bw;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multicast::kway::kway_plan;
+    use crate::sim::transfer::TransferOpts;
+
+    fn net() -> NetworkConfig {
+        NetworkConfig::default()
+    }
+
+    /// Drive the fabric to quiescence, recording timestamped deliveries,
+    /// node completions and op completions.
+    struct Driver {
+        deliveries: Vec<(SimTime, OpId, NodeId, BlockId)>,
+        completions: Vec<(SimTime, OpId, NodeId)>,
+        finished: Vec<(SimTime, OpId, f64)>,
+        next: Option<(SimTime, u64)>,
+        now: SimTime,
+    }
+
+    impl Driver {
+        fn new() -> Self {
+            Driver {
+                deliveries: Vec::new(),
+                completions: Vec::new(),
+                finished: Vec::new(),
+                next: None,
+                now: SimTime::ZERO,
+            }
+        }
+
+        fn absorb(&mut self, at: SimTime, upd: FabricUpdate) {
+            for (op, n, b) in upd.deliveries {
+                self.deliveries.push((at, op, n, b));
+            }
+            for (op, n) in upd.node_completions {
+                self.completions.push((at, op, n));
+            }
+            for (op, c) in upd.op_completions {
+                self.finished.push((at, op, c));
+            }
+            if upd.wakeup.is_some() {
+                self.next = upd.wakeup;
+            }
+        }
+
+        /// Run wakeups until quiescent or `until` is reached.
+        fn run_until(&mut self, fab: &mut Fabric, until: SimTime) {
+            while let Some((t, v)) = self.next {
+                if t > until {
+                    break;
+                }
+                self.next = None;
+                self.now = t;
+                let upd = fab.on_wakeup(t, v);
+                self.absorb(t, upd);
+            }
+        }
+
+        fn run(&mut self, fab: &mut Fabric) {
+            self.run_until(fab, SimTime::MAX);
+        }
+    }
+
+    fn op_from_plan(
+        model: usize,
+        plan: &crate::multicast::MulticastPlan,
+        block_bytes: &[u64],
+        expect: &[NodeId],
+    ) -> FabricOp {
+        FabricOp {
+            model,
+            initial: plan.initial.clone(),
+            intents: plan.intents.clone(),
+            loads: vec![],
+            block_bytes: block_bytes.to_vec(),
+            opts: TransferOpts::default(),
+            start_delay: plan.start_delay,
+            expect_full: expect.to_vec(),
+            watch: vec![],
+            ssd_fallback: HashSet::new(),
+        }
+    }
+
+    /// Uncontended single op reproduces TransferSim's arrival times
+    /// exactly — the replay-identity cornerstone.
+    #[test]
+    fn single_op_matches_transfersim_bit_exactly() {
+        let c = net();
+        let nodes: Vec<NodeId> = (0..9).collect();
+        let b = 8usize;
+        let bytes = vec![123_456_789u64; b];
+        let plan = kway_plan(&nodes, 2, b, Tier::Gpu);
+        let log = plan.execute(&c, TransferOpts::default(), &bytes);
+
+        let mut fab = Fabric::new(c);
+        let mut drv = Driver::new();
+        let (op, upd) = fab.begin_op(SimTime::ZERO, op_from_plan(0, &plan, &bytes, &nodes));
+        drv.absorb(SimTime::ZERO, upd);
+        drv.run(&mut fab);
+
+        for (t, o, n, blk) in &drv.deliveries {
+            assert_eq!(*o, op);
+            assert_eq!(
+                log.arrivals.get(&(*n, *blk)),
+                Some(t),
+                "arrival mismatch at node {n} block {blk}"
+            );
+        }
+        // Every logged transfer arrival is present.
+        let delivered: HashSet<(NodeId, BlockId)> =
+            drv.deliveries.iter().map(|&(_, _, n, blk)| (n, blk)).collect();
+        for (&(n, blk), &t) in &log.arrivals {
+            if t > SimTime::ZERO {
+                assert!(delivered.contains(&(n, blk)), "missing delivery {n}/{blk}");
+            }
+        }
+        // Op finishes exactly when the static log says everyone is full.
+        let finish = log.all_complete(&nodes, b).unwrap();
+        assert_eq!(drv.finished.len(), 1);
+        assert_eq!(drv.finished[0].0, finish);
+        assert_eq!(fab.active_ops(), 0);
+    }
+
+    /// Two identical ops on disjoint node sets: unbounded fabric keeps them
+    /// independent; a bisection-limited fabric makes the concurrent run
+    /// strictly slower, with byte conservation per destination NIC.
+    #[test]
+    fn concurrent_ops_contend_on_bounded_fabric() {
+        let b = 8usize;
+        let bytes = vec![200_000_000u64; b];
+        let nodes_a: Vec<NodeId> = (0..6).collect();
+        let nodes_b: Vec<NodeId> = (6..12).collect();
+        let plan_a = kway_plan(&nodes_a, 1, b, Tier::Gpu);
+        let plan_b = kway_plan(&nodes_b, 1, b, Tier::Gpu);
+
+        let finish_of = |cfg: &NetworkConfig, plans: &[(&crate::multicast::MulticastPlan, &[NodeId])]| {
+            let mut fab = Fabric::new(cfg.clone());
+            let mut drv = Driver::new();
+            for (i, (p, ns)) in plans.iter().enumerate() {
+                let (_, upd) = fab.begin_op(SimTime::ZERO, op_from_plan(i, p, &bytes, ns));
+                drv.absorb(SimTime::ZERO, upd);
+            }
+            drv.run(&mut fab);
+            let finish = drv.finished.iter().map(|&(t, _, _)| t).max().unwrap();
+            (finish, drv)
+        };
+
+        // Unbounded fabric: disjoint ops do not interact.
+        let free = net();
+        let (iso_a, _) = finish_of(&free, &[(&plan_a, nodes_a.as_slice())]);
+        let (both_free, _) =
+            finish_of(&free, &[(&plan_a, nodes_a.as_slice()), (&plan_b, nodes_b.as_slice())]);
+        assert_eq!(iso_a, both_free, "unbounded fabric must not couple disjoint ops");
+
+        // Bisection-limited fabric: concurrency is strictly slower.
+        let tight = NetworkConfig { fabric_gbps: net().rdma_gbps, ..net() };
+        let (iso_tight, _) = finish_of(&tight, &[(&plan_a, nodes_a.as_slice())]);
+        let (both_tight, drv) =
+            finish_of(&tight, &[(&plan_a, nodes_a.as_slice()), (&plan_b, nodes_b.as_slice())]);
+        assert!(
+            both_tight > iso_tight,
+            "concurrent {both_tight} must be slower than isolated {iso_tight}"
+        );
+        // Byte conservation per destination NIC: every (op, dest, block)
+        // delivered exactly once.
+        let mut seen: HashMap<(OpId, NodeId, BlockId), usize> = HashMap::new();
+        for &(_, o, n, blk) in &drv.deliveries {
+            *seen.entry((o, n, blk)).or_insert(0) += 1;
+        }
+        assert!(seen.values().all(|&c| c == 1), "duplicate delivery");
+        // 5 dests per op × 8 blocks × 2 ops.
+        assert_eq!(seen.len(), 5 * b * 2);
+    }
+
+    /// Cancelling an untouched destination mid-run: the op still finishes
+    /// for everyone else and the revoked node receives nothing.
+    #[test]
+    fn cancel_untouched_dest_repairs_schedule() {
+        let c = net();
+        let b = 8usize;
+        let bytes = vec![400_000_000u64; b];
+        let nodes: Vec<NodeId> = (0..8).collect();
+        let plan = kway_plan(&nodes, 1, b, Tier::Gpu);
+
+        let mut fab = Fabric::new(c);
+        let mut drv = Driver::new();
+        let (op, upd) = fab.begin_op(SimTime::ZERO, op_from_plan(0, &plan, &bytes, &nodes));
+        drv.absorb(SimTime::ZERO, upd);
+        // Let a little progress happen, then revoke the last untouched dest.
+        drv.run_until(&mut fab, SimTime::from_millis(20.0));
+        let victim = (1..8)
+            .rev()
+            .find(|&n| fab.dest_untouched(op, n))
+            .expect("some dest still untouched");
+        let upd = fab.cancel_dest(drv.now, op, victim);
+        let at = drv.now;
+        drv.absorb(at, upd);
+        drv.run(&mut fab);
+
+        assert!(
+            !drv.deliveries.iter().any(|&(_, _, n, _)| n == victim),
+            "revoked node must receive nothing"
+        );
+        assert_eq!(drv.finished.len(), 1, "op must still finish");
+        let complete: HashSet<NodeId> =
+            drv.completions.iter().map(|&(_, _, n)| n).collect();
+        for n in 1..8 {
+            if n != victim {
+                assert!(complete.contains(&n), "surviving dest {n} incomplete");
+            }
+        }
+    }
+
+    /// A failed relay mid-multicast: the remaining schedule is re-planned
+    /// from surviving holders and every surviving dest still completes —
+    /// where the static executor would leave permanent holes.
+    #[test]
+    fn node_failure_replans_from_survivors() {
+        let c = net();
+        let b = 8usize;
+        let bytes = vec![400_000_000u64; b];
+        let nodes: Vec<NodeId> = (0..8).collect();
+        let plan = kway_plan(&nodes, 1, b, Tier::Gpu);
+
+        // Static executor: holes.
+        let static_log = plan.execute_with_failures(
+            &c,
+            TransferOpts::default(),
+            &bytes,
+            &[(1, SimTime::from_millis(30.0))],
+        );
+        let survivors: Vec<NodeId> = (0..8).filter(|&n| n != 1).collect();
+        assert!(
+            static_log.all_complete(&survivors, b).is_none(),
+            "static plan should leave holes after a relay failure"
+        );
+
+        // Fabric: replan keeps the op alive.
+        let mut fab = Fabric::new(c);
+        let mut drv = Driver::new();
+        let (op, upd) = fab.begin_op(SimTime::ZERO, op_from_plan(0, &plan, &bytes, &nodes));
+        drv.absorb(SimTime::ZERO, upd);
+        drv.run_until(&mut fab, SimTime::from_millis(30.0));
+        let at = SimTime::from_millis(30.0).max(drv.now);
+        let upd = fab.fail_node(at, 1);
+        let replanned = !upd.replanned.is_empty();
+        drv.absorb(at, upd);
+        drv.run(&mut fab);
+
+        assert!(replanned, "failure of a relay must trigger a replan");
+        let complete: HashSet<NodeId> =
+            drv.completions.iter().map(|&(_, _, n)| n).collect();
+        for &n in &survivors {
+            if n != 0 {
+                assert!(complete.contains(&n), "survivor {n} never completed");
+            }
+        }
+        assert_eq!(drv.finished.len(), 1);
+        assert_eq!(fab.active_ops(), 0);
+    }
+
+    /// Whole-model local loads deliver everything at the precomputed
+    /// duration (storage-port FIFO per node).
+    #[test]
+    fn bundle_loads_complete_at_given_duration() {
+        let c = net();
+        let bytes = vec![1_000_000u64; 4];
+        let mut fab = Fabric::new(c);
+        let mut drv = Driver::new();
+        let (op, upd) = fab.begin_op(
+            SimTime::ZERO,
+            FabricOp {
+                model: 0,
+                initial: vec![],
+                intents: vec![],
+                loads: vec![(3, Medium::Ssd, 1.5), (5, Medium::HostMem, 0.25)],
+                block_bytes: bytes,
+                opts: TransferOpts::default(),
+                start_delay: SimTime::ZERO,
+                expect_full: vec![3, 5],
+                watch: vec![],
+                ssd_fallback: HashSet::new(),
+            },
+        );
+        drv.absorb(SimTime::ZERO, upd);
+        drv.run(&mut fab);
+        let t_of = |n: NodeId| {
+            drv.completions.iter().find(|&&(_, o, nn)| o == op && nn == n).unwrap().0
+        };
+        assert_eq!(t_of(5), SimTime::from_secs(0.25));
+        assert_eq!(t_of(3), SimTime::from_secs(1.5));
+        assert_eq!(drv.finished.len(), 1);
+        assert_eq!(drv.finished[0].0, SimTime::from_secs(1.5));
+    }
+}

@@ -7,13 +7,19 @@
 //!   algorithms emit per-node ordered send queues; the executor runs them
 //!   respecting block availability and NIC port occupancy, yielding per-node
 //!   block arrival times (the raw data behind Figs 7, 8, 17, 18).
+//! * [`fabric`] — the shared-fabric transfer scheduler: the serving engine
+//!   executes every in-flight scaling operation's sends as live simulation
+//!   events on one cluster-wide fabric, with fluid bandwidth sharing across
+//!   concurrent operations, mid-flight cancellation, and failure re-planning.
 // Pre-dates the crate-wide rustdoc gate; sweep pending.
 #![allow(missing_docs)]
 
 pub mod event;
+pub mod fabric;
 pub mod time;
 pub mod transfer;
 
 pub use event::EventQueue;
+pub use fabric::{Fabric, FabricOp, FabricUpdate, OpId};
 pub use time::SimTime;
 pub use transfer::{BlockId, Medium, NodeId, SendIntent, Tier, TransferLog, TransferOpts, TransferSim};

@@ -52,6 +52,34 @@ pub enum Tier {
     Ssd,
 }
 
+/// Number of per-node port slots in the occupancy array
+/// `[rdma_tx, rdma_rx, nvlink_tx, nvlink_rx, storage]`.
+///
+/// Shared by [`TransferSim`] and the live [`crate::sim::fabric::Fabric`]:
+/// the fabric's single-operation replay identity depends on both
+/// executors using the same port model.
+pub(crate) const N_PORTS: usize = 5;
+
+/// Head-of-line class of a medium: RDMA, NVLink and the storage port
+/// queue independently (they use independent hardware).
+pub(crate) fn hol_class(m: Medium) -> usize {
+    match m {
+        Medium::Rdma => 0,
+        Medium::Nvlink => 1,
+        Medium::HostMem | Medium::Ssd => 2,
+    }
+}
+
+/// Port pair `(tx, rx)` of a medium, as indices into the per-node
+/// occupancy array (`tx == rx` for the single storage port).
+pub(crate) fn ports(m: Medium) -> (usize, usize) {
+    match m {
+        Medium::Rdma => (0, 1),
+        Medium::Nvlink => (2, 3),
+        Medium::HostMem | Medium::Ssd => (4, 4),
+    }
+}
+
 /// One entry of a node's ordered send queue. `src == dst` encodes a local
 /// load (medium must then be HostMem or Ssd).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -204,7 +232,7 @@ impl<'a> TransferSim<'a> {
             queues[it.src].push_back(idx);
         }
         // Port occupancy per node: [rdma_tx, rdma_rx, nvlink_tx, nvlink_rx, storage].
-        let mut busy = vec![[false; 5]; n_nodes];
+        let mut busy = vec![[false; N_PORTS]; n_nodes];
         let mut failed: HashSet<NodeId> = HashSet::new();
 
         // Holdings: tier per (node, block).
@@ -222,14 +250,6 @@ impl<'a> TransferSim<'a> {
             q.push(t, Ev::Fail(n));
         }
         let mut in_flight: Vec<Option<InFlight>> = Vec::new();
-
-        fn ports(m: Medium) -> (usize, usize) {
-            match m {
-                Medium::Rdma => (0, 1),
-                Medium::Nvlink => (2, 3),
-                Medium::HostMem | Medium::Ssd => (4, 4),
-            }
-        }
 
         // Try to start eligible sends on every node. FIFO order is kept
         // *per port class* (RDMA / NVLink / storage): the first queued
@@ -249,11 +269,7 @@ impl<'a> TransferSim<'a> {
                         let mut start_at: Vec<usize> = Vec::new();
                         for (qi, &idx) in queues[n].iter().enumerate() {
                             let it = intents[idx];
-                            let class = match it.medium {
-                                Medium::Rdma => 0usize,
-                                Medium::Nvlink => 1,
-                                Medium::HostMem | Medium::Ssd => 2,
-                            };
+                            let class = hol_class(it.medium);
                             if seen[class] {
                                 continue;
                             }

@@ -1,0 +1,138 @@
+//! Engine-level shared-fabric behavior: two-tenant scale-up contention on
+//! a bisection-limited fabric, mid-flight cancellation with its GPU·s
+//! savings visible in `CostBreakdown`, and node-failure re-planning
+//! end-to-end. (Byte conservation per NIC and bit-level timing parity are
+//! unit-tested inside `sim::fabric`.)
+
+use lambda_scale::config::ClusterConfig;
+use lambda_scale::coordinator::{ServingSession, SystemKind};
+use lambda_scale::metrics::MetricsCollector;
+use lambda_scale::model::ModelSpec;
+use lambda_scale::util::rng::Rng;
+use lambda_scale::workload::{burst_trace, Trace};
+
+fn burst(n: usize, seed: u64) -> Trace {
+    burst_trace(n, 0.0, "llama2-13b", 128, 64, &mut Rng::new(seed))
+}
+
+fn tight_cluster() -> ClusterConfig {
+    // Bisection limited to one NIC's worth of bandwidth: concurrent
+    // multicasts must share it.
+    let mut c = ClusterConfig::testbed1();
+    c.network.fabric_gbps = c.network.rdma_gbps;
+    c
+}
+
+fn one_tenant(cluster: &ClusterConfig, trace: &Trace) -> MetricsCollector {
+    ServingSession::builder()
+        .cluster(cluster.clone())
+        .model(ModelSpec::llama2_13b())
+        .system(SystemKind::LambdaScale { k: 2 })
+        .max_batch(8)
+        .trace(trace.clone())
+        .run()
+        .into_single()
+}
+
+/// Two tenants scaling at once on a shared fabric are strictly slower
+/// than the same two operations run in isolation, requests are conserved
+/// per tenant, and the contention is metered.
+#[test]
+fn two_tenant_concurrent_scale_up_is_slower_than_isolated() {
+    let cluster = tight_cluster();
+    let ta = burst(40, 21);
+    let tb = burst(40, 22);
+    let p99 = |m: &MetricsCollector| {
+        let mut s = m.ttft_samples();
+        s.p99()
+    };
+    let iso_a = one_tenant(&cluster, &ta);
+    let iso_b = one_tenant(&cluster, &tb);
+    let iso = p99(&iso_a).max(p99(&iso_b));
+
+    let both = ServingSession::builder()
+        .cluster(cluster.clone())
+        .model(ModelSpec::llama2_13b())
+        .system(SystemKind::LambdaScale { k: 2 })
+        .max_batch(8)
+        .trace(ta.clone())
+        .model(ModelSpec::llama2_13b())
+        .system(SystemKind::LambdaScale { k: 2 })
+        .max_batch(8)
+        .trace(tb.clone())
+        .run();
+    // Conservation: every tenant's requests all complete exactly once.
+    assert_eq!(both.models[0].metrics.requests.len(), 40);
+    assert_eq!(both.models[1].metrics.requests.len(), 40);
+    let conc = both.models.iter().map(|r| p99(&r.metrics)).fold(0.0_f64, f64::max);
+    assert!(
+        conc > iso,
+        "concurrent p99 TTFT {conc:.3}s must be strictly slower than isolated {iso:.3}s"
+    );
+    let contended: f64 = both.models.iter().map(|r| r.metrics.fabric_contended_s).sum();
+    assert!(contended > 0.0, "cross-tenant contention must be metered");
+    // Each tenant saw transfer throughput samples on the shared fabric.
+    assert!(both.models.iter().all(|r| r.metrics.fabric_util_peak() > 0.0));
+}
+
+/// When the scaler's `desired` drops mid-scale-up, untouched recruits are
+/// revoked: they never bill GPU·seconds, which shows up directly in the
+/// priced `CostBreakdown` against a revocation-disabled run.
+#[test]
+fn cancellation_frees_revoked_gpu_seconds_in_cost_breakdown() {
+    // A slow fabric stretches one big scale-up far past the reactive
+    // window: the burst drains on the initial replica, `desired` drops,
+    // and deep-tree recruits are still waiting for their first block.
+    let mut cluster = ClusterConfig::testbed1();
+    cluster.network.rdma_gbps = 0.25;
+    let trace = burst(48, 33);
+    let run = |cancel: bool| {
+        ServingSession::builder()
+            .cluster(cluster.clone())
+            .model(ModelSpec::llama2_13b())
+            .system(SystemKind::LambdaScale { k: 1 })
+            .max_batch(8)
+            .cancel_recruits(cancel)
+            .trace(trace.clone())
+            .run()
+            .into_single()
+    };
+    let on = run(true);
+    let off = run(false);
+    assert_eq!(on.requests.len(), 48, "cancellation must not lose requests");
+    assert_eq!(off.requests.len(), 48);
+    assert!(on.transfer_cancels >= 1, "no recruit was revoked");
+    assert_eq!(off.transfer_cancels, 0, "revocation was disabled");
+    let cost_on = on.cost(&cluster.cost);
+    let cost_off = off.cost(&cluster.cost);
+    assert!(
+        cost_on.gpu_seconds < cost_off.gpu_seconds,
+        "revoked recruits must not bill GPU·s: {} vs {}",
+        cost_on.gpu_seconds,
+        cost_off.gpu_seconds
+    );
+    assert!(cost_on.gpu_usd < cost_off.gpu_usd);
+}
+
+/// A node failure mid-multicast re-plans the remaining schedule from
+/// surviving block-holders: the operation completes, every request is
+/// served, and the repair is counted.
+#[test]
+fn node_failure_mid_scale_up_replans_and_serves_everything() {
+    let mut cluster = ClusterConfig::testbed1();
+    cluster.n_nodes = 8;
+    cluster.network.rdma_gbps = 5.0; // ≈6 s multicast: the failure lands mid-op
+    let trace = burst(40, 44);
+    let m = ServingSession::builder()
+        .cluster(cluster)
+        .model(ModelSpec::llama2_13b())
+        .system(SystemKind::LambdaScale { k: 1 })
+        .max_batch(8)
+        .cancel_recruits(false)
+        .fail_node(1, 1.0) // the first recruit, a mid-tree relay
+        .trace(trace)
+        .run()
+        .into_single();
+    assert_eq!(m.requests.len(), 40, "failure must not lose requests");
+    assert!(m.transfer_replans >= 1, "relay failure must trigger a re-plan");
+}

@@ -1,0 +1,84 @@
+//! Replay identity: a single-operation, failure-free session must produce
+//! a bit-identical report whether its transfers execute *live* on the
+//! engine's shared fabric or as a static precomputed plan — the contract
+//! that lets the fabric ship without perturbing any existing figure.
+
+use lambda_scale::config::ClusterConfig;
+use lambda_scale::coordinator::backend::{FaasNet, LambdaPipe, NcclBcast, ServerlessLlm};
+use lambda_scale::coordinator::{
+    ClusterState, ScalingBackend, ScalingOutcome, ScalingRequest, ServingSession,
+};
+use lambda_scale::metrics::MetricsCollector;
+use lambda_scale::model::ModelSpec;
+use lambda_scale::util::rng::Rng;
+use lambda_scale::workload::burst_trace;
+
+/// Wrapper hiding `plan_live`, forcing the engine's static fallback path.
+struct StaticOnly<B: ScalingBackend>(B);
+
+impl<B: ScalingBackend> ScalingBackend for StaticOnly<B> {
+    fn name(&self) -> String {
+        self.0.name()
+    }
+
+    fn plan(&self, req: &ScalingRequest, cluster: &ClusterState) -> ScalingOutcome {
+        self.0.plan(req, cluster)
+    }
+    // plan_live keeps the default `None`.
+}
+
+fn key(m: &MetricsCollector) -> Vec<(u64, u64, u64)> {
+    let mut v: Vec<(u64, u64, u64)> =
+        m.requests.iter().map(|r| (r.id, r.first_token.0, r.completion.0)).collect();
+    v.sort_unstable();
+    v
+}
+
+fn run_with(backend: Box<dyn ScalingBackend>) -> MetricsCollector {
+    let mut rng = Rng::new(11);
+    // One synchronized burst → one coalesced scaling operation; the op
+    // finishes well inside the scaler's window, so no cancellation fires.
+    let trace = burst_trace(30, 0.0, "llama2-13b", 128, 64, &mut rng);
+    let mut cluster = ClusterConfig::testbed1();
+    cluster.n_nodes = 8;
+    ServingSession::builder()
+        .cluster(cluster)
+        .model(ModelSpec::llama2_13b())
+        .backend(backend)
+        .max_batch(8)
+        .trace(trace)
+        .run()
+        .into_single()
+}
+
+#[test]
+fn lambdapipe_live_replays_static_bit_identically() {
+    let live = run_with(Box::new(LambdaPipe { k: 2 }));
+    let stat = run_with(Box::new(StaticOnly(LambdaPipe { k: 2 })));
+    assert_eq!(live.requests.len(), 30);
+    assert_eq!(key(&live), key(&stat));
+}
+
+#[test]
+fn serverlessllm_live_replays_static_bit_identically() {
+    let live = run_with(Box::new(ServerlessLlm));
+    let stat = run_with(Box::new(StaticOnly(ServerlessLlm)));
+    assert_eq!(live.requests.len(), 30);
+    assert_eq!(key(&live), key(&stat));
+}
+
+#[test]
+fn faasnet_live_replays_static_bit_identically() {
+    let live = run_with(Box::new(FaasNet));
+    let stat = run_with(Box::new(StaticOnly(FaasNet)));
+    assert_eq!(live.requests.len(), 30);
+    assert_eq!(key(&live), key(&stat));
+}
+
+#[test]
+fn nccl_live_replays_static_bit_identically() {
+    let live = run_with(Box::new(NcclBcast));
+    let stat = run_with(Box::new(StaticOnly(NcclBcast)));
+    assert_eq!(live.requests.len(), 30);
+    assert_eq!(key(&live), key(&stat));
+}
