@@ -154,6 +154,32 @@ impl Default for KvCacheConfig {
     }
 }
 
+/// Prefill/decode disaggregated-serving knobs (the TOML `[disagg]`
+/// section; see `crate::disagg`). Absent — `ClusterConfig::disagg ==
+/// None`, the default — every instance serves both phases colocated and
+/// existing sessions replay bit-identical. Present, the engine splits
+/// each model's instances into a prefill pool and a decode pool and
+/// streams per-request KV shards over the shared fabric.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DisaggConfig {
+    /// Minimum instances kept in the prefill pool (pool floor; the
+    /// two-tier scaler never shrinks below it).
+    pub min_prefill: usize,
+    /// Minimum instances kept in the decode pool.
+    pub min_decode: usize,
+    /// Graceful-drain multiplier for decode reclaim: a decode instance
+    /// holds live KV, so it is only reclaimed after staying idle for
+    /// `keep_alive × decode_drain_mult` (prefill instances drain at the
+    /// plain policy keep-alive — they hold no request state).
+    pub decode_drain_mult: f64,
+}
+
+impl Default for DisaggConfig {
+    fn default() -> Self {
+        DisaggConfig { min_prefill: 1, min_decode: 1, decode_drain_mult: 2.0 }
+    }
+}
+
 /// Which [`crate::coordinator::autoscaler::ScalingPolicy`] implementation
 /// drives instance counts (the `[autoscaler] policy` config key).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -258,6 +284,8 @@ pub struct ClusterConfig {
     pub autoscaler: AutoscalerConfig,
     /// Resource prices for cost accounting.
     pub cost: CostModel,
+    /// Prefill/decode disaggregation (`None` = colocated, the default).
+    pub disagg: Option<DisaggConfig>,
 }
 
 impl ClusterConfig {
@@ -297,6 +325,23 @@ impl ClusterConfig {
                 Some(v) => Err(format!("key `{k}` must be numeric, got {v:?}")),
             }
         };
+        // Numeric sanity: a negative or NaN bandwidth/capacity would
+        // silently simulate nonsense (NaN casts to 0 bytes, negative rates
+        // invert durations), so reject with the offending key named.
+        let positive = |key: &str, v: f64| -> Result<f64, String> {
+            if v.is_finite() && v > 0.0 {
+                Ok(v)
+            } else {
+                Err(format!("config key `{key}` must be a finite positive number, got {v}"))
+            }
+        };
+        let non_negative = |key: &str, v: f64| -> Result<f64, String> {
+            if v.is_finite() && v >= 0.0 {
+                Ok(v)
+            } else {
+                Err(format!("config key `{key}` must be finite and non-negative, got {v}"))
+            }
+        };
         if let Some(sec) = doc.get("cluster") {
             if let Some(v) = sec.get("n_nodes") {
                 cfg.n_nodes = v.as_int().ok_or("n_nodes must be int")? as usize;
@@ -310,21 +355,34 @@ impl ClusterConfig {
             // Managed residency budgets (GB in the file, bytes in memory;
             // absent = unbounded).
             if sec.contains_key("gpu_capacity_gb") {
-                cfg.node.gpu_capacity_bytes = (getf(sec, "gpu_capacity_gb", 0.0)? * 1e9) as u64;
+                let gb = non_negative("cluster.gpu_capacity_gb", getf(sec, "gpu_capacity_gb", 0.0)?)?;
+                cfg.node.gpu_capacity_bytes = (gb * 1e9) as u64;
             }
             if sec.contains_key("host_capacity_gb") {
-                cfg.node.host_capacity_bytes = (getf(sec, "host_capacity_gb", 0.0)? * 1e9) as u64;
+                let gb =
+                    non_negative("cluster.host_capacity_gb", getf(sec, "host_capacity_gb", 0.0)?)?;
+                cfg.node.host_capacity_bytes = (gb * 1e9) as u64;
             }
         }
         if let Some(sec) = doc.get("network") {
-            cfg.network.rdma_gbps = getf(sec, "rdma_gbps", cfg.network.rdma_gbps)?;
-            cfg.network.nvlink_gbps = getf(sec, "nvlink_gbps", cfg.network.nvlink_gbps)?;
-            cfg.network.hostmem_gbps = getf(sec, "hostmem_gbps", cfg.network.hostmem_gbps)?;
-            cfg.network.ssd_gbps = getf(sec, "ssd_gbps", cfg.network.ssd_gbps)?;
+            cfg.network.rdma_gbps =
+                positive("network.rdma_gbps", getf(sec, "rdma_gbps", cfg.network.rdma_gbps)?)?;
+            cfg.network.nvlink_gbps =
+                positive("network.nvlink_gbps", getf(sec, "nvlink_gbps", cfg.network.nvlink_gbps)?)?;
+            cfg.network.hostmem_gbps = positive(
+                "network.hostmem_gbps",
+                getf(sec, "hostmem_gbps", cfg.network.hostmem_gbps)?,
+            )?;
+            cfg.network.ssd_gbps =
+                positive("network.ssd_gbps", getf(sec, "ssd_gbps", cfg.network.ssd_gbps)?)?;
             cfg.network.rdma_setup_s = getf(sec, "rdma_setup_s", cfg.network.rdma_setup_s)?;
             cfg.network.nccl_group_init_s =
                 getf(sec, "nccl_group_init_s", cfg.network.nccl_group_init_s)?;
-            cfg.network.fabric_gbps = getf(sec, "fabric_gbps", cfg.network.fabric_gbps)?;
+            // 0 = unbounded bisection, so non-negative rather than positive.
+            cfg.network.fabric_gbps = non_negative(
+                "network.fabric_gbps",
+                getf(sec, "fabric_gbps", cfg.network.fabric_gbps)?,
+            )?;
         }
         if let Some(sec) = doc.get("kvcache") {
             let geti = |k: &str, cur: usize| -> Result<usize, String> {
@@ -359,6 +417,29 @@ impl ClusterConfig {
             cfg.cost.gpu_usd_per_hour = getf(sec, "gpu_usd_per_hour", cfg.cost.gpu_usd_per_hour)?;
             cfg.cost.host_usd_per_gb_hour =
                 getf(sec, "host_usd_per_gb_hour", cfg.cost.host_usd_per_gb_hour)?;
+        }
+        if let Some(sec) = doc.get("disagg") {
+            // Presence of the section enables disaggregated serving; all
+            // keys are optional.
+            let mut d = DisaggConfig::default();
+            let geti = |k: &str, cur: usize| -> Result<usize, String> {
+                match sec.get(k) {
+                    None => Ok(cur),
+                    Some(v) => {
+                        Ok(v.as_int().ok_or_else(|| format!("disagg.{k} must be int"))? as usize)
+                    }
+                }
+            };
+            d.min_prefill = geti("min_prefill", d.min_prefill)?.max(1);
+            d.min_decode = geti("min_decode", d.min_decode)?.max(1);
+            d.decode_drain_mult = getf(sec, "decode_drain_mult", d.decode_drain_mult)?;
+            if !d.decode_drain_mult.is_finite() || d.decode_drain_mult < 1.0 {
+                return Err(format!(
+                    "config key `disagg.decode_drain_mult` must be a finite number ≥ 1, got {}",
+                    d.decode_drain_mult
+                ));
+            }
+            cfg.disagg = Some(d);
         }
         Ok(cfg)
     }
@@ -469,6 +550,60 @@ mod tests {
         // Pricing helpers: one GPU-hour and one GB-hour at those rates.
         assert!((cfg.cost.gpu_usd(3600.0) - 4.0).abs() < 1e-12);
         assert!((cfg.cost.host_usd(3600.0) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_toml_rejects_negative_and_nan_numerics() {
+        // (snippet, key the error must name)
+        let cases = [
+            ("[network]\nfabric_gbps = -1\n", "network.fabric_gbps"),
+            ("[network]\nrdma_gbps = -5.0\n", "network.rdma_gbps"),
+            ("[network]\nrdma_gbps = 0\n", "network.rdma_gbps"),
+            ("[network]\nnvlink_gbps = -0.5\n", "network.nvlink_gbps"),
+            ("[network]\nhostmem_gbps = nan\n", "network.hostmem_gbps"),
+            ("[network]\nssd_gbps = -2\n", "network.ssd_gbps"),
+            ("[cluster]\ngpu_capacity_gb = -80\n", "cluster.gpu_capacity_gb"),
+            ("[cluster]\nhost_capacity_gb = nan\n", "cluster.host_capacity_gb"),
+            ("[disagg]\ndecode_drain_mult = 0.5\n", "disagg.decode_drain_mult"),
+        ];
+        for (snippet, key) in cases {
+            let doc = parse_toml(snippet).unwrap();
+            let err = ClusterConfig::from_toml(&doc)
+                .expect_err(&format!("`{snippet}` must be rejected"));
+            assert!(err.contains(key), "error for `{snippet}` must name `{key}`: {err}");
+        }
+        // NaN through the typed API too (not just the text parser).
+        let mut sec = BTreeMap::new();
+        sec.insert("fabric_gbps".to_string(), TomlValue::Float(f64::NAN));
+        let mut doc = BTreeMap::new();
+        doc.insert("network".to_string(), sec);
+        let err = ClusterConfig::from_toml(&doc).unwrap_err();
+        assert!(err.contains("network.fabric_gbps"), "{err}");
+        // Valid values still pass, including the fabric's 0 = unbounded.
+        let ok = parse_toml("[network]\nfabric_gbps = 0\nrdma_gbps = 25\n").unwrap();
+        assert!(ClusterConfig::from_toml(&ok).is_ok());
+    }
+
+    #[test]
+    fn from_toml_reads_disagg_section() {
+        // Absent section: colocated serving, the seed behavior.
+        let off = ClusterConfig::from_toml(&parse_toml("").unwrap()).unwrap();
+        assert_eq!(off.disagg, None);
+        // Bare section enables the defaults.
+        let on = ClusterConfig::from_toml(&parse_toml("[disagg]\n").unwrap()).unwrap();
+        assert_eq!(on.disagg, Some(DisaggConfig::default()));
+        // Keys override.
+        let doc = parse_toml(
+            "[disagg]\nmin_prefill = 2\nmin_decode = 3\ndecode_drain_mult = 4.0\n",
+        )
+        .unwrap();
+        let cfg = ClusterConfig::from_toml(&doc).unwrap().disagg.unwrap();
+        assert_eq!(cfg.min_prefill, 2);
+        assert_eq!(cfg.min_decode, 3);
+        assert_eq!(cfg.decode_drain_mult, 4.0);
+        // Pool floors clamp to at least one instance each.
+        let z = parse_toml("[disagg]\nmin_prefill = 0\n").unwrap();
+        assert_eq!(ClusterConfig::from_toml(&z).unwrap().disagg.unwrap().min_prefill, 1);
     }
 
     #[test]

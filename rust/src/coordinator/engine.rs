@@ -33,7 +33,8 @@ use super::backend::{ClusterState, LiveSchedule, NodeStatus, ScalingRequest};
 use super::batcher::DynamicBatcher;
 use super::scaling::{NewInstance, ScalingOutcome, Source};
 use super::session::{ModelReport, ModelSession, SessionReport};
-use crate::config::ClusterConfig;
+use crate::config::{ClusterConfig, DisaggConfig};
+use crate::disagg::{plan_kv_stream, DecodeView, DisaggRouter, PrefillView, Role, TwoTierScaler};
 use crate::kvcache::{ContinuousScheduler, KvGeometry, KvPool, KvVictimAction, ReqView};
 use crate::memory::{Locality, MemoryManager};
 use crate::metrics::RequestMetrics;
@@ -41,7 +42,7 @@ use crate::multicast::{BlockId, NodeId};
 use crate::pipeline::execution::ExecPipeline;
 use crate::pipeline::mode_switch::plan_switch_pipeline;
 use crate::sim::event::EventQueue;
-use crate::sim::fabric::{Fabric, FabricOp, FabricUpdate, OpId};
+use crate::sim::fabric::{Fabric, FabricOp, FabricUpdate, FlowClass, OpId};
 use crate::sim::time::SimTime;
 use crate::sim::transfer::Tier;
 use std::collections::{BTreeMap, HashMap, HashSet};
@@ -107,6 +108,8 @@ struct Inst {
     token_accum: f64,
     /// Paged KV state (kvcache mode only).
     kv: Option<InstKv>,
+    /// Pool membership in disaggregated mode (`None` when colocated).
+    role: Option<Role>,
 }
 
 /// Forced-reclaim backstop: after this many policy-refused probes past
@@ -158,6 +161,42 @@ enum Ev {
 /// How often a model with in-flight cancellable recruits re-evaluates its
 /// scaler's `desired` for mid-op scale-down (seconds).
 const CANCEL_CHECK_S: f64 = 0.25;
+
+/// One request's KV hand-off stream in flight on the shared fabric
+/// (disaggregated mode): prefill finished, the shard streams toward a
+/// chosen decode instance as a [`FlowClass::Kv`] operation.
+struct KvStream {
+    /// Trace index of the request being handed off.
+    idx: usize,
+    /// Chosen decode instance (re-picked if it dies mid-stream).
+    decode_inst: u64,
+    /// `(node, block)` deliveries still missing before decode admission.
+    needs: HashSet<(NodeId, BlockId)>,
+}
+
+/// Per-model disaggregated-serving state. `None` = colocated mode, in
+/// which the engine takes zero new branches (bit-identical replay).
+struct DisaggRuntime {
+    cfg: DisaggConfig,
+    router: DisaggRouter,
+    /// Decode-tier scaling state; the model's `scaler` field is the
+    /// prefill tier (it keeps observing arrivals and TTFT as before).
+    tiers: TwoTierScaler,
+    /// In-flight KV hand-off streams, keyed by fabric op id.
+    streams: HashMap<OpId, KvStream>,
+    /// Decode-phase requests with no decode instance to go to yet:
+    /// `(idx, Some(src_node))` still owes its KV stream from the prefill
+    /// node; `(idx, None)` just needs a queue slot (KV rebuilt locally).
+    awaiting: Vec<(usize, Option<NodeId>)>,
+    /// Requests whose prefill phase completed (cleared at final
+    /// completion) — routing sends these to the decode pool.
+    decode_phase: HashSet<usize>,
+    /// Hand-off start (prefill completion instant), per request.
+    handoff_start: HashMap<usize, SimTime>,
+    /// Finished per-request stream seconds, folded into
+    /// [`RequestMetrics::kv_stream_s`] at completion.
+    stream_s: HashMap<usize, f64>,
+}
 
 /// One execute-while-load pipeline awaiting its blocks on the fabric.
 struct LivePipeline {
@@ -249,6 +288,8 @@ struct ModelRuntime {
     kv_blocked_since: HashMap<usize, SimTime>,
     /// Per-request KV stats, folded into `RequestMetrics` at completion.
     kv_stats: HashMap<usize, KvReqStats>,
+    /// Disaggregated prefill/decode state (`None` = colocated mode).
+    disagg: Option<DisaggRuntime>,
 }
 
 impl ModelRuntime {
@@ -275,6 +316,23 @@ impl ModelRuntime {
             .take()
             .unwrap_or_else(|| super::autoscaler::scaler_from_config(&cluster.autoscaler));
         scaler.configure(per_inst_rps.max(0.1), keep_alive);
+        let disagg = cluster.disagg.map(|cfg| {
+            let mut tiers = TwoTierScaler::new(
+                super::autoscaler::scaler_from_config(&cluster.autoscaler),
+                cfg.decode_drain_mult,
+            );
+            tiers.configure(per_inst_rps.max(0.1), keep_alive);
+            DisaggRuntime {
+                cfg,
+                router: DisaggRouter,
+                tiers,
+                streams: HashMap::new(),
+                awaiting: Vec::new(),
+                decode_phase: HashSet::new(),
+                handoff_start: HashMap::new(),
+                stream_s: HashMap::new(),
+            }
+        });
         ModelRuntime {
             ms,
             backend_name,
@@ -300,6 +358,7 @@ impl ModelRuntime {
             preempted: HashMap::new(),
             kv_blocked_since: HashMap::new(),
             kv_stats: HashMap::new(),
+            disagg,
         }
     }
 }
@@ -349,6 +408,12 @@ pub struct ServingEngine {
     /// Last recorded per-model fabric throughput sample (GB/s), to dedup
     /// the utilization series.
     fab_util_last: Vec<f64>,
+    /// KV hand-off fabric ops → owning model (disaggregated mode only;
+    /// engine-level because fabric updates arrive without a model index).
+    kv_ops: HashMap<OpId, usize>,
+    /// Last pool role each node served in, for the per-pool GPU·s split
+    /// (billing intervals close long after the instance is gone).
+    node_role: Vec<Option<Role>>,
 }
 
 impl ServingEngine {
@@ -358,6 +423,7 @@ impl ServingEngine {
         let node_busy = vec![None; cluster.n_nodes];
         let mem = MemoryManager::from_cluster(&cluster);
         let fabric = Fabric::new(cluster.network.clone());
+        let node_role = vec![None; cluster.n_nodes];
         ServingEngine {
             cluster,
             q: EventQueue::new(),
@@ -371,6 +437,8 @@ impl ServingEngine {
             failed: HashSet::new(),
             pending_failures: Vec::new(),
             fab_util_last: Vec::new(),
+            kv_ops: HashMap::new(),
+            node_role,
         }
     }
 
@@ -402,6 +470,15 @@ impl ServingEngine {
             if secs > 0.0 {
                 let gpus = self.cluster.node.gpus_per_node.max(1) as f64;
                 self.models[m].ms.metrics.record_node_busy(n, secs * gpus);
+                // Disaggregated mode splits the same GPU·s by pool role.
+                if self.models[m].disagg.is_some() {
+                    if let Some(role) = self.node_role[n] {
+                        self.models[m]
+                            .ms
+                            .metrics
+                            .record_role_gpu_s(role == Role::Prefill, secs * gpus);
+                    }
+                }
             }
         }
         self.node_busy[n] = owner.map(|m| (m, now));
@@ -508,6 +585,14 @@ impl ServingEngine {
                 let secs = horizon.saturating_sub(since).as_secs();
                 if secs > 0.0 {
                     models[m].ms.metrics.record_node_busy(n, secs * gpus);
+                    if models[m].disagg.is_some() {
+                        if let Some(role) = self.node_role[n] {
+                            models[m]
+                                .ms
+                                .metrics
+                                .record_role_gpu_s(role == Role::Prefill, secs * gpus);
+                        }
+                    }
                 }
             }
         }
@@ -578,15 +663,51 @@ impl ServingEngine {
                 version: 0,
                 token_accum: 0.0,
                 kv: None,
+                role: None,
             },
         );
         md.ms.router.add_instance(id, weight.max(1e-6));
+        // Disaggregated mode: assign the new instance to a pool. Real
+        // multi-stage pipelines always decode (pipelined decode is a
+        // decode-pool construct — prefill stays on full local replicas);
+        // locals fill whichever pool is further below its wanted size.
+        let role = self.models[m].disagg.as_ref().map(|d| {
+            let md = &self.models[m];
+            if md.instances[&id].pipe.n_stages() > 1 {
+                Role::Decode
+            } else {
+                let np = md.instances.values().filter(|i| i.role == Some(Role::Prefill)).count();
+                let nd = md.instances.values().filter(|i| i.role == Some(Role::Decode)).count();
+                d.tiers.pick_role(np, nd)
+            }
+        });
+        if let Some(r) = role {
+            self.models[m].instances.get_mut(&id).unwrap().role = Some(r);
+            let members = self.models[m].instances[&id].pipe.nodes();
+            for n in members {
+                if n < self.node_role.len() {
+                    self.node_role[n] = Some(r);
+                }
+            }
+        }
         // kvcache mode: carve a per-instance paged KV pool out of the
         // manager's remaining GPU headroom on every member node — KV and
         // pinned weights compete for the same per-node byte budget.
         if let Some(geom) = self.models[m].kv_geom {
             let kv = self.build_kv_pool(m, id, geom, now);
             self.models[m].instances.get_mut(&id).unwrap().kv = Some(kv);
+        }
+        // A fresh decode instance unblocks parked hand-offs: launch their
+        // KV streams (or enqueue re-routes whose KV rebuilds locally).
+        if role == Some(Role::Decode) {
+            let waiting =
+                std::mem::take(&mut self.models[m].disagg.as_mut().unwrap().awaiting);
+            for (idx, src) in waiting {
+                match src {
+                    Some(src) => self.launch_kv_stream(now, m, src, idx),
+                    None => self.route_disagg(now, m, idx),
+                }
+            }
         }
         if let Some(d) = dissolve_at {
             // `SimTime::MAX` is the live-fabric sentinel: the pipeline
@@ -752,6 +873,7 @@ impl ServingEngine {
 
     /// Pull every queued-but-not-admitted request back and re-route.
     fn rebalance(&mut self, now: SimTime, m: usize) {
+        let disagg = self.models[m].disagg.is_some();
         let mut ids: Vec<u64> = self.models[m].instances.keys().copied().collect();
         ids.sort_unstable();
         let mut pool: Vec<usize> = Vec::new();
@@ -759,8 +881,16 @@ impl ServingEngine {
             self.advance(now, m, *id);
             let md = &mut self.models[m];
             let inst = md.instances.get_mut(id).unwrap();
+            // Disaggregated mode: only prefill queues rebalance. A decode
+            // queue entry's KV shard already lives (or is landing) on that
+            // instance — stealing it would strand the shard.
+            if disagg && inst.role != Some(Role::Prefill) {
+                continue;
+            }
             for p in inst.queue.drain_all() {
-                md.ms.router.complete(*id);
+                if !disagg {
+                    md.ms.router.complete(*id);
+                }
                 md.req_inst.remove(&p.item);
                 pool.push(p.item);
             }
@@ -792,7 +922,18 @@ impl ServingEngine {
                 // keep the event queue alive forever.)
                 return;
             }
-            if md.scaler.should_reclaim(now, inst.idle_since) {
+            // Decode-pool instances drain on a stretched keep-alive (their
+            // reclaim strands streamed KV of late hand-offs); everything
+            // else consults the model's (prefill-tier) policy directly.
+            let consent = match (md.disagg.as_ref(), inst.role) {
+                (Some(d), Some(Role::Decode)) => d.tiers.should_reclaim_decode(
+                    now,
+                    inst.idle_since,
+                    SimTime::from_secs(md.ms.params.keep_alive_s),
+                ),
+                _ => md.scaler.should_reclaim(now, inst.idle_since),
+            };
+            if consent {
                 None
             } else {
                 let keep_alive = SimTime::from_secs(md.ms.params.keep_alive_s);
@@ -833,6 +974,24 @@ impl ServingEngine {
         if locals <= 1 && md.instances[&id].dissolve_at.is_none() {
             return;
         }
+        // Disaggregated mode keeps each pool at its configured floor of
+        // local replicas (a pool falling to zero would strand its phase).
+        if let (Some(d), Some(role)) = (md.disagg.as_ref(), md.instances[&id].role) {
+            if md.instances[&id].dissolve_at.is_none() {
+                let same = md
+                    .instances
+                    .values()
+                    .filter(|i| i.dissolve_at.is_none() && i.role == Some(role))
+                    .count();
+                let floor = match role {
+                    Role::Prefill => d.cfg.min_prefill,
+                    Role::Decode => d.cfg.min_decode,
+                };
+                if same <= floor.max(1) {
+                    return;
+                }
+            }
+        }
         let md = &mut self.models[m];
         let mem_key = md.mem_key.clone();
         let inst = md.instances.remove(&id).unwrap();
@@ -870,6 +1029,9 @@ impl ServingEngine {
     }
 
     fn route_request(&mut self, now: SimTime, m: usize, idx: usize) {
+        if self.models[m].disagg.is_some() {
+            return self.route_disagg(now, m, idx);
+        }
         let md = &mut self.models[m];
         match md.ms.router.route() {
             Some(id) => {
@@ -884,6 +1046,91 @@ impl ServingEngine {
             }
             None => md.unrouted.push_back(idx),
         }
+    }
+
+    /// Disaggregated routing: prefill-phase requests go to the least
+    /// loaded prefill replica, decode-phase requests (re-entering after a
+    /// dissolve, failure, or lost stream) to a decode instance by KV
+    /// headroom. The session's `RoutingPolicy` is bypassed entirely —
+    /// pool placement is the router in this mode.
+    fn route_disagg(&mut self, now: SimTime, m: usize, idx: usize) {
+        let in_decode =
+            self.models[m].disagg.as_ref().unwrap().decode_phase.contains(&idx);
+        if in_decode {
+            // Re-entry: the KV rebuild (if any) is already priced by the
+            // request's `preempted` entry; it only needs a decode slot.
+            match self.pick_decode_inst(m, idx) {
+                Some(d) => self.enqueue_decode(now, m, idx, d),
+                None => {
+                    self.models[m].disagg.as_mut().unwrap().awaiting.push((idx, None));
+                }
+            }
+            return;
+        }
+        let md = &mut self.models[m];
+        let mut views: Vec<PrefillView> = Vec::new();
+        for (&iid, inst) in md.instances.iter() {
+            if inst.role != Some(Role::Prefill) {
+                continue;
+            }
+            views.push(PrefillView {
+                id: iid,
+                queued: inst.queue.len(),
+                active: inst.active.len(),
+                weight: inst.pipe.service_rate(
+                    md.ms.params.max_batch,
+                    &md.ms.params.spec,
+                    &self.cluster.compute,
+                ),
+            });
+        }
+        views.sort_by_key(|v| v.id);
+        match md.disagg.as_ref().unwrap().router.pick_prefill(&views) {
+            Some(id) => {
+                md.req_inst.insert(idx, id);
+                let enqueued = md.ms.trace.requests[idx].arrival;
+                md.instances.get_mut(&id).unwrap().queue.push(idx, enqueued);
+                self.try_admit(now, m, id);
+            }
+            None => md.unrouted.push_back(idx),
+        }
+    }
+
+    /// Pick a decode instance for request `idx` by KV headroom and queue
+    /// depth (the [`DisaggRouter`] contract). `None` when no decode
+    /// instance exists yet.
+    fn pick_decode_inst(&self, m: usize, idx: usize) -> Option<u64> {
+        let md = &self.models[m];
+        let d = md.disagg.as_ref().unwrap();
+        let mut views: Vec<DecodeView> = md
+            .instances
+            .iter()
+            .filter(|(_, i)| i.role == Some(Role::Decode))
+            .map(|(&id, i)| DecodeView {
+                id,
+                queued: i.queue.len(),
+                active: i.active.len(),
+                free_kv_blocks: i.kv.as_ref().map_or(0, |kv| kv.pool.free()),
+            })
+            .collect();
+        views.sort_by_key(|v| v.id);
+        let need = match md.kv_geom {
+            Some(g) => {
+                let generated = md.preempted.get(&idx).map_or(1, |p| p.generated);
+                g.blocks_for(md.ms.trace.requests[idx].prompt_tokens + generated)
+            }
+            None => 0,
+        };
+        d.router.pick_decode(&views, need)
+    }
+
+    /// Queue a decode-phase request on its chosen decode instance.
+    fn enqueue_decode(&mut self, now: SimTime, m: usize, idx: usize, inst: u64) {
+        let md = &mut self.models[m];
+        md.req_inst.insert(idx, inst);
+        let enqueued = md.ms.trace.requests[idx].arrival;
+        md.instances.get_mut(&inst).unwrap().queue.push(idx, enqueued);
+        self.try_admit(now, m, inst);
     }
 
     fn try_admit(&mut self, now: SimTime, m: usize, id: u64) {
@@ -926,14 +1173,28 @@ impl ServingEngine {
             let idx = p.item;
             let r = &md.ms.trace.requests[idx];
             let w_prefill = r.prompt_tokens as f64 * md.prefill_ratio;
+            // Disaggregated pools split the request's work: a prefill
+            // instance owes prompt ingestion plus the first token; a
+            // decode instance resumes a handed-off request for the
+            // remaining output (first token already emitted prefill-side).
+            let (w_first, w_total, first_emitted) = match inst.role {
+                Some(Role::Prefill) => (w_prefill + 1.0, w_prefill + 1.0, false),
+                Some(Role::Decode)
+                    if md.disagg.as_ref().is_some_and(|d| d.decode_phase.contains(&idx)) =>
+                {
+                    (0.0, r.output_tokens.saturating_sub(1) as f64, true)
+                }
+                _ => (w_prefill + 1.0, w_prefill + r.output_tokens as f64, false),
+            };
+            let stall_work = if first_emitted { 0.0 } else { w_prefill };
             inst.active.push(ActiveReq {
                 idx,
                 done: 0.0,
-                w_first: w_prefill + 1.0,
-                w_total: w_prefill + r.output_tokens as f64,
-                first_emitted: false,
+                w_first,
+                w_total,
+                first_emitted,
                 admitted: now,
-                stall_work: w_prefill,
+                stall_work,
                 decode_base: 0,
                 kv_blocks: 0,
                 rate: 0.0,
@@ -1019,7 +1280,12 @@ impl ServingEngine {
                 }
             };
             let first_emitted = md.first_tokens.contains_key(&idx);
-            let remaining_out = r.output_tokens.saturating_sub(decode_base) as f64;
+            let mut remaining_out = r.output_tokens.saturating_sub(decode_base) as f64;
+            // A prefill-pool instance serves only through the first token;
+            // the rest of the output belongs to the decode pool.
+            if inst.role == Some(Role::Prefill) {
+                remaining_out = remaining_out.min(1.0);
+            }
             inst.active.push(ActiveReq {
                 idx,
                 done: 0.0,
@@ -1200,10 +1466,29 @@ impl ServingEngine {
     }
 
     fn complete_request(&mut self, now: SimTime, m: usize, inst_id: u64, a: &ActiveReq) {
+        // Disaggregated mode: "completion" on a prefill-role instance is
+        // the end of the prefill phase, not of the request — hand the KV
+        // shard off toward the decode pool. Single-token requests are
+        // fully served by prefill and fall through to a real completion.
+        if self.models[m].disagg.is_some() {
+            let role = self.models[m].instances.get(&inst_id).and_then(|i| i.role);
+            if role == Some(Role::Prefill)
+                && self.models[m].ms.trace.requests[a.idx].output_tokens > 1
+            {
+                self.start_kv_handoff(now, m, inst_id, a.idx);
+                self.try_admit(now, m, inst_id);
+                return;
+            }
+        }
         let md = &mut self.models[m];
         let r = &md.ms.trace.requests[a.idx];
         let first = md.first_tokens.get(&a.idx).copied().unwrap_or(now);
         let kv = md.kv_stats.remove(&a.idx).unwrap_or_default();
+        let stream_s = md.disagg.as_mut().map_or(0.0, |d| {
+            d.decode_phase.remove(&a.idx);
+            d.handoff_start.remove(&a.idx);
+            d.stream_s.remove(&a.idx).unwrap_or(0.0)
+        });
         md.preempted.remove(&a.idx);
         md.kv_blocked_since.remove(&a.idx);
         md.ms.metrics.record_request(RequestMetrics {
@@ -1216,11 +1501,132 @@ impl ServingEngine {
             kv_preemptions: kv.preemptions,
             kv_recompute_s: kv.recompute_s,
             kv_swap_s: kv.swap_s,
+            kv_stream_s: stream_s,
         });
-        md.ms.router.complete(inst_id);
+        if md.disagg.is_none() {
+            md.ms.router.complete(inst_id);
+        }
         md.req_inst.remove(&a.idx);
         md.completed += 1;
         self.try_admit(now, m, inst_id);
+    }
+
+    // ---- disaggregated KV hand-off -------------------------------------------
+
+    /// A request's prefill finished on `src_inst`: mark it decode-phase,
+    /// stamp the hand-off clock, and launch (or park) its KV stream. The
+    /// decode tier's scaler observes the hand-off as its demand signal.
+    fn start_kv_handoff(&mut self, now: SimTime, m: usize, src_inst: u64, idx: usize) {
+        let src_node = self.models[m].instances[&src_inst].pipe.stages[0].node;
+        {
+            let md = &mut self.models[m];
+            md.req_inst.remove(&idx);
+            if md.kv_geom.is_some() {
+                // The decode side resumes with the prefill token emitted
+                // and no rebuild stall — the KV arrives by stream.
+                md.preempted.insert(idx, PreemptedReq { generated: 1, action: None });
+            }
+            let d = md.disagg.as_mut().unwrap();
+            d.decode_phase.insert(idx);
+            d.handoff_start.insert(idx, now);
+            d.tiers.observe_decode_demand(now);
+        }
+        self.launch_kv_stream(now, m, src_node, idx);
+        // Decode-pool pressure changed: let the two-tier scaler react.
+        if !self.models[m].scale_check_pending {
+            self.models[m].scale_check_pending = true;
+            self.q.push(now, Ev::ScaleCheck(m));
+        }
+    }
+
+    /// Stream `idx`'s KV shard from `src_node` to a decode instance as a
+    /// KV-class flow on the shared fabric, contending with any weight
+    /// multicasts in flight. Same-node hand-offs deliver instantly; with
+    /// no decode instance up yet the request parks until one spawns.
+    fn launch_kv_stream(&mut self, now: SimTime, m: usize, src_node: NodeId, idx: usize) {
+        let Some(target) = self.pick_decode_inst(m, idx) else {
+            self.models[m].disagg.as_mut().unwrap().awaiting.push((idx, Some(src_node)));
+            return;
+        };
+        let (plan, opts) = {
+            let md = &self.models[m];
+            let pipe = &md.instances[&target].pipe;
+            let ctx = md.ms.trace.requests[idx].prompt_tokens;
+            (
+                plan_kv_stream(src_node, pipe, ctx, &md.ms.params.spec, md.kv_geom.as_ref()),
+                md.ms.params.opts,
+            )
+        };
+        if plan.needs.is_empty() {
+            // Fully local hand-off: the shard never touches the fabric.
+            self.finish_kv_handoff(now, m, idx, target, false);
+            return;
+        }
+        let initial: Vec<(NodeId, BlockId, Tier)> =
+            (0..plan.shard_bytes.len()).map(|j| (src_node, j, Tier::Gpu)).collect();
+        let (op, upd) = self.fabric.begin_op(
+            now,
+            FabricOp {
+                model: m,
+                class: FlowClass::Kv,
+                initial,
+                intents: plan.intents,
+                loads: vec![],
+                block_bytes: plan.shard_bytes,
+                opts,
+                start_delay: SimTime::ZERO,
+                expect_full: vec![],
+                watch: vec![],
+                ssd_fallback: HashSet::new(),
+            },
+        );
+        self.kv_ops.insert(op, m);
+        self.models[m].disagg.as_mut().unwrap().streams.insert(
+            op,
+            KvStream { idx, decode_inst: target, needs: plan.needs.iter().copied().collect() },
+        );
+        self.handle_fabric_update(now, upd);
+    }
+
+    /// The KV shard for `idx` is resident decode-side: record the stream
+    /// time and enqueue the request on its decode instance (admission may
+    /// still gate on a free slot and arena blocks).
+    fn finish_kv_handoff(
+        &mut self,
+        now: SimTime,
+        m: usize,
+        idx: usize,
+        decode_inst: u64,
+        networked: bool,
+    ) {
+        {
+            let md = &mut self.models[m];
+            let d = md.disagg.as_mut().unwrap();
+            if let Some(t0) = d.handoff_start.remove(&idx) {
+                let secs = now.saturating_sub(t0).as_secs();
+                d.stream_s.insert(idx, secs);
+                md.ms.metrics.record_kv_stream(secs, networked);
+            }
+        }
+        if self.models[m].instances.contains_key(&decode_inst) {
+            self.enqueue_decode(now, m, idx, decode_inst);
+        } else {
+            // The chosen instance died while the shard streamed: the KV
+            // is orphaned — rebuild wherever routing lands it now.
+            self.reroute_lost_kv(now, m, idx);
+        }
+    }
+
+    /// A decode-phase request whose streamed KV is gone (dead target or
+    /// dead stream source): price the rebuild and re-route.
+    fn reroute_lost_kv(&mut self, now: SimTime, m: usize, idx: usize) {
+        let md = &mut self.models[m];
+        if md.kv_geom.is_some() {
+            let generated = md.preempted.get(&idx).map_or(1, |p| p.generated);
+            md.preempted
+                .insert(idx, PreemptedReq { generated, action: Some(KvVictimAction::Recompute) });
+        }
+        self.route_disagg(now, m, idx);
     }
 
     /// Schedule the next progress event. Legacy: earliest threshold
@@ -1430,11 +1836,14 @@ impl ServingEngine {
     /// scaler's answer with backlog-driven sizing (each instance absorbs
     /// `max_batch` concurrent decodes).
     fn demand(&mut self, now: SimTime, m: usize) -> (usize, usize) {
+        let loading =
+            self.node_state.iter().filter(|s| **s == NodeUse::Loading(m)).count();
+        if self.models[m].disagg.is_some() {
+            return self.demand_disagg(now, m, loading);
+        }
         let md = &mut self.models[m];
         let queued =
             md.unrouted.len() + md.instances.values().map(|i| i.queue.len()).sum::<usize>();
-        let loading =
-            self.node_state.iter().filter(|s| **s == NodeUse::Loading(m)).count();
         let current = md.instances.len() + loading;
         let by_backlog = if queued > 0 {
             md.instances.len() + queued.div_ceil(md.ms.params.max_batch.max(1))
@@ -1442,6 +1851,50 @@ impl ServingEngine {
             0
         };
         (md.scaler.desired(now, queued, current).max(by_backlog), current)
+    }
+
+    /// Two-tier demand sizing (disaggregated mode): prefill and decode
+    /// queue pressure are observed independently — the model's scaler is
+    /// the prefill tier, the [`TwoTierScaler`] the decode tier — and the
+    /// per-pool wants (floored at the configured pool minimums) are
+    /// summed for the recruitment machinery, with the split remembered
+    /// for role assignment at spawn time.
+    fn demand_disagg(&mut self, now: SimTime, m: usize, loading: usize) -> (usize, usize) {
+        let md = &mut self.models[m];
+        let max_batch = md.ms.params.max_batch.max(1);
+        let mut queued_p = md.unrouted.len();
+        let mut queued_d = 0usize;
+        let (mut cur_p, mut cur_d) = (0usize, 0usize);
+        for i in md.instances.values() {
+            match i.role {
+                Some(Role::Prefill) => {
+                    cur_p += 1;
+                    queued_p += i.queue.len();
+                }
+                Some(Role::Decode) => {
+                    cur_d += 1;
+                    queued_d += i.queue.len();
+                }
+                None => {}
+            }
+        }
+        let d = md.disagg.as_mut().unwrap();
+        // Hand-offs in flight (streaming or parked) are decode demand.
+        queued_d += d.streams.len() + d.awaiting.len();
+        let backlog_p = if queued_p > 0 { cur_p + queued_p.div_ceil(max_batch) } else { 0 };
+        let backlog_d = if queued_d > 0 { cur_d + queued_d.div_ceil(max_batch) } else { 0 };
+        let want_d = d
+            .tiers
+            .desired_decode(now, queued_d, cur_d)
+            .max(backlog_d)
+            .max(d.cfg.min_decode);
+        let want_p = md
+            .scaler
+            .desired(now, queued_p, cur_p)
+            .max(backlog_p)
+            .max(d.cfg.min_prefill);
+        d.tiers.set_wants(want_p, want_d);
+        (want_p + want_d, cur_p + cur_d + loading)
     }
 
     fn maybe_scale(&mut self, now: SimTime, m: usize) {
@@ -1687,6 +2140,7 @@ impl ServingEngine {
             now,
             FabricOp {
                 model: m,
+                class: FlowClass::Weights,
                 initial: sched.initial,
                 intents: sched.intents,
                 loads: sched.loads,
@@ -1751,6 +2205,23 @@ impl ServingEngine {
                 let m = lo.model;
                 self.models[m].ms.metrics.record_transfer_replan();
             }
+        }
+        // KV-stream deliveries → decode hand-off triggers (disagg mode).
+        let mut kv_done: Vec<(usize, OpId)> = Vec::new();
+        for &(op, node, block) in &upd.deliveries {
+            let Some(&km) = self.kv_ops.get(&op) else { continue };
+            if let Some(s) =
+                self.models[km].disagg.as_mut().and_then(|d| d.streams.get_mut(&op))
+            {
+                s.needs.remove(&(node, block));
+                if s.needs.is_empty() {
+                    kv_done.push((km, op));
+                }
+            }
+        }
+        for (km, op) in kv_done {
+            let s = self.models[km].disagg.as_mut().unwrap().streams.remove(&op).unwrap();
+            self.finish_kv_handoff(now, km, s.idx, s.decode_inst, true);
         }
         // Deliveries → execute-while-load pipeline triggers.
         let mut to_spawn: Vec<(OpId, usize, ExecPipeline)> = Vec::new();
@@ -1832,6 +2303,27 @@ impl ServingEngine {
         // watch nodes (self-loads outlasting the multicast) still owe
         // their completions.
         for &(op, contended_s) in &upd.op_completions {
+            // KV hand-off streams: their contended flow-seconds fold into
+            // the same per-model fabric meter as weight multicasts. A
+            // stream whose op drained with deliveries still missing lost
+            // its source mid-flight (node failure): the request rebuilds
+            // its KV decode-side instead.
+            if let Some(&km) = self.kv_ops.get(&op) {
+                if contended_s > 0.0 {
+                    self.models[km].ms.metrics.record_fabric_contended(contended_s);
+                }
+                if !self.fabric.op_active(op) {
+                    self.kv_ops.remove(&op);
+                    let stranded =
+                        self.models[km].disagg.as_mut().and_then(|d| d.streams.remove(&op));
+                    if let Some(s) = stranded {
+                        if !s.needs.is_empty() {
+                            self.reroute_lost_kv(now, km, s.idx);
+                        }
+                    }
+                }
+                continue;
+            }
             let Some(lo) = self.live.get_mut(&op) else { continue };
             if lo.finished {
                 // Drain residual from a lingering finished op: late
@@ -2040,6 +2532,16 @@ impl ServingEngine {
         md.ms.router.remove_instance(id);
         let kv_mode = md.kv_geom.is_some();
         let mut to_reroute: Vec<usize> = inst.queue.iter().map(|p| p.item).collect();
+        if kv_mode && md.disagg.is_some() {
+            // Queued decode-phase requests on a dead decode instance lost
+            // their streamed KV with it: their no-stall resume entry must
+            // become a priced rebuild.
+            for p in inst.queue.iter() {
+                if let Some(pr) = md.preempted.get_mut(&p.item) {
+                    pr.action = Some(KvVictimAction::Recompute);
+                }
+            }
+        }
         for a in &inst.active {
             let r = &md.ms.trace.requests[a.idx];
             if kv_mode {
@@ -2138,6 +2640,16 @@ impl ServingEngine {
         // rebuild stall.
         let kv_mode = md.kv_geom.is_some();
         let mut to_reroute: Vec<usize> = inst.queue.iter().map(|p| p.item).collect();
+        if kv_mode && md.disagg.is_some() {
+            // Queued decode-phase requests dissolve with their streamed KV
+            // (only in-flight state is rebuilt inside the switch stall):
+            // their resume entry becomes a priced rebuild.
+            for p in inst.queue.iter() {
+                if let Some(pr) = md.preempted.get_mut(&p.item) {
+                    pr.action = Some(KvVictimAction::Recompute);
+                }
+            }
+        }
         let mut in_flight: Vec<(u64, usize)> = Vec::new();
         for a in &inst.active {
             let r = &md.ms.trace.requests[a.idx];
@@ -2289,6 +2801,53 @@ mod tests {
         let series = r.metrics.gpu_series(5.0, 60.0);
         let last = series.last().unwrap().1;
         assert!(last <= 2, "no scale-in after mock lifecycle: {series:?}");
+    }
+
+    /// Disaggregated mode end-to-end (fluid serving model): the pools
+    /// split, prefill completions hand off to decode instances, every
+    /// request still completes, and the per-pool GPU·s split is
+    /// populated on both sides.
+    #[test]
+    fn disagg_mode_serves_with_split_pools() {
+        let mut c = cluster(6);
+        c.disagg = Some(crate::config::DisaggConfig::default());
+        let report = ServingSession::builder()
+            .cluster(c)
+            .model(ModelSpec::llama2_13b())
+            .max_batch(4)
+            .trace(burst(12))
+            .run();
+        let r = &report.models[0];
+        assert_eq!(r.completed, 12, "disagg mode dropped requests");
+        assert_eq!(r.metrics.requests.len(), 12);
+        assert!(r.metrics.prefill_gpu_s > 0.0, "prefill pool billed no GPU time");
+        assert!(r.metrics.decode_gpu_s > 0.0, "decode pool billed no GPU time");
+        // Every multi-token request crossed the pools, so each carries a
+        // (possibly zero, if same-node) non-negative stream time.
+        assert!(r.metrics.requests.iter().all(|q| q.kv_stream_s >= 0.0));
+    }
+
+    /// Disaggregated mode under the paged-KV serving model: hand-offs
+    /// stream real shard bytes between pools and the per-request
+    /// `kv_stream_s` is recorded for networked transfers.
+    #[test]
+    fn disagg_kv_mode_streams_shards() {
+        let mut c = cluster(6);
+        c.disagg = Some(crate::config::DisaggConfig::default());
+        let report = ServingSession::builder()
+            .cluster(c)
+            .model(ModelSpec::llama2_13b())
+            .kv_block_tokens(16)
+            .max_batch(4)
+            .trace(burst(10))
+            .run();
+        let r = &report.models[0];
+        assert_eq!(r.completed, 10, "disagg kv mode dropped requests");
+        assert!(
+            r.metrics.kv_streams > 0,
+            "no networked KV hand-off streams despite split pools"
+        );
+        assert!(r.metrics.kv_stream_flow_s > 0.0, "streams recorded no flow time");
     }
 
     /// `add_model` routes all residency through the shared MemoryManager:

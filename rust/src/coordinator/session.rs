@@ -188,6 +188,17 @@ impl ServingSessionBuilder {
         self
     }
 
+    /// Enable prefill/decode disaggregated serving: every model's
+    /// instances split into a prefill pool and a decode pool, with KV
+    /// shards streaming between them on the shared fabric (see
+    /// [`crate::disagg`]). Absent (the default), sessions replay the
+    /// colocated engine bit-identically. Cluster-scoped; call after
+    /// `.cluster(..)`.
+    pub fn disagg(mut self, cfg: crate::config::DisaggConfig) -> Self {
+        self.cluster.disagg = Some(cfg);
+        self
+    }
+
     /// Inject a permanent node failure at `at_s` seconds: in-flight
     /// transfers touching the node abort and their operations re-plan from
     /// surviving block-holders; instances on the node die (requests

@@ -1,0 +1,405 @@
+//! Prefill/decode disaggregated serving (DeepServe-style dedicated pools).
+//!
+//! Under chunked prefill, long prompts monopolize a colocated instance's
+//! iteration budget and starve decode — the p99 TTFT driver in the RAG
+//! regime. Disaggregation splits a model's instances into two pools:
+//!
+//! * **Prefill pool** — instances that run only the chunked-prefill phase
+//!   (prompt ingestion + the first token). When a request's prefill
+//!   finishes, its KV shard — [`crate::kvcache::KvGeometry::blocks_for`]
+//!   `(prompt_len)` bytes, split per layer range for pipelined decode
+//!   targets — is streamed to a decode instance as real [`SendIntent`]
+//!   flows on the shared [`crate::sim::fabric::Fabric`], contending with
+//!   in-flight model multicasts on NIC ports and the `fabric_gbps`
+//!   bisection bandwidth.
+//! * **Decode pool** — instances that resume the request once **both** a
+//!   decode slot is free **and** the KV stream has fully arrived
+//!   (admission gates on KV arrival; the streaming time lands in
+//!   [`crate::metrics::RequestMetrics::kv_stream_s`]).
+//!
+//! Two trait-shaped surfaces wire the mode into the engine:
+//!
+//! * [`DisaggRouter`] — picks the prefill instance by weighted queue
+//!   depth and the decode target by KV headroom + queue depth. (Session
+//!   affinity for multi-turn prefix reuse is a planned extension: the
+//!   router is the natural owner of a conversation → decode-instance
+//!   pin.)
+//! * [`TwoTierScaler`] — wraps the decode pool's own
+//!   [`ScalingPolicy`] next to the model's configured policy (which
+//!   observes the prefill tier: arrivals and TTFT are prefill-side
+//!   signals). The two pools produce independent `desired()` targets;
+//!   prefill instances are cheap to drain (no request state), decode
+//!   instances hold live KV and drain gracefully
+//!   ([`crate::config::DisaggConfig::decode_drain_mult`]).
+//!
+//! The whole mode is off by default: with `ClusterConfig::disagg == None`
+//! every existing session replays bit-identical (enforced by
+//! `rust/tests/disagg_serving.rs`).
+
+use crate::coordinator::autoscaler::ScalingPolicy;
+use crate::kvcache::KvGeometry;
+use crate::model::ModelSpec;
+use crate::pipeline::execution::ExecPipeline;
+use crate::sim::time::SimTime;
+use crate::sim::transfer::{Medium, SendIntent};
+use std::cmp::Reverse;
+
+/// Which pool an instance serves in a disaggregated session. Colocated
+/// sessions (no `[disagg]` section) never assign roles.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// Runs only the chunked-prefill phase, then exports the KV shard.
+    Prefill,
+    /// Runs only the decode phase on imported KV.
+    Decode,
+}
+
+/// Routing view of one prefill-pool instance.
+#[derive(Clone, Copy, Debug)]
+pub struct PrefillView {
+    /// Instance id.
+    pub id: u64,
+    /// Requests waiting in the instance queue.
+    pub queued: usize,
+    /// Requests currently in prefill.
+    pub active: usize,
+    /// Relative service weight (pipeline peak throughput).
+    pub weight: f64,
+}
+
+/// Routing view of one decode-pool instance.
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeView {
+    /// Instance id.
+    pub id: u64,
+    /// Requests waiting for a decode slot (KV already arrived).
+    pub queued: usize,
+    /// Requests currently decoding.
+    pub active: usize,
+    /// Free blocks in the instance's KV arena (0 in fluid mode, where
+    /// the pool falls back to pure queue-depth routing).
+    pub free_kv_blocks: usize,
+}
+
+/// Deterministic pool-aware routing: weighted join-shortest-queue into
+/// the prefill pool, KV-headroom-first into the decode pool.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DisaggRouter;
+
+impl DisaggRouter {
+    /// Pick a prefill instance: least outstanding work per unit of
+    /// service weight, ties to the lowest id. Candidates must be sorted
+    /// by id (the engine iterates its ordered instance map).
+    pub fn pick_prefill(&self, candidates: &[PrefillView]) -> Option<u64> {
+        candidates
+            .iter()
+            .min_by(|a, b| {
+                let la = (a.queued + a.active) as f64 / a.weight.max(1e-9);
+                let lb = (b.queued + b.active) as f64 / b.weight.max(1e-9);
+                la.partial_cmp(&lb).unwrap_or(std::cmp::Ordering::Equal).then(a.id.cmp(&b.id))
+            })
+            .map(|v| v.id)
+    }
+
+    /// Pick a decode target for a request needing `need_blocks` of KV:
+    /// among instances whose arena can already hold the shard, the least
+    /// loaded wins; if none fits, fall back to all candidates ranked by
+    /// load then headroom, and let KV-gated admission queue the request.
+    /// Deterministic: ties break to the larger headroom, then lowest id.
+    pub fn pick_decode(&self, candidates: &[DecodeView], need_blocks: usize) -> Option<u64> {
+        let best = |pool: &mut dyn Iterator<Item = &DecodeView>| {
+            pool.min_by_key(|c| (c.queued + c.active, Reverse(c.free_kv_blocks), c.id))
+                .map(|c| c.id)
+        };
+        let fits = best(&mut candidates.iter().filter(|c| c.free_kv_blocks >= need_blocks));
+        if fits.is_some() {
+            return fits;
+        }
+        best(&mut candidates.iter())
+    }
+}
+
+/// The KV stream for one request: the prefill node's export intents plus
+/// the per-stage destinations the decode side must receive.
+#[derive(Clone, Debug)]
+pub struct KvStreamPlan {
+    /// One send per decode stage off the prefill node; same-node stages
+    /// are omitted (their shard is already local — no fabric flow).
+    pub intents: Vec<SendIntent>,
+    /// Per-stage shard sizes in bytes, indexed by fabric block id.
+    pub shard_bytes: Vec<u64>,
+    /// `(node, block)` deliveries that must arrive before decode
+    /// admission may seat the request.
+    pub needs: Vec<(usize, usize)>,
+}
+
+/// Plan the KV export for one request finishing prefill on `src_node`:
+/// one RDMA send per decode stage, sized to that stage's layer-range
+/// shard. With the paged KV subsystem on, the shard covers
+/// `blocks_for(ctx_tokens)` whole blocks (the paged residency unit);
+/// in fluid mode it is the exact per-token KV footprint. Stages sharing
+/// the prefill node need no fabric flow — their shard is already local.
+pub fn plan_kv_stream(
+    src_node: usize,
+    decode_pipe: &ExecPipeline,
+    ctx_tokens: usize,
+    spec: &ModelSpec,
+    geom: Option<&KvGeometry>,
+) -> KvStreamPlan {
+    let stages = decode_pipe.n_stages();
+    let total_bytes = geom.map(|g| g.bytes_for(g.blocks_for(ctx_tokens)));
+    let mut shard_bytes = Vec::with_capacity(stages);
+    let mut intents = Vec::new();
+    let mut needs = Vec::new();
+    for (j, stage) in decode_pipe.stages.iter().enumerate() {
+        let bytes = match total_bytes {
+            Some(t) => ((t as f64) * decode_pipe.layer_frac(j)).ceil() as u64,
+            None => decode_pipe.kv_shard_bytes(j, ctx_tokens, spec),
+        };
+        shard_bytes.push(bytes.max(1));
+        if stage.node != src_node {
+            intents.push(SendIntent {
+                src: src_node,
+                dst: stage.node,
+                block: j,
+                medium: Medium::Rdma,
+            });
+            needs.push((stage.node, j));
+        }
+    }
+    KvStreamPlan { intents, shard_bytes, needs }
+}
+
+/// Two-tier scaling wrapper: the model's configured [`ScalingPolicy`]
+/// keeps observing the prefill tier (arrivals, TTFT — both produced by
+/// prefill), while this wrapper owns an independent policy instance for
+/// the decode tier, fed decode-side demand (KV streams in flight plus
+/// decode queues). The engine reads the two `desired()` signals
+/// separately and assigns roles to new instances by pool deficit.
+pub struct TwoTierScaler {
+    decode: Box<dyn ScalingPolicy>,
+    decode_drain_mult: f64,
+    want_prefill: usize,
+    want_decode: usize,
+}
+
+impl TwoTierScaler {
+    /// Wrap `decode_policy` as the decode tier's scaler.
+    pub fn new(decode_policy: Box<dyn ScalingPolicy>, decode_drain_mult: f64) -> Self {
+        TwoTierScaler {
+            decode: decode_policy,
+            decode_drain_mult: decode_drain_mult.max(1.0),
+            want_prefill: 1,
+            want_decode: 1,
+        }
+    }
+
+    /// Forward the per-instance capacity calibration to the decode tier.
+    pub fn configure(&mut self, instance_rps: f64, keep_alive: SimTime) {
+        self.decode.configure(instance_rps, keep_alive);
+    }
+
+    /// A unit of decode demand materialized (a KV stream launched toward
+    /// the pool) — the decode-tier analogue of a request arrival.
+    pub fn observe_decode_demand(&mut self, now: SimTime) {
+        self.decode.observe_arrival(now);
+    }
+
+    /// The decode tier's independent `desired()` signal.
+    pub fn desired_decode(&mut self, now: SimTime, queued: usize, current: usize) -> usize {
+        self.decode.desired(now, queued, current)
+    }
+
+    /// Record the latest per-pool targets (computed at a scale check) so
+    /// spawn-time role assignment can see the deficits.
+    pub fn set_wants(&mut self, prefill: usize, decode: usize) {
+        self.want_prefill = prefill;
+        self.want_decode = decode;
+    }
+
+    /// Latest `(prefill, decode)` pool targets.
+    pub fn wants(&self) -> (usize, usize) {
+        (self.want_prefill, self.want_decode)
+    }
+
+    /// Role for a newly spawned instance: empty pools are filled first
+    /// (prefill before decode — a prefill-only model still produces
+    /// first tokens), then the pool with the larger deficit against the
+    /// latest targets; ties go to decode (it holds the longer phase).
+    pub fn pick_role(&self, n_prefill: usize, n_decode: usize) -> Role {
+        if n_prefill == 0 {
+            return Role::Prefill;
+        }
+        if n_decode == 0 {
+            return Role::Decode;
+        }
+        let dp = self.want_prefill.saturating_sub(n_prefill);
+        let dd = self.want_decode.saturating_sub(n_decode);
+        if dp > dd {
+            Role::Prefill
+        } else {
+            Role::Decode
+        }
+    }
+
+    /// Graceful decode drain: a decode instance is reclaimed only after
+    /// `keep_alive × decode_drain_mult` of idleness **and** with the
+    /// decode-tier policy's consent. Prefill instances use the model's
+    /// configured policy directly (cheap drain — no live KV).
+    pub fn should_reclaim_decode(
+        &self,
+        now: SimTime,
+        idle_since: SimTime,
+        keep_alive: SimTime,
+    ) -> bool {
+        let drain = SimTime::from_secs(keep_alive.as_secs() * self.decode_drain_mult);
+        now.saturating_sub(idle_since) >= drain && self.decode.should_reclaim(now, idle_since)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefill_pick_is_weighted_jsq() {
+        let r = DisaggRouter;
+        assert_eq!(r.pick_prefill(&[]), None);
+        let views = [
+            PrefillView { id: 1, queued: 2, active: 2, weight: 1.0 },
+            PrefillView { id: 2, queued: 0, active: 1, weight: 1.0 },
+            PrefillView { id: 3, queued: 0, active: 4, weight: 8.0 },
+        ];
+        // id 3 has the lowest load per weight (0.5 < 1.0 < 4.0).
+        assert_eq!(r.pick_prefill(&views), Some(3));
+        // Exact ties resolve to the lowest id, deterministically.
+        let tied = [
+            PrefillView { id: 7, queued: 1, active: 0, weight: 1.0 },
+            PrefillView { id: 4, queued: 1, active: 0, weight: 1.0 },
+        ];
+        assert_eq!(r.pick_prefill(&tied), Some(4));
+    }
+
+    #[test]
+    fn decode_pick_prefers_kv_headroom_then_queue() {
+        let r = DisaggRouter;
+        let views = [
+            DecodeView { id: 1, queued: 0, active: 0, free_kv_blocks: 2 },
+            DecodeView { id: 2, queued: 3, active: 1, free_kv_blocks: 64 },
+        ];
+        // Shard of 8 blocks: only id 2 fits, despite its deeper queue.
+        assert_eq!(r.pick_decode(&views, 8), Some(2));
+        // Small shard: both fit, least loaded wins.
+        assert_eq!(r.pick_decode(&views, 1), Some(1));
+        // Nobody fits: least loaded, larger headroom on ties.
+        let cramped = [
+            DecodeView { id: 1, queued: 1, active: 0, free_kv_blocks: 3 },
+            DecodeView { id: 2, queued: 1, active: 0, free_kv_blocks: 5 },
+        ];
+        assert_eq!(r.pick_decode(&cramped, 100), Some(2));
+        // Fluid mode (no arenas): pure queue-depth JSQ.
+        let fluid = [
+            DecodeView { id: 5, queued: 2, active: 2, free_kv_blocks: 0 },
+            DecodeView { id: 6, queued: 0, active: 1, free_kv_blocks: 0 },
+        ];
+        assert_eq!(r.pick_decode(&fluid, 0), Some(6));
+    }
+
+    #[test]
+    fn kv_stream_plan_shards_follow_layer_split() {
+        let spec = ModelSpec::llama2_13b();
+        let part = spec.partition(8);
+        let asn: Vec<(usize, Vec<usize>)> = vec![(3, (0..6).collect()), (7, vec![6, 7])];
+        let pipe = ExecPipeline::from_assignment(&asn, &part);
+        // Fluid mode: shard bytes come straight from the per-token model.
+        let plan = plan_kv_stream(1, &pipe, 192, &spec, None);
+        assert_eq!(plan.shard_bytes.len(), 2);
+        assert_eq!(plan.intents.len(), 2);
+        assert_eq!(plan.needs, vec![(3, 0), (7, 1)]);
+        assert!(plan.shard_bytes[0] > plan.shard_bytes[1], "more layers ⇒ bigger shard");
+        for it in &plan.intents {
+            assert_eq!(it.medium, Medium::Rdma);
+            assert_eq!(it.src, 1);
+        }
+        // Paged mode: the export covers whole blocks (blocks_for(prompt)).
+        let geom = KvGeometry::for_model(&spec, 16).unwrap();
+        let paged = plan_kv_stream(1, &pipe, 100, &spec, Some(&geom));
+        let total: u64 = paged.shard_bytes.iter().sum();
+        let expect = geom.bytes_for(geom.blocks_for(100));
+        assert!(
+            total >= expect && total <= expect + 2,
+            "paged export {total} must cover blocks_for(prompt) = {expect}"
+        );
+        // A stage colocated with the prefill node needs no fabric flow.
+        let local = plan_kv_stream(3, &pipe, 192, &spec, None);
+        assert_eq!(local.intents.len(), 1);
+        assert_eq!(local.needs, vec![(7, 1)]);
+        // Fully local hand-off: nothing to stream.
+        let solo = plan_kv_stream(5, &ExecPipeline::local(5, &spec), 64, &spec, None);
+        assert!(solo.intents.is_empty() && solo.needs.is_empty());
+        assert_eq!(solo.shard_bytes.len(), 1);
+    }
+
+    /// Minimal deterministic policy for wrapper tests.
+    struct Fixed {
+        keep_alive: SimTime,
+    }
+
+    impl ScalingPolicy for Fixed {
+        fn name(&self) -> &'static str {
+            "fixed"
+        }
+        fn configure(&mut self, _instance_rps: f64, keep_alive: SimTime) {
+            self.keep_alive = keep_alive;
+        }
+        fn observe_arrival(&mut self, _now: SimTime) {}
+        fn desired(&mut self, _now: SimTime, queued: usize, current: usize) -> usize {
+            current.max(1) + queued
+        }
+        fn should_reclaim(&self, now: SimTime, idle_since: SimTime) -> bool {
+            now.saturating_sub(idle_since) >= self.keep_alive
+        }
+    }
+
+    #[test]
+    fn role_assignment_fills_empty_pools_then_deficits() {
+        let mut t = TwoTierScaler::new(Box::new(Fixed { keep_alive: SimTime::ZERO }), 2.0);
+        assert_eq!(t.pick_role(0, 0), Role::Prefill, "first instance prefills");
+        assert_eq!(t.pick_role(1, 0), Role::Decode, "second fills the decode pool");
+        t.set_wants(3, 1);
+        assert_eq!(t.pick_role(1, 1), Role::Prefill, "prefill deficit 2 > decode 0");
+        t.set_wants(1, 4);
+        assert_eq!(t.pick_role(1, 1), Role::Decode);
+        t.set_wants(2, 2);
+        assert_eq!(t.pick_role(1, 1), Role::Decode, "equal deficits tie to decode");
+        assert_eq!(t.wants(), (2, 2));
+    }
+
+    #[test]
+    fn decode_reclaim_waits_for_graceful_drain() {
+        let keep = SimTime::from_secs(10.0);
+        let mut t = TwoTierScaler::new(Box::new(Fixed { keep_alive: SimTime::ZERO }), 2.0);
+        t.configure(1.0, keep);
+        let idle = SimTime::from_secs(100.0);
+        // Idle past the plain keep-alive but inside the drain window.
+        assert!(!t.should_reclaim_decode(idle + SimTime::from_secs(12.0), idle, keep));
+        // Past keep_alive × mult: both gates open.
+        assert!(t.should_reclaim_decode(idle + SimTime::from_secs(20.0), idle, keep));
+        // The wrapped policy is still consulted (its own keep-alive was
+        // configured to `keep`, so 20 s satisfies it too).
+        let mut eager = TwoTierScaler::new(Box::new(Fixed { keep_alive: SimTime::ZERO }), 1.0);
+        eager.configure(1.0, SimTime::from_secs(30.0));
+        assert!(
+            !eager.should_reclaim_decode(idle + SimTime::from_secs(20.0), idle, keep),
+            "inner policy's 30 s keep-alive must still hold"
+        );
+    }
+
+    #[test]
+    fn decode_tier_desired_tracks_queue() {
+        let mut t = TwoTierScaler::new(Box::new(Fixed { keep_alive: SimTime::ZERO }), 2.0);
+        t.observe_decode_demand(SimTime::ZERO);
+        assert_eq!(t.desired_decode(SimTime::ZERO, 0, 1), 1);
+        assert_eq!(t.desired_decode(SimTime::ZERO, 3, 2), 5);
+    }
+}

@@ -65,6 +65,37 @@ pub struct ContentionReport {
     pub replans: u64,
 }
 
+/// The disaggregated-serving probe row: the long-prefill RAG trace
+/// replayed twice on the same KV-paged, bisection-limited cluster —
+/// colocated versus split prefill/decode pools — so the only difference
+/// is the serving topology (see [`crate::disagg`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DisaggReport {
+    /// p99 TTFT of the colocated run, seconds.
+    pub colocated_p99_ttft_s: f64,
+    /// p99 TTFT of the disaggregated run, seconds.
+    pub disagg_p99_ttft_s: f64,
+    /// `colocated / disagg` — >1 means dedicated prefill pools win.
+    pub ttft_speedup: f64,
+    /// Networked KV hand-off streams in the disaggregated run.
+    pub kv_streams: u64,
+    /// Total prefill→decode hand-off seconds (stream + target wait).
+    pub kv_stream_flow_s: f64,
+    /// Mean hand-off seconds per networked stream.
+    pub mean_kv_stream_s: f64,
+    /// Contended flow-seconds of the disaggregated run — KV streams and
+    /// weight multicasts sharing the same metered fabric.
+    pub disagg_contended_s: f64,
+    /// GPU·s billed to prefill-pool nodes (disaggregated run).
+    pub prefill_gpu_s: f64,
+    /// GPU·s billed to decode-pool nodes (disaggregated run).
+    pub decode_gpu_s: f64,
+    /// Total metered GPU·s of the colocated run.
+    pub colocated_gpu_s: f64,
+    /// Total metered GPU·s of the disaggregated run.
+    pub disagg_gpu_s: f64,
+}
+
 /// Harness configuration: the cluster every cell runs on and the shared
 /// trace/SLO parameters.
 #[derive(Clone, Debug)]
@@ -157,6 +188,8 @@ pub struct EvalReport {
     pub cells: Vec<EvalCell>,
     /// Shared-fabric contention + cancellation probe rows.
     pub contention: Option<ContentionReport>,
+    /// Disaggregated-vs-colocated A/B on the long-prefill RAG trace.
+    pub disagg: Option<DisaggReport>,
 }
 
 /// The trace matrix: deterministic per [`EvalConfig::seed`].
@@ -186,6 +219,16 @@ pub fn trace_matrix(cfg: &EvalConfig) -> Vec<(&'static str, Trace)> {
     let burst = burst_trace(48, 0.0, model, 128, 64, &mut Rng::new(cfg.seed.wrapping_add(3)));
     spike.merge(&burst, SimTime::from_secs(30.0));
     vec![("bursty", bursty), ("steady", steady), ("spike", spike)]
+}
+
+/// The long-prefill RAG trace the disaggregation probe replays: modest
+/// arrival rate, ~1.8k-token retrieval-stuffed prompts, short answers —
+/// the regime where colocated serving burns decode slots on prefill and
+/// dedicated prefill pools pay off. Deterministic per
+/// [`EvalConfig::seed`], capped at 90 s regardless of `duration_s`.
+pub fn rag_trace(cfg: &EvalConfig) -> Trace {
+    let mut rng = Rng::new(cfg.seed.wrapping_add(200));
+    poisson_trace(1.5, cfg.duration_s.min(90.0), &cfg.model.name, 1792, 48, &mut rng)
 }
 
 /// Scaling backends every trace replays against: λPipe versus the two
@@ -333,6 +376,55 @@ pub fn run_contention(cfg: &EvalConfig) -> ContentionReport {
     }
 }
 
+/// Run the disaggregation probe: replay [`rag_trace`] twice on a
+/// KV-paged, bisection-limited cluster — colocated, then with
+/// `[disagg]` splitting the instance pool — and compare p99 TTFT plus
+/// the KV hand-off traffic the split puts on the shared fabric.
+pub fn run_disagg(cfg: &EvalConfig) -> DisaggReport {
+    let mut cluster = cfg.cluster.clone();
+    cluster.network.fabric_gbps = cluster.network.rdma_gbps;
+    let trace = rag_trace(cfg);
+    let run = |disagg: bool| {
+        let mut c = cluster.clone();
+        if disagg {
+            c.disagg = Some(crate::config::DisaggConfig::default());
+        }
+        ServingSession::builder()
+            .cluster(c)
+            .model(cfg.model.clone())
+            .system(SystemKind::LambdaScale { k: 2 })
+            .kv_block_tokens(32)
+            .kv_max_ctx_tokens(4096)
+            .max_batch(cfg.max_batch)
+            .keep_alive(cfg.keep_alive_s)
+            .initial_gpu_sources(1)
+            .initial_host_sources(2)
+            .trace(trace.clone())
+            .run()
+            .into_single()
+    };
+    let colo = run(false);
+    let dis = run(true);
+    let p99 = |m: &crate::metrics::MetricsCollector| {
+        let mut s = m.ttft_samples();
+        s.p99()
+    };
+    let (colo_p99, dis_p99) = (p99(&colo), p99(&dis));
+    DisaggReport {
+        colocated_p99_ttft_s: colo_p99,
+        disagg_p99_ttft_s: dis_p99,
+        ttft_speedup: colo_p99 / dis_p99.max(1e-9),
+        kv_streams: dis.kv_streams,
+        kv_stream_flow_s: dis.kv_stream_flow_s,
+        mean_kv_stream_s: dis.kv_stream_flow_s / (dis.kv_streams.max(1) as f64),
+        disagg_contended_s: dis.fabric_contended_s,
+        prefill_gpu_s: dis.prefill_gpu_s,
+        decode_gpu_s: dis.decode_gpu_s,
+        colocated_gpu_s: colo.gpu_seconds(),
+        disagg_gpu_s: dis.gpu_seconds(),
+    }
+}
+
 /// Run the full matrix and normalize each trace's costs to its
 /// ServerlessLLM + reactive-window baseline cell.
 pub fn run_matrix(cfg: &EvalConfig) -> EvalReport {
@@ -362,6 +454,7 @@ pub fn run_matrix(cfg: &EvalConfig) -> EvalReport {
         slo_ttft_s: cfg.slo_ttft_s,
         cells,
         contention: Some(run_contention(cfg)),
+        disagg: Some(run_disagg(cfg)),
     }
 }
 
@@ -401,6 +494,24 @@ impl ContentionReport {
     }
 }
 
+impl DisaggReport {
+    fn to_json(&self) -> Json {
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        o.insert("colocated_p99_ttft_s".into(), Json::Num(self.colocated_p99_ttft_s));
+        o.insert("disagg_p99_ttft_s".into(), Json::Num(self.disagg_p99_ttft_s));
+        o.insert("ttft_speedup".into(), Json::Num(self.ttft_speedup));
+        o.insert("kv_streams".into(), Json::Num(self.kv_streams as f64));
+        o.insert("kv_stream_flow_s".into(), Json::Num(self.kv_stream_flow_s));
+        o.insert("mean_kv_stream_s".into(), Json::Num(self.mean_kv_stream_s));
+        o.insert("disagg_contended_s".into(), Json::Num(self.disagg_contended_s));
+        o.insert("prefill_gpu_s".into(), Json::Num(self.prefill_gpu_s));
+        o.insert("decode_gpu_s".into(), Json::Num(self.decode_gpu_s));
+        o.insert("colocated_gpu_s".into(), Json::Num(self.colocated_gpu_s));
+        o.insert("disagg_gpu_s".into(), Json::Num(self.disagg_gpu_s));
+        Json::Obj(o)
+    }
+}
+
 impl EvalReport {
     /// The scoreboard as the `BENCH_eval.json` document.
     pub fn to_json(&self) -> Json {
@@ -413,6 +524,9 @@ impl EvalReport {
         o.insert("cells".into(), Json::Arr(self.cells.iter().map(|c| c.to_json()).collect()));
         if let Some(c) = &self.contention {
             o.insert("contention".into(), c.to_json());
+        }
+        if let Some(d) = &self.disagg {
+            o.insert("disagg".into(), d.to_json());
         }
         Json::Obj(o)
     }
@@ -482,6 +596,28 @@ impl EvalReport {
                 c.cancel_on_gpu_s,
                 c.cancel_off_gpu_s,
                 c.gpu_s_saved,
+            ));
+        }
+        if let Some(d) = &self.disagg {
+            s.push_str(&format!(
+                "\n## Disaggregated prefill/decode (long-prefill RAG trace)\n\n\
+                 Same KV-paged, bisection-limited cluster, colocated vs `[disagg]` \
+                 split pools: p99 TTFT {:.3} s colocated vs {:.3} s disaggregated \
+                 ({:.2}× speedup). The split streamed {} KV shards over the shared \
+                 fabric ({:.2} hand-off flow-seconds, {:.3} s mean, {:.2} contended \
+                 flow-seconds alongside weight multicasts) and billed \
+                 {:.0} prefill-pool + {:.0} decode-pool GPU·s vs {:.0} GPU·s \
+                 colocated.\n",
+                d.colocated_p99_ttft_s,
+                d.disagg_p99_ttft_s,
+                d.ttft_speedup,
+                d.kv_streams,
+                d.kv_stream_flow_s,
+                d.mean_kv_stream_s,
+                d.disagg_contended_s,
+                d.prefill_gpu_s,
+                d.decode_gpu_s,
+                d.colocated_gpu_s,
             ));
         }
         let find = |sys: &str, scaler: &str| {
@@ -565,6 +701,25 @@ mod tests {
             "revocation must save GPU·s ({} on vs {} off)",
             c.cancel_on_gpu_s,
             c.cancel_off_gpu_s
+        );
+    }
+
+    /// The disaggregation A/B: on the long-prefill RAG trace, dedicated
+    /// prefill pools must beat colocated p99 TTFT, and the KV hand-off
+    /// traffic must be visible in the stream/flow meters.
+    #[test]
+    fn disagg_probe_beats_colocated_on_long_prefill() {
+        let cfg = tiny();
+        let d = run_disagg(&cfg);
+        assert!(d.kv_streams > 0, "KV shards must stream over the fabric");
+        assert!(d.kv_stream_flow_s > 0.0, "hand-off flow-seconds must be metered");
+        assert!(d.prefill_gpu_s > 0.0, "prefill pool must bill GPU·s");
+        assert!(d.decode_gpu_s > 0.0, "decode pool must bill GPU·s");
+        assert!(
+            d.ttft_speedup > 1.0,
+            "disagg p99 TTFT {:.3} s must beat colocated {:.3} s",
+            d.disagg_p99_ttft_s,
+            d.colocated_p99_ttft_s
         );
     }
 

@@ -22,6 +22,18 @@
 //!   for mode switches, applied to preemption) or swap it to host memory
 //!   at host-bandwidth cost.
 //!
+//! **KV shard export/import accounting** (disaggregated serving,
+//! [`crate::disagg`]): a prefill-role instance's arena holds a request's
+//! blocks only through prefill — at hand-off the request leaves the
+//! instance, its `blocks_for(prompt + 1)` blocks return to the prefill
+//! pool, and the shard's bytes travel the fabric as a
+//! [`crate::sim::fabric::FlowClass::Kv`] flow (per-layer split across a
+//! pipelined target's stages). The decode-side arena is charged only at
+//! admission, which gates on *both* a free decode slot and the shard's
+//! arrival — so in-flight shards occupy fabric, never pool capacity, and
+//! a hand-off that lands on a full arena queues under the ordinary
+//! KV-gated admission rules.
+//!
 //! The whole subsystem is off by default: `kv_block_tokens = 0`
 //! ([`crate::config::KvCacheConfig`]) keeps the legacy fluid model and
 //! the seed figures bit-identical.

@@ -25,6 +25,9 @@
 //! * [`kvcache`] — paged KV residency (block pools charged against the
 //!   managed GPU budget) + iteration-level continuous batching with
 //!   pluggable recompute-vs-swap preemption; off when `kv_block_tokens = 0`.
+//! * [`disagg`] — prefill/decode disaggregated serving: dedicated pools
+//!   with per-request KV shards streamed between them as contending flows
+//!   on the shared fabric; off unless `[disagg]` is configured.
 //! * [`coordinator`] — the trait-based serving stack: a policy-free
 //!   multi-model [`coordinator::engine::ServingEngine`] driven through the
 //!   builder-style [`coordinator::session::ServingSession`] API, with
@@ -48,6 +51,7 @@
 
 pub mod config;
 pub mod coordinator;
+pub mod disagg;
 pub mod eval;
 pub mod figures;
 pub mod kvcache;

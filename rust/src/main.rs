@@ -4,8 +4,9 @@
 //! lambda-scale figures [--only figNN]      regenerate paper figures
 //! lambda-scale session [--requests N] [--gpu-cap GB] [--host-cap GB]
 //!                      [--kv-block-tokens B] [--scaler P] [--slo-ttft S]
-//!                                          two-tenant ServingSession demo
-//!                                          (caps bound the shared MemoryManager)
+//!                      [--disagg]           two-tenant ServingSession demo
+//!                                          (caps bound the shared MemoryManager;
+//!                                          --disagg splits prefill/decode pools)
 //! lambda-scale eval [--duration S] [--seed N] [--slo-ttft S] [--config F]
 //!                   [--out BENCH_eval.json] [--md RESULTS.md]
 //!                                          backends × scaling policies × traces
@@ -19,7 +20,7 @@
 //!
 //! (No clap offline — a small hand-rolled parser below.)
 
-use lambda_scale::config::{AutoscalerConfig, ClusterConfig, ScalerKind};
+use lambda_scale::config::{AutoscalerConfig, ClusterConfig, DisaggConfig, ScalerKind};
 use lambda_scale::coordinator::policy::{BatchedAdmission, LeastLoaded};
 use lambda_scale::coordinator::{scaler_from_config, ServingSession, SystemKind};
 use lambda_scale::eval::{EvalConfig, EvalReport};
@@ -118,9 +119,16 @@ fn main() {
                 target_ttft_s: slo_ttft,
                 ..Default::default()
             };
+            let disagg = args.iter().any(|a| a == "--disagg");
             let mut cluster = ClusterConfig::testbed1();
             cluster.n_nodes = 12;
             cluster.kv.block_tokens = kv_block_tokens;
+            if disagg {
+                // Prefill/decode disaggregation (off by default): each
+                // tenant's instances split into dedicated pools with KV
+                // shards streamed between them on the shared fabric.
+                cluster.disagg = Some(DisaggConfig::default());
+            }
             if let Some(g) = gpu_cap_gb {
                 cluster.node.gpu_capacity_bytes = (g * 1e9) as u64;
             }
@@ -154,8 +162,9 @@ fn main() {
                 .trace(trace7)
                 .run();
             println!(
-                "two-tenant session: {n}(+{}) requests per model, shared 12-node cluster",
-                n / 2
+                "two-tenant session: {n}(+{}) requests per model, shared 12-node cluster{}",
+                n / 2,
+                if disagg { " (disaggregated prefill/decode pools)" } else { "" }
             );
             let cap_str = |c: Option<f64>| c.map_or("unbounded".to_string(), |g| format!("{g} GB"));
             println!(
@@ -280,7 +289,8 @@ fn main() {
                  \x20 figures   [--only figNN]              regenerate paper figures\n\
                  \x20 session   [--requests N] [--gpu-cap GB] [--host-cap GB]\n\
                  \x20           [--kv-block-tokens B] [--scaler reactive|slo-aware|predictive]\n\
-                 \x20           [--slo-ttft S]              two-tenant memory-contention demo\n\
+                 \x20           [--slo-ttft S] [--disagg]   two-tenant memory-contention demo\n\
+                 \x20                                       (--disagg: prefill/decode pools)\n\
                  \x20 eval      [--duration S] [--seed N] [--slo-ttft S] [--config F]\n\
                  \x20           [--out F] [--md F]          SLO/cost scoreboard → BENCH_eval.json\n\
                  \x20                                       + RESULTS.md (Fig 14/15 analogue)\n\

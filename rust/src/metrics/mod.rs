@@ -36,6 +36,11 @@ pub struct RequestMetrics {
     pub kv_recompute_s: f64,
     /// Estimated seconds of KV host-swap stall paid after preemptions.
     pub kv_swap_s: f64,
+    /// Disaggregated serving: seconds between prefill completion and the
+    /// request's KV shard becoming resident on its decode instance
+    /// (stream time on the shared fabric, plus any wait for a decode
+    /// target). Zero in colocated mode and for same-node hand-offs.
+    pub kv_stream_s: f64,
 }
 
 impl RequestMetrics {
@@ -118,6 +123,18 @@ pub struct MetricsCollector {
     /// Shared fabric: (time, aggregate transfer throughput GB/s) samples
     /// for this tenant, recorded at rate-change points.
     pub fabric_util: Vec<(SimTime, f64)>,
+    /// Disaggregated serving: KV hand-off streams launched on the fabric
+    /// (same-node hand-offs, which never touch the network, are excluded).
+    pub kv_streams: u64,
+    /// Disaggregated serving: total flow-seconds of per-request KV
+    /// streaming — the integral of `kv_stream_s` over all requests.
+    pub kv_stream_flow_s: f64,
+    /// Disaggregated serving: GPU·seconds billed to prefill-role nodes
+    /// (subset of [`MetricsCollector::gpu_seconds`]; zero in colocated
+    /// mode, where nodes have no role).
+    pub prefill_gpu_s: f64,
+    /// Disaggregated serving: GPU·seconds billed to decode-role nodes.
+    pub decode_gpu_s: f64,
 }
 
 impl MetricsCollector {
@@ -300,6 +317,28 @@ impl MetricsCollector {
         self.fabric_util.iter().map(|&(_, g)| g).fold(0.0, f64::max)
     }
 
+    /// Record one per-request KV hand-off stream (disaggregated serving):
+    /// `seconds` between prefill completion and KV residency on the
+    /// decode instance. `networked` is false for same-node hand-offs.
+    pub fn record_kv_stream(&mut self, seconds: f64, networked: bool) {
+        if networked {
+            self.kv_streams += 1;
+        }
+        self.kv_stream_flow_s += seconds;
+    }
+
+    /// Bill GPU·seconds to a role-specific pool (disaggregated serving).
+    /// Callers still bill the same interval through
+    /// [`MetricsCollector::record_node_busy`]; this split is a view, not
+    /// an addition.
+    pub fn record_role_gpu_s(&mut self, prefill: bool, gpu_seconds: f64) {
+        if prefill {
+            self.prefill_gpu_s += gpu_seconds;
+        } else {
+            self.decode_gpu_s += gpu_seconds;
+        }
+    }
+
     /// Sample one instance's KV pool utilization.
     pub fn record_kv_util(&mut self, t: SimTime, instance: u64, utilization: f64) {
         self.kv_util.push((t, instance, utilization));
@@ -403,6 +442,21 @@ mod tests {
         c.record_fabric_util(SimTime::from_secs(3.0), 10.0);
         assert_eq!(c.fabric_util.len(), 3);
         assert!((c.fabric_util_peak() - 90.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disagg_stream_and_role_counters() {
+        let mut c = MetricsCollector::new();
+        c.record_kv_stream(0.4, true);
+        c.record_kv_stream(0.0, false); // same-node hand-off: time only
+        c.record_kv_stream(0.6, true);
+        assert_eq!(c.kv_streams, 2);
+        assert!((c.kv_stream_flow_s - 1.0).abs() < 1e-12);
+        c.record_role_gpu_s(true, 3.0);
+        c.record_role_gpu_s(false, 5.0);
+        c.record_role_gpu_s(true, 1.0);
+        assert!((c.prefill_gpu_s - 4.0).abs() < 1e-12);
+        assert!((c.decode_gpu_s - 5.0).abs() < 1e-12);
     }
 
     #[test]

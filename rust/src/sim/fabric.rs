@@ -42,10 +42,25 @@ pub type OpId = u64;
 /// Identifier of one in-flight transfer (internal; exposed for tests).
 pub type FlowId = u64;
 
+/// Traffic class of a fabric operation. Classes share bandwidth
+/// identically — a KV stream contends with a model multicast exactly as
+/// two multicasts contend — but are metered separately, so the scoreboard
+/// can attribute fabric pressure to scaling (weights) vs serving (KV
+/// hand-offs) independently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlowClass {
+    /// Model-weight movement: multicasts, local loads, mode switches.
+    Weights,
+    /// Per-request KV shard streams (disaggregated prefill → decode).
+    Kv,
+}
+
 /// Specification of one transfer operation submitted to the fabric.
 pub struct FabricOp {
     /// Owning tenant (model index) for metrics attribution.
     pub model: usize,
+    /// Traffic class for per-class utilization metering.
+    pub class: FlowClass,
     /// Initial holdings: `(node, block, tier)`; GPU-tier holdings count as
     /// arrivals at operation start.
     pub initial: Vec<(NodeId, BlockId, Tier)>,
@@ -75,6 +90,7 @@ pub struct FabricOp {
 
 struct OpState {
     model: usize,
+    class: FlowClass,
     n_blocks: usize,
     block_bytes: Vec<u64>,
     opts: TransferOpts,
@@ -231,6 +247,7 @@ impl Fabric {
         let gate_open = spec.start_delay == SimTime::ZERO;
         let op = OpState {
             model: spec.model,
+            class: spec.class,
             n_blocks,
             block_bytes: spec.block_bytes,
             opts: spec.opts,
@@ -739,16 +756,44 @@ impl Fabric {
         }
         for fl in self.flows.values() {
             if let Some(op) = self.ops.get(&fl.op) {
-                let bw = match fl.intent.medium {
-                    Medium::Rdma => self.net.rdma_gbps,
-                    Medium::Nvlink => self.net.nvlink_gbps,
-                    Medium::HostMem => self.net.hostmem_gbps,
-                    Medium::Ssd => self.net.ssd_gbps,
-                };
-                *m.entry(op.model).or_insert(0.0) += fl.rate * bw;
+                *m.entry(op.model).or_insert(0.0) += fl.rate * self.flow_bw(fl);
             }
         }
         m
+    }
+
+    fn flow_bw(&self, fl: &Flow) -> f64 {
+        match fl.intent.medium {
+            Medium::Rdma => self.net.rdma_gbps,
+            Medium::Nvlink => self.net.nvlink_gbps,
+            Medium::HostMem => self.net.hostmem_gbps,
+            Medium::Ssd => self.net.ssd_gbps,
+        }
+    }
+
+    /// Aggregate in-flight throughput (GB/s) by traffic class:
+    /// `(weights, kv)`. The KV component is the "new flow class" metric —
+    /// how much of the fabric per-request KV hand-offs are occupying right
+    /// now — while class-blind contention still shows up in every
+    /// operation's contended flow-seconds.
+    pub fn util_by_class(&self) -> (f64, f64) {
+        let mut weights = 0.0;
+        let mut kv = 0.0;
+        for fl in self.flows.values() {
+            if let Some(op) = self.ops.get(&fl.op) {
+                let g = fl.rate * self.flow_bw(fl);
+                match op.class {
+                    FlowClass::Weights => weights += g,
+                    FlowClass::Kv => kv += g,
+                }
+            }
+        }
+        (weights, kv)
+    }
+
+    /// Traffic class of a registered operation (`None` once drained).
+    pub fn op_class(&self, op: OpId) -> Option<FlowClass> {
+        self.ops.get(&op).map(|o| o.class)
     }
 }
 
@@ -824,6 +869,7 @@ mod tests {
     ) -> FabricOp {
         FabricOp {
             model,
+            class: FlowClass::Weights,
             initial: plan.initial.clone(),
             intents: plan.intents.clone(),
             loads: vec![],
@@ -1014,6 +1060,72 @@ mod tests {
         assert_eq!(fab.active_ops(), 0);
     }
 
+    /// A KV-class op is metered separately by `util_by_class` while
+    /// contending with a weights-class op on the same NICs: the weights
+    /// op is strictly slower than when it runs alone.
+    #[test]
+    fn kv_class_flows_are_metered_and_contend() {
+        let c = net();
+        let b = 4usize;
+        let bytes = vec![400_000_000u64; b];
+        let nodes: Vec<NodeId> = (0..4).collect();
+        let plan = kway_plan(&nodes, 1, b, Tier::Gpu);
+
+        // Weights op alone.
+        let mut fab = Fabric::new(c.clone());
+        let mut drv = Driver::new();
+        let (_, upd) = fab.begin_op(SimTime::ZERO, op_from_plan(0, &plan, &bytes, &nodes));
+        drv.absorb(SimTime::ZERO, upd);
+        drv.run(&mut fab);
+        let alone = drv.finished.iter().map(|&(t, _, _)| t).max().unwrap();
+
+        // Same weights op + a KV stream hammering node 1's RDMA rx port.
+        let mut fab = Fabric::new(c);
+        let mut drv = Driver::new();
+        let (wop, upd) = fab.begin_op(SimTime::ZERO, op_from_plan(0, &plan, &bytes, &nodes));
+        drv.absorb(SimTime::ZERO, upd);
+        let kv_bytes = vec![200_000_000u64; 2];
+        let (kop, upd) = fab.begin_op(
+            SimTime::ZERO,
+            FabricOp {
+                model: 0,
+                class: FlowClass::Kv,
+                initial: vec![(2, 0, Tier::Gpu), (2, 1, Tier::Gpu)],
+                intents: vec![
+                    SendIntent { src: 2, dst: 1, block: 0, medium: Medium::Rdma },
+                    SendIntent { src: 2, dst: 1, block: 1, medium: Medium::Rdma },
+                ],
+                loads: vec![],
+                block_bytes: kv_bytes,
+                opts: TransferOpts::default(),
+                start_delay: SimTime::ZERO,
+                expect_full: vec![],
+                watch: vec![],
+                ssd_fallback: HashSet::new(),
+            },
+        );
+        assert_eq!(fab.op_class(wop), Some(FlowClass::Weights));
+        assert_eq!(fab.op_class(kop), Some(FlowClass::Kv));
+        let (w_gbps, kv_gbps) = fab.util_by_class();
+        assert!(w_gbps > 0.0, "weights flows in flight");
+        assert!(kv_gbps > 0.0, "kv flows in flight must be metered");
+        drv.absorb(SimTime::ZERO, upd);
+        drv.run(&mut fab);
+        let together =
+            drv.finished.iter().filter(|&&(_, o, _)| o == wop).map(|&(t, _, _)| t).max().unwrap();
+        assert!(
+            together > alone,
+            "kv stream must slow the multicast: {together:?} vs {alone:?}"
+        );
+        // Empty expect_full: the kv op "finishes" at begin (nothing gates
+        // on full nodes) and reports residual contention when it drains.
+        let kv_reports: Vec<f64> =
+            drv.finished.iter().filter(|&&(_, o, _)| o == kop).map(|&(_, _, c)| c).collect();
+        assert!(!kv_reports.is_empty());
+        assert!(kv_reports.iter().sum::<f64>() > 0.0, "kv flows saw contention");
+        assert_eq!(fab.active_ops(), 0);
+    }
+
     /// Whole-model local loads deliver everything at the precomputed
     /// duration (storage-port FIFO per node).
     #[test]
@@ -1026,6 +1138,7 @@ mod tests {
             SimTime::ZERO,
             FabricOp {
                 model: 0,
+                class: FlowClass::Weights,
                 initial: vec![],
                 intents: vec![],
                 loads: vec![(3, Medium::Ssd, 1.5), (5, Medium::HostMem, 0.25)],

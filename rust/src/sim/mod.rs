@@ -20,6 +20,6 @@ pub mod time;
 pub mod transfer;
 
 pub use event::EventQueue;
-pub use fabric::{Fabric, FabricOp, FabricUpdate, OpId};
+pub use fabric::{Fabric, FabricOp, FabricUpdate, FlowClass, OpId};
 pub use time::SimTime;
 pub use transfer::{BlockId, Medium, NodeId, SendIntent, Tier, TransferLog, TransferOpts, TransferSim};

@@ -1,0 +1,126 @@
+//! Disaggregated prefill/decode serving: request conservation under
+//! split pools — including the transient multi-stage (pipelined)
+//! instances λPipe spawns during scale-up, which always join the decode
+//! pool — and the off-by-default guarantee that a session without
+//! `[disagg]` replays the colocated engine bit-identically.
+
+use lambda_scale::config::{ClusterConfig, DisaggConfig};
+use lambda_scale::coordinator::{ServingSession, SystemKind};
+use lambda_scale::metrics::MetricsCollector;
+use lambda_scale::model::ModelSpec;
+use lambda_scale::util::rng::Rng;
+use lambda_scale::workload::{burst_trace, Trace};
+
+fn key(m: &MetricsCollector) -> Vec<(u64, u64, u64)> {
+    let mut v: Vec<(u64, u64, u64)> =
+        m.requests.iter().map(|r| (r.id, r.first_token.0, r.completion.0)).collect();
+    v.sort_unstable();
+    v
+}
+
+fn cluster(n_nodes: usize) -> ClusterConfig {
+    let mut c = ClusterConfig::testbed1();
+    c.n_nodes = n_nodes;
+    c
+}
+
+fn burst(n: usize) -> Trace {
+    burst_trace(n, 0.0, "llama2-13b", 128, 64, &mut Rng::new(7))
+}
+
+/// A synchronized burst forces a λPipe scale-up, so execute-while-load
+/// pipelined instances (always decode-role) serve alongside the static
+/// pools. Every request must still complete exactly once: there is no
+/// rejection path, so conservation is `completed == admitted`.
+#[test]
+fn disagg_conserves_requests_through_pipelined_scale_up() {
+    let mut c = cluster(8);
+    c.disagg = Some(DisaggConfig::default());
+    let report = ServingSession::builder()
+        .cluster(c)
+        .model(ModelSpec::llama2_13b())
+        .system(SystemKind::LambdaScale { k: 2 })
+        .max_batch(4)
+        .trace(burst(32))
+        .run();
+    let r = &report.models[0];
+    assert_eq!(r.completed, 32, "admitted = completed + rejected, and nothing rejects");
+    assert_eq!(r.metrics.requests.len(), 32);
+    for q in &r.metrics.requests {
+        assert!(q.first_token <= q.completion, "req {} finished before first token", q.id);
+        assert!(q.kv_stream_s >= 0.0);
+    }
+    assert!(r.metrics.prefill_gpu_s > 0.0, "prefill pool must bill GPU time");
+    assert!(r.metrics.decode_gpu_s > 0.0, "decode pool must bill GPU time");
+}
+
+/// Same conservation law in paged-KV mode, where decode admission gates
+/// on both a free slot and the streamed shard's arrival: every hand-off
+/// must land (or be re-planned) — no request may be dropped in flight.
+#[test]
+fn disagg_kv_mode_conserves_requests_and_streams_shards() {
+    let mut c = cluster(8);
+    c.disagg = Some(DisaggConfig::default());
+    let report = ServingSession::builder()
+        .cluster(c)
+        .model(ModelSpec::llama2_13b())
+        .system(SystemKind::LambdaScale { k: 2 })
+        .kv_block_tokens(16)
+        .max_batch(4)
+        .trace(burst(24))
+        .run();
+    let r = &report.models[0];
+    assert_eq!(r.completed, 24, "every admitted request must complete in KV mode");
+    assert_eq!(r.metrics.requests.len(), 24);
+    assert!(r.metrics.kv_streams > 0, "cross-node KV hand-offs must stream on the fabric");
+    assert!(r.metrics.kv_stream_flow_s > 0.0, "hand-off flow-seconds must be metered");
+}
+
+/// The off switch: with no `[disagg]` section the engine must replay the
+/// colocated (pre-disaggregation) behavior bit-identically — same
+/// per-request first-token and completion timestamps run over run, and
+/// none of the disaggregation meters may move.
+#[test]
+fn disagg_off_replays_colocated_engine_bit_identically() {
+    let run = || {
+        ServingSession::builder()
+            .cluster(cluster(8))
+            .model(ModelSpec::llama2_13b())
+            .system(SystemKind::LambdaScale { k: 2 })
+            .max_batch(8)
+            .trace(burst(30))
+            .run()
+            .into_single()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.requests.len(), 30);
+    assert_eq!(key(&a), key(&b), "disagg-off replay must be bit-identical");
+    assert_eq!(a.kv_streams, 0, "no KV hand-off streams without [disagg]");
+    assert_eq!(a.kv_stream_flow_s, 0.0);
+    assert_eq!(a.prefill_gpu_s, 0.0, "role-split billing must stay dormant");
+    assert_eq!(a.decode_gpu_s, 0.0);
+    assert!(a.requests.iter().all(|r| r.kv_stream_s == 0.0));
+}
+
+/// Same off-switch law in paged-KV mode (the continuous-batching path).
+#[test]
+fn disagg_off_kv_mode_replays_bit_identically() {
+    let run = || {
+        ServingSession::builder()
+            .cluster(cluster(8))
+            .model(ModelSpec::llama2_13b())
+            .system(SystemKind::LambdaScale { k: 2 })
+            .kv_block_tokens(16)
+            .max_batch(8)
+            .trace(burst(30))
+            .run()
+            .into_single()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.requests.len(), 30);
+    assert_eq!(key(&a), key(&b), "disagg-off KV-mode replay must be bit-identical");
+    assert_eq!(a.kv_streams, 0);
+    assert!(a.requests.iter().all(|r| r.kv_stream_s == 0.0));
+}
