@@ -9,7 +9,26 @@ mod parse;
 
 pub use parse::{parse_toml, TomlError, TomlValue};
 
+pub use crate::sim::event::QueueKind;
+
 use std::collections::BTreeMap;
+
+/// Parse a `[sim] event_queue` / CLI queue-kind name.
+pub fn queue_kind_parse(s: &str) -> Result<QueueKind, String> {
+    match s {
+        "wheel" => Ok(QueueKind::Wheel),
+        "heap" => Ok(QueueKind::Heap),
+        other => Err(format!("unknown event queue `{other}` (want wheel|heap)")),
+    }
+}
+
+/// Canonical queue-kind name (round-trips through [`queue_kind_parse`]).
+pub fn queue_kind_name(k: QueueKind) -> &'static str {
+    match k {
+        QueueKind::Wheel => "wheel",
+        QueueKind::Heap => "heap",
+    }
+}
 
 /// Network fabric parameters. Defaults = paper Testbed1 (400 Gb/s IB, GDR).
 #[derive(Clone, Debug, PartialEq)]
@@ -286,6 +305,10 @@ pub struct ClusterConfig {
     pub cost: CostModel,
     /// Prefill/decode disaggregation (`None` = colocated, the default).
     pub disagg: Option<DisaggConfig>,
+    /// Event-queue backend for the discrete-event simulator (the TOML
+    /// `[sim] event_queue` key). Both backends replay bit-identically;
+    /// `Heap` exists as the equivalence-test reference.
+    pub event_queue: QueueKind,
 }
 
 impl ClusterConfig {
@@ -440,6 +463,12 @@ impl ClusterConfig {
                 ));
             }
             cfg.disagg = Some(d);
+        }
+        if let Some(sec) = doc.get("sim") {
+            if let Some(v) = sec.get("event_queue") {
+                let s = v.as_str().ok_or("sim.event_queue must be a string")?;
+                cfg.event_queue = queue_kind_parse(s)?;
+            }
         }
         Ok(cfg)
     }
@@ -604,6 +633,32 @@ mod tests {
         // Pool floors clamp to at least one instance each.
         let z = parse_toml("[disagg]\nmin_prefill = 0\n").unwrap();
         assert_eq!(ClusterConfig::from_toml(&z).unwrap().disagg.unwrap().min_prefill, 1);
+    }
+
+    #[test]
+    fn from_toml_reads_sim_section() {
+        // Default: the timer wheel.
+        let off = ClusterConfig::from_toml(&parse_toml("").unwrap()).unwrap();
+        assert_eq!(off.event_queue, QueueKind::Wheel);
+        let heap =
+            ClusterConfig::from_toml(&parse_toml("[sim]\nevent_queue = \"heap\"\n").unwrap())
+                .unwrap();
+        assert_eq!(heap.event_queue, QueueKind::Heap);
+        let wheel =
+            ClusterConfig::from_toml(&parse_toml("[sim]\nevent_queue = \"wheel\"\n").unwrap())
+                .unwrap();
+        assert_eq!(wheel.event_queue, QueueKind::Wheel);
+        // Unknown backends are a config error.
+        let bad = parse_toml("[sim]\nevent_queue = \"splay\"\n").unwrap();
+        assert!(ClusterConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn queue_kind_parse_roundtrip() {
+        for kind in [QueueKind::Wheel, QueueKind::Heap] {
+            assert_eq!(queue_kind_parse(queue_kind_name(kind)).unwrap(), kind);
+        }
+        assert!(queue_kind_parse("binaryheap").is_err());
     }
 
     #[test]

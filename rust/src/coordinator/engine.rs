@@ -35,13 +35,13 @@ use super::scaling::{NewInstance, ScalingOutcome, Source};
 use super::session::{ModelReport, ModelSession, SessionReport};
 use crate::config::{ClusterConfig, DisaggConfig};
 use crate::disagg::{plan_kv_stream, DecodeView, DisaggRouter, PrefillView, Role, TwoTierScaler};
-use crate::kvcache::{ContinuousScheduler, KvGeometry, KvPool, KvVictimAction, ReqView};
+use crate::kvcache::{ContinuousScheduler, IterScratch, KvGeometry, KvPool, KvVictimAction, ReqView};
 use crate::memory::{Locality, MemoryManager};
 use crate::metrics::RequestMetrics;
 use crate::multicast::{BlockId, NodeId};
 use crate::pipeline::execution::ExecPipeline;
 use crate::pipeline::mode_switch::plan_switch_pipeline;
-use crate::sim::event::EventQueue;
+use crate::sim::event::{EventQueue, TimerId};
 use crate::sim::fabric::{Fabric, FabricOp, FabricUpdate, FlowClass, OpId};
 use crate::sim::time::SimTime;
 use crate::sim::transfer::Tier;
@@ -110,6 +110,14 @@ struct Inst {
     kv: Option<InstKv>,
     /// Pool membership in disaggregated mode (`None` when colocated).
     role: Option<Role>,
+    /// Pending revocable reclaim probes `(timer, fire time)`. Cancelled in
+    /// O(1) when the instance dies, so a removed instance leaves no
+    /// tombstone events churning the queue to the horizon; the fold of
+    /// each cancelled fire time into the engine horizon keeps cost
+    /// metering bit-identical to letting the probes pop as no-ops.
+    reclaim_timers: Vec<(TimerId, SimTime)>,
+    /// Reusable buffer for requests finishing in one advance step.
+    scratch_finished: Vec<ActiveReq>,
 }
 
 /// Forced-reclaim backstop: after this many policy-refused probes past
@@ -136,6 +144,33 @@ struct KvReqStats {
     recompute_s: f64,
     swap_s: f64,
     wait_s: f64,
+}
+
+/// Per-request engine bookkeeping, held in one dense arena indexed by the
+/// request's trace index. Replaces seven per-model hash maps: at a million
+/// requests the maps dominated the per-iteration profile with rehashing
+/// and pointer chasing, while the arena is a single O(1)-indexed slab
+/// sized once at `add_model`.
+#[derive(Clone, Debug, Default)]
+struct ReqState {
+    /// First-token emission time (set once; survives completion).
+    first_token: Option<SimTime>,
+    /// The instance currently holding the request (queued or admitted).
+    inst: Option<u64>,
+    /// Saved progress awaiting re-admission after displacement.
+    preempted: Option<PreemptedReq>,
+    /// First instant the waiting request was blocked on KV blocks.
+    kv_blocked_since: Option<SimTime>,
+    /// KV accounting, folded into `RequestMetrics` at completion.
+    kv: KvReqStats,
+    // ---- disaggregated mode ----------------------------------------------
+    /// Prefill phase completed (cleared at final completion) — routing
+    /// sends the request to the decode pool.
+    decode_phase: bool,
+    /// Hand-off start (prefill completion instant).
+    handoff_start: Option<SimTime>,
+    /// Finished hand-off stream seconds, folded into metrics at completion.
+    stream_s: f64,
 }
 
 /// Events carry the index of the model they belong to.
@@ -187,15 +222,8 @@ struct DisaggRuntime {
     /// Decode-phase requests with no decode instance to go to yet:
     /// `(idx, Some(src_node))` still owes its KV stream from the prefill
     /// node; `(idx, None)` just needs a queue slot (KV rebuilt locally).
+    /// (Per-request hand-off state lives in the [`ReqState`] arena.)
     awaiting: Vec<(usize, Option<NodeId>)>,
-    /// Requests whose prefill phase completed (cleared at final
-    /// completion) — routing sends these to the decode pool.
-    decode_phase: HashSet<usize>,
-    /// Hand-off start (prefill completion instant), per request.
-    handoff_start: HashMap<usize, SimTime>,
-    /// Finished per-request stream seconds, folded into
-    /// [`RequestMetrics::kv_stream_s`] at completion.
-    stream_s: HashMap<usize, f64>,
 }
 
 /// One execute-while-load pipeline awaiting its blocks on the fabric.
@@ -258,7 +286,12 @@ struct ModelRuntime {
     next_inst_id: u64,
     /// Global queue when no instance exists yet.
     unrouted: std::collections::VecDeque<usize>,
-    req_inst: HashMap<usize, u64>,
+    /// Dense per-request bookkeeping, indexed by trace index.
+    reqs: Vec<ReqState>,
+    /// Incrementally maintained `unrouted.len() + Σ instance queue.len()`,
+    /// so per-arrival demand sizing stays O(1) instead of re-summing every
+    /// instance's queue (verified against the full sum in debug builds).
+    queued: usize,
     /// The model's scaling policy (from the session builder, or the
     /// cluster config's `[autoscaler]` section when none was set).
     scaler: Box<dyn super::autoscaler::ScalingPolicy>,
@@ -266,10 +299,12 @@ struct ModelRuntime {
     scale_check_pending: bool,
     /// A CancelCheck event is already queued.
     cancel_check_pending: bool,
+    /// The pending CancelCheck probe's `(timer, fire time)`, cancellable
+    /// when the model's live ops run out of revocable recruits.
+    cancel_check_timer: Option<(TimerId, SimTime)>,
     /// Earliest time the next scaling operation may start (cooldown).
     next_op_at: SimTime,
     last_gpu_count: usize,
-    first_tokens: HashMap<usize, SimTime>,
     completed: usize,
     partition: crate::model::Partition,
     prefill_ratio: f64,
@@ -282,12 +317,9 @@ struct ModelRuntime {
     kv_geom: Option<KvGeometry>,
     /// Iteration-level budgets (consulted only in kvcache mode).
     kv_sched: ContinuousScheduler,
-    /// Preemption victims awaiting re-admission, by trace index.
-    preempted: HashMap<usize, PreemptedReq>,
-    /// First instant each waiting request was blocked on KV blocks.
-    kv_blocked_since: HashMap<usize, SimTime>,
-    /// Per-request KV stats, folded into `RequestMetrics` at completion.
-    kv_stats: HashMap<usize, KvReqStats>,
+    /// Reusable iteration-planning buffers (kvcache mode): the per-tick
+    /// plan allocates nothing in steady state.
+    iter_scratch: IterScratch,
     /// Disaggregated prefill/decode state (`None` = colocated mode).
     disagg: Option<DisaggRuntime>,
 }
@@ -322,17 +354,9 @@ impl ModelRuntime {
                 cfg.decode_drain_mult,
             );
             tiers.configure(per_inst_rps.max(0.1), keep_alive);
-            DisaggRuntime {
-                cfg,
-                router: DisaggRouter,
-                tiers,
-                streams: HashMap::new(),
-                awaiting: Vec::new(),
-                decode_phase: HashSet::new(),
-                handoff_start: HashMap::new(),
-                stream_s: HashMap::new(),
-            }
+            DisaggRuntime { cfg, router: DisaggRouter, tiers, streams: HashMap::new(), awaiting: Vec::new() }
         });
+        let n_reqs = ms.trace.requests.len();
         ModelRuntime {
             ms,
             backend_name,
@@ -340,13 +364,14 @@ impl ModelRuntime {
             instances: HashMap::new(),
             next_inst_id: 0,
             unrouted: std::collections::VecDeque::new(),
-            req_inst: HashMap::new(),
+            reqs: vec![ReqState::default(); n_reqs],
+            queued: 0,
             scaler,
             scale_check_pending: false,
             cancel_check_pending: false,
+            cancel_check_timer: None,
             next_op_at: SimTime::ZERO,
             last_gpu_count: 0,
-            first_tokens: HashMap::new(),
             completed: 0,
             partition,
             prefill_ratio,
@@ -355,9 +380,7 @@ impl ModelRuntime {
             initial_gpu_nodes: Vec::new(),
             kv_geom,
             kv_sched,
-            preempted: HashMap::new(),
-            kv_blocked_since: HashMap::new(),
-            kv_stats: HashMap::new(),
+            iter_scratch: IterScratch::default(),
             disagg,
         }
     }
@@ -369,13 +392,13 @@ impl ModelRuntime {
 /// takes the runtime's fields split apart because callers hold a mutable
 /// borrow of `instances` at the call site.
 fn note_first_token(
-    first_tokens: &mut HashMap<usize, SimTime>,
+    reqs: &mut [ReqState],
     trace: &crate::workload::Trace,
     scaler: &mut dyn super::autoscaler::ScalingPolicy,
     idx: usize,
     now: SimTime,
 ) {
-    first_tokens.insert(idx, now);
+    reqs[idx].first_token = Some(now);
     let ttft = now.saturating_sub(trace.requests[idx].arrival).as_secs();
     scaler.observe_ttft(now, ttft);
 }
@@ -414,6 +437,12 @@ pub struct ServingEngine {
     /// Last pool role each node served in, for the per-pool GPU·s split
     /// (billing intervals close long after the instance is gone).
     node_role: Vec<Option<Role>>,
+    /// Per-model count of nodes in `NodeUse::Loading(m)`, maintained at
+    /// every occupancy transition — demand sizing runs once per arrival
+    /// instant and must not rescan `node_state` each time.
+    loading_nodes: Vec<usize>,
+    /// Reusable node set for [`Self::account_gpus`].
+    account_scratch: HashSet<NodeId>,
 }
 
 impl ServingEngine {
@@ -424,9 +453,10 @@ impl ServingEngine {
         let mem = MemoryManager::from_cluster(&cluster);
         let fabric = Fabric::new(cluster.network.clone());
         let node_role = vec![None; cluster.n_nodes];
+        let q = EventQueue::with_kind(cluster.event_queue);
         ServingEngine {
             cluster,
-            q: EventQueue::new(),
+            q,
             node_state,
             models: Vec::new(),
             mem,
@@ -439,6 +469,8 @@ impl ServingEngine {
             fab_util_last: Vec::new(),
             kv_ops: HashMap::new(),
             node_role,
+            loading_nodes: Vec::new(),
+            account_scratch: HashSet::new(),
         }
     }
 
@@ -457,6 +489,12 @@ impl ServingEngine {
     /// returns to the free pool. Same-tenant transitions (loading →
     /// serving) keep one open interval.
     fn set_node_use(&mut self, n: usize, u: NodeUse, now: SimTime) {
+        if let NodeUse::Loading(prev) = self.node_state[n] {
+            self.loading_nodes[prev] -= 1;
+        }
+        if let NodeUse::Loading(m) = u {
+            self.loading_nodes[m] += 1;
+        }
         self.node_state[n] = u;
         let owner = match u {
             NodeUse::Free => None,
@@ -502,6 +540,9 @@ impl ServingEngine {
             self.mem.seed_ssd_everywhere(&rt.mem_key);
         }
         self.fab_util_last.push(0.0);
+        self.loading_nodes.push(0);
+        // One allocation up front instead of doubling growth mid-run.
+        rt.ms.metrics.reserve_requests(rt.ms.trace.requests.len());
         let mut want_gpu = rt.ms.params.initial_gpu_sources;
         let mut want_host = rt.ms.params.initial_host_sources;
         for n in 0..self.node_state.len() {
@@ -603,6 +644,7 @@ impl ServingEngine {
                 rt.ms.metrics.record_host_gb_seconds(gb_s);
             }
         }
+        let events = self.q.popped();
         SessionReport {
             models: self
                 .models
@@ -616,6 +658,7 @@ impl ServingEngine {
                     metrics: rt.ms.metrics,
                 })
                 .collect(),
+            events,
         }
     }
 
@@ -664,6 +707,8 @@ impl ServingEngine {
                 token_accum: 0.0,
                 kv: None,
                 role: None,
+                reclaim_timers: Vec::new(),
+                scratch_finished: Vec::new(),
             },
         );
         md.ms.router.add_instance(id, weight.max(1e-6));
@@ -724,6 +769,7 @@ impl ServingEngine {
         // overloaded peers — otherwise scaling out never helps requests
         // that arrived before the new capacity.
         while let Some(r) = self.models[m].unrouted.pop_front() {
+            self.models[m].queued -= 1;
             self.route_request(now, m, r);
         }
         self.rebalance(now, m);
@@ -891,7 +937,8 @@ impl ServingEngine {
                 if !disagg {
                     md.ms.router.complete(*id);
                 }
-                md.req_inst.remove(&p.item);
+                md.reqs[p.item].inst = None;
+                md.queued -= 1;
                 pool.push(p.item);
             }
         }
@@ -906,7 +953,25 @@ impl ServingEngine {
         let md = &self.models[m];
         if md.instances.contains_key(&id) {
             let at = now + SimTime::from_secs(md.ms.params.keep_alive_s);
-            self.q.push(at, Ev::Reclaim(m, id));
+            let tid = self.q.push_cancelable(at, Ev::Reclaim(m, id));
+            let inst = self.models[m].instances.get_mut(&id).unwrap();
+            // Prune probes that already fired (their time has passed).
+            inst.reclaim_timers.retain(|&(_, t)| t >= now);
+            inst.reclaim_timers.push((tid, at));
+        }
+    }
+
+    /// Revoke a dying instance's pending reclaim probes. Each probe for a
+    /// removed instance would pop as a pure no-op (`instances.get` misses)
+    /// whose only effect is advancing the metering horizon — folding the
+    /// cancelled fire time into the horizon reproduces that effect
+    /// exactly, so replay stays bit-identical while the event queue drops
+    /// the tombstones in O(1).
+    fn cancel_reclaim_timers(&mut self, inst: &Inst) {
+        for &(tid, t) in &inst.reclaim_timers {
+            if self.q.cancel(tid) {
+                self.horizon = self.horizon.max(t);
+            }
         }
     }
 
@@ -960,10 +1025,13 @@ impl ServingEngine {
             }
         };
         if let Some((at, hold)) = probe {
+            let tid = self.q.push_cancelable(at, Ev::Reclaim(m, id));
+            let inst = self.models[m].instances.get_mut(&id).unwrap();
             if hold {
-                self.models[m].instances.get_mut(&id).unwrap().reclaim_probes += 1;
+                inst.reclaim_probes += 1;
             }
-            self.q.push(at, Ev::Reclaim(m, id));
+            inst.reclaim_timers.retain(|&(_, t)| t >= now);
+            inst.reclaim_timers.push((tid, at));
             return;
         }
         let md = &self.models[m];
@@ -996,6 +1064,7 @@ impl ServingEngine {
         let mem_key = md.mem_key.clone();
         let inst = md.instances.remove(&id).unwrap();
         md.ms.router.remove_instance(id);
+        self.cancel_reclaim_timers(&inst);
         // Scale-down ordering: the KV arena's bytes are released first,
         // so the weights' GPU→host demotion below sees the full headroom.
         if let Some(kv) = &inst.kv {
@@ -1033,9 +1102,10 @@ impl ServingEngine {
             return self.route_disagg(now, m, idx);
         }
         let md = &mut self.models[m];
+        md.queued += 1;
         match md.ms.router.route() {
             Some(id) => {
-                md.req_inst.insert(idx, id);
+                md.reqs[idx].inst = Some(id);
                 // Enqueue at the request's arrival time, not `now`: rebalance
                 // and dissolve re-route requests through here, and restarting
                 // the head-of-line clock would let every scale-out push a
@@ -1054,8 +1124,7 @@ impl ServingEngine {
     /// headroom. The session's `RoutingPolicy` is bypassed entirely —
     /// pool placement is the router in this mode.
     fn route_disagg(&mut self, now: SimTime, m: usize, idx: usize) {
-        let in_decode =
-            self.models[m].disagg.as_ref().unwrap().decode_phase.contains(&idx);
+        let in_decode = self.models[m].reqs[idx].decode_phase;
         if in_decode {
             // Re-entry: the KV rebuild (if any) is already priced by the
             // request's `preempted` entry; it only needs a decode slot.
@@ -1087,12 +1156,16 @@ impl ServingEngine {
         views.sort_by_key(|v| v.id);
         match md.disagg.as_ref().unwrap().router.pick_prefill(&views) {
             Some(id) => {
-                md.req_inst.insert(idx, id);
+                md.reqs[idx].inst = Some(id);
+                md.queued += 1;
                 let enqueued = md.ms.trace.requests[idx].arrival;
                 md.instances.get_mut(&id).unwrap().queue.push(idx, enqueued);
                 self.try_admit(now, m, id);
             }
-            None => md.unrouted.push_back(idx),
+            None => {
+                md.queued += 1;
+                md.unrouted.push_back(idx);
+            }
         }
     }
 
@@ -1116,7 +1189,7 @@ impl ServingEngine {
         views.sort_by_key(|v| v.id);
         let need = match md.kv_geom {
             Some(g) => {
-                let generated = md.preempted.get(&idx).map_or(1, |p| p.generated);
+                let generated = md.reqs[idx].preempted.map_or(1, |p| p.generated);
                 g.blocks_for(md.ms.trace.requests[idx].prompt_tokens + generated)
             }
             None => 0,
@@ -1127,7 +1200,8 @@ impl ServingEngine {
     /// Queue a decode-phase request on its chosen decode instance.
     fn enqueue_decode(&mut self, now: SimTime, m: usize, idx: usize, inst: u64) {
         let md = &mut self.models[m];
-        md.req_inst.insert(idx, inst);
+        md.reqs[idx].inst = Some(inst);
+        md.queued += 1;
         let enqueued = md.ms.trace.requests[idx].arrival;
         md.instances.get_mut(&inst).unwrap().queue.push(idx, enqueued);
         self.try_admit(now, m, inst);
@@ -1169,7 +1243,9 @@ impl ServingEngine {
         let Some(inst) = md.instances.get_mut(&id) else { return false };
         let n = md.ms.admission.admit(now, &inst.queue, inst.active.len(), md.ms.params.max_batch);
         let mut changed = false;
-        for p in inst.queue.admit(n) {
+        let admitted = inst.queue.admit(n);
+        md.queued -= admitted.len();
+        for p in admitted {
             let idx = p.item;
             let r = &md.ms.trace.requests[idx];
             let w_prefill = r.prompt_tokens as f64 * md.prefill_ratio;
@@ -1179,9 +1255,7 @@ impl ServingEngine {
             // remaining output (first token already emitted prefill-side).
             let (w_first, w_total, first_emitted) = match inst.role {
                 Some(Role::Prefill) => (w_prefill + 1.0, w_prefill + 1.0, false),
-                Some(Role::Decode)
-                    if md.disagg.as_ref().is_some_and(|d| d.decode_phase.contains(&idx)) =>
-                {
+                Some(Role::Decode) if md.reqs[idx].decode_phase => {
                     (0.0, r.output_tokens.saturating_sub(1) as f64, true)
                 }
                 _ => (w_prefill + 1.0, w_prefill + r.output_tokens as f64, false),
@@ -1224,12 +1298,12 @@ impl ServingEngine {
                 let Some(inst) = md.instances.get(&id) else { break };
                 let Some(head) = inst.queue.iter().next() else { break };
                 let idx = head.item;
-                let generated = md.preempted.get(&idx).map_or(0, |p| p.generated);
+                let generated = md.reqs[idx].preempted.map_or(0, |p| p.generated);
                 let ctx = md.ms.trace.requests[idx].prompt_tokens + generated;
                 (idx, geom.blocks_for(ctx))
             };
             if !self.kv_acquire_for_head(now, m, id, need) {
-                self.models[m].kv_blocked_since.entry(idx).or_insert(now);
+                self.models[m].reqs[idx].kv_blocked_since.get_or_insert(now);
                 break;
             }
             slots -= 1;
@@ -1237,12 +1311,13 @@ impl ServingEngine {
             let md = &mut self.models[m];
             let inst = md.instances.get_mut(&id).unwrap();
             let p = inst.queue.admit(1).pop().expect("admitted head vanished");
+            md.queued -= 1;
             debug_assert_eq!(p.item, idx);
             let r = &md.ms.trace.requests[idx];
-            let pre = md.preempted.remove(&idx);
-            let stats = md.kv_stats.entry(idx).or_default();
-            if let Some(t0) = md.kv_blocked_since.remove(&idx) {
-                stats.wait_s += now.saturating_sub(t0).as_secs();
+            let st = &mut md.reqs[idx];
+            let pre = st.preempted.take();
+            if let Some(t0) = st.kv_blocked_since.take() {
+                st.kv.wait_s += now.saturating_sub(t0).as_secs();
             }
             // Time-priced stalls (swap) convert to work units at the
             // request's expected share of the post-admission batch.
@@ -1264,7 +1339,7 @@ impl ServingEngine {
                             // Replay prefill over prompt + generated: the
                             // recompute cost lands in this request's latency.
                             let w = ctx as f64 * md.prefill_ratio;
-                            stats.recompute_s += w / per_req_rate;
+                            st.kv.recompute_s += w / per_req_rate;
                             (pr.generated, w)
                         }
                         KvVictimAction::SwapToHost => {
@@ -1273,13 +1348,13 @@ impl ServingEngine {
                                 &md.ms.params.spec,
                                 &self.cluster.network,
                             );
-                            stats.swap_s += s;
+                            st.kv.swap_s += s;
                             (pr.generated, s * per_req_rate)
                         }
                     }
                 }
             };
-            let first_emitted = md.first_tokens.contains_key(&idx);
+            let first_emitted = st.first_token.is_some();
             let mut remaining_out = r.output_tokens.saturating_sub(decode_base) as f64;
             // A prefill-pool instance serves only through the first token;
             // the rest of the output belongs to the decode pool.
@@ -1365,7 +1440,7 @@ impl ServingEngine {
             if !a.first_emitted && a.done + 1e-9 >= a.w_first {
                 a.first_emitted = true;
                 note_first_token(
-                    &mut md.first_tokens,
+                    &mut md.reqs,
                     &md.ms.trace,
                     md.scaler.as_mut(),
                     a.idx,
@@ -1378,7 +1453,7 @@ impl ServingEngine {
         let emitted_tokens = token_accum as usize;
         token_accum -= emitted_tokens as f64;
         inst.token_accum = token_accum;
-        let mut finished: Vec<ActiveReq> = Vec::new();
+        let mut finished = std::mem::take(&mut inst.scratch_finished);
         let mut i = 0;
         while i < inst.active.len() {
             if inst.active[i].done + 1e-9 >= inst.active[i].w_total {
@@ -1401,8 +1476,14 @@ impl ServingEngine {
         if emitted_tokens > 0 {
             md.ms.metrics.record_tokens(now, emitted_tokens);
         }
-        for f in finished {
-            self.complete_request(now, m, id, &f);
+        for f in &finished {
+            self.complete_request(now, m, id, f);
+        }
+        // Hand the buffer back for the next advance (the instance may
+        // have died inside a completion hook — then it's simply dropped).
+        finished.clear();
+        if let Some(inst) = self.models[m].instances.get_mut(&id) {
+            inst.scratch_finished = finished;
         }
         if went_idle {
             self.schedule_reclaim(m, id, now);
@@ -1423,14 +1504,14 @@ impl ServingEngine {
             inst.pipe.service_rate(inst.active.len(), &md.ms.params.spec, &self.cluster.compute);
         let per_req = total / inst.active.len() as f64;
         let mut emitted_tokens = 0usize;
-        let mut finished: Vec<ActiveReq> = Vec::new();
+        let mut finished = std::mem::take(&mut inst.scratch_finished);
         let mut token_accum = inst.token_accum + total * dt;
         for a in &mut inst.active {
             a.done += per_req * dt;
             if !a.first_emitted && a.done + 1e-9 >= a.w_first {
                 a.first_emitted = true;
                 note_first_token(
-                    &mut md.first_tokens,
+                    &mut md.reqs,
                     &md.ms.trace,
                     md.scaler.as_mut(),
                     a.idx,
@@ -1457,8 +1538,12 @@ impl ServingEngine {
         if emitted_tokens > 0 {
             md.ms.metrics.record_tokens(now, emitted_tokens);
         }
-        for f in finished {
-            self.complete_request(now, m, id, &f);
+        for f in &finished {
+            self.complete_request(now, m, id, f);
+        }
+        finished.clear();
+        if let Some(inst) = self.models[m].instances.get_mut(&id) {
+            inst.scratch_finished = finished;
         }
         if went_idle {
             self.schedule_reclaim(m, id, now);
@@ -1482,15 +1567,15 @@ impl ServingEngine {
         }
         let md = &mut self.models[m];
         let r = &md.ms.trace.requests[a.idx];
-        let first = md.first_tokens.get(&a.idx).copied().unwrap_or(now);
-        let kv = md.kv_stats.remove(&a.idx).unwrap_or_default();
-        let stream_s = md.disagg.as_mut().map_or(0.0, |d| {
-            d.decode_phase.remove(&a.idx);
-            d.handoff_start.remove(&a.idx);
-            d.stream_s.remove(&a.idx).unwrap_or(0.0)
-        });
-        md.preempted.remove(&a.idx);
-        md.kv_blocked_since.remove(&a.idx);
+        let st = &mut md.reqs[a.idx];
+        let first = st.first_token.unwrap_or(now);
+        let kv = std::mem::take(&mut st.kv);
+        let stream_s = std::mem::take(&mut st.stream_s);
+        st.decode_phase = false;
+        st.handoff_start = None;
+        st.preempted = None;
+        st.kv_blocked_since = None;
+        st.inst = None;
         md.ms.metrics.record_request(RequestMetrics {
             id: r.id,
             arrival: r.arrival,
@@ -1506,7 +1591,6 @@ impl ServingEngine {
         if md.disagg.is_none() {
             md.ms.router.complete(inst_id);
         }
-        md.req_inst.remove(&a.idx);
         md.completed += 1;
         self.try_admit(now, m, inst_id);
     }
@@ -1520,16 +1604,17 @@ impl ServingEngine {
         let src_node = self.models[m].instances[&src_inst].pipe.stages[0].node;
         {
             let md = &mut self.models[m];
-            md.req_inst.remove(&idx);
-            if md.kv_geom.is_some() {
+            let kv_mode = md.kv_geom.is_some();
+            let st = &mut md.reqs[idx];
+            st.inst = None;
+            if kv_mode {
                 // The decode side resumes with the prefill token emitted
                 // and no rebuild stall — the KV arrives by stream.
-                md.preempted.insert(idx, PreemptedReq { generated: 1, action: None });
+                st.preempted = Some(PreemptedReq { generated: 1, action: None });
             }
-            let d = md.disagg.as_mut().unwrap();
-            d.decode_phase.insert(idx);
-            d.handoff_start.insert(idx, now);
-            d.tiers.observe_decode_demand(now);
+            st.decode_phase = true;
+            st.handoff_start = Some(now);
+            md.disagg.as_mut().unwrap().tiers.observe_decode_demand(now);
         }
         self.launch_kv_stream(now, m, src_node, idx);
         // Decode-pool pressure changed: let the two-tier scaler react.
@@ -1601,10 +1686,9 @@ impl ServingEngine {
     ) {
         {
             let md = &mut self.models[m];
-            let d = md.disagg.as_mut().unwrap();
-            if let Some(t0) = d.handoff_start.remove(&idx) {
+            if let Some(t0) = md.reqs[idx].handoff_start.take() {
                 let secs = now.saturating_sub(t0).as_secs();
-                d.stream_s.insert(idx, secs);
+                md.reqs[idx].stream_s = secs;
                 md.ms.metrics.record_kv_stream(secs, networked);
             }
         }
@@ -1622,9 +1706,9 @@ impl ServingEngine {
     fn reroute_lost_kv(&mut self, now: SimTime, m: usize, idx: usize) {
         let md = &mut self.models[m];
         if md.kv_geom.is_some() {
-            let generated = md.preempted.get(&idx).map_or(1, |p| p.generated);
-            md.preempted
-                .insert(idx, PreemptedReq { generated, action: Some(KvVictimAction::Recompute) });
+            let generated = md.reqs[idx].preempted.map_or(1, |p| p.generated);
+            md.reqs[idx].preempted =
+                Some(PreemptedReq { generated, action: Some(KvVictimAction::Recompute) });
         }
         self.route_disagg(now, m, idx);
     }
@@ -1646,26 +1730,26 @@ impl ServingEngine {
     /// pipeline's service rate.
     fn plan_kv_iteration(&mut self, now: SimTime, m: usize, id: u64) {
         let md = &mut self.models[m];
-        let Some(inst) = md.instances.get_mut(&id) else { return };
+        let (instances, scratch, kv_sched, ms) =
+            (&mut md.instances, &mut md.iter_scratch, &md.kv_sched, &md.ms);
+        let Some(inst) = instances.get_mut(&id) else { return };
         inst.version += 1;
         let ver = inst.version;
         if inst.active.is_empty() {
             return;
         }
-        let views: Vec<ReqView> = inst
-            .active
-            .iter()
-            .map(|a| ReqView {
-                remaining_stall: (a.stall_work - a.done).max(0.0),
-                remaining_total: (a.w_total - a.done).max(0.0),
-                admitted: a.admitted,
-                idx: a.idx,
-            })
-            .collect();
-        let plan = md.kv_sched.plan(&views);
+        scratch.views.clear();
+        scratch.views.extend(inst.active.iter().map(|a| ReqView {
+            remaining_stall: (a.stall_work - a.done).max(0.0),
+            remaining_total: (a.w_total - a.done).max(0.0),
+            admitted: a.admitted,
+            idx: a.idx,
+        }));
+        kv_sched.plan_into(scratch);
+        let plan = &scratch.plan;
         let rate_total = inst
             .pipe
-            .service_rate(inst.active.len(), &md.ms.params.spec, &self.cluster.compute)
+            .service_rate(inst.active.len(), &ms.params.spec, &self.cluster.compute)
             .max(1e-9);
         let iter_s = (plan.total_work / rate_total).max(1e-6);
         for (a, (w, dec)) in
@@ -1733,6 +1817,12 @@ impl ServingEngine {
     /// of preempting itself forever.
     fn kv_enforce(&mut self, now: SimTime, m: usize, id: u64) {
         let Some(geom) = self.models[m].kv_geom else { return };
+        // Single left-to-right pass: positions left of the cursor are
+        // already satisfied and stay satisfied — growing a later request
+        // never changes an earlier one's need, and a preemption only
+        // shifts the satisfied prefix left. O(active + preemptions)
+        // instead of a rescan from zero after every block grant.
+        let mut i = 0usize;
         loop {
             let (pos, deficit) = {
                 let md = &self.models[m];
@@ -1741,11 +1831,11 @@ impl ServingEngine {
                     return;
                 }
                 let mut found = None;
-                for (i, a) in inst.active.iter().enumerate() {
+                for (p, a) in inst.active.iter().enumerate().skip(i) {
                     let ctx = md.ms.trace.requests[a.idx].prompt_tokens + a.generated();
                     let need = geom.blocks_for(ctx);
                     if need > a.kv_blocks {
-                        found = Some((i, need - a.kv_blocks));
+                        found = Some((p, need - a.kv_blocks));
                         break;
                     }
                 }
@@ -1760,6 +1850,7 @@ impl ServingEngine {
                 let kv = inst.kv.as_mut().unwrap();
                 if kv.pool.try_acquire(deficit) {
                     inst.active[pos].kv_blocks += deficit;
+                    i = pos;
                     continue;
                 }
                 if inst.active.len() == 1 {
@@ -1769,6 +1860,7 @@ impl ServingEngine {
                     kv.pool.force_acquire(deficit);
                     inst.active[pos].kv_blocks += deficit;
                     md.ms.metrics.record_kv_overcommit(kv.pool.overcommit_blocks - before);
+                    i = pos;
                     continue;
                 }
             }
@@ -1781,6 +1873,9 @@ impl ServingEngine {
                 ContinuousScheduler::youngest(&order).unwrap()
             };
             self.preempt(now, m, id, victim);
+            // `remove(victim)` shifted everything right of the victim left
+            // by one; keep the cursor on the same request.
+            i = if victim < pos { pos - 1 } else { pos };
         }
     }
 
@@ -1819,12 +1914,14 @@ impl ServingEngine {
                 &self.cluster.network,
             )
         };
-        md.preempted.insert(a.idx, PreemptedReq { generated, action: Some(action) });
-        md.kv_stats.entry(a.idx).or_default().preemptions += 1;
+        let st = &mut md.reqs[a.idx];
+        st.preempted = Some(PreemptedReq { generated, action: Some(action) });
+        st.kv.preemptions += 1;
+        st.kv_blocked_since.get_or_insert(now);
         md.ms.metrics.record_kv_preemption(action == KvVictimAction::SwapToHost);
         // Original arrival keeps the head-of-line clock honest.
         inst.queue.push_front(a.idx, r.arrival);
-        md.kv_blocked_since.entry(a.idx).or_insert(now);
+        md.queued += 1;
     }
 
     // ---- scaling -------------------------------------------------------------
@@ -1836,14 +1933,22 @@ impl ServingEngine {
     /// scaler's answer with backlog-driven sizing (each instance absorbs
     /// `max_batch` concurrent decodes).
     fn demand(&mut self, now: SimTime, m: usize) -> (usize, usize) {
-        let loading =
-            self.node_state.iter().filter(|s| **s == NodeUse::Loading(m)).count();
+        let loading = self.loading_nodes[m];
+        debug_assert_eq!(
+            loading,
+            self.node_state.iter().filter(|s| **s == NodeUse::Loading(m)).count(),
+            "incremental loading-node counter diverged"
+        );
         if self.models[m].disagg.is_some() {
             return self.demand_disagg(now, m, loading);
         }
         let md = &mut self.models[m];
-        let queued =
-            md.unrouted.len() + md.instances.values().map(|i| i.queue.len()).sum::<usize>();
+        let queued = md.queued;
+        debug_assert_eq!(
+            queued,
+            md.unrouted.len() + md.instances.values().map(|i| i.queue.len()).sum::<usize>(),
+            "incremental queued counter diverged"
+        );
         let current = md.instances.len() + loading;
         let by_backlog = if queued > 0 {
             md.instances.len() + queued.div_ceil(md.ms.params.max_batch.max(1))
@@ -2364,6 +2469,10 @@ impl ServingEngine {
                     self.q.push(now, Ev::Dissolve(m, id));
                 }
             }
+            // This op's recruits just materialized; if no other live op
+            // still has revocable recruits, the scale-down probe has
+            // nothing left to act on.
+            self.retire_cancel_check(m);
         }
     }
 
@@ -2386,11 +2495,48 @@ impl ServingEngine {
         Some(self.spawn_instance(m, pipe, Some(SimTime::MAX), now))
     }
 
-    /// Arm the periodic mid-op scale-down probe for model `m`.
+    /// Arm the periodic mid-op scale-down probe for model `m`. The timer
+    /// is revocable: when the last cancellable recruit materializes (or
+    /// dies) the probe is retired in O(1) instead of firing as a no-op.
     fn schedule_cancel_check(&mut self, now: SimTime, m: usize) {
         if !self.models[m].cancel_check_pending {
             self.models[m].cancel_check_pending = true;
-            self.q.push(now + SimTime::from_secs(CANCEL_CHECK_S), Ev::CancelCheck(m));
+            let at = now + SimTime::from_secs(CANCEL_CHECK_S);
+            let tid = self.q.push_cancelable(at, Ev::CancelCheck(m));
+            self.models[m].cancel_check_timer = Some((tid, at));
+        }
+    }
+
+    /// A live, unfinished op of model `m` still holds a recruit the probe
+    /// could actually revoke: not failed, untouched on the fabric. Once
+    /// none remain, a probe can do nothing — the scaler's answer cannot
+    /// revoke recruits that no longer exist — so re-arming it would only
+    /// churn the event queue.
+    fn has_revocable_recruits(&self, m: usize) -> bool {
+        self.live.iter().any(|(&op, lo)| {
+            lo.model == m
+                && !lo.finished
+                && lo
+                    .recruits
+                    .iter()
+                    .any(|&d| !self.failed.contains(&d) && self.fabric.dest_untouched(op, d))
+        })
+    }
+
+    /// Disarm the probe once nothing is left to revoke, cancelling its
+    /// timer in O(1). The cancelled pop would have been a pure no-op
+    /// (`on_cancel_check` returns before consulting the scaler), so
+    /// replay stays bit-identical as long as the fire time still folds
+    /// into the horizon.
+    fn retire_cancel_check(&mut self, m: usize) {
+        if self.has_revocable_recruits(m) {
+            return;
+        }
+        if let Some((tid, t)) = self.models[m].cancel_check_timer.take() {
+            if self.q.cancel(tid) {
+                self.horizon = self.horizon.max(t);
+            }
+            self.models[m].cancel_check_pending = false;
         }
     }
 
@@ -2401,18 +2547,17 @@ impl ServingEngine {
     /// probes never perturb the policy's decisions.
     fn on_cancel_check(&mut self, now: SimTime, m: usize) {
         self.models[m].cancel_check_pending = false;
-        let has_recruits = self
-            .live
-            .values()
-            .any(|lo| lo.model == m && !lo.finished && !lo.recruits.is_empty());
-        if !has_recruits {
+        self.models[m].cancel_check_timer = None;
+        if !self.has_revocable_recruits(m) {
             return;
         }
         let (desired, current) = self.demand(now, m);
         if desired < current {
             self.cancel_surplus_recruits(now, m, current - desired);
         }
-        self.schedule_cancel_check(now, m);
+        if self.has_revocable_recruits(m) {
+            self.schedule_cancel_check(now, m);
+        }
     }
 
     /// Revoke up to `surplus` untouched recruits of model `m`, newest
@@ -2453,6 +2598,9 @@ impl ServingEngine {
                 self.mem.cancel_gpu_reservation(node, &mem_key);
                 // Refund: the open cost interval is dropped un-billed.
                 self.node_busy[node] = None;
+                if let NodeUse::Loading(lm) = self.node_state[node] {
+                    self.loading_nodes[lm] -= 1;
+                }
                 self.node_state[node] = NodeUse::Free;
                 self.models[m].ms.metrics.record_transfer_cancel();
                 self.handle_fabric_update(now, upd);
@@ -2521,7 +2669,7 @@ impl ServingEngine {
     ///
     /// Fluid-mode re-routed requests restart with the legacy dissolve
     /// semantics: a request past its first token re-emits it after
-    /// re-admission, updating `first_tokens` and feeding the scaler a
+    /// re-admission, updating its first-token record and feeding the scaler a
     /// fresh TTFT observation — deliberately identical to the seed
     /// engine's mode-switch re-route path (kvcache mode tracks emission
     /// exactly and never double-counts).
@@ -2530,6 +2678,7 @@ impl ServingEngine {
         let md = &mut self.models[m];
         let Some(inst) = md.instances.remove(&id) else { return };
         md.ms.router.remove_instance(id);
+        md.queued -= inst.queue.len();
         let kv_mode = md.kv_geom.is_some();
         let mut to_reroute: Vec<usize> = inst.queue.iter().map(|p| p.item).collect();
         if kv_mode && md.disagg.is_some() {
@@ -2537,7 +2686,7 @@ impl ServingEngine {
             // their streamed KV with it: their no-stall resume entry must
             // become a priced rebuild.
             for p in inst.queue.iter() {
-                if let Some(pr) = md.preempted.get_mut(&p.item) {
+                if let Some(pr) = md.reqs[p.item].preempted.as_mut() {
                     pr.action = Some(KvVictimAction::Recompute);
                 }
             }
@@ -2546,15 +2695,16 @@ impl ServingEngine {
             let r = &md.ms.trace.requests[a.idx];
             if kv_mode {
                 let generated = a.generated().min(r.output_tokens);
-                md.preempted
-                    .insert(a.idx, PreemptedReq { generated, action: Some(KvVictimAction::Recompute) });
+                md.reqs[a.idx].preempted =
+                    Some(PreemptedReq { generated, action: Some(KvVictimAction::Recompute) });
             }
             to_reroute.push(a.idx);
         }
         for idx in &to_reroute {
-            md.req_inst.remove(idx);
+            md.reqs[*idx].inst = None;
         }
         let mem_key = md.mem_key.clone();
+        self.cancel_reclaim_timers(&inst);
         if let Some(kv) = &inst.kv {
             self.release_kv_pool(kv);
         }
@@ -2638,6 +2788,7 @@ impl ServingEngine {
         let _ = outstanding;
         // Mode switch: redistribute in-flight + queued requests with the KV
         // rebuild stall.
+        md.queued -= inst.queue.len();
         let kv_mode = md.kv_geom.is_some();
         let mut to_reroute: Vec<usize> = inst.queue.iter().map(|p| p.item).collect();
         if kv_mode && md.disagg.is_some() {
@@ -2645,7 +2796,7 @@ impl ServingEngine {
             // (only in-flight state is rebuilt inside the switch stall):
             // their resume entry becomes a priced rebuild.
             for p in inst.queue.iter() {
-                if let Some(pr) = md.preempted.get_mut(&p.item) {
+                if let Some(pr) = md.reqs[p.item].preempted.as_mut() {
                     pr.action = Some(KvVictimAction::Recompute);
                 }
             }
@@ -2662,7 +2813,7 @@ impl ServingEngine {
                 // owes no further per-request stall (`action: None`) —
                 // already-emitted tokens are never decoded (or counted)
                 // twice.
-                md.preempted.insert(a.idx, PreemptedReq { generated, action: None });
+                md.reqs[a.idx].preempted = Some(PreemptedReq { generated, action: None });
                 r.prompt_tokens + generated
             } else {
                 r.prompt_tokens + a.done.floor() as usize
@@ -2671,7 +2822,7 @@ impl ServingEngine {
             to_reroute.push(a.idx);
         }
         for idx in &to_reroute {
-            md.req_inst.remove(idx);
+            md.reqs[*idx].inst = None;
         }
         // Mode-switch stall priced from the pipeline's actual per-stage
         // KV shard bytes (uneven stages ship uneven shards).
@@ -2685,6 +2836,7 @@ impl ServingEngine {
         )
         .stall_s;
         let mem_key = md.mem_key.clone();
+        self.cancel_reclaim_timers(&inst);
         // KV shards die with the pipeline (before any weight accounting).
         if let Some(kv) = &inst.kv {
             self.release_kv_pool(kv);
@@ -2708,19 +2860,20 @@ impl ServingEngine {
     /// Record model `m`'s GPU footprint: nodes serving one of its instances
     /// plus nodes loading it.
     fn account_gpus(&mut self, m: usize, now: SimTime) {
+        let busy = &mut self.account_scratch;
+        busy.clear();
         let md = &self.models[m];
-        let mut nodes_busy: HashSet<NodeId> = HashSet::new();
         for inst in md.instances.values() {
             for n in inst.pipe.nodes() {
-                nodes_busy.insert(n);
+                busy.insert(n);
             }
         }
         for (n, st) in self.node_state.iter().enumerate() {
             if *st == NodeUse::Loading(m) {
-                nodes_busy.insert(n);
+                busy.insert(n);
             }
         }
-        let gpus = nodes_busy.len() * self.cluster.node.gpus_per_node.max(1);
+        let gpus = busy.len() * self.cluster.node.gpus_per_node.max(1);
         let md = &mut self.models[m];
         if gpus != md.last_gpu_count {
             md.last_gpu_count = gpus;

@@ -16,6 +16,10 @@ use std::collections::BTreeMap;
 pub struct Router {
     instances: BTreeMap<u64, InstanceLoad>,
     policy: Box<dyn RoutingPolicy>,
+    /// Candidate buffer reused across `route` calls: routing happens once
+    /// per request, so a fresh Vec per call is the hottest allocation in
+    /// the engine at scale.
+    scratch: Vec<InstanceView>,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -39,7 +43,7 @@ impl Router {
 
     /// Router dispatching through a custom policy.
     pub fn with_policy(policy: Box<dyn RoutingPolicy>) -> Self {
-        Router { instances: BTreeMap::new(), policy }
+        Router { instances: BTreeMap::new(), policy, scratch: Vec::new() }
     }
 
     /// The active routing policy's name.
@@ -82,12 +86,13 @@ impl Router {
     /// Ask the policy for an instance and charge it one outstanding
     /// request. Returns `None` when no instances exist.
     pub fn route(&mut self) -> Option<u64> {
-        let candidates: Vec<InstanceView> = self
-            .instances
-            .iter()
-            .map(|(&id, l)| InstanceView { id, outstanding: l.outstanding, weight: l.weight })
-            .collect();
-        let id = self.policy.pick(&candidates)?;
+        self.scratch.clear();
+        self.scratch.extend(
+            self.instances
+                .iter()
+                .map(|(&id, l)| InstanceView { id, outstanding: l.outstanding, weight: l.weight }),
+        );
+        let id = self.policy.pick(&self.scratch)?;
         self.instances
             .get_mut(&id)
             .expect("routing policy picked an unknown instance")

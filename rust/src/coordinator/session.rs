@@ -199,6 +199,15 @@ impl ServingSessionBuilder {
         self
     }
 
+    /// Event-queue backend for the session's simulator (default: the
+    /// timer wheel). Both backends replay bit-identically;
+    /// [`crate::sim::QueueKind::Heap`] is the equivalence-test reference.
+    /// Cluster-scoped; call after `.cluster(..)`.
+    pub fn event_queue(mut self, kind: crate::sim::QueueKind) -> Self {
+        self.cluster.event_queue = kind;
+        self
+    }
+
     /// Inject a permanent node failure at `at_s` seconds: in-flight
     /// transfers touching the node abort and their operations re-plan from
     /// surviving block-holders; instances on the node die (requests
@@ -395,7 +404,9 @@ impl ServingSession {
     }
 }
 
-/// One model's results from a session run.
+/// One model's results from a session run. `PartialEq` is exact (bitwise
+/// on every metric) — the event-queue equivalence suite relies on it.
+#[derive(Clone, Debug, PartialEq)]
 pub struct ModelReport {
     /// The model's name.
     pub model: String,
@@ -412,9 +423,14 @@ pub struct ModelReport {
 }
 
 /// Results of a session run, one report per model (in `.model(..)` order).
+/// `PartialEq` is exact — bit-identical replay means equal reports.
+#[derive(Clone, Debug, PartialEq)]
 pub struct SessionReport {
     /// Per-model reports, in `.model(..)` order.
     pub models: Vec<ModelReport>,
+    /// Simulation events processed by the engine's event loop (cancelled
+    /// timers never pop and are not counted).
+    pub events: u64,
 }
 
 impl SessionReport {

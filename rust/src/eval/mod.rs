@@ -28,6 +28,8 @@
 //! CLI: `lambda-scale eval [--duration S] [--seed N] [--slo-ttft S]
 //! [--config FILE] [--out BENCH_eval.json] [--md RESULTS.md]`.
 
+pub mod scale;
+
 use crate::config::{AutoscalerConfig, ClusterConfig, CostModel, ScalerKind};
 use crate::coordinator::autoscaler::scaler_from_config;
 use crate::coordinator::{ServingSession, SystemKind};

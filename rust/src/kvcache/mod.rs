@@ -45,7 +45,7 @@ pub mod sched;
 pub mod switch;
 
 pub use pool::KvPool;
-pub use sched::{ContinuousScheduler, IterationPlan, ReqView};
+pub use sched::{ContinuousScheduler, IterScratch, IterationPlan, ReqView};
 pub use switch::{
     swap_cost_s, AdaptiveKvSwitch, AlwaysRecompute, AlwaysSwapToHost, KvSwitchPolicy,
     KvVictimAction,

@@ -13,6 +13,10 @@
 //!                                          SLO/cost scoreboard (Fig 14/15 analogue)
 //! lambda-scale bench [--out FILE] [--requests N] [--seed S]
 //!                    [--kv-block-tokens B] serving perf snapshot → BENCH_serving.json
+//! lambda-scale bench --scale [--smoke] [--seed S] [--out FILE] [--md FILE]
+//!                    [--check FILE]        simulator scaling sweep 10^4→10^6 requests
+//!                                          → BENCH_scale.json + RESULTS.md section
+//!                                          (--check validates an existing file's schema)
 //! lambda-scale trace-gen --out FILE        emit a BurstGPT-like CSV trace
 //! lambda-scale serve [--artifacts DIR]     serve a demo generation on real PJRT
 //! lambda-scale info                        print testbed presets + model zoo
@@ -233,6 +237,30 @@ fn main() {
             run_eval(&cfg, &out, &md);
         }
         "bench" => {
+            if args.iter().any(|a| a == "--scale") {
+                // Simulator scaling sweep (10^4→10^6 requests); `--check`
+                // validates an existing BENCH_scale.json instead of running.
+                if let Some(path) = flag("--check") {
+                    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+                        eprintln!("reading {path}: {e}");
+                        std::process::exit(1);
+                    });
+                    match lambda_scale::eval::scale::check_report(&text) {
+                        Ok(()) => println!("{path}: schema OK"),
+                        Err(e) => {
+                            eprintln!("{path}: {e}");
+                            std::process::exit(1);
+                        }
+                    }
+                    return;
+                }
+                let out = flag("--out").unwrap_or_else(|| "BENCH_scale.json".into());
+                let md = flag("--md").unwrap_or_else(|| "RESULTS.md".into());
+                let seed: u64 = flag("--seed").and_then(|s| s.parse().ok()).unwrap_or(7);
+                let smoke = args.iter().any(|a| a == "--smoke");
+                run_scale(seed, smoke, &out, &md);
+                return;
+            }
             let out = flag("--out").unwrap_or_else(|| "BENCH_serving.json".into());
             let n: usize = flag("--requests").and_then(|s| s.parse().ok()).unwrap_or(64);
             let seed: u64 = flag("--seed").and_then(|s| s.parse().ok()).unwrap_or(7);
@@ -296,6 +324,8 @@ fn main() {
                  \x20                                       + RESULTS.md (Fig 14/15 analogue)\n\
                  \x20 bench     [--out F] [--requests N] [--seed S] [--kv-block-tokens B]\n\
                  \x20                                       perf snapshot → BENCH_serving.json\n\
+                 \x20 bench --scale [--smoke] [--seed S] [--out F] [--md F] [--check F]\n\
+                 \x20                                       scaling sweep → BENCH_scale.json\n\
                  \x20 trace-gen [--out F] [--duration S]    emit a BurstGPT-like CSV trace\n\
                  \x20 serve     [--artifacts D] [--prompt P] [--tokens N]\n\
                  \x20 info                                  testbed presets + model zoo\n\n\
@@ -409,6 +439,54 @@ fn run_bench(out: &str, n: usize, seed: u64, kv_block_tokens: usize) {
         ttft.p99(),
         tokens_per_s
     );
+}
+
+/// `lambda-scale bench --scale`: the simulator scaling sweep. Runs the
+/// deterministic (requests × nodes) diagonal, writes `BENCH_scale.json`,
+/// splices the sweep section into `RESULTS.md`, and prints the per-point
+/// table (see `docs/EVALUATION.md`).
+fn run_scale(seed: u64, smoke: bool, out: &str, md: &str) {
+    use lambda_scale::eval::scale;
+    println!(
+        "bench --scale: {} sweep, seed {seed} ({:.1} rps/node diagonal)\n",
+        if smoke { "smoke" } else { "full 10^4→10^6" },
+        scale::RPS_PER_NODE
+    );
+    let report = scale::run_sweep(seed, smoke);
+    let mut t = Table::new(&[
+        "requests", "nodes", "served", "events", "sim (s)", "wall (s)", "wall/sim-s",
+        "events/wall-s", "peak RSS (MB)",
+    ]);
+    for p in &report.points {
+        t.row(&[
+            format!("{}", p.requests),
+            format!("{}", p.nodes),
+            format!("{}", p.completed),
+            format!("{}", p.events),
+            format!("{:.0}", p.sim_s),
+            format!("{:.2}", p.wall_s),
+            format!("{:.5}", p.wall_per_sim_s),
+            format!("{:.0}", p.events_per_wall_s),
+            format!("{:.0}", p.peak_rss_mb),
+        ]);
+    }
+    t.print();
+    if let Err(e) = std::fs::write(out, format!("{}\n", report.to_json())) {
+        eprintln!("writing {out}: {e}");
+        std::process::exit(1);
+    }
+    if !smoke {
+        // The smoke sweep is a CI guard; only real sweeps touch RESULTS.md.
+        let existing = std::fs::read_to_string(md).unwrap_or_default();
+        let spliced = scale::splice_markdown(&existing, &report.to_markdown_section());
+        if let Err(e) = std::fs::write(md, spliced) {
+            eprintln!("writing {md}: {e}");
+            std::process::exit(1);
+        }
+        println!("\nwrote {out} and spliced the sweep section into {md}");
+    } else {
+        println!("\nwrote {out} (smoke sweep; RESULTS.md untouched)");
+    }
 }
 
 fn serve_demo(dir: &str, prompt: &str, n: usize) -> anyhow::Result<()> {

@@ -79,8 +79,9 @@ impl CostBreakdown {
     }
 }
 
-/// Collector for one serving run.
-#[derive(Clone, Debug, Default)]
+/// Collector for one serving run. `PartialEq` is exact (bitwise on every
+/// f64) — the event-queue equivalence suite compares whole collectors.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct MetricsCollector {
     /// Per-request records, in completion order.
     pub requests: Vec<RequestMetrics>,
@@ -141,6 +142,15 @@ impl MetricsCollector {
     /// An empty collector.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Pre-size the per-request buffers for a trace of `n` requests so a
+    /// million-request run does not pay repeated doubling reallocations
+    /// (`requests` gets one record per request; `token_events` one sample
+    /// per completion plus one per first token).
+    pub fn reserve_requests(&mut self, n: usize) {
+        self.requests.reserve(n.saturating_sub(self.requests.len()));
+        self.token_events.reserve((2 * n).saturating_sub(self.token_events.len()));
     }
 
     /// Record one completed request.

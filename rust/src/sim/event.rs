@@ -1,13 +1,60 @@
-//! Generic deterministic event queue: min-heap on (time, sequence) so
+//! Deterministic event queue: a hierarchical timer wheel (with a retained
+//! binary-heap reference implementation) ordered on (time, sequence) so
 //! same-time events dequeue in insertion order (reproducible runs).
+//!
+//! # Determinism contract
+//!
+//! Every backend pops events in exactly the same total order: ascending
+//! `(time, seq)` where `seq` is the global push counter. The timer wheel
+//! is therefore *bit-identical* to the heap — `QueueKind::Heap` exists
+//! solely as the regression reference (see `rust/tests/event_queue_equiv.rs`).
+//!
+//! # Timer wheel layout
+//!
+//! Time is bucketed by `t >> BUCKET_BITS` (~2 ms buckets). Three levels:
+//!
+//! * **current bucket** — a small binary heap holding the bucket under
+//!   the cursor (plus any event pushed at or before the cursor bucket);
+//!   pops are `O(log bucket_len)` on a few dozen entries instead of the
+//!   whole future.
+//! * **ring** — `RING` unsorted vectors covering the next ~8 s of
+//!   simulated time, with a bitmap for O(words) next-bucket scans.
+//!   Pushes into the window are O(1).
+//! * **overflow** — a `BTreeMap<bucket, Vec>` for events beyond the
+//!   window (e.g. a whole trace's arrivals pushed up front); pushes are
+//!   `O(log #buckets)` and buckets migrate forward as the cursor advances.
+//!
+//! # Cancellation
+//!
+//! [`EventQueue::push_cancelable`] returns a [`TimerId`]; [`EventQueue::cancel`]
+//! is O(1) (a tombstone — the entry is skipped at pop time without
+//! advancing `now`). Revocable engine timers (keep-alive reclaims, 250 ms
+//! scale-down probes) use this instead of paying pop-and-ignore churn.
 
 use super::time::SimTime;
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BTreeMap, BinaryHeap, HashSet};
+
+/// Which event-queue backend a session runs on. Both are bit-identical;
+/// the heap is retained as the equivalence-test reference.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QueueKind {
+    /// Hierarchical timer wheel (default; fast path).
+    #[default]
+    Wheel,
+    /// Single global binary heap (reference implementation).
+    Heap,
+}
+
+/// Handle to a cancelable timer returned by [`EventQueue::push_cancelable`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TimerId(u64);
 
 struct Entry<E> {
     time: SimTime,
     seq: u64,
+    /// 0 = plain event; nonzero = cancelable timer id.
+    timer: u64,
     event: E,
 }
 
@@ -31,11 +78,186 @@ impl<E> Ord for Entry<E> {
     }
 }
 
-/// Deterministic discrete-event queue.
+/// log2 of the bucket width in nanoseconds (~2.1 ms buckets).
+const BUCKET_BITS: u32 = 21;
+/// Ring slots: window of `RING << BUCKET_BITS` ns (~8.6 s) past the cursor.
+const RING: usize = 4096;
+const WORDS: usize = RING / 64;
+
+fn bucket_of(t: SimTime) -> u64 {
+    t.0 >> BUCKET_BITS
+}
+
+struct Wheel<E> {
+    /// Absolute index of the bucket currently draining through `cur`.
+    cursor: u64,
+    /// Sorted contents of the cursor bucket (and of anything pushed at
+    /// or before it — always ≤ every ring/overflow entry).
+    cur: BinaryHeap<Reverse<Entry<E>>>,
+    /// Unsorted buckets for `(cursor, cursor + RING)`; slot = bucket % RING.
+    ring: Vec<Vec<Entry<E>>>,
+    /// Occupancy bitmap over ring slots.
+    occ: Vec<u64>,
+    /// Buckets at `cursor + RING` and beyond.
+    overflow: BTreeMap<u64, Vec<Entry<E>>>,
+}
+
+impl<E> Wheel<E> {
+    fn new() -> Self {
+        Wheel {
+            cursor: 0,
+            cur: BinaryHeap::new(),
+            ring: (0..RING).map(|_| Vec::new()).collect(),
+            occ: vec![0; WORDS],
+            overflow: BTreeMap::new(),
+        }
+    }
+
+    fn push(&mut self, e: Entry<E>) {
+        let b = bucket_of(e.time);
+        if b <= self.cursor {
+            // Cursor bucket, or behind a cursor that ran ahead via peek:
+            // still ≥ `now`, and still ahead of every ring/overflow bucket.
+            self.cur.push(Reverse(e));
+        } else if b - self.cursor < RING as u64 {
+            let slot = (b as usize) % RING;
+            self.occ[slot / 64] |= 1 << (slot % 64);
+            self.ring[slot].push(e);
+        } else {
+            self.overflow.entry(b).or_default().push(e);
+        }
+    }
+
+    /// Earliest occupied ring bucket strictly after the cursor.
+    fn next_ring_bucket(&self) -> Option<u64> {
+        let slot0 = (self.cursor as usize + 1) % RING;
+        let mut wi = slot0 / 64;
+        let mut mask = !0u64 << (slot0 % 64);
+        // One extra iteration re-visits the first word for the wrapped
+        // low bits (anything ≥ slot0 there was already seen as zero).
+        for _ in 0..=WORDS {
+            let bits = self.occ[wi] & mask;
+            if bits != 0 {
+                let slot = wi * 64 + bits.trailing_zeros() as usize;
+                let r = (slot + RING - (self.cursor as usize % RING)) % RING;
+                debug_assert!(r != 0, "cursor slot can never be occupied");
+                return Some(self.cursor + r as u64);
+            }
+            wi = (wi + 1) % WORDS;
+            mask = !0;
+        }
+        None
+    }
+
+    /// Move the cursor to the next occupied bucket and drain it into
+    /// `cur`. Returns false when nothing remains anywhere.
+    fn advance(&mut self) -> bool {
+        debug_assert!(self.cur.is_empty());
+        let ring_next = self.next_ring_bucket();
+        let of_next = self.overflow.keys().next().copied();
+        let target = match (ring_next, of_next) {
+            (None, None) => return false,
+            (Some(a), None) => a,
+            (None, Some(b)) => b,
+            // Equal is possible: an overflow bucket that entered the
+            // window gets later pushes ring-side. Merge both below.
+            (Some(a), Some(b)) => a.min(b),
+        };
+        self.cursor = target;
+        if ring_next == Some(target) {
+            let slot = (target as usize) % RING;
+            self.occ[slot / 64] &= !(1u64 << (slot % 64));
+            for e in self.ring[slot].drain(..) {
+                self.cur.push(Reverse(e));
+            }
+        }
+        if of_next == Some(target) {
+            if let Some(v) = self.overflow.remove(&target) {
+                for e in v {
+                    self.cur.push(Reverse(e));
+                }
+            }
+        }
+        true
+    }
+
+    /// Timer tag of the head entry, advancing buckets as needed (never
+    /// touches `now` — safe under peek).
+    fn peek_timer(&mut self) -> Option<u64> {
+        loop {
+            if let Some(Reverse(e)) = self.cur.peek() {
+                return Some(e.timer);
+            }
+            if !self.advance() {
+                return None;
+            }
+        }
+    }
+
+    fn pop_head(&mut self) -> Option<Entry<E>> {
+        loop {
+            if let Some(Reverse(e)) = self.cur.pop() {
+                return Some(e);
+            }
+            if !self.advance() {
+                return None;
+            }
+        }
+    }
+}
+
+enum Backend<E> {
+    Wheel(Wheel<E>),
+    Heap(BinaryHeap<Reverse<Entry<E>>>),
+}
+
+impl<E> Backend<E> {
+    fn push(&mut self, e: Entry<E>) {
+        match self {
+            Backend::Wheel(w) => w.push(e),
+            Backend::Heap(h) => h.push(Reverse(e)),
+        }
+    }
+
+    fn peek_timer(&mut self) -> Option<u64> {
+        match self {
+            Backend::Wheel(w) => w.peek_timer(),
+            Backend::Heap(h) => h.peek().map(|Reverse(e)| e.timer),
+        }
+    }
+
+    fn peek_time(&mut self) -> Option<SimTime> {
+        match self {
+            Backend::Wheel(w) => {
+                w.peek_timer()?;
+                w.cur.peek().map(|Reverse(e)| e.time)
+            }
+            Backend::Heap(h) => h.peek().map(|Reverse(e)| e.time),
+        }
+    }
+
+    fn pop_head(&mut self) -> Option<Entry<E>> {
+        match self {
+            Backend::Wheel(w) => w.pop_head(),
+            Backend::Heap(h) => h.pop().map(|Reverse(e)| e),
+        }
+    }
+}
+
+/// Deterministic discrete-event queue (see module docs for the wheel
+/// layout and the bit-identical determinism contract).
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Reverse<Entry<E>>>,
+    backend: Backend<E>,
     seq: u64,
     now: SimTime,
+    /// Live (scheduled, not yet popped or cancelled) entries.
+    live: usize,
+    next_timer: u64,
+    /// Cancelable timers still in the queue.
+    armed: HashSet<u64>,
+    /// Cancelled timers not yet skipped at the head.
+    cancelled: HashSet<u64>,
+    popped: u64,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -45,8 +267,26 @@ impl<E> Default for EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// A queue on the default backend (the timer wheel).
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), seq: 0, now: SimTime::ZERO }
+        Self::with_kind(QueueKind::Wheel)
+    }
+
+    /// A queue on an explicit backend.
+    pub fn with_kind(kind: QueueKind) -> Self {
+        EventQueue {
+            backend: match kind {
+                QueueKind::Wheel => Backend::Wheel(Wheel::new()),
+                QueueKind::Heap => Backend::Heap(BinaryHeap::new()),
+            },
+            seq: 0,
+            now: SimTime::ZERO,
+            live: 0,
+            next_timer: 1,
+            armed: HashSet::new(),
+            cancelled: HashSet::new(),
+            popped: 0,
+        }
     }
 
     /// Current simulated time (time of the last popped event).
@@ -54,20 +294,33 @@ impl<E> EventQueue<E> {
         self.now
     }
 
+    /// Live entries (cancelled timers no longer count).
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.live
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.live == 0
+    }
+
+    /// Events popped so far (cancelled timers never pop).
+    pub fn popped(&self) -> u64 {
+        self.popped
+    }
+
+    fn entry(&mut self, t: SimTime, timer: u64, event: E) -> Entry<E> {
+        assert!(t >= self.now, "scheduling into the past: {t} < {}", self.now);
+        let e = Entry { time: t, seq: self.seq, timer, event };
+        self.seq += 1;
+        e
     }
 
     /// Schedule `event` at absolute time `t`. Panics if `t` is in the past —
     /// causality violations are bugs, not recoverable conditions.
     pub fn push(&mut self, t: SimTime, event: E) {
-        assert!(t >= self.now, "scheduling into the past: {t} < {}", self.now);
-        self.heap.push(Reverse(Entry { time: t, seq: self.seq, event }));
-        self.seq += 1;
+        let e = self.entry(t, 0, event);
+        self.backend.push(e);
+        self.live += 1;
     }
 
     /// Schedule `event` `delay` after now.
@@ -75,16 +328,71 @@ impl<E> EventQueue<E> {
         self.push(self.now + delay, event);
     }
 
-    /// Pop the earliest event, advancing simulated time.
+    /// Schedule a revocable timer at absolute time `t`. Same ordering
+    /// semantics as [`push`](Self::push); the returned id feeds
+    /// [`cancel`](Self::cancel).
+    pub fn push_cancelable(&mut self, t: SimTime, event: E) -> TimerId {
+        let id = self.next_timer;
+        self.next_timer += 1;
+        let e = self.entry(t, id, event);
+        self.backend.push(e);
+        self.live += 1;
+        self.armed.insert(id);
+        TimerId(id)
+    }
+
+    /// Cancel a pending timer in O(1). Returns false if it already fired
+    /// or was already cancelled. A cancelled entry is skipped at pop time
+    /// without advancing `now`.
+    pub fn cancel(&mut self, id: TimerId) -> bool {
+        if self.armed.remove(&id.0) {
+            self.cancelled.insert(id.0);
+            self.live -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Drop cancelled tombstones off the head so the next peek/pop sees a
+    /// live entry. Returns false when the queue is (live-)empty.
+    fn ensure_live_head(&mut self) -> bool {
+        if self.live == 0 {
+            return false;
+        }
+        loop {
+            let Some(timer) = self.backend.peek_timer() else { return false };
+            if timer != 0 && self.cancelled.contains(&timer) {
+                self.backend.pop_head();
+                self.cancelled.remove(&timer);
+                continue;
+            }
+            return true;
+        }
+    }
+
+    /// Pop the earliest live event, advancing simulated time.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
-        let Reverse(e) = self.heap.pop()?;
+        if !self.ensure_live_head() {
+            return None;
+        }
+        let e = self.backend.pop_head()?;
+        if e.timer != 0 {
+            self.armed.remove(&e.timer);
+        }
+        self.live -= 1;
+        self.popped += 1;
         self.now = e.time;
         Some((e.time, e.event))
     }
 
-    /// Time of the next event without popping.
-    pub fn peek_time(&self) -> Option<SimTime> {
-        self.heap.peek().map(|Reverse(e)| e.time)
+    /// Time of the next live event without popping (may internally skip
+    /// cancelled tombstones; never advances `now`).
+    pub fn peek_time(&mut self) -> Option<SimTime> {
+        if !self.ensure_live_head() {
+            return None;
+        }
+        self.backend.peek_time()
     }
 }
 
@@ -92,24 +400,31 @@ impl<E> EventQueue<E> {
 mod tests {
     use super::*;
 
+    fn both() -> [EventQueue<&'static str>; 2] {
+        [EventQueue::with_kind(QueueKind::Wheel), EventQueue::with_kind(QueueKind::Heap)]
+    }
+
     #[test]
     fn pops_in_time_order() {
-        let mut q = EventQueue::new();
-        q.push(SimTime(30), "c");
-        q.push(SimTime(10), "a");
-        q.push(SimTime(20), "b");
-        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
-        assert_eq!(order, vec!["a", "b", "c"]);
+        for mut q in both() {
+            q.push(SimTime(30), "c");
+            q.push(SimTime(10), "a");
+            q.push(SimTime(20), "b");
+            let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+            assert_eq!(order, vec!["a", "b", "c"]);
+        }
     }
 
     #[test]
     fn ties_fifo() {
-        let mut q = EventQueue::new();
-        for i in 0..10 {
-            q.push(SimTime(5), i);
+        for kind in [QueueKind::Wheel, QueueKind::Heap] {
+            let mut q = EventQueue::with_kind(kind);
+            for i in 0..10 {
+                q.push(SimTime(5), i);
+            }
+            let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+            assert_eq!(order, (0..10).collect::<Vec<_>>());
         }
-        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
-        assert_eq!(order, (0..10).collect::<Vec<_>>());
     }
 
     #[test]
@@ -133,6 +448,72 @@ mod tests {
     }
 
     #[test]
+    fn far_future_overflow_round_trips() {
+        // Events far beyond the ring window (hours of sim time) must pop
+        // in exact order alongside near events pushed later.
+        let mut q = EventQueue::new();
+        let hour = 3_600_000_000_000u64; // ns
+        q.push(SimTime(3 * hour), "far3");
+        q.push(SimTime(hour), "far1");
+        q.push(SimTime(5), "near");
+        q.push(SimTime(2 * hour), "far2");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec!["near", "far1", "far2", "far3"]);
+    }
+
+    #[test]
+    fn overflow_bucket_merges_with_ring_pushes() {
+        // An overflow bucket that enters the window can acquire ring-side
+        // siblings pushed later at the same bucket; FIFO must hold.
+        let mut q = EventQueue::new();
+        let t = SimTime(20 << BUCKET_BITS); // in-window bucket
+        let far = SimTime((RING as u64 + 10) << BUCKET_BITS);
+        q.push(far, 0u32); // overflow at push time
+        q.push(t, 1);
+        q.pop(); // t pops first; cursor advances into the window
+        // `far`'s bucket is now in range: later pushes go ring-side while
+        // the original entry sits in overflow. Same time ⇒ seq order.
+        q.push(far, 2);
+        assert_eq!(q.pop(), Some((far, 0)));
+        assert_eq!(q.pop(), Some((far, 2)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn cancellation_is_exact() {
+        for kind in [QueueKind::Wheel, QueueKind::Heap] {
+            let mut q = EventQueue::with_kind(kind);
+            q.push(SimTime(10), "keep1");
+            let t1 = q.push_cancelable(SimTime(20), "drop");
+            let t2 = q.push_cancelable(SimTime(30), "keep2");
+            assert_eq!(q.len(), 3);
+            assert!(q.cancel(t1));
+            assert!(!q.cancel(t1), "double-cancel must report false");
+            assert_eq!(q.len(), 2);
+            assert_eq!(q.pop(), Some((SimTime(10), "keep1")));
+            // Cancelled entry is skipped without advancing now.
+            assert_eq!(q.peek_time(), Some(SimTime(30)));
+            assert_eq!(q.now(), SimTime(10));
+            assert_eq!(q.pop(), Some((SimTime(30), "keep2")));
+            assert!(!q.cancel(t2), "fired timers can no longer cancel");
+            assert_eq!(q.pop(), None);
+            assert!(q.is_empty());
+        }
+    }
+
+    #[test]
+    fn peek_then_push_behind_cursor_stays_ordered() {
+        // peek_time may run the wheel cursor ahead through empty buckets;
+        // a later push between now and the peeked head must still pop first.
+        let mut q = EventQueue::new();
+        q.push(SimTime(100 << BUCKET_BITS), "late");
+        assert_eq!(q.peek_time(), Some(SimTime(100 << BUCKET_BITS)));
+        q.push(SimTime(7), "early");
+        assert_eq!(q.pop().map(|(_, e)| e), Some("early"));
+        assert_eq!(q.pop().map(|(_, e)| e), Some("late"));
+    }
+
+    #[test]
     fn minicheck_event_order_property() {
         use crate::util::minicheck::check;
         check("event queue is globally time-ordered", 50, |rng| {
@@ -144,6 +525,62 @@ mod tests {
             while let Some((t, _)) = q.pop() {
                 assert!(t >= last);
                 last = t;
+            }
+        });
+    }
+
+    #[test]
+    fn minicheck_wheel_matches_heap() {
+        use crate::util::minicheck::check;
+        // Random interleaved pushes/pops/cancellations across the full
+        // bucket range (current, ring, overflow): the wheel must replay
+        // the heap bit-identically, including same-timestamp FIFO.
+        check("wheel replays heap bit-identically", 50, |rng| {
+            let mut w = EventQueue::with_kind(QueueKind::Wheel);
+            let mut h = EventQueue::with_kind(QueueKind::Heap);
+            let mut timers: Vec<(TimerId, TimerId)> = Vec::new();
+            for _ in 0..rng.range(1, 400) {
+                match rng.below(10) {
+                    // Pushes spread over ~3 decades of time scales.
+                    0..=4 => {
+                        let base = w.now().0;
+                        let dt = match rng.below(3) {
+                            0 => rng.below(1 << 18),              // intra-bucket
+                            1 => rng.below((RING as u64) << 19),  // ring window
+                            _ => rng.below(1u64 << 40),           // overflow
+                        };
+                        let t = SimTime(base + dt);
+                        let v = rng.below(1_000_000);
+                        if rng.below(4) == 0 {
+                            timers.push((w.push_cancelable(t, v), h.push_cancelable(t, v)));
+                        } else {
+                            w.push(t, v);
+                            h.push(t, v);
+                        }
+                    }
+                    5..=7 => {
+                        assert_eq!(w.pop(), h.pop());
+                        assert_eq!(w.now(), h.now());
+                    }
+                    8 => {
+                        if !timers.is_empty() {
+                            let i = rng.below(timers.len() as u64) as usize;
+                            let (tw, th) = timers.swap_remove(i);
+                            assert_eq!(w.cancel(tw), h.cancel(th));
+                            assert_eq!(w.len(), h.len());
+                        }
+                    }
+                    _ => {
+                        assert_eq!(w.peek_time(), h.peek_time());
+                    }
+                }
+            }
+            loop {
+                let (a, b) = (w.pop(), h.pop());
+                assert_eq!(a, b);
+                if a.is_none() {
+                    break;
+                }
             }
         });
     }

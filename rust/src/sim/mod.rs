@@ -19,7 +19,7 @@ pub mod fabric;
 pub mod time;
 pub mod transfer;
 
-pub use event::EventQueue;
+pub use event::{EventQueue, QueueKind, TimerId};
 pub use fabric::{Fabric, FabricOp, FabricUpdate, FlowClass, OpId};
 pub use time::SimTime;
 pub use transfer::{BlockId, Medium, NodeId, SendIntent, Tier, TransferLog, TransferOpts, TransferSim};

@@ -1,0 +1,224 @@
+//! Timer-wheel ↔ binary-heap equivalence: the wheel is only allowed to be
+//! faster, never different. Every cell of the eval matrix — scaling
+//! backends × scaling policies, paged-KV on/off, disaggregation on/off,
+//! node-failure injection — must replay bit-identically on both queue
+//! backends (`SessionReport` equality covers every per-request metric,
+//! lifecycle meter, and the popped-event count), plus a property test
+//! pinning the same-timestamp FIFO contract the engine's determinism
+//! rests on.
+
+use lambda_scale::config::{AutoscalerConfig, ClusterConfig, DisaggConfig, ScalerKind};
+use lambda_scale::coordinator::{scaler_from_config, ServingSession, SystemKind};
+use lambda_scale::model::ModelSpec;
+use lambda_scale::sim::time::SimTime;
+use lambda_scale::sim::{EventQueue, QueueKind};
+use lambda_scale::util::minicheck::check;
+use lambda_scale::util::rng::Rng;
+use lambda_scale::workload::poisson_trace;
+
+/// One eval-matrix cell, replayed on a chosen queue backend.
+#[derive(Clone, Copy)]
+struct Cell {
+    system: SystemKind,
+    scaler: ScalerKind,
+    kv_block_tokens: usize,
+    disagg: bool,
+    /// `(node, at_s)` permanent failure, if any.
+    failure: Option<(usize, f64)>,
+}
+
+fn run_cell(cell: Cell, kind: QueueKind) -> lambda_scale::coordinator::SessionReport {
+    let mut cluster = ClusterConfig::testbed1();
+    cluster.n_nodes = 8;
+    // Deterministic per-cell trace: both replays see identical arrivals.
+    let mut rng = Rng::new(42);
+    let trace = poisson_trace(2.0, 40.0, "llama2-13b", 128, 48, &mut rng);
+    let scaler_cfg =
+        AutoscalerConfig { policy: cell.scaler, target_ttft_s: 1.5, ..Default::default() };
+    let mut b = ServingSession::builder()
+        .cluster(cluster)
+        .event_queue(kind)
+        .kv_block_tokens(cell.kv_block_tokens);
+    if cell.disagg {
+        b = b.disagg(DisaggConfig::default());
+    }
+    if let Some((node, at_s)) = cell.failure {
+        b = b.fail_node(node, at_s);
+    }
+    b.model(ModelSpec::llama2_13b())
+        .system(cell.system)
+        .scaler(scaler_from_config(&scaler_cfg))
+        .max_batch(4)
+        .keep_alive(5.0)
+        .initial_gpu_sources(1)
+        .initial_host_sources(2)
+        .trace(trace)
+        .run()
+}
+
+fn assert_equiv(cell: Cell, label: &str) {
+    let wheel = run_cell(cell, QueueKind::Wheel);
+    let heap = run_cell(cell, QueueKind::Heap);
+    assert!(
+        wheel.models[0].completed > 0,
+        "{label}: degenerate cell — nothing served, equivalence vacuous"
+    );
+    assert_eq!(wheel.events, heap.events, "{label}: popped-event counts diverge");
+    assert_eq!(wheel, heap, "{label}: SessionReport diverges between wheel and heap");
+}
+
+#[test]
+fn backends_by_scalers_replay_bit_identical() {
+    for system in [
+        SystemKind::LambdaScale { k: 2 },
+        SystemKind::ServerlessLlm,
+        SystemKind::FaasNet,
+    ] {
+        for scaler in
+            [ScalerKind::ReactiveWindow, ScalerKind::SloAware, ScalerKind::PredictiveEwma]
+        {
+            let cell = Cell {
+                system,
+                scaler,
+                kv_block_tokens: 0,
+                disagg: false,
+                failure: None,
+            };
+            assert_equiv(cell, &format!("{system:?} × {scaler:?}"));
+        }
+    }
+}
+
+#[test]
+fn kv_and_disagg_modes_replay_bit_identical() {
+    // The KV subsystem adds preemption/recompute timers and disaggregation
+    // adds hand-off streams — the event shapes the wheel's cancellation
+    // path and overflow ring see hardest.
+    for (kv, disagg) in [(16, false), (0, true), (16, true)] {
+        for system in [SystemKind::LambdaScale { k: 2 }, SystemKind::ServerlessLlm] {
+            let cell = Cell {
+                system,
+                scaler: ScalerKind::ReactiveWindow,
+                kv_block_tokens: kv,
+                disagg,
+                failure: None,
+            };
+            assert_equiv(cell, &format!("{system:?} kv={kv} disagg={disagg}"));
+        }
+    }
+}
+
+#[test]
+fn failure_injection_replays_bit_identical() {
+    // A node dies mid-scale-up: transfers abort, ops re-plan from
+    // survivors, instances on the node are killed. All of it must land on
+    // identical timestamps through both queue backends — including the
+    // failure arm crossed with KV and disaggregation.
+    for (kv, disagg) in [(0, false), (16, false), (0, true)] {
+        for system in [SystemKind::LambdaScale { k: 2 }, SystemKind::FaasNet] {
+            let cell = Cell {
+                system,
+                scaler: ScalerKind::SloAware,
+                kv_block_tokens: kv,
+                disagg,
+                failure: Some((2, 6.0)),
+            };
+            assert_equiv(cell, &format!("{system:?} kv={kv} disagg={disagg} + node-2 failure"));
+        }
+    }
+}
+
+// ---- queue-level property: same-timestamp FIFO --------------------------
+
+/// A replayable queue workload (generated once, driven through both
+/// backends): interleaved pushes (heavy timestamp collisions on purpose),
+/// revocable timers, cancellations, and partial drains.
+#[derive(Clone, Debug)]
+enum Op {
+    /// Plain event at `now + delta`.
+    Push { delta: SimTime, payload: u32 },
+    /// Revocable timer at `now + delta`.
+    PushCancelable { delta: SimTime, payload: u32 },
+    /// Cancel the `n`-th cancelable timer armed so far (mod count).
+    Cancel { n: usize },
+    /// Pop up to `n` events.
+    Pop { n: usize },
+}
+
+fn gen_ops(rng: &mut Rng) -> Vec<Op> {
+    let mut ops = Vec::new();
+    let mut payload = 0u32;
+    for _ in 0..rng.range(20, 120) {
+        match rng.below(8) {
+            // Mostly pushes, biased to a handful of distinct deltas so
+            // same-timestamp collisions are the norm, not the exception.
+            0..=3 => {
+                let delta = SimTime::from_millis([0.0, 0.0, 1.0, 2.0, 700.0][rng.below(5) as usize]);
+                payload += 1;
+                ops.push(Op::Push { delta, payload });
+            }
+            4..=5 => {
+                // A slice of timers lands deep in the wheel's overflow
+                // territory (≥ the ~8.6 s ring window).
+                let delta =
+                    SimTime::from_millis([0.0, 3.0, 9_500.0][rng.below(3) as usize]);
+                payload += 1;
+                ops.push(Op::PushCancelable { delta, payload });
+            }
+            6 => ops.push(Op::Cancel { n: rng.below(16) as usize }),
+            _ => ops.push(Op::Pop { n: rng.range(1, 6) as usize }),
+        }
+    }
+    ops.push(Op::Pop { n: usize::MAX });
+    ops
+}
+
+/// Drive `ops` through a queue, returning the full pop sequence.
+fn drive(kind: QueueKind, ops: &[Op]) -> Vec<(SimTime, u32)> {
+    let mut q: EventQueue<u32> = EventQueue::with_kind(kind);
+    let mut timers = Vec::new();
+    let mut out = Vec::new();
+    for op in ops {
+        match *op {
+            Op::Push { delta, payload } => q.push(q.now() + delta, payload),
+            Op::PushCancelable { delta, payload } => {
+                timers.push(q.push_cancelable(q.now() + delta, payload));
+            }
+            Op::Cancel { n } => {
+                if !timers.is_empty() {
+                    let id = timers[n % timers.len()];
+                    q.cancel(id); // false (already fired/cancelled) is fine
+                }
+            }
+            Op::Pop { n } => {
+                for _ in 0..n {
+                    match q.pop() {
+                        Some(e) => out.push(e),
+                        None => break,
+                    }
+                }
+            }
+        }
+    }
+    assert!(q.is_empty(), "final drain must empty the queue");
+    out
+}
+
+#[test]
+fn property_same_timestamp_fifo_and_wheel_heap_equality() {
+    check("wheel ≡ heap incl. FIFO ties under cancellation", 60, |rng: &mut Rng| {
+        let ops = gen_ops(rng);
+        let wheel = drive(QueueKind::Wheel, &ops);
+        let heap = drive(QueueKind::Heap, &ops);
+        assert_eq!(wheel, heap, "pop sequences diverge");
+        // Explicit FIFO contract: equal timestamps pop in push order.
+        // Payloads are assigned in push order, so within one timestamp
+        // they must be strictly increasing.
+        for w in wheel.windows(2) {
+            assert!(w[0].0 <= w[1].0, "time went backwards");
+            if w[0].0 == w[1].0 {
+                assert!(w[0].1 < w[1].1, "same-timestamp events out of push order: {w:?}");
+            }
+        }
+    });
+}
