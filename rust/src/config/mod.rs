@@ -199,6 +199,59 @@ impl Default for DisaggConfig {
     }
 }
 
+/// Flight-recorder tracing knobs (the TOML `[trace]` section; see
+/// `crate::trace`). Absent — `ClusterConfig::trace == None`, the default —
+/// the engine allocates no event buffer and sessions replay bit-identical
+/// (the same off-by-default discipline as `[kvcache]` and `[disagg]`).
+/// Present, the engine records typed, timestamped events from every
+/// enabled category; each bool gates one category (all on by default).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Request lifecycle phases (arrival → queued → KV-wait → prefill →
+    /// hand-off → decode → done).
+    pub request: bool,
+    /// Scaling-op waterfalls (plan, instance up/down, pipeline activation,
+    /// cancellation, failure re-plan).
+    pub scaling: bool,
+    /// Fabric flows (per-block start/finish, bandwidth re-shares).
+    pub fabric: bool,
+    /// KV pool pressure, overcommit and preemption events.
+    pub kv: bool,
+    /// Memory-tier promotions/demotions.
+    pub memory: bool,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { request: true, scaling: true, fabric: true, kv: true, memory: true }
+    }
+}
+
+impl TraceConfig {
+    /// A config with only the comma-separated categories of `filter`
+    /// enabled (the CLI `--filter request|scaling|fabric|kv|memory` flag);
+    /// unknown names are an error.
+    pub fn from_filter(filter: &str) -> Result<Self, String> {
+        let mut cfg =
+            TraceConfig { request: false, scaling: false, fabric: false, kv: false, memory: false };
+        for name in filter.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            match name {
+                "request" => cfg.request = true,
+                "scaling" => cfg.scaling = true,
+                "fabric" => cfg.fabric = true,
+                "kv" => cfg.kv = true,
+                "memory" => cfg.memory = true,
+                other => {
+                    return Err(format!(
+                        "unknown trace category `{other}` (want request|scaling|fabric|kv|memory)"
+                    ))
+                }
+            }
+        }
+        Ok(cfg)
+    }
+}
+
 /// Which [`crate::coordinator::autoscaler::ScalingPolicy`] implementation
 /// drives instance counts (the `[autoscaler] policy` config key).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -305,6 +358,9 @@ pub struct ClusterConfig {
     pub cost: CostModel,
     /// Prefill/decode disaggregation (`None` = colocated, the default).
     pub disagg: Option<DisaggConfig>,
+    /// Flight-recorder tracing (`None` = off, the default: zero
+    /// allocation, bit-identical replay).
+    pub trace: Option<TraceConfig>,
     /// Event-queue backend for the discrete-event simulator (the TOML
     /// `[sim] event_queue` key). Both backends replay bit-identically;
     /// `Heap` exists as the equivalence-test reference.
@@ -463,6 +519,24 @@ impl ClusterConfig {
                 ));
             }
             cfg.disagg = Some(d);
+        }
+        if let Some(sec) = doc.get("trace") {
+            // Presence of the section enables the flight recorder; each
+            // category bool is optional and defaults to on.
+            let mut t = TraceConfig::default();
+            let getb = |k: &str, cur: bool| -> Result<bool, String> {
+                match sec.get(k) {
+                    None => Ok(cur),
+                    Some(TomlValue::Bool(b)) => Ok(*b),
+                    Some(v) => Err(format!("trace.{k} must be a bool, got {v:?}")),
+                }
+            };
+            t.request = getb("request", t.request)?;
+            t.scaling = getb("scaling", t.scaling)?;
+            t.fabric = getb("fabric", t.fabric)?;
+            t.kv = getb("kv", t.kv)?;
+            t.memory = getb("memory", t.memory)?;
+            cfg.trace = Some(t);
         }
         if let Some(sec) = doc.get("sim") {
             if let Some(v) = sec.get("event_queue") {
@@ -651,6 +725,36 @@ mod tests {
         // Unknown backends are a config error.
         let bad = parse_toml("[sim]\nevent_queue = \"splay\"\n").unwrap();
         assert!(ClusterConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn from_toml_reads_trace_section() {
+        // Absent section: the flight recorder stays off (zero allocation,
+        // bit-identical replay).
+        let off = ClusterConfig::from_toml(&parse_toml("").unwrap()).unwrap();
+        assert_eq!(off.trace, None);
+        // Bare section enables every category.
+        let on = ClusterConfig::from_toml(&parse_toml("[trace]\n").unwrap()).unwrap();
+        assert_eq!(on.trace, Some(TraceConfig::default()));
+        // Category bools gate individually.
+        let doc = parse_toml("[trace]\nfabric = false\nmemory = false\n").unwrap();
+        let t = ClusterConfig::from_toml(&doc).unwrap().trace.unwrap();
+        assert!(t.request && t.scaling && t.kv);
+        assert!(!t.fabric && !t.memory);
+        // Non-bool values are a config error.
+        let bad = parse_toml("[trace]\nkv = 3\n").unwrap();
+        assert!(ClusterConfig::from_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn trace_config_from_filter() {
+        let t = TraceConfig::from_filter("request,kv").unwrap();
+        assert!(t.request && t.kv);
+        assert!(!t.scaling && !t.fabric && !t.memory);
+        // Whitespace tolerated; empty filter enables nothing.
+        let t = TraceConfig::from_filter(" scaling , fabric ").unwrap();
+        assert!(t.scaling && t.fabric && !t.request);
+        assert!(TraceConfig::from_filter("wires").is_err());
     }
 
     #[test]

@@ -36,15 +36,16 @@ use super::session::{ModelReport, ModelSession, SessionReport};
 use crate::config::{ClusterConfig, DisaggConfig};
 use crate::disagg::{plan_kv_stream, DecodeView, DisaggRouter, PrefillView, Role, TwoTierScaler};
 use crate::kvcache::{ContinuousScheduler, IterScratch, KvGeometry, KvPool, KvVictimAction, ReqView};
-use crate::memory::{Locality, MemoryManager};
+use crate::memory::{Demotion, Locality, MemoryManager};
 use crate::metrics::RequestMetrics;
 use crate::multicast::{BlockId, NodeId};
 use crate::pipeline::execution::ExecPipeline;
 use crate::pipeline::mode_switch::plan_switch_pipeline;
 use crate::sim::event::{EventQueue, TimerId};
-use crate::sim::fabric::{Fabric, FabricOp, FabricUpdate, FlowClass, OpId};
+use crate::sim::fabric::{Fabric, FabricEvent, FabricOp, FabricUpdate, FlowClass, OpId};
 use crate::sim::time::SimTime;
 use crate::sim::transfer::Tier;
+use crate::trace::{Category, SessionTrace, TraceEvent, Tracer};
 use std::collections::{BTreeMap, HashMap, HashSet};
 
 #[derive(Clone, Debug)]
@@ -395,12 +396,17 @@ fn note_first_token(
     reqs: &mut [ReqState],
     trace: &crate::workload::Trace,
     scaler: &mut dyn super::autoscaler::ScalingPolicy,
+    tracer: &mut Option<Tracer>,
+    m: usize,
     idx: usize,
     now: SimTime,
 ) {
     reqs[idx].first_token = Some(now);
     let ttft = now.saturating_sub(trace.requests[idx].arrival).as_secs();
     scaler.observe_ttft(now, ttft);
+    if let Some(tr) = tracer.as_mut() {
+        tr.emit(now, TraceEvent::FirstToken { model: m, req: trace.requests[idx].id });
+    }
 }
 
 /// The multi-model serving engine. Construct with [`ServingEngine::new`],
@@ -443,6 +449,12 @@ pub struct ServingEngine {
     loading_nodes: Vec<usize>,
     /// Reusable node set for [`Self::account_gpus`].
     account_scratch: HashSet<NodeId>,
+    /// The flight recorder (`None` unless the cluster config arms
+    /// `[trace]`). Every hook is gated on `is_some()`/`as_mut()`, so the
+    /// off path costs one branch and zero allocation — the same
+    /// bit-identical-replay discipline as the kvcache and disagg
+    /// subsystems.
+    tracer: Option<Tracer>,
 }
 
 impl ServingEngine {
@@ -451,7 +463,16 @@ impl ServingEngine {
         let node_state = vec![NodeUse::Free; cluster.n_nodes];
         let node_busy = vec![None; cluster.n_nodes];
         let mem = MemoryManager::from_cluster(&cluster);
-        let fabric = Fabric::new(cluster.network.clone());
+        let mut fabric = Fabric::new(cluster.network.clone());
+        let tracer = cluster.trace.map(Tracer::new);
+        if let Some(tr) = &tracer {
+            if tr.wants(Category::Fabric) {
+                // Flow-level events are recorded inside the fabric (the
+                // only layer that knows share changes) and drained into
+                // the tracer on every fabric update.
+                fabric.enable_recorder();
+            }
+        }
         let node_role = vec![None; cluster.n_nodes];
         let q = EventQueue::with_kind(cluster.event_queue);
         ServingEngine {
@@ -471,6 +492,24 @@ impl ServingEngine {
             node_role,
             loading_nodes: Vec::new(),
             account_scratch: HashSet::new(),
+            tracer,
+        }
+    }
+
+    /// Forward a batch of memory-manager demotion reports to the flight
+    /// recorder (no-op with tracing off).
+    fn trace_demotions(&mut self, t: SimTime, demoted: &[Demotion]) {
+        if let Some(tr) = self.tracer.as_mut() {
+            for d in demoted {
+                tr.emit(
+                    t,
+                    TraceEvent::MemDemoted {
+                        node: d.node,
+                        model: d.model.clone(),
+                        tier: d.to.label(),
+                    },
+                );
+            }
         }
     }
 
@@ -550,7 +589,8 @@ impl ServingEngine {
                 continue;
             }
             if want_gpu > 0 {
-                if self.mem.reserve_gpu(n, &rt.mem_key, SimTime::ZERO).is_ok() {
+                if let Ok(demoted) = self.mem.reserve_gpu(n, &rt.mem_key, SimTime::ZERO) {
+                    self.trace_demotions(SimTime::ZERO, &demoted);
                     self.set_node_use(n, NodeUse::Serving(m), SimTime::ZERO);
                     rt.initial_gpu_nodes.push(n);
                     want_gpu -= 1;
@@ -558,7 +598,8 @@ impl ServingEngine {
                 continue;
             }
             if want_host > 0 {
-                if self.mem.admit_host(n, &rt.mem_key, SimTime::ZERO).is_ok() {
+                if let Ok(demoted) = self.mem.admit_host(n, &rt.mem_key, SimTime::ZERO) {
+                    self.trace_demotions(SimTime::ZERO, &demoted);
                     want_host -= 1;
                 }
                 continue;
@@ -570,7 +611,15 @@ impl ServingEngine {
     }
 
     /// Run the event loop to completion and return per-model metrics.
-    pub fn run(mut self) -> SessionReport {
+    pub fn run(self) -> SessionReport {
+        self.run_traced().0
+    }
+
+    /// Run the event loop to completion, also returning the sealed
+    /// flight-recorder trace when the cluster config armed one (`None`
+    /// otherwise). The [`SessionReport`] is bit-identical whether or not
+    /// tracing is on — the recorder only observes.
+    pub fn run_traced(mut self) -> (SessionReport, Option<SessionTrace>) {
         // Initial GPU-resident sources serve from t=0.
         for m in 0..self.models.len() {
             let nodes = std::mem::take(&mut self.models[m].initial_gpu_nodes);
@@ -645,7 +694,14 @@ impl ServingEngine {
             }
         }
         let events = self.q.popped();
-        SessionReport {
+        // Seal the trace before the report build consumes the models
+        // (the exporters index events by model name). With tracing off
+        // this allocates nothing.
+        let trace = self.tracer.take().map(|t| {
+            let names = self.models.iter().map(|rt| rt.ms.params.spec.name.clone()).collect();
+            t.finish(names, horizon)
+        });
+        let report = SessionReport {
             models: self
                 .models
                 .into_iter()
@@ -659,7 +715,8 @@ impl ServingEngine {
                 })
                 .collect(),
             events,
-        }
+        };
+        (report, trace)
     }
 
     // ---- instance lifecycle ------------------------------------------------
@@ -681,9 +738,14 @@ impl ServingEngine {
                 // Usually a refresh of the reservation made at recruit
                 // time; scripted (mock) plans may land on unreserved nodes,
                 // where a full node is simply not charged.
-                let _ = self.mem.reserve_gpu(n, &mem_key, now);
+                if let Ok(demoted) = self.mem.reserve_gpu(n, &mem_key, now) {
+                    self.trace_demotions(now, &demoted);
+                }
                 if full_replica {
                     self.mem.mark_gpu_ready(n, &mem_key);
+                    if let Some(tr) = self.tracer.as_mut() {
+                        tr.emit(now, TraceEvent::MemPromoted { node: n, model: mem_key.clone() });
+                    }
                 }
             }
         }
@@ -712,6 +774,18 @@ impl ServingEngine {
             },
         );
         md.ms.router.add_instance(id, weight.max(1e-6));
+        if let Some(tr) = self.tracer.as_mut() {
+            let p = &md.instances[&id].pipe;
+            let (node, stages) = (p.stages[0].node, p.n_stages());
+            // `SimTime::MAX` is the live-fabric sentinel: this pipeline
+            // activated mid-multicast (execute-while-load).
+            let ev = if dissolve_at == Some(SimTime::MAX) {
+                TraceEvent::PipelineActivated { model: m, inst: id, node, stages }
+            } else {
+                TraceEvent::InstanceUp { model: m, inst: id, node, stages }
+            };
+            tr.emit(now, ev);
+        }
         // Disaggregated mode: assign the new instance to a pool. Real
         // multi-stage pipelines always decode (pipelined decode is a
         // decode-pool construct — prefill stays on full local replicas);
@@ -821,7 +895,8 @@ impl ServingEngine {
                     charges.push((n, frac, 0));
                     continue;
                 }
-                if self.mem.reserve_kv(n, &key, bytes, now).is_ok() {
+                if let Ok(demoted) = self.mem.reserve_kv(n, &key, bytes, now) {
+                    self.trace_demotions(now, &demoted);
                     charges.push((n, frac, bytes));
                 } else {
                     // Headroom vanished between sizing and charging (can
@@ -881,12 +956,15 @@ impl ServingEngine {
                 continue;
             }
             let res = if old == 0 {
-                self.mem.reserve_kv(n, &key, new, now).map(|_| ())
+                self.mem.reserve_kv(n, &key, new, now)
             } else {
-                self.mem.grow_pinned(n, &key, new, now).map(|_| ())
+                self.mem.grow_pinned(n, &key, new, now)
             };
             match res {
-                Ok(()) => grown.push((n, old, new)),
+                Ok(demoted) => {
+                    self.trace_demotions(now, &demoted);
+                    grown.push((n, old, new));
+                }
                 Err(_) => {
                     ok = false;
                     break;
@@ -1064,6 +1142,17 @@ impl ServingEngine {
         let mem_key = md.mem_key.clone();
         let inst = md.instances.remove(&id).unwrap();
         md.ms.router.remove_instance(id);
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.emit(
+                now,
+                TraceEvent::InstanceDown {
+                    model: m,
+                    inst: id,
+                    node: inst.pipe.stages[0].node,
+                    reason: "reclaim",
+                },
+            );
+        }
         self.cancel_reclaim_timers(&inst);
         // Scale-down ordering: the KV arena's bytes are released first,
         // so the weights' GPU→host demotion below sees the full headroom.
@@ -1078,7 +1167,8 @@ impl ServingEngine {
                 // evicting another tenant's warm copy (whose next scale-up
                 // then goes cold); with too little host capacity this copy
                 // itself falls through to SSD.
-                let _demoted = self.mem.release_gpu(n, &mem_key, now);
+                let demoted = self.mem.release_gpu(n, &mem_key, now);
+                self.trace_demotions(now, &demoted);
             }
         }
         self.account_gpus(m, now);
@@ -1087,6 +1177,12 @@ impl ServingEngine {
     // ---- arrivals & routing -------------------------------------------------
 
     fn on_arrival(&mut self, now: SimTime, m: usize, idx: usize) {
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.emit(
+                now,
+                TraceEvent::Arrival { model: m, req: self.models[m].ms.trace.requests[idx].id },
+            );
+        }
         self.models[m].scaler.observe_arrival(now);
         self.route_request(now, m, idx);
         // Defer the scaling decision: same-instant arrivals (a burst) are
@@ -1112,6 +1208,12 @@ impl ServingEngine {
                 // batched-admission max_wait deadline further into the future.
                 let enqueued = md.ms.trace.requests[idx].arrival;
                 md.instances.get_mut(&id).unwrap().queue.push(idx, enqueued);
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.emit(
+                        now,
+                        TraceEvent::Queued { model: m, req: md.ms.trace.requests[idx].id, inst: id },
+                    );
+                }
                 self.try_admit(now, m, id);
             }
             None => md.unrouted.push_back(idx),
@@ -1160,6 +1262,12 @@ impl ServingEngine {
                 md.queued += 1;
                 let enqueued = md.ms.trace.requests[idx].arrival;
                 md.instances.get_mut(&id).unwrap().queue.push(idx, enqueued);
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.emit(
+                        now,
+                        TraceEvent::Queued { model: m, req: md.ms.trace.requests[idx].id, inst: id },
+                    );
+                }
                 self.try_admit(now, m, id);
             }
             None => {
@@ -1204,6 +1312,9 @@ impl ServingEngine {
         md.queued += 1;
         let enqueued = md.ms.trace.requests[idx].arrival;
         md.instances.get_mut(&inst).unwrap().queue.push(idx, enqueued);
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.emit(now, TraceEvent::Queued { model: m, req: md.ms.trace.requests[idx].id, inst });
+        }
         self.try_admit(now, m, inst);
     }
 
@@ -1274,6 +1385,9 @@ impl ServingEngine {
                 rate: 0.0,
                 decoding: false,
             });
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.emit(now, TraceEvent::Admitted { model: m, req: r.id, inst: id });
+            }
             changed = true;
         }
         changed
@@ -1303,7 +1417,20 @@ impl ServingEngine {
                 (idx, geom.blocks_for(ctx))
             };
             if !self.kv_acquire_for_head(now, m, id, need) {
-                self.models[m].reqs[idx].kv_blocked_since.get_or_insert(now);
+                let md = &mut self.models[m];
+                if md.reqs[idx].kv_blocked_since.is_none() {
+                    md.reqs[idx].kv_blocked_since = Some(now);
+                    if let Some(tr) = self.tracer.as_mut() {
+                        tr.emit(
+                            now,
+                            TraceEvent::KvWaitStart {
+                                model: m,
+                                req: md.ms.trace.requests[idx].id,
+                                inst: id,
+                            },
+                        );
+                    }
+                }
                 break;
             }
             slots -= 1;
@@ -1317,7 +1444,14 @@ impl ServingEngine {
             let st = &mut md.reqs[idx];
             let pre = st.preempted.take();
             if let Some(t0) = st.kv_blocked_since.take() {
-                st.kv.wait_s += now.saturating_sub(t0).as_secs();
+                let waited_s = now.saturating_sub(t0).as_secs();
+                st.kv.wait_s += waited_s;
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.emit(
+                        now,
+                        TraceEvent::KvWaitEnd { model: m, req: r.id, inst: id, waited_s },
+                    );
+                }
             }
             // Time-priced stalls (swap) convert to work units at the
             // request's expected share of the post-admission batch.
@@ -1374,6 +1508,9 @@ impl ServingEngine {
                 rate: 0.0,
                 decoding: false,
             });
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.emit(now, TraceEvent::Admitted { model: m, req: r.id, inst: id });
+            }
         }
         changed
     }
@@ -1404,7 +1541,13 @@ impl ServingEngine {
         let kv = inst.kv.as_mut().unwrap();
         let before = kv.pool.overcommit_blocks;
         kv.pool.force_acquire(need);
-        md.ms.metrics.record_kv_overcommit(kv.pool.overcommit_blocks - before);
+        let granted = kv.pool.overcommit_blocks - before;
+        md.ms.metrics.record_kv_overcommit(granted);
+        if granted > 0 {
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.emit(now, TraceEvent::KvOvercommit { model: m, inst: id, blocks: granted });
+            }
+        }
         true
     }
 
@@ -1443,6 +1586,8 @@ impl ServingEngine {
                     &mut md.reqs,
                     &md.ms.trace,
                     md.scaler.as_mut(),
+                    &mut self.tracer,
+                    m,
                     a.idx,
                     now,
                 );
@@ -1514,6 +1659,8 @@ impl ServingEngine {
                     &mut md.reqs,
                     &md.ms.trace,
                     md.scaler.as_mut(),
+                    &mut self.tracer,
+                    m,
                     a.idx,
                     now,
                 );
@@ -1588,6 +1735,12 @@ impl ServingEngine {
             kv_swap_s: kv.swap_s,
             kv_stream_s: stream_s,
         });
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.emit(
+                now,
+                TraceEvent::Done { model: m, req: r.id, inst: inst_id, tokens: r.output_tokens },
+            );
+        }
         if md.disagg.is_none() {
             md.ms.router.complete(inst_id);
         }
@@ -1614,6 +1767,16 @@ impl ServingEngine {
             }
             st.decode_phase = true;
             st.handoff_start = Some(now);
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.emit(
+                    now,
+                    TraceEvent::HandoffStart {
+                        model: m,
+                        req: md.ms.trace.requests[idx].id,
+                        src_node,
+                    },
+                );
+            }
             md.disagg.as_mut().unwrap().tiers.observe_decode_demand(now);
         }
         self.launch_kv_stream(now, m, src_node, idx);
@@ -1666,6 +1829,10 @@ impl ServingEngine {
             },
         );
         self.kv_ops.insert(op, m);
+        if let Some(tr) = self.tracer.as_mut() {
+            let dests = plan.needs.iter().map(|&(n, _)| n).collect::<HashSet<_>>().len();
+            tr.emit(now, TraceEvent::OpBegin { model: m, op, class: "kv", dests });
+        }
         self.models[m].disagg.as_mut().unwrap().streams.insert(
             op,
             KvStream { idx, decode_inst: target, needs: plan.needs.iter().copied().collect() },
@@ -1690,6 +1857,18 @@ impl ServingEngine {
                 let secs = now.saturating_sub(t0).as_secs();
                 md.reqs[idx].stream_s = secs;
                 md.ms.metrics.record_kv_stream(secs, networked);
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.emit(
+                        now,
+                        TraceEvent::HandoffDone {
+                            model: m,
+                            req: md.ms.trace.requests[idx].id,
+                            inst: decode_inst,
+                            stream_s: secs,
+                            networked,
+                        },
+                    );
+                }
             }
         }
         if self.models[m].instances.contains_key(&decode_inst) {
@@ -1803,6 +1982,9 @@ impl ServingEngine {
                     if (util - kv.last_util).abs() > 1e-9 {
                         kv.last_util = util;
                         md.ms.metrics.record_kv_util(now, id, util);
+                        if let Some(tr) = self.tracer.as_mut() {
+                            tr.emit(now, TraceEvent::KvPressure { model: m, inst: id, util });
+                        }
                     }
                 }
             }
@@ -1859,7 +2041,16 @@ impl ServingEngine {
                     let before = kv.pool.overcommit_blocks;
                     kv.pool.force_acquire(deficit);
                     inst.active[pos].kv_blocks += deficit;
-                    md.ms.metrics.record_kv_overcommit(kv.pool.overcommit_blocks - before);
+                    let granted = kv.pool.overcommit_blocks - before;
+                    md.ms.metrics.record_kv_overcommit(granted);
+                    if granted > 0 {
+                        if let Some(tr) = self.tracer.as_mut() {
+                            tr.emit(
+                                now,
+                                TraceEvent::KvOvercommit { model: m, inst: id, blocks: granted },
+                            );
+                        }
+                    }
                     i = pos;
                     continue;
                 }
@@ -1919,6 +2110,17 @@ impl ServingEngine {
         st.kv.preemptions += 1;
         st.kv_blocked_since.get_or_insert(now);
         md.ms.metrics.record_kv_preemption(action == KvVictimAction::SwapToHost);
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.emit(
+                now,
+                TraceEvent::KvPreempted {
+                    model: m,
+                    req: r.id,
+                    inst: id,
+                    swapped: action == KvVictimAction::SwapToHost,
+                },
+            );
+        }
         // Original arrival keeps the head-of-line clock honest.
         inst.queue.push_front(a.idx, r.arrival);
         md.queued += 1;
@@ -2055,15 +2257,29 @@ impl ServingEngine {
         // capacity cannot take the model are skipped.
         let mut recruited_warm: Vec<NodeId> = Vec::new();
         for &n in &warm_cand[..take_warm] {
-            if self.mem.reserve_gpu(n, &mem_key, now).is_ok() {
+            if let Ok(demoted) = self.mem.reserve_gpu(n, &mem_key, now) {
+                self.trace_demotions(now, &demoted);
                 recruited_warm.push(n);
             }
         }
         let mut dests_net: Vec<NodeId> = Vec::new();
         for &n in &cold_cand[..take_cold] {
-            if self.mem.reserve_gpu(n, &mem_key, now).is_ok() {
+            if let Ok(demoted) = self.mem.reserve_gpu(n, &mem_key, now) {
+                self.trace_demotions(now, &demoted);
                 dests_net.push(n);
             }
+        }
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.emit(
+                now,
+                TraceEvent::ScalePlan {
+                    model: m,
+                    current,
+                    desired,
+                    warm: recruited_warm.len(),
+                    cold: dests_net.len(),
+                },
+            );
         }
 
         // Sources from the manager: fully-loaded GPU replicas first, then
@@ -2206,9 +2422,11 @@ impl ServingEngine {
         for p in &sched.pipelines {
             referenced.extend(p.pipeline.nodes());
         }
+        let mut n_dests = 0usize;
         for &d in dests_net.iter().chain(recruited_warm.iter()) {
             if referenced.contains(&d) {
                 self.set_node_use(d, NodeUse::Loading(m), now);
+                n_dests += 1;
             } else {
                 self.mem.cancel_gpu_reservation(d, mem_key);
             }
@@ -2257,6 +2475,9 @@ impl ServingEngine {
                 ssd_fallback,
             },
         );
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.emit(now, TraceEvent::OpBegin { model: m, op, class: "weights", dests: n_dests });
+        }
         self.live.insert(
             op,
             LiveOp {
@@ -2281,6 +2502,25 @@ impl ServingEngine {
     /// for completed nodes, finish operations (dest locals + pipeline
     /// dissolves), and revoke orphaned recruits.
     fn handle_fabric_update(&mut self, now: SimTime, upd: FabricUpdate) {
+        // Per-flow telemetry recorded by the fabric since the last update
+        // (the recorder is enabled only when the tracer wants it, so this
+        // drains an always-empty vec otherwise).
+        if let Some(tr) = self.tracer.as_mut() {
+            for (t, fe) in self.fabric.drain_recorder() {
+                let ev = match fe {
+                    FabricEvent::FlowStart { op, src, dst, block, bytes } => {
+                        TraceEvent::FlowStart { op, src, dst, block, bytes }
+                    }
+                    FabricEvent::FlowEnd { op, dst, block } => {
+                        TraceEvent::FlowEnd { op, dst, block }
+                    }
+                    FabricEvent::Reshare { op, dst, block, gbps } => {
+                        TraceEvent::FlowReshare { op, dst, block, gbps }
+                    }
+                };
+                tr.emit(t, ev);
+            }
+        }
         if let Some((t, ver)) = upd.wakeup {
             self.q.push(t, Ev::Fabric(ver));
         }
@@ -2306,6 +2546,9 @@ impl ServingEngine {
             }
         }
         for &op in &upd.replanned {
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.emit(now, TraceEvent::OpReplanned { op });
+            }
             if let Some(lo) = self.live.get(&op) {
                 let m = lo.model;
                 self.models[m].ms.metrics.record_transfer_replan();
@@ -2419,6 +2662,9 @@ impl ServingEngine {
                 }
                 if !self.fabric.op_active(op) {
                     self.kv_ops.remove(&op);
+                    if let Some(tr) = self.tracer.as_mut() {
+                        tr.emit(now, TraceEvent::OpDone { op, contended_s });
+                    }
                     let stranded =
                         self.models[km].disagg.as_mut().and_then(|d| d.streams.remove(&op));
                     if let Some(s) = stranded {
@@ -2443,6 +2689,9 @@ impl ServingEngine {
             // The cancellation window closes at finish: remaining
             // recruits are materializing into replicas right now.
             lo.recruits.clear();
+            if let Some(tr) = self.tracer.as_mut() {
+                tr.emit(now, TraceEvent::OpDone { op, contended_s });
+            }
             let m = lo.model;
             let at = now + SimTime::from_secs(lo.switch_stall_s);
             let dest_locals = std::mem::take(&mut lo.dest_locals);
@@ -2603,6 +2852,9 @@ impl ServingEngine {
                 }
                 self.node_state[node] = NodeUse::Free;
                 self.models[m].ms.metrics.record_transfer_cancel();
+                if let Some(tr) = self.tracer.as_mut() {
+                    tr.emit(now, TraceEvent::RecruitCancelled { model: m, node });
+                }
                 self.handle_fabric_update(now, upd);
                 self.account_gpus(m, now);
                 remaining -= 1;
@@ -2619,6 +2871,9 @@ impl ServingEngine {
     fn on_node_fail(&mut self, now: SimTime, node: NodeId) {
         if node >= self.node_state.len() || !self.failed.insert(node) {
             return;
+        }
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.emit(now, TraceEvent::NodeFailed { node });
         }
         let upd = self.fabric.fail_node(now, node);
         // Scrub the dead node from every live op's pending triggers before
@@ -2678,6 +2933,17 @@ impl ServingEngine {
         let md = &mut self.models[m];
         let Some(inst) = md.instances.remove(&id) else { return };
         md.ms.router.remove_instance(id);
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.emit(
+                now,
+                TraceEvent::InstanceDown {
+                    model: m,
+                    inst: id,
+                    node: inst.pipe.stages[0].node,
+                    reason: "failure",
+                },
+            );
+        }
         md.queued -= inst.queue.len();
         let kv_mode = md.kv_geom.is_some();
         let mut to_reroute: Vec<usize> = inst.queue.iter().map(|p| p.item).collect();
@@ -2726,7 +2992,8 @@ impl ServingEngine {
                 self.mem.clear_gpu_ready(n, &mem_key);
             } else {
                 self.set_node_use(n, NodeUse::Free, now);
-                let _ = self.mem.release_gpu(n, &mem_key, now);
+                let demoted = self.mem.release_gpu(n, &mem_key, now);
+                self.trace_demotions(now, &demoted);
             }
         }
         for idx in to_reroute {
@@ -2786,6 +3053,17 @@ impl ServingEngine {
         let inst = md.instances.remove(&id).unwrap();
         let outstanding = md.ms.router.remove_instance(id).unwrap_or(0);
         let _ = outstanding;
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.emit(
+                now,
+                TraceEvent::InstanceDown {
+                    model: m,
+                    inst: id,
+                    node: inst.pipe.stages[0].node,
+                    reason: "dissolve",
+                },
+            );
+        }
         // Mode switch: redistribute in-flight + queued requests with the KV
         // rebuild stall.
         md.queued -= inst.queue.len();

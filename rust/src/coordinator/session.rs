@@ -49,6 +49,7 @@ use crate::metrics::MetricsCollector;
 use crate::model::ModelSpec;
 use crate::pipeline::mode_switch::SwitchStrategy;
 use crate::sim::transfer::TransferOpts;
+use crate::trace::SessionTrace;
 use crate::workload::Trace;
 
 /// Per-model serving parameters (defaults match the seed engine).
@@ -196,6 +197,18 @@ impl ServingSessionBuilder {
     /// `.cluster(..)`.
     pub fn disagg(mut self, cfg: crate::config::DisaggConfig) -> Self {
         self.cluster.disagg = Some(cfg);
+        self
+    }
+
+    /// Enable the flight recorder: the engine records typed span/instant
+    /// events from every layer (see [`crate::trace`]) and
+    /// [`ServingSession::run_traced`] returns the sealed
+    /// [`SessionTrace`] next to the report. Absent (the default),
+    /// tracing costs nothing — not even an allocation — and the
+    /// [`SessionReport`] is bit-identical either way. Cluster-scoped;
+    /// call after `.cluster(..)`.
+    pub fn flight_recorder(mut self, cfg: crate::trace::TraceConfig) -> Self {
+        self.cluster.trace = Some(cfg);
         self
     }
 
@@ -393,6 +406,14 @@ impl ServingSession {
 
     /// Run the session to completion.
     pub fn run(self) -> SessionReport {
+        self.run_traced().0
+    }
+
+    /// Run the session and also return the sealed flight-recorder trace.
+    /// `None` unless the session enabled the recorder (builder
+    /// [`ServingSessionBuilder::flight_recorder`] or a `[trace]` config
+    /// section); the report itself is bit-identical either way.
+    pub fn run_traced(self) -> (SessionReport, Option<SessionTrace>) {
         let mut engine = ServingEngine::new(self.cluster);
         for ms in self.models {
             engine.add_model(ms);
@@ -400,7 +421,7 @@ impl ServingSession {
         for (node, at_s) in self.failures {
             engine.inject_failure(node, crate::sim::time::SimTime::from_secs(at_s));
         }
-        engine.run()
+        engine.run_traced()
     }
 }
 

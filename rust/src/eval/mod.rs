@@ -173,6 +173,10 @@ pub struct EvalCell {
     /// Flow-seconds this cell's transfers spent below nominal NIC rate
     /// (back-to-back scale-ups overlapping on the shared fabric).
     pub contended_s: f64,
+    /// Discrete events the simulator processed for this cell's session —
+    /// a determinism fingerprint (any divergence between two runs of the
+    /// same cell shows up here first) and a rough work measure.
+    pub events: u64,
 }
 
 /// The full scoreboard plus the parameters that produced it.
@@ -259,7 +263,7 @@ pub fn run_cell(
         target_ttft_s: cfg.slo_ttft_s,
         ..cfg.cluster.autoscaler
     };
-    let m = ServingSession::builder()
+    let report = ServingSession::builder()
         .cluster(cfg.cluster.clone())
         .model(cfg.model.clone())
         .system(system)
@@ -269,8 +273,9 @@ pub fn run_cell(
         .initial_gpu_sources(1)
         .initial_host_sources(2)
         .trace(trace.clone())
-        .run()
-        .into_single();
+        .run();
+    let events = report.events;
+    let m = report.into_single();
     let mut ttft = m.ttft_samples();
     let cost = m.cost(&cfg.cluster.cost);
     let slo_attainment = m.slo_attainment(cfg.slo_ttft_s, trace.len());
@@ -288,6 +293,7 @@ pub fn run_cell(
         cost_usd: cost.total_usd(),
         norm_cost: 1.0,
         contended_s: m.fabric_contended_s,
+        events,
     }
 }
 
@@ -476,6 +482,7 @@ impl EvalCell {
         o.insert("cost_usd".into(), Json::Num(self.cost_usd));
         o.insert("norm_cost".into(), Json::Num(self.norm_cost));
         o.insert("contended_s".into(), Json::Num(self.contended_s));
+        o.insert("events".into(), Json::Num(self.events as f64));
         Json::Obj(o)
     }
 }
@@ -559,13 +566,13 @@ impl EvalReport {
             s.push_str(&format!("\n## Trace: {trace}\n\n"));
             s.push_str(
                 "| backend | scaler | served | p50 TTFT (s) | p99 TTFT (s) | SLO att. \
-                 | GPU·s | host GB·s | cost (USD) | norm cost | contention (s) |\n",
+                 | GPU·s | host GB·s | cost (USD) | norm cost | contention (s) | events |\n",
             );
-            s.push_str("|---|---|---:|---:|---:|---:|---:|---:|---:|---:|---:|\n");
+            s.push_str("|---|---|---:|---:|---:|---:|---:|---:|---:|---:|---:|---:|\n");
             for c in self.cells.iter().filter(|c| c.trace == trace) {
                 s.push_str(&format!(
                     "| {} | {} | {}/{} | {:.3} | {:.3} | {:.1}% | {:.0} | {:.0} | \
-                     {:.4} | {:.3} | {:.2} |\n",
+                     {:.4} | {:.3} | {:.2} | {} |\n",
                     c.system,
                     c.scaler,
                     c.completed,
@@ -578,6 +585,7 @@ impl EvalReport {
                     c.cost_usd,
                     c.norm_cost,
                     c.contended_s,
+                    c.events,
                 ));
             }
         }
@@ -737,6 +745,7 @@ mod tests {
         assert!((0.0..=1.0).contains(&cell.slo_attainment));
         assert!(cell.gpu_seconds > 0.0, "GPU time must be metered");
         assert!(cell.cost_usd > 0.0, "cost must be priced");
+        assert!(cell.events > 0, "engine events must be counted");
         assert_eq!(cell.scaler, "slo-aware");
     }
 }

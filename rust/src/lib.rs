@@ -39,6 +39,9 @@
 //! * [`runtime`] — PJRT client, artifact manifest, block-wise decode engine.
 //! * [`workload`] — BurstGPT-like traces, Poisson/burst arrivals.
 //! * [`metrics`] — TTFT/TPS/GPU-time collection, cost accounting, CDFs.
+//! * [`trace`] — flight-recorder tracing: typed span/instant events from
+//!   every layer, Perfetto/JSONL export, per-request phase breakdowns;
+//!   off unless `[trace]` is configured (zero allocation when off).
 //! * [`figures`] — one generator per paper figure (benches + CLI call these).
 //! * [`eval`] — the `lambda-scale eval` SLO/cost scoreboard (backends ×
 //!   scaling policies × traces).
@@ -62,6 +65,7 @@ pub mod multicast;
 pub mod pipeline;
 pub mod runtime;
 pub mod sim;
+pub mod trace;
 pub mod util;
 pub mod workload;
 

@@ -17,10 +17,20 @@
 //!                    [--check FILE]        simulator scaling sweep 10^4→10^6 requests
 //!                                          → BENCH_scale.json + RESULTS.md section
 //!                                          (--check validates an existing file's schema)
+//! lambda-scale trace [--out DIR] [--filter request,scaling,fabric,kv,memory]
+//!                    [--requests N] [--seed S] [--kv-block-tokens B] [--disagg]
+//!                                          run a traced bursty session → DIR/trace.json
+//!                                          (Perfetto) + DIR/events.jsonl
+//! lambda-scale trace report FILE           per-request phase breakdown of a JSONL log
+//! lambda-scale trace --check FILE          validate a JSONL log's schema
 //! lambda-scale trace-gen --out FILE        emit a BurstGPT-like CSV trace
 //! lambda-scale serve [--artifacts DIR]     serve a demo generation on real PJRT
 //! lambda-scale info                        print testbed presets + model zoo
 //! ```
+//!
+//! Global flags: `--verbose`/`-v` (debug-level stderr log), `-q`/`--quiet`
+//! (warnings and errors only). Progress goes to stderr through
+//! `util::logging`; stdout stays machine-clean.
 //!
 //! (No clap offline — a small hand-rolled parser below.)
 
@@ -32,11 +42,18 @@ use lambda_scale::figures;
 use lambda_scale::model::ModelSpec;
 use lambda_scale::sim::time::SimTime;
 use lambda_scale::util::bench::Table;
+use lambda_scale::util::logging::{self, Level};
 use lambda_scale::util::rng::Rng;
 use lambda_scale::workload::{burst_trace, BurstGptGen};
+use lambda_scale::{log_error, log_info};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--verbose" || a == "-v") {
+        logging::set_level(Level::Debug);
+    } else if args.iter().any(|a| a == "-q" || a == "--quiet") {
+        logging::set_level(Level::Warn);
+    }
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     let flag = |name: &str| -> Option<String> {
         args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
@@ -92,7 +109,7 @@ fn main() {
             if want("fig18") {
                 figures::multicast_figs::print_fig18(&figures::multicast_figs::fig18());
             }
-            eprintln!("\n(complete sweeps across all models: `cargo bench`)");
+            log_info!("(complete sweeps across all models: `cargo bench`)");
         }
         "session" => {
             // Two tenants sharing one 12-node Testbed1 cluster (§2.3
@@ -113,7 +130,7 @@ fn main() {
                 None => ScalerKind::ReactiveWindow,
                 Some(Ok(k)) => k,
                 Some(Err(e)) => {
-                    eprintln!("{e}");
+                    log_error!("{e}");
                     std::process::exit(2);
                 }
             };
@@ -220,7 +237,7 @@ fn main() {
                         cfg.cluster = c;
                     }
                     Err(e) => {
-                        eprintln!("{e}");
+                        log_error!("{e}");
                         std::process::exit(2);
                     }
                 }
@@ -242,13 +259,13 @@ fn main() {
                 // validates an existing BENCH_scale.json instead of running.
                 if let Some(path) = flag("--check") {
                     let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
-                        eprintln!("reading {path}: {e}");
+                        log_error!("reading {path}: {e}");
                         std::process::exit(1);
                     });
                     match lambda_scale::eval::scale::check_report(&text) {
                         Ok(()) => println!("{path}: schema OK"),
                         Err(e) => {
-                            eprintln!("{path}: {e}");
+                            log_error!("{path}: {e}");
                             std::process::exit(1);
                         }
                     }
@@ -267,6 +284,49 @@ fn main() {
             let kv: usize = flag("--kv-block-tokens").and_then(|s| s.parse().ok()).unwrap_or(0);
             run_bench(&out, n, seed, kv);
         }
+        "trace" => {
+            // `trace report FILE` / `trace --check FILE` analyze an
+            // existing JSONL log; bare `trace` runs a traced session.
+            if args.get(1).map(String::as_str) == Some("report") {
+                let Some(path) = args.get(2) else {
+                    log_error!("usage: lambda-scale trace report <events.jsonl>");
+                    std::process::exit(2);
+                };
+                let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+                    log_error!("reading {path}: {e}");
+                    std::process::exit(1);
+                });
+                match lambda_scale::trace::phase_breakdown_from_jsonl(&text) {
+                    Ok(bd) => print!("{}", bd.table()),
+                    Err(e) => {
+                        log_error!("{path}: {e}");
+                        std::process::exit(1);
+                    }
+                }
+                return;
+            }
+            if let Some(path) = flag("--check") {
+                let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+                    log_error!("reading {path}: {e}");
+                    std::process::exit(1);
+                });
+                match lambda_scale::trace::check_jsonl(&text) {
+                    Ok(n) => println!("{path}: schema OK ({n} events)"),
+                    Err(e) => {
+                        log_error!("{path}: {e}");
+                        std::process::exit(1);
+                    }
+                }
+                return;
+            }
+            let out_dir = flag("--out").unwrap_or_else(|| "trace-out".into());
+            let n: usize = flag("--requests").and_then(|s| s.parse().ok()).unwrap_or(120);
+            let seed: u64 = flag("--seed").and_then(|s| s.parse().ok()).unwrap_or(7);
+            let kv: usize = flag("--kv-block-tokens").and_then(|s| s.parse().ok()).unwrap_or(16);
+            let disagg = args.iter().any(|a| a == "--disagg");
+            let filter = flag("--filter");
+            run_trace(&out_dir, n, seed, kv, disagg, filter.as_deref());
+        }
         "trace-gen" => {
             let out = flag("--out").unwrap_or_else(|| "/tmp/burstgpt.csv".into());
             let duration: f64 =
@@ -283,7 +343,7 @@ fn main() {
             let prompt = flag("--prompt").unwrap_or_else(|| "hello world".into());
             let n: usize = flag("--tokens").and_then(|s| s.parse().ok()).unwrap_or(16);
             if let Err(e) = serve_demo(&dir, &prompt, n) {
-                eprintln!("serve failed: {e:#}");
+                log_error!("serve failed: {e:#}");
                 std::process::exit(1);
             }
         }
@@ -313,7 +373,8 @@ fn main() {
         _ => {
             eprintln!(
                 "λScale — fast model scaling for serverless LLM inference\n\n\
-                 usage: lambda-scale <figures|session|eval|bench|trace-gen|serve|info> [flags]\n\
+                 usage: lambda-scale <figures|session|eval|bench|trace|trace-gen|serve|info> [flags]\n\
+                 global flags: --verbose/-v (debug log), -q/--quiet (warnings only)\n\
                  \x20 figures   [--only figNN]              regenerate paper figures\n\
                  \x20 session   [--requests N] [--gpu-cap GB] [--host-cap GB]\n\
                  \x20           [--kv-block-tokens B] [--scaler reactive|slo-aware|predictive]\n\
@@ -326,6 +387,12 @@ fn main() {
                  \x20                                       perf snapshot → BENCH_serving.json\n\
                  \x20 bench --scale [--smoke] [--seed S] [--out F] [--md F] [--check F]\n\
                  \x20                                       scaling sweep → BENCH_scale.json\n\
+                 \x20 trace     [--out DIR] [--filter CATS] [--requests N] [--seed S]\n\
+                 \x20           [--kv-block-tokens B] [--disagg]\n\
+                 \x20                                       flight-recorder run → DIR/trace.json\n\
+                 \x20                                       (Perfetto) + DIR/events.jsonl\n\
+                 \x20 trace report FILE                     phase breakdown of a JSONL log\n\
+                 \x20 trace --check FILE                    validate a JSONL log's schema\n\
                  \x20 trace-gen [--out F] [--duration S]    emit a BurstGPT-like CSV trace\n\
                  \x20 serve     [--artifacts D] [--prompt P] [--tokens N]\n\
                  \x20 info                                  testbed presets + model zoo\n\n\
@@ -334,6 +401,78 @@ fn main() {
             );
         }
     }
+}
+
+/// `lambda-scale trace`: run a traced bursty λPipe session and write the
+/// flight-recorder artifacts — `trace.json` (Chrome trace-event JSON,
+/// loadable in Perfetto) and `events.jsonl` (diffable event log) — then
+/// print the per-request phase breakdown (see `docs/OBSERVABILITY.md`).
+fn run_trace(
+    out_dir: &str,
+    n: usize,
+    seed: u64,
+    kv_block_tokens: usize,
+    disagg: bool,
+    filter: Option<&str>,
+) {
+    use lambda_scale::trace::{chrome_trace, jsonl, phase_breakdown, TraceConfig};
+
+    let trace_cfg = match filter {
+        None => TraceConfig::default(),
+        Some(f) => match TraceConfig::from_filter(f) {
+            Ok(c) => c,
+            Err(e) => {
+                log_error!("{e}");
+                std::process::exit(2);
+            }
+        },
+    };
+    let mut cluster = ClusterConfig::testbed1();
+    cluster.n_nodes = 8;
+    cluster.kv.block_tokens = kv_block_tokens;
+    if disagg {
+        cluster.disagg = Some(DisaggConfig::default());
+    }
+    // The same bursty λPipe workload as `bench`: a cold burst that forces
+    // a scale-out waterfall, then a steady tail 20 s later.
+    let trace = {
+        let mut rng = Rng::new(seed);
+        let mut t = burst_trace(n, 0.0, "llama2-13b", 128, 64, &mut rng);
+        let steady = burst_trace(n / 2, 20.0, "llama2-13b", 128, 64, &mut rng);
+        t.merge(&steady, SimTime::ZERO);
+        t
+    };
+    let (report, session_trace) = ServingSession::builder()
+        .cluster(cluster)
+        .flight_recorder(trace_cfg)
+        .model(ModelSpec::llama2_13b())
+        .system(SystemKind::LambdaScale { k: 2 })
+        .max_batch(8)
+        .trace(trace)
+        .build()
+        .run_traced();
+    let st = session_trace.expect("flight recorder was enabled");
+    let write = |name: &str, text: String| {
+        let path = format!("{out_dir}/{name}");
+        if let Err(e) = std::fs::write(&path, text) {
+            log_error!("writing {path}: {e}");
+            std::process::exit(1);
+        }
+    };
+    if let Err(e) = std::fs::create_dir_all(out_dir) {
+        log_error!("creating {out_dir}: {e}");
+        std::process::exit(1);
+    }
+    write("trace.json", chrome_trace(&st));
+    write("events.jsonl", jsonl(&st));
+    let m = &report.models[0];
+    println!(
+        "traced session: {} requests served, {} engine events, {} trace events\n",
+        m.completed, report.events, st.records.len()
+    );
+    print!("{}", phase_breakdown(&st).table());
+    println!("\nwrote {out_dir}/trace.json (open in https://ui.perfetto.dev)");
+    println!("wrote {out_dir}/events.jsonl (`lambda-scale trace report` reads this)");
 }
 
 /// `lambda-scale eval`: run the backends × scaling-policies × traces
@@ -348,7 +487,7 @@ fn run_eval(cfg: &EvalConfig, out: &str, md: &str) {
     let report: EvalReport = lambda_scale::eval::run_matrix(cfg);
     let mut t = Table::new(&[
         "trace", "backend", "scaler", "served", "p50 TTFT", "p99 TTFT", "SLO att.", "GPU·s",
-        "cost ($)", "norm",
+        "cost ($)", "norm", "events",
     ]);
     for c in &report.cells {
         t.row(&[
@@ -362,11 +501,12 @@ fn run_eval(cfg: &EvalConfig, out: &str, md: &str) {
             format!("{:.0}", c.gpu_seconds),
             format!("{:.4}", c.cost_usd),
             format!("{:.3}", c.norm_cost),
+            format!("{}", c.events),
         ]);
     }
     t.print();
     if let Err(e) = report.write_files(out, md) {
-        eprintln!("writing report: {e}");
+        log_error!("writing report: {e}");
         std::process::exit(1);
     }
     println!("\nwrote {out} and {md}");
@@ -400,7 +540,6 @@ fn run_bench(out: &str, n: usize, seed: u64, kv_block_tokens: usize) {
             .max_batch(8)
             .trace(trace.clone())
             .run()
-            .into_single()
     };
     println!(
         "bench: {} (+{}) requests, seed {seed}, kv_block_tokens {kv_block_tokens}\n",
@@ -410,7 +549,9 @@ fn run_bench(out: &str, n: usize, seed: u64, kv_block_tokens: usize) {
     let wall = bench("serving-session-sim", Duration::from_millis(400), || {
         std::hint::black_box(run());
     });
-    let m = run();
+    let report = run();
+    let events = report.events;
+    let m = report.into_single();
     let mut ttft = m.ttft_samples();
     let makespan =
         m.requests.iter().map(|r| r.completion).max().unwrap_or(SimTime::ZERO).as_secs();
@@ -426,15 +567,16 @@ fn run_bench(out: &str, n: usize, seed: u64, kv_block_tokens: usize) {
     obj.insert("p99_ttft_s".into(), Json::Num(ttft.p99()));
     obj.insert("tokens_per_s".into(), Json::Num(tokens_per_s));
     obj.insert("kv_preemptions".into(), Json::Num(m.kv_preemptions as f64));
+    obj.insert("events".into(), Json::Num(events as f64));
     obj.insert("sim_wall_p50_ms".into(), Json::Num(wall.p50.as_secs_f64() * 1e3));
     obj.insert("sim_wall_p99_ms".into(), Json::Num(wall.p99.as_secs_f64() * 1e3));
     let json = Json::Obj(obj);
     if let Err(e) = std::fs::write(out, format!("{json}\n")) {
-        eprintln!("writing {out}: {e}");
+        log_error!("writing {out}: {e}");
         std::process::exit(1);
     }
     println!(
-        "\np50 TTFT {:.3}s  p99 TTFT {:.3}s  {:.0} tokens/s  → {out}",
+        "\np50 TTFT {:.3}s  p99 TTFT {:.3}s  {:.0} tokens/s  {events} events  → {out}",
         ttft.p50(),
         ttft.p99(),
         tokens_per_s
@@ -472,7 +614,7 @@ fn run_scale(seed: u64, smoke: bool, out: &str, md: &str) {
     }
     t.print();
     if let Err(e) = std::fs::write(out, format!("{}\n", report.to_json())) {
-        eprintln!("writing {out}: {e}");
+        log_error!("writing {out}: {e}");
         std::process::exit(1);
     }
     if !smoke {
@@ -480,7 +622,7 @@ fn run_scale(seed: u64, smoke: bool, out: &str, md: &str) {
         let existing = std::fs::read_to_string(md).unwrap_or_default();
         let spliced = scale::splice_markdown(&existing, &report.to_markdown_section());
         if let Err(e) = std::fs::write(md, spliced) {
-            eprintln!("writing {md}: {e}");
+            log_error!("writing {md}: {e}");
             std::process::exit(1);
         }
         println!("\nwrote {out} and spliced the sweep section into {md}");

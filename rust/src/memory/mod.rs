@@ -28,6 +28,19 @@ pub enum Locality {
     Remote,
 }
 
+impl Locality {
+    /// Stable lowercase tier name, used by the flight recorder's
+    /// `mem-demoted` events (`docs/OBSERVABILITY.md`).
+    pub fn label(self) -> &'static str {
+        match self {
+            Locality::Gpu => "gpu",
+            Locality::HostMem => "hostmem",
+            Locality::Ssd => "ssd",
+            Locality::Remote => "remote",
+        }
+    }
+}
+
 /// One node's two managed tiers (SSD treated as unlimited-but-slow, per the
 /// paper's testbed where all models fit on NVMe).
 #[derive(Clone, Debug)]

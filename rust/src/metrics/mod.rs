@@ -211,20 +211,12 @@ impl MetricsCollector {
 
     /// TTFT of every served request, as a percentile-queryable sample set.
     pub fn ttft_samples(&self) -> Samples {
-        let mut s = Samples::new();
-        for r in &self.requests {
-            s.push(r.ttft());
-        }
-        s
+        Samples::from_vec(self.requests.iter().map(|r| r.ttft()).collect())
     }
 
     /// End-to-end latency of every served request.
     pub fn latency_samples(&self) -> Samples {
-        let mut s = Samples::new();
-        for r in &self.requests {
-            s.push(r.latency());
-        }
-        s
+        Samples::from_vec(self.requests.iter().map(|r| r.latency()).collect())
     }
 
     /// Tokens/s over fixed windows (the Fig 9–11 timelines).

@@ -149,6 +149,49 @@ struct Flow {
     end: SimTime,
 }
 
+/// One flow-level event captured by the fabric's recorder (flight-recorder
+/// tracing). The recorder is off by default — [`Fabric::enable_recorder`]
+/// turns it on — and the owning engine drains it after every fabric call,
+/// so the sim layer stays ignorant of the trace subsystem proper.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FabricEvent {
+    /// A flow started. Whole-model bundle loads report `block = 0` and the
+    /// operation's total byte count.
+    FlowStart {
+        /// Owning operation.
+        op: OpId,
+        /// Source node.
+        src: NodeId,
+        /// Destination node.
+        dst: NodeId,
+        /// Block carried (0 for bundle loads).
+        block: BlockId,
+        /// Payload bytes.
+        bytes: u64,
+    },
+    /// A flow finished delivering — or aborted at node failure (the abort
+    /// closes the span at the failure instant).
+    FlowEnd {
+        /// Owning operation.
+        op: OpId,
+        /// Destination node.
+        dst: NodeId,
+        /// Block carried.
+        block: BlockId,
+    },
+    /// Fair-share reallocation changed a flow's rate.
+    Reshare {
+        /// Owning operation.
+        op: OpId,
+        /// Destination node.
+        dst: NodeId,
+        /// Block carried.
+        block: BlockId,
+        /// New absolute rate, GB/s.
+        gbps: f64,
+    },
+}
+
 /// What changed as a result of one fabric call. The caller must schedule
 /// `wakeup` (if any) and feed it back through [`Fabric::on_wakeup`].
 #[derive(Debug, Default)]
@@ -183,6 +226,9 @@ pub struct Fabric {
     next_flow: FlowId,
     version: u64,
     scheduled: Option<SimTime>,
+    /// Flight-recorder flow events; `None` (the default) records nothing
+    /// and allocates nothing.
+    recorder: Option<Vec<(SimTime, FabricEvent)>>,
 }
 
 impl Fabric {
@@ -196,7 +242,19 @@ impl Fabric {
             next_flow: 0,
             version: 0,
             scheduled: None,
+            recorder: None,
         }
+    }
+
+    /// Turn on the flow-event recorder (flight-recorder tracing).
+    pub fn enable_recorder(&mut self) {
+        self.recorder = Some(Vec::new());
+    }
+
+    /// Take every recorded flow event since the last drain (always empty
+    /// when the recorder is off).
+    pub fn drain_recorder(&mut self) -> Vec<(SimTime, FabricEvent)> {
+        self.recorder.as_mut().map(std::mem::take).unwrap_or_default()
     }
 
     /// Number of operations still registered (for tests/diagnostics).
@@ -343,6 +401,13 @@ impl Fabric {
             .collect();
         for fid in doomed {
             let fl = self.flows.remove(&fid).unwrap();
+            if let Some(rec) = self.recorder.as_mut() {
+                // Close the aborted flow's span at the failure instant.
+                rec.push((
+                    now,
+                    FabricEvent::FlowEnd { op: fl.op, dst: fl.intent.dst, block: fl.intent.block },
+                ));
+            }
             if let Some(o) = self.ops.get_mut(&fl.op) {
                 o.in_flight -= 1;
                 // True up contention accrued by the aborted flow.
@@ -387,6 +452,16 @@ impl Fabric {
             let mut affected: Vec<OpId> = Vec::new();
             for fid in due {
                 let fl = self.flows.remove(&fid).unwrap();
+                if let Some(rec) = self.recorder.as_mut() {
+                    rec.push((
+                        now,
+                        FabricEvent::FlowEnd {
+                            op: fl.op,
+                            dst: fl.intent.dst,
+                            block: fl.intent.block,
+                        },
+                    ));
+                }
                 let Some(op) = self.ops.get_mut(&fl.op) else { continue };
                 op.in_flight -= 1;
                 op.contended_s += now.saturating_sub(fl.last).as_secs() * (1.0 - fl.rate);
@@ -434,7 +509,7 @@ impl Fabric {
     /// Start every eligible send of `op` — [`TransferSim`]'s exact
     /// head-of-line discipline, with occupancy tracked per op.
     fn try_start_op(&mut self, now: SimTime, id: OpId) {
-        let Fabric { ops, flows, next_flow, net, .. } = self;
+        let Fabric { ops, flows, next_flow, net, recorder, .. } = self;
         let Some(op) = ops.get_mut(&id) else { return };
         if !op.gate_open {
             return;
@@ -483,6 +558,18 @@ impl Fabric {
                         it.medium,
                         src_tier,
                     );
+                    if let Some(rec) = recorder.as_mut() {
+                        rec.push((
+                            now,
+                            FabricEvent::FlowStart {
+                                op: id,
+                                src: it.src,
+                                dst: it.dst,
+                                block: it.block,
+                                bytes: op.block_bytes[it.block],
+                            },
+                        ));
+                    }
                     let slot = *next_flow;
                     *next_flow += 1;
                     flows.insert(
@@ -510,6 +597,18 @@ impl Fabric {
                 }
                 let (medium, dur) = op.pending_loads.remove(&n).unwrap();
                 op.busy.entry(n).or_insert([false; N_PORTS])[sp] = true;
+                if let Some(rec) = recorder.as_mut() {
+                    rec.push((
+                        now,
+                        FabricEvent::FlowStart {
+                            op: id,
+                            src: n,
+                            dst: n,
+                            block: 0,
+                            bytes: op.block_bytes.iter().sum(),
+                        },
+                    ));
+                }
                 let slot = *next_flow;
                 *next_flow += 1;
                 flows.insert(
@@ -670,8 +769,8 @@ impl Fabric {
         } else {
             f64::INFINITY
         };
-        let ops = &mut self.ops;
-        for fl in self.flows.values_mut() {
+        let Fabric { ops, flows, net, recorder, .. } = self;
+        for fl in flows.values_mut() {
             let c = hol_class(fl.intent.medium);
             let mut share = 1.0 / f64::from(eg[&(fl.intent.src, c)]);
             if fl.intent.src != fl.intent.dst {
@@ -689,6 +788,23 @@ impl Fabric {
                 fl.last = now;
                 fl.rate = share;
                 fl.end = now + SimTime::from_secs(fl.remaining_s / share);
+                if let Some(rec) = recorder.as_mut() {
+                    let bw = match fl.intent.medium {
+                        Medium::Rdma => net.rdma_gbps,
+                        Medium::Nvlink => net.nvlink_gbps,
+                        Medium::HostMem => net.hostmem_gbps,
+                        Medium::Ssd => net.ssd_gbps,
+                    };
+                    rec.push((
+                        now,
+                        FabricEvent::Reshare {
+                            op: fl.op,
+                            dst: fl.intent.dst,
+                            block: fl.intent.block,
+                            gbps: share * bw,
+                        },
+                    ));
+                }
             }
         }
     }

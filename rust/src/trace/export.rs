@@ -1,0 +1,536 @@
+//! Trace exporters: deterministic JSONL (one event per line, diffable)
+//! and Chrome trace-event JSON (loadable in Perfetto / `chrome://tracing`).
+//!
+//! Both walk the sealed [`SessionTrace`] buffer in recording order and
+//! write object keys in sorted order (the writer is backed by a
+//! `BTreeMap`), so identical sessions produce byte-identical artifacts.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::sim::time::SimTime;
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::{SessionTrace, TraceEvent, TraceRecord, TRACE_SCHEMA_VERSION};
+
+/// The JSONL header tag (`trace --check` refuses files without it).
+pub const TRACE_TAG: &str = "lambda-scale-trace";
+
+// ---------------------------------------------------------------------------
+// JSONL
+// ---------------------------------------------------------------------------
+
+/// Render the trace as JSONL: a header line (tag, schema version, model
+/// names, horizon) followed by one event object per line in recording
+/// order. Byte-deterministic for identical sessions.
+pub fn jsonl(trace: &SessionTrace) -> String {
+    let mut out = String::new();
+    let header = obj(vec![
+        ("horizon_s", num(trace.horizon.as_secs())),
+        ("kind", s("header")),
+        ("models", arr(trace.models.iter().map(|m| s(m)))),
+        ("schema_version", num(TRACE_SCHEMA_VERSION as f64)),
+        ("tag", s(TRACE_TAG)),
+    ]);
+    out.push_str(&header.to_string());
+    out.push('\n');
+    for r in &trace.records {
+        out.push_str(&record_json(r).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// One JSONL event object: `t` (simulated seconds), `seq`, `cat`, `kind`,
+/// plus the variant's typed fields.
+pub fn record_json(r: &TraceRecord) -> Json {
+    let mut pairs = vec![
+        ("cat", s(r.ev.category().name())),
+        ("kind", s(r.ev.kind())),
+        ("seq", num(r.seq as f64)),
+        ("t", num(r.t.as_secs())),
+    ];
+    push_fields(&r.ev, &mut pairs);
+    obj(pairs)
+}
+
+fn push_fields<'a>(ev: &'a TraceEvent, p: &mut Vec<(&'a str, Json)>) {
+    use TraceEvent::*;
+    match ev {
+        Arrival { model, req } => {
+            p.push(("model", num(*model as f64)));
+            p.push(("req", num(*req as f64)));
+        }
+        Queued { model, req, inst }
+        | Admitted { model, req, inst }
+        | KvWaitStart { model, req, inst } => {
+            p.push(("inst", num(*inst as f64)));
+            p.push(("model", num(*model as f64)));
+            p.push(("req", num(*req as f64)));
+        }
+        KvWaitEnd { model, req, inst, waited_s } => {
+            p.push(("inst", num(*inst as f64)));
+            p.push(("model", num(*model as f64)));
+            p.push(("req", num(*req as f64)));
+            p.push(("waited_s", num(*waited_s)));
+        }
+        FirstToken { model, req } => {
+            p.push(("model", num(*model as f64)));
+            p.push(("req", num(*req as f64)));
+        }
+        HandoffStart { model, req, src_node } => {
+            p.push(("model", num(*model as f64)));
+            p.push(("req", num(*req as f64)));
+            p.push(("src_node", num(*src_node as f64)));
+        }
+        HandoffDone { model, req, inst, stream_s, networked } => {
+            p.push(("inst", num(*inst as f64)));
+            p.push(("model", num(*model as f64)));
+            p.push(("networked", Json::Bool(*networked)));
+            p.push(("req", num(*req as f64)));
+            p.push(("stream_s", num(*stream_s)));
+        }
+        Done { model, req, inst, tokens } => {
+            p.push(("inst", num(*inst as f64)));
+            p.push(("model", num(*model as f64)));
+            p.push(("req", num(*req as f64)));
+            p.push(("tokens", num(*tokens as f64)));
+        }
+        ScalePlan { model, current, desired, warm, cold } => {
+            p.push(("cold", num(*cold as f64)));
+            p.push(("current", num(*current as f64)));
+            p.push(("desired", num(*desired as f64)));
+            p.push(("model", num(*model as f64)));
+            p.push(("warm", num(*warm as f64)));
+        }
+        InstanceUp { model, inst, node, stages } | PipelineActivated { model, inst, node, stages } => {
+            p.push(("inst", num(*inst as f64)));
+            p.push(("model", num(*model as f64)));
+            p.push(("node", num(*node as f64)));
+            p.push(("stages", num(*stages as f64)));
+        }
+        InstanceDown { model, inst, node, reason } => {
+            p.push(("inst", num(*inst as f64)));
+            p.push(("model", num(*model as f64)));
+            p.push(("node", num(*node as f64)));
+            p.push(("reason", s(reason)));
+        }
+        RecruitCancelled { model, node } => {
+            p.push(("model", num(*model as f64)));
+            p.push(("node", num(*node as f64)));
+        }
+        NodeFailed { node } => {
+            p.push(("node", num(*node as f64)));
+        }
+        OpBegin { model, op, class, dests } => {
+            p.push(("class", s(class)));
+            p.push(("dests", num(*dests as f64)));
+            p.push(("model", num(*model as f64)));
+            p.push(("op", num(*op as f64)));
+        }
+        OpDone { op, contended_s } => {
+            p.push(("contended_s", num(*contended_s)));
+            p.push(("op", num(*op as f64)));
+        }
+        OpReplanned { op } => {
+            p.push(("op", num(*op as f64)));
+        }
+        FlowStart { op, src, dst, block, bytes } => {
+            p.push(("block", num(*block as f64)));
+            p.push(("bytes", num(*bytes as f64)));
+            p.push(("dst", num(*dst as f64)));
+            p.push(("op", num(*op as f64)));
+            p.push(("src", num(*src as f64)));
+        }
+        FlowEnd { op, dst, block } => {
+            p.push(("block", num(*block as f64)));
+            p.push(("dst", num(*dst as f64)));
+            p.push(("op", num(*op as f64)));
+        }
+        FlowReshare { op, dst, block, gbps } => {
+            p.push(("block", num(*block as f64)));
+            p.push(("dst", num(*dst as f64)));
+            p.push(("gbps", num(*gbps)));
+            p.push(("op", num(*op as f64)));
+        }
+        KvPressure { model, inst, util } => {
+            p.push(("inst", num(*inst as f64)));
+            p.push(("model", num(*model as f64)));
+            p.push(("util", num(*util)));
+        }
+        KvPreempted { model, req, inst, swapped } => {
+            p.push(("inst", num(*inst as f64)));
+            p.push(("model", num(*model as f64)));
+            p.push(("req", num(*req as f64)));
+            p.push(("swapped", Json::Bool(*swapped)));
+        }
+        KvOvercommit { model, inst, blocks } => {
+            p.push(("blocks", num(*blocks as f64)));
+            p.push(("inst", num(*inst as f64)));
+            p.push(("model", num(*model as f64)));
+        }
+        MemDemoted { node, model, tier } => {
+            p.push(("model_name", s(model)));
+            p.push(("node", num(*node as f64)));
+            p.push(("tier", s(tier)));
+        }
+        MemPromoted { node, model } => {
+            p.push(("model_name", s(model)));
+            p.push(("node", num(*node as f64)));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event JSON
+// ---------------------------------------------------------------------------
+
+/// Render the trace in Chrome trace-event format (the `traceEvents`
+/// array form). Track layout:
+///
+/// * **pid 1 "cluster"** — one thread per node. Instance lifetimes
+///   (`InstanceUp` → `InstanceDown`, or to the horizon) and fabric flows
+///   (`FlowStart` → `FlowEnd`) are complete `"X"` spans; node-scoped
+///   events (failures, re-shares, tier moves) are `"i"` instants.
+/// * **pid 2 "requests"** — one thread per model. Each request is an
+///   async `"b"`/`"e"` span (id `m{model}:r{req}`) with its lifecycle
+///   phases as async `"n"` instants on the same id.
+///
+/// Still-open spans at the end of the run are closed at the horizon in
+/// sorted-key order, keeping the output deterministic.
+pub fn chrome_trace(trace: &SessionTrace) -> String {
+    use TraceEvent::*;
+    let usec = |t: SimTime| (t.0 as f64) / 1e3;
+    let horizon_us = usec(trace.horizon);
+    let model_name =
+        |m: usize| trace.models.get(m).map(String::as_str).unwrap_or("model").to_string();
+    let mut events: Vec<Json> = Vec::new();
+
+    // Thread metadata: nodes seen anywhere in the trace, models by index.
+    let mut nodes: BTreeSet<usize> = BTreeSet::new();
+    for r in &trace.records {
+        match &r.ev {
+            InstanceUp { node, .. }
+            | PipelineActivated { node, .. }
+            | InstanceDown { node, .. }
+            | RecruitCancelled { node, .. }
+            | NodeFailed { node }
+            | MemDemoted { node, .. }
+            | MemPromoted { node, .. } => {
+                nodes.insert(*node);
+            }
+            HandoffStart { src_node, .. } => {
+                nodes.insert(*src_node);
+            }
+            FlowStart { src, dst, .. } => {
+                nodes.insert(*src);
+                nodes.insert(*dst);
+            }
+            FlowEnd { dst, .. } | FlowReshare { dst, .. } => {
+                nodes.insert(*dst);
+            }
+            _ => {}
+        }
+    }
+    events.push(meta("process_name", 1, 0, "cluster"));
+    events.push(meta("process_name", 2, 0, "requests"));
+    for &n in &nodes {
+        events.push(meta("thread_name", 1, n as u64, &format!("node {n}")));
+    }
+    for (i, m) in trace.models.iter().enumerate() {
+        events.push(meta("thread_name", 2, i as u64, m));
+    }
+
+    // Open-span bookkeeping; all maps are BTree so the end-of-run sweep
+    // is deterministic.
+    let mut open_inst: BTreeMap<(usize, u64), (f64, usize, usize)> = BTreeMap::new();
+    let mut open_flow: BTreeMap<(u64, usize, usize), (f64, usize, u64)> = BTreeMap::new();
+    let mut open_req: BTreeSet<(usize, u64)> = BTreeSet::new();
+
+    for r in &trace.records {
+        let ts = usec(r.t);
+        match &r.ev {
+            Arrival { model, req } => {
+                open_req.insert((*model, *req));
+                events.push(async_ev("request", "b", *model, *req, ts, vec![]));
+            }
+            Done { model, req, inst, tokens } => {
+                open_req.remove(&(*model, *req));
+                let args = obj(vec![("inst", num(*inst as f64)), ("tokens", num(*tokens as f64))]);
+                events.push(async_ev("request", "e", *model, *req, ts, vec![("args", args)]));
+            }
+            Queued { model, req, .. }
+            | Admitted { model, req, .. }
+            | KvWaitStart { model, req, .. }
+            | KvWaitEnd { model, req, .. }
+            | FirstToken { model, req }
+            | HandoffStart { model, req, .. }
+            | HandoffDone { model, req, .. }
+            | KvPreempted { model, req, .. } => {
+                events.push(async_ev(r.ev.kind(), "n", *model, *req, ts, vec![]));
+            }
+            InstanceUp { model, inst, node, stages } => {
+                open_inst.insert((*model, *inst), (ts, *node, *stages));
+            }
+            InstanceDown { model, inst, node, reason } => {
+                let (start, span_node, stages) =
+                    open_inst.remove(&(*model, *inst)).unwrap_or((ts, *node, 0));
+                events.push(instance_span(
+                    &model_name(*model),
+                    *inst,
+                    span_node,
+                    stages,
+                    start,
+                    ts - start,
+                    reason,
+                ));
+            }
+            PipelineActivated { model, inst, node, stages } => {
+                let args = obj(vec![
+                    ("inst", num(*inst as f64)),
+                    ("model", s(&model_name(*model))),
+                    ("stages", num(*stages as f64)),
+                ]);
+                events.push(instant("pipeline-activated", 1, *node as u64, ts, args));
+            }
+            RecruitCancelled { model, node } => {
+                let args = obj(vec![("model", s(&model_name(*model)))]);
+                events.push(instant("recruit-cancelled", 1, *node as u64, ts, args));
+            }
+            NodeFailed { node } => {
+                events.push(instant("node-failed", 1, *node as u64, ts, obj(vec![])));
+            }
+            ScalePlan { model, current, desired, warm, cold } => {
+                let args = obj(vec![
+                    ("cold", num(*cold as f64)),
+                    ("current", num(*current as f64)),
+                    ("desired", num(*desired as f64)),
+                    ("warm", num(*warm as f64)),
+                ]);
+                events.push(instant("scale-plan", 2, *model as u64, ts, args));
+            }
+            OpBegin { model, op, class, dests } => {
+                let args = obj(vec![
+                    ("class", s(class)),
+                    ("dests", num(*dests as f64)),
+                    ("op", num(*op as f64)),
+                ]);
+                events.push(instant("op-begin", 2, *model as u64, ts, args));
+            }
+            OpDone { op, contended_s } => {
+                let args = obj(vec![("contended_s", num(*contended_s)), ("op", num(*op as f64))]);
+                events.push(instant("op-done", 1, 0, ts, args));
+            }
+            OpReplanned { op } => {
+                events.push(instant("op-replanned", 1, 0, ts, obj(vec![("op", num(*op as f64))])));
+            }
+            FlowStart { op, src, dst, block, bytes } => {
+                open_flow.insert((*op, *dst, *block), (ts, *src, *bytes));
+            }
+            FlowEnd { op, dst, block } => {
+                if let Some((start, src, bytes)) = open_flow.remove(&(*op, *dst, *block)) {
+                    events.push(flow_span(*op, src, *dst, *block, bytes, start, ts - start));
+                } else {
+                    let args = obj(vec![("block", num(*block as f64)), ("op", num(*op as f64))]);
+                    events.push(instant("flow-end", 1, *dst as u64, ts, args));
+                }
+            }
+            FlowReshare { op, dst, block, gbps } => {
+                let args = obj(vec![
+                    ("block", num(*block as f64)),
+                    ("gbps", num(*gbps)),
+                    ("op", num(*op as f64)),
+                ]);
+                events.push(instant("flow-reshare", 1, *dst as u64, ts, args));
+            }
+            KvPressure { model, inst, util } => {
+                let args = obj(vec![("inst", num(*inst as f64)), ("util", num(*util))]);
+                events.push(instant("kv-pressure", 2, *model as u64, ts, args));
+            }
+            KvOvercommit { model, inst, blocks } => {
+                let args =
+                    obj(vec![("blocks", num(*blocks as f64)), ("inst", num(*inst as f64))]);
+                events.push(instant("kv-overcommit", 2, *model as u64, ts, args));
+            }
+            MemDemoted { node, model, tier } => {
+                let args = obj(vec![("model", s(model)), ("tier", s(tier))]);
+                events.push(instant("mem-demoted", 1, *node as u64, ts, args));
+            }
+            MemPromoted { node, model } => {
+                let args = obj(vec![("model", s(model))]);
+                events.push(instant("mem-promoted", 1, *node as u64, ts, args));
+            }
+        }
+    }
+
+    // Close anything still open at the horizon (sorted-key order).
+    for (&(model, inst), &(start, node, stages)) in &open_inst {
+        events.push(instance_span(
+            &model_name(model),
+            inst,
+            node,
+            stages,
+            start,
+            horizon_us - start,
+            "horizon",
+        ));
+    }
+    for (&(op, dst, block), &(start, src, bytes)) in &open_flow {
+        events.push(flow_span(op, src, dst, block, bytes, start, horizon_us - start));
+    }
+    for &(model, req) in &open_req {
+        events.push(async_ev("request", "e", model, req, horizon_us, vec![]));
+    }
+
+    obj(vec![("displayTimeUnit", s("ms")), ("traceEvents", Json::Arr(events))]).to_string()
+}
+
+fn meta(name: &str, pid: u64, tid: u64, value: &str) -> Json {
+    obj(vec![
+        ("args", obj(vec![("name", s(value))])),
+        ("name", s(name)),
+        ("ph", s("M")),
+        ("pid", num(pid as f64)),
+        ("tid", num(tid as f64)),
+    ])
+}
+
+fn instant(name: &str, pid: u64, tid: u64, ts: f64, args: Json) -> Json {
+    obj(vec![
+        ("args", args),
+        ("name", s(name)),
+        ("ph", s("i")),
+        ("pid", num(pid as f64)),
+        ("s", s("t")),
+        ("tid", num(tid as f64)),
+        ("ts", num(ts)),
+    ])
+}
+
+fn async_ev(name: &str, ph: &str, model: usize, req: u64, ts: f64, extra: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![
+        ("cat", s("request")),
+        ("id", s(&format!("m{model}:r{req}"))),
+        ("name", s(name)),
+        ("ph", s(ph)),
+        ("pid", num(2.0)),
+        ("tid", num(model as f64)),
+        ("ts", num(ts)),
+    ];
+    pairs.extend(extra);
+    obj(pairs)
+}
+
+fn instance_span(
+    model: &str,
+    inst: u64,
+    node: usize,
+    stages: usize,
+    ts: f64,
+    dur: f64,
+    end: &str,
+) -> Json {
+    obj(vec![
+        (
+            "args",
+            obj(vec![
+                ("end", s(end)),
+                ("inst", num(inst as f64)),
+                ("stages", num(stages as f64)),
+            ]),
+        ),
+        ("dur", num(dur)),
+        ("name", s(&format!("{model}/i{inst}"))),
+        ("ph", s("X")),
+        ("pid", num(1.0)),
+        ("tid", num(node as f64)),
+        ("ts", num(ts)),
+    ])
+}
+
+fn flow_span(op: u64, src: usize, dst: usize, block: usize, bytes: u64, ts: f64, dur: f64) -> Json {
+    obj(vec![
+        (
+            "args",
+            obj(vec![("bytes", num(bytes as f64)), ("op", num(op as f64)), ("src", num(src as f64))]),
+        ),
+        ("dur", num(dur)),
+        ("name", s(&format!("op{op}/b{block}"))),
+        ("ph", s("X")),
+        ("pid", num(1.0)),
+        ("tid", num(dst as f64)),
+        ("ts", num(ts)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TraceConfig;
+    use crate::trace::Tracer;
+
+    fn sample_trace() -> SessionTrace {
+        let mut tr = Tracer::new(TraceConfig::default());
+        let t = SimTime::from_secs;
+        tr.emit(t(0.0), TraceEvent::InstanceUp { model: 0, inst: 0, node: 0, stages: 1 });
+        tr.emit(t(0.1), TraceEvent::Arrival { model: 0, req: 7 });
+        tr.emit(t(0.2), TraceEvent::Queued { model: 0, req: 7, inst: 0 });
+        tr.emit(t(0.3), TraceEvent::Admitted { model: 0, req: 7, inst: 0 });
+        tr.emit(t(0.5), TraceEvent::FirstToken { model: 0, req: 7 });
+        tr.emit(
+            t(0.6),
+            TraceEvent::FlowStart { op: 3, src: 0, dst: 1, block: 2, bytes: 1 << 30 },
+        );
+        tr.emit(t(0.8), TraceEvent::FlowEnd { op: 3, dst: 1, block: 2 });
+        tr.emit(t(1.0), TraceEvent::Done { model: 0, req: 7, inst: 0, tokens: 16 });
+        tr.emit(t(1.5), TraceEvent::Arrival { model: 0, req: 8 }); // left open
+        tr.finish(vec!["llama2-13b".into()], t(2.0))
+    }
+
+    #[test]
+    fn jsonl_is_deterministic_and_parseable() {
+        let trace = sample_trace();
+        let a = jsonl(&trace);
+        let b = jsonl(&trace);
+        assert_eq!(a, b, "same trace must serialize byte-identically");
+        let lines: Vec<&str> = a.lines().collect();
+        let header = Json::parse(lines[0]).unwrap();
+        assert_eq!(header.s("tag"), TRACE_TAG);
+        assert_eq!(header.u("schema_version"), TRACE_SCHEMA_VERSION);
+        assert_eq!(header.arr("models")[0].as_str(), Some("llama2-13b"));
+        for (i, line) in lines[1..].iter().enumerate() {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.u("seq"), i as u64, "seq must be line-ordered");
+            assert!(!j.s("kind").is_empty());
+        }
+    }
+
+    #[test]
+    fn chrome_trace_parses_and_pairs_spans() {
+        let trace = sample_trace();
+        let text = chrome_trace(&trace);
+        let j = Json::parse(&text).expect("chrome trace must be valid JSON");
+        let events = j.arr("traceEvents");
+        // The fabric flow paired into a 0.2 s complete span on node 1.
+        let flow = events
+            .iter()
+            .find(|e| e.s("ph") == "X" && e.s("name") == "op3/b2")
+            .expect("flow span present");
+        assert!((flow.f("dur") - 200_000.0).abs() < 1.0, "0.2 s == 200k us");
+        assert_eq!(flow.u("tid"), 1);
+        // The instance span was never closed: swept to the horizon.
+        let inst = events
+            .iter()
+            .find(|e| e.s("ph") == "X" && e.s("name") == "llama2-13b/i0")
+            .expect("instance span present");
+        assert!((inst.f("dur") - 2_000_000.0).abs() < 1.0);
+        // Request 7 opened and closed; request 8 swept closed at horizon.
+        let ends: Vec<_> =
+            events.iter().filter(|e| e.s("ph") == "e").map(|e| e.s("id").to_string()).collect();
+        assert!(ends.contains(&"m0:r7".to_string()));
+        assert!(ends.contains(&"m0:r8".to_string()));
+        // Metadata names the model thread.
+        assert!(events.iter().any(|e| e.s("ph") == "M"
+            && e.s("name") == "thread_name"
+            && e.expect("args").s("name") == "llama2-13b"));
+    }
+}

@@ -1,0 +1,534 @@
+//! Flight-recorder tracing: typed, timestamped simulation events from
+//! every engine layer, exportable as Chrome trace-event JSON (Perfetto /
+//! `chrome://tracing`) and as a JSONL event log.
+//!
+//! The [`Tracer`] is a sink owned by the serving engine
+//! (`coordinator::engine::ServingEngine`). It is **off by default**: with
+//! `ClusterConfig::trace == None` the engine holds no tracer, allocates no
+//! buffer, and replays bit-identically — the same discipline as the
+//! kvcache (`block_tokens = 0`) and disagg (`disagg = None`) subsystems.
+//! When on, the hot path appends one typed [`TraceEvent`] per hook; all
+//! pairing (spans from start/end instants), formatting and aggregation
+//! happens post-hoc in [`export`] and [`report`], so recording cost stays
+//! O(1) per event.
+//!
+//! Determinism contract: events are stamped with [`SimTime`] only (never
+//! wall clock) and appended in event-loop order with a monotone sequence
+//! number, and both exporters write keys in sorted (BTreeMap) order —
+//! the same session therefore emits **byte-identical JSONL**, so traces
+//! are diffable across commits.
+//!
+//! Taxonomy (the `--filter` axis, one [`Category`] per engine layer):
+//!
+//! * `request` — lifecycle phases: arrival → queued → (KV-wait) →
+//!   admitted → prefill → first token → (KV hand-off) → decode → done.
+//! * `scaling` — scale-plan decisions, instance up/down, pipeline-stage
+//!   activation, recruit cancellation, node failure, operation
+//!   begin/finish/re-plan.
+//! * `fabric` — per-block flow start/finish and bandwidth re-shares on
+//!   the shared fabric.
+//! * `kv` — pool pressure samples, preemptions, overcommit grants.
+//! * `memory` — tier demotions (GPU → host → SSD) and promotions.
+//!
+//! See `docs/OBSERVABILITY.md` for the field-level JSONL reference and
+//! the Perfetto how-to.
+
+pub mod export;
+pub mod report;
+
+pub use export::{chrome_trace, jsonl};
+pub use report::{check_jsonl, phase_breakdown, phase_breakdown_from_jsonl, PhaseBreakdown};
+
+pub use crate::config::TraceConfig;
+
+use crate::sim::time::SimTime;
+
+/// Bumped whenever the JSONL field set changes; `trace --check` refuses
+/// logs from another schema generation.
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+
+/// One event category — the unit of filtering (`[trace]` bools, CLI
+/// `--filter`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Category {
+    /// Request lifecycle phases.
+    Request,
+    /// Scaling-op waterfalls.
+    Scaling,
+    /// Fabric flow starts/finishes/re-shares.
+    Fabric,
+    /// KV pool pressure and preemption.
+    Kv,
+    /// Memory-tier promotions/demotions.
+    Memory,
+}
+
+impl Category {
+    /// All categories, in canonical order.
+    pub const ALL: [Category; 5] =
+        [Category::Request, Category::Scaling, Category::Fabric, Category::Kv, Category::Memory];
+
+    /// Canonical name (the JSONL `cat` field and the `--filter` token).
+    pub fn name(self) -> &'static str {
+        match self {
+            Category::Request => "request",
+            Category::Scaling => "scaling",
+            Category::Fabric => "fabric",
+            Category::Kv => "kv",
+            Category::Memory => "memory",
+        }
+    }
+}
+
+/// One typed flight-recorder event. Instants pair into spans post-hoc
+/// (e.g. `InstanceUp`/`InstanceDown`, `FlowStart`/`FlowEnd`); the recorder
+/// itself never searches its buffer.
+///
+/// `model` is the session model index (order of `.model(..)` calls);
+/// `req` is the request's trace id; `inst` is the engine's per-model
+/// instance id; `node`/`src`/`dst` are cluster node ids; `op` is a shared
+/// fabric operation id.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    // -- request lifecycle ------------------------------------------------
+    /// A request entered the system.
+    Arrival {
+        /// Session model index.
+        model: usize,
+        /// Request trace id.
+        req: u64,
+    },
+    /// The request was routed to an instance's queue.
+    Queued {
+        /// Session model index.
+        model: usize,
+        /// Request trace id.
+        req: u64,
+        /// Target instance id.
+        inst: u64,
+    },
+    /// The request was admitted into a batch (prefill starts). Re-emitted
+    /// on re-admission after preemption or instance loss.
+    Admitted {
+        /// Session model index.
+        model: usize,
+        /// Request trace id.
+        req: u64,
+        /// Serving instance id.
+        inst: u64,
+    },
+    /// Admission stalled because KV blocks were unavailable.
+    KvWaitStart {
+        /// Session model index.
+        model: usize,
+        /// Request trace id.
+        req: u64,
+        /// Instance whose pool was exhausted.
+        inst: u64,
+    },
+    /// The KV-blocked request finally seated; `waited_s` is the stall.
+    KvWaitEnd {
+        /// Session model index.
+        model: usize,
+        /// Request trace id.
+        req: u64,
+        /// Instance that seated the request.
+        inst: u64,
+        /// Seconds spent blocked on KV capacity.
+        waited_s: f64,
+    },
+    /// First output token produced (TTFT point). Re-emitted if a
+    /// re-admission after instance loss re-enters the prefill phase.
+    FirstToken {
+        /// Session model index.
+        model: usize,
+        /// Request trace id.
+        req: u64,
+    },
+    /// Disaggregated serving: prefill finished, KV hand-off began.
+    HandoffStart {
+        /// Session model index.
+        model: usize,
+        /// Request trace id.
+        req: u64,
+        /// Prefill node the KV shard leaves from.
+        src_node: usize,
+    },
+    /// Disaggregated serving: KV shard resident on the decode instance.
+    HandoffDone {
+        /// Session model index.
+        model: usize,
+        /// Request trace id.
+        req: u64,
+        /// Decode instance now holding the shard.
+        inst: u64,
+        /// Hand-off seconds (stream + decode-target wait).
+        stream_s: f64,
+        /// False for same-node hand-offs (no fabric traffic).
+        networked: bool,
+    },
+    /// Last output token produced; the request is complete.
+    Done {
+        /// Session model index.
+        model: usize,
+        /// Request trace id.
+        req: u64,
+        /// Instance that finished the request.
+        inst: u64,
+        /// Output tokens generated.
+        tokens: usize,
+    },
+
+    // -- scaling ----------------------------------------------------------
+    /// The scaler requested a new instance count and the engine planned
+    /// recruitment.
+    ScalePlan {
+        /// Session model index.
+        model: usize,
+        /// Instances currently up or launching.
+        current: usize,
+        /// The scaler's requested count.
+        desired: usize,
+        /// Recruits served from warm (host/GPU) sources.
+        warm: usize,
+        /// Recruits needing cold (SSD/remote) loads.
+        cold: usize,
+    },
+    /// An instance became ready to serve.
+    InstanceUp {
+        /// Session model index.
+        model: usize,
+        /// Instance id.
+        inst: u64,
+        /// First-stage node.
+        node: usize,
+        /// Pipeline stages (1 = single-node replica).
+        stages: usize,
+    },
+    /// A multi-stage execution pipeline activated mid-multicast
+    /// (execute-while-load: serving starts before all blocks land).
+    PipelineActivated {
+        /// Session model index.
+        model: usize,
+        /// Instance id of the pipeline.
+        inst: u64,
+        /// First-stage node.
+        node: usize,
+        /// Stage count.
+        stages: usize,
+    },
+    /// An instance left the serving set.
+    InstanceDown {
+        /// Session model index.
+        model: usize,
+        /// Instance id.
+        inst: u64,
+        /// First-stage node.
+        node: usize,
+        /// `"reclaim"`, `"dissolve"` or `"failure"`.
+        reason: &'static str,
+    },
+    /// A mid-scale-up recruit was revoked before its first block.
+    RecruitCancelled {
+        /// Session model index.
+        model: usize,
+        /// The revoked recruit's node.
+        node: usize,
+    },
+    /// A node failed permanently.
+    NodeFailed {
+        /// The failed node.
+        node: usize,
+    },
+    /// A fabric operation (weight multicast or KV stream) was launched.
+    OpBegin {
+        /// Session model index.
+        model: usize,
+        /// Fabric operation id.
+        op: u64,
+        /// `"weights"` or `"kv"`.
+        class: &'static str,
+        /// Destination nodes.
+        dests: usize,
+    },
+    /// A fabric operation delivered everything.
+    OpDone {
+        /// Fabric operation id.
+        op: u64,
+        /// Flow-seconds spent below nominal rate (contention).
+        contended_s: f64,
+    },
+    /// An in-flight operation's schedule was repaired (node failure or
+    /// cancellation left delivery holes).
+    OpReplanned {
+        /// Fabric operation id.
+        op: u64,
+    },
+
+    // -- fabric -----------------------------------------------------------
+    /// A flow started on the shared fabric.
+    FlowStart {
+        /// Owning operation id.
+        op: u64,
+        /// Source node.
+        src: usize,
+        /// Destination node.
+        dst: usize,
+        /// Block id carried (the bundle id for whole-model loads).
+        block: usize,
+        /// Payload bytes.
+        bytes: u64,
+    },
+    /// A flow finished delivering.
+    FlowEnd {
+        /// Owning operation id.
+        op: u64,
+        /// Destination node.
+        dst: usize,
+        /// Block id carried.
+        block: usize,
+    },
+    /// Fair-share reallocation changed a flow's rate (a transfer joined
+    /// or left a contended link).
+    FlowReshare {
+        /// Owning operation id.
+        op: u64,
+        /// Destination node.
+        dst: usize,
+        /// Block id carried.
+        block: usize,
+        /// New rate, GB/s.
+        gbps: f64,
+    },
+
+    // -- kv ---------------------------------------------------------------
+    /// A pool-utilization change at an iteration boundary.
+    KvPressure {
+        /// Session model index.
+        model: usize,
+        /// Instance id.
+        inst: u64,
+        /// Pool utilization in [0, 1+] (overcommit exceeds 1).
+        util: f64,
+    },
+    /// A request was preempted for KV pressure.
+    KvPreempted {
+        /// Session model index.
+        model: usize,
+        /// Victim request trace id.
+        req: u64,
+        /// Instance it was evicted from.
+        inst: u64,
+        /// True if rebuilt by host swap, false if by recompute.
+        swapped: bool,
+    },
+    /// Blocks granted beyond pool capacity (sole-resident escape hatch).
+    KvOvercommit {
+        /// Session model index.
+        model: usize,
+        /// Instance id.
+        inst: u64,
+        /// Blocks granted beyond capacity.
+        blocks: u64,
+    },
+
+    // -- memory -----------------------------------------------------------
+    /// A model copy was demoted down the tier ladder to make room.
+    MemDemoted {
+        /// Node the copy lived on.
+        node: usize,
+        /// The demoted model's name.
+        model: String,
+        /// Destination tier: `"hostmem"`, `"ssd"` or `"remote"`.
+        tier: &'static str,
+    },
+    /// A model copy became GPU-resident (weights fully loaded).
+    MemPromoted {
+        /// Node the copy landed on.
+        node: usize,
+        /// The promoted model's name.
+        model: String,
+    },
+}
+
+impl TraceEvent {
+    /// The event's category (its filter gate and JSONL `cat` field).
+    pub fn category(&self) -> Category {
+        use TraceEvent::*;
+        match self {
+            Arrival { .. } | Queued { .. } | Admitted { .. } | KvWaitStart { .. }
+            | KvWaitEnd { .. } | FirstToken { .. } | HandoffStart { .. } | HandoffDone { .. }
+            | Done { .. } => Category::Request,
+            ScalePlan { .. } | InstanceUp { .. } | PipelineActivated { .. }
+            | InstanceDown { .. } | RecruitCancelled { .. } | NodeFailed { .. }
+            | OpBegin { .. } | OpDone { .. } | OpReplanned { .. } => Category::Scaling,
+            FlowStart { .. } | FlowEnd { .. } | FlowReshare { .. } => Category::Fabric,
+            KvPressure { .. } | KvPreempted { .. } | KvOvercommit { .. } => Category::Kv,
+            MemDemoted { .. } | MemPromoted { .. } => Category::Memory,
+        }
+    }
+
+    /// The event's kind name (the JSONL `kind` field).
+    pub fn kind(&self) -> &'static str {
+        use TraceEvent::*;
+        match self {
+            Arrival { .. } => "arrival",
+            Queued { .. } => "queued",
+            Admitted { .. } => "admitted",
+            KvWaitStart { .. } => "kv-wait-start",
+            KvWaitEnd { .. } => "kv-wait-end",
+            FirstToken { .. } => "first-token",
+            HandoffStart { .. } => "handoff-start",
+            HandoffDone { .. } => "handoff-done",
+            Done { .. } => "done",
+            ScalePlan { .. } => "scale-plan",
+            InstanceUp { .. } => "instance-up",
+            PipelineActivated { .. } => "pipeline-activated",
+            InstanceDown { .. } => "instance-down",
+            RecruitCancelled { .. } => "recruit-cancelled",
+            NodeFailed { .. } => "node-failed",
+            OpBegin { .. } => "op-begin",
+            OpDone { .. } => "op-done",
+            OpReplanned { .. } => "op-replanned",
+            FlowStart { .. } => "flow-start",
+            FlowEnd { .. } => "flow-end",
+            FlowReshare { .. } => "flow-reshare",
+            KvPressure { .. } => "kv-pressure",
+            KvPreempted { .. } => "kv-preempted",
+            KvOvercommit { .. } => "kv-overcommit",
+            MemDemoted { .. } => "mem-demoted",
+            MemPromoted { .. } => "mem-promoted",
+        }
+    }
+}
+
+/// One recorded event: simulated timestamp + monotone sequence number +
+/// the typed payload. The sequence number breaks timestamp ties in the
+/// exact event-loop order, making the export byte-stable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRecord {
+    /// Simulated time of the event.
+    pub t: SimTime,
+    /// Append order (0-based, monotone).
+    pub seq: u64,
+    /// The typed event.
+    pub ev: TraceEvent,
+}
+
+/// The append-only event sink the engine owns while tracing is on.
+#[derive(Debug)]
+pub struct Tracer {
+    cfg: TraceConfig,
+    records: Vec<TraceRecord>,
+}
+
+impl Tracer {
+    /// A tracer recording the categories `cfg` enables.
+    pub fn new(cfg: TraceConfig) -> Self {
+        Tracer { cfg, records: Vec::new() }
+    }
+
+    /// Whether `cat` is being recorded (hooks with costly payloads check
+    /// this before building the event).
+    pub fn wants(&self, cat: Category) -> bool {
+        match cat {
+            Category::Request => self.cfg.request,
+            Category::Scaling => self.cfg.scaling,
+            Category::Fabric => self.cfg.fabric,
+            Category::Kv => self.cfg.kv,
+            Category::Memory => self.cfg.memory,
+        }
+    }
+
+    /// Record one event at simulated time `t` (dropped if its category is
+    /// filtered out).
+    pub fn emit(&mut self, t: SimTime, ev: TraceEvent) {
+        if self.wants(ev.category()) {
+            let seq = self.records.len() as u64;
+            self.records.push(TraceRecord { t, seq, ev });
+        }
+    }
+
+    /// Events recorded so far.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Seal the recorder into an exportable session trace.
+    pub fn finish(self, models: Vec<String>, horizon: SimTime) -> SessionTrace {
+        SessionTrace { models, horizon, records: self.records }
+    }
+}
+
+/// A sealed flight-recorder buffer from one session run — the input to
+/// both exporters and the phase analyzer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionTrace {
+    /// Model names, indexed by the events' `model` field.
+    pub models: Vec<String>,
+    /// The session horizon (used to close still-open spans on export).
+    pub horizon: SimTime,
+    /// All recorded events, in event-loop order.
+    pub records: Vec<TraceRecord>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn category_filter_gates_emission() {
+        let cfg = TraceConfig { request: true, ..TraceConfig::from_filter("").unwrap() };
+        let mut tr = Tracer::new(cfg);
+        tr.emit(SimTime::from_secs(1.0), TraceEvent::Arrival { model: 0, req: 1 });
+        tr.emit(SimTime::from_secs(2.0), TraceEvent::NodeFailed { node: 3 });
+        assert_eq!(tr.len(), 1, "scaling events must be filtered out");
+        assert_eq!(tr.records[0].ev.kind(), "arrival");
+        assert_eq!(tr.records[0].seq, 0);
+    }
+
+    #[test]
+    fn every_event_kind_maps_to_its_category() {
+        // A representative of each variant; kind() and category() must
+        // never panic and the kind strings must be unique.
+        let events = vec![
+            TraceEvent::Arrival { model: 0, req: 0 },
+            TraceEvent::Queued { model: 0, req: 0, inst: 0 },
+            TraceEvent::Admitted { model: 0, req: 0, inst: 0 },
+            TraceEvent::KvWaitStart { model: 0, req: 0, inst: 0 },
+            TraceEvent::KvWaitEnd { model: 0, req: 0, inst: 0, waited_s: 0.1 },
+            TraceEvent::FirstToken { model: 0, req: 0 },
+            TraceEvent::HandoffStart { model: 0, req: 0, src_node: 0 },
+            TraceEvent::HandoffDone { model: 0, req: 0, inst: 0, stream_s: 0.0, networked: true },
+            TraceEvent::Done { model: 0, req: 0, inst: 0, tokens: 1 },
+            TraceEvent::ScalePlan { model: 0, current: 1, desired: 2, warm: 1, cold: 0 },
+            TraceEvent::InstanceUp { model: 0, inst: 0, node: 0, stages: 1 },
+            TraceEvent::PipelineActivated { model: 0, inst: 0, node: 0, stages: 2 },
+            TraceEvent::InstanceDown { model: 0, inst: 0, node: 0, reason: "reclaim" },
+            TraceEvent::RecruitCancelled { model: 0, node: 0 },
+            TraceEvent::NodeFailed { node: 0 },
+            TraceEvent::OpBegin { model: 0, op: 0, class: "weights", dests: 1 },
+            TraceEvent::OpDone { op: 0, contended_s: 0.0 },
+            TraceEvent::OpReplanned { op: 0 },
+            TraceEvent::FlowStart { op: 0, src: 0, dst: 1, block: 0, bytes: 1 },
+            TraceEvent::FlowEnd { op: 0, dst: 1, block: 0 },
+            TraceEvent::FlowReshare { op: 0, dst: 1, block: 0, gbps: 25.0 },
+            TraceEvent::KvPressure { model: 0, inst: 0, util: 0.5 },
+            TraceEvent::KvPreempted { model: 0, req: 0, inst: 0, swapped: false },
+            TraceEvent::KvOvercommit { model: 0, inst: 0, blocks: 2 },
+            TraceEvent::MemDemoted { node: 0, model: "m".into(), tier: "hostmem" },
+            TraceEvent::MemPromoted { node: 0, model: "m".into() },
+        ];
+        let mut kinds = std::collections::BTreeSet::new();
+        for ev in &events {
+            assert!(Category::ALL.contains(&ev.category()));
+            assert!(kinds.insert(ev.kind()), "duplicate kind {}", ev.kind());
+        }
+        assert_eq!(kinds.len(), events.len());
+    }
+}

@@ -1,0 +1,433 @@
+//! Post-hoc trace analysis: per-request phase breakdowns, the
+//! critical-path table behind `lambda-scale trace report`, and the JSONL
+//! schema validator behind `trace --check`.
+//!
+//! Phase definitions (chosen so the sums reconcile with the metrics
+//! layer by construction):
+//!
+//! * `queued_s`  — first `admitted` − `arrival` (includes any KV-wait
+//!   stall, reported separately as `kv_wait_s`).
+//! * `prefill_s` — **last** `first-token` − first `admitted`. A request
+//!   re-admitted after preemption or instance loss re-emits both events;
+//!   `RequestMetrics` keeps the last first-token, so the analyzer does
+//!   too.
+//! * `decode_s`  — `done` − last `first-token`.
+//! * `handoff_s` — sum of `handoff-done.stream_s` (disaggregated KV
+//!   hand-off time, overlapping the decode phase's start).
+//!
+//! Hence `queued_s + prefill_s == TTFT` and
+//! `queued_s + prefill_s + decode_s == latency`, exactly.
+
+use std::collections::BTreeMap;
+
+use crate::sim::time::SimTime;
+use crate::util::json::Json;
+use crate::util::stats::Samples;
+
+use super::export::TRACE_TAG;
+use super::{Category, SessionTrace, TraceEvent, TraceRecord, TRACE_SCHEMA_VERSION};
+
+/// One request's reconstructed phase timings, in seconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestPhases {
+    /// Session model index.
+    pub model: usize,
+    /// Request trace id.
+    pub req: u64,
+    /// Arrival time (simulated seconds).
+    pub arrival_s: f64,
+    /// Arrival → first admission.
+    pub queued_s: f64,
+    /// KV-capacity stall inside the queued window.
+    pub kv_wait_s: f64,
+    /// First admission → last first-token.
+    pub prefill_s: f64,
+    /// Disaggregated KV hand-off time (overlaps early decode).
+    pub handoff_s: f64,
+    /// Last first-token → done.
+    pub decode_s: f64,
+}
+
+impl RequestPhases {
+    /// Time to first token: queued + prefill (matches
+    /// `RequestMetrics::ttft` by construction).
+    pub fn ttft_s(&self) -> f64 {
+        self.queued_s + self.prefill_s
+    }
+
+    /// End-to-end latency: queued + prefill + decode.
+    pub fn latency_s(&self) -> f64 {
+        self.queued_s + self.prefill_s + self.decode_s
+    }
+}
+
+/// Aggregated per-request phases for a whole session — the input to the
+/// critical-path table.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PhaseBreakdown {
+    /// Model names, indexed by `RequestPhases::model`.
+    pub models: Vec<String>,
+    /// One entry per **completed** request, in completion order.
+    pub requests: Vec<RequestPhases>,
+    /// Requests that arrived but never completed inside the horizon.
+    pub unfinished: usize,
+}
+
+#[derive(Default)]
+struct Acc {
+    arrival: Option<f64>,
+    first_admit: Option<f64>,
+    last_first_token: Option<f64>,
+    kv_wait_s: f64,
+    handoff_s: f64,
+}
+
+/// Reconstruct per-request phases from a sealed trace buffer. Requests
+/// without a `done` event are counted in
+/// [`PhaseBreakdown::unfinished`] and excluded from the table.
+pub fn phase_breakdown(trace: &SessionTrace) -> PhaseBreakdown {
+    let mut accs: BTreeMap<(usize, u64), Acc> = BTreeMap::new();
+    let mut out = PhaseBreakdown { models: trace.models.clone(), ..Default::default() };
+    for r in &trace.records {
+        let t = r.t.as_secs();
+        match &r.ev {
+            TraceEvent::Arrival { model, req } => {
+                accs.entry((*model, *req)).or_default().arrival = Some(t);
+            }
+            TraceEvent::Admitted { model, req, .. } => {
+                let a = accs.entry((*model, *req)).or_default();
+                if a.first_admit.is_none() {
+                    a.first_admit = Some(t);
+                }
+            }
+            TraceEvent::KvWaitEnd { model, req, waited_s, .. } => {
+                accs.entry((*model, *req)).or_default().kv_wait_s += waited_s;
+            }
+            TraceEvent::FirstToken { model, req } => {
+                accs.entry((*model, *req)).or_default().last_first_token = Some(t);
+            }
+            TraceEvent::HandoffDone { model, req, stream_s, .. } => {
+                accs.entry((*model, *req)).or_default().handoff_s += stream_s;
+            }
+            TraceEvent::Done { model, req, .. } => {
+                let a = accs.remove(&(*model, *req)).unwrap_or_default();
+                let arrival = a.arrival.unwrap_or(t);
+                let admit = a.first_admit.unwrap_or(arrival);
+                let first_tok = a.last_first_token.unwrap_or(t);
+                out.requests.push(RequestPhases {
+                    model: *model,
+                    req: *req,
+                    arrival_s: arrival,
+                    queued_s: admit - arrival,
+                    kv_wait_s: a.kv_wait_s,
+                    prefill_s: first_tok - admit,
+                    handoff_s: a.handoff_s,
+                    decode_s: t - first_tok,
+                });
+            }
+            _ => {}
+        }
+    }
+    out.unfinished = accs.len();
+    out
+}
+
+/// Rebuild a [`PhaseBreakdown`] from a JSONL event log written by
+/// [`super::export::jsonl`] — the path `trace report <file>` takes.
+pub fn phase_breakdown_from_jsonl(text: &str) -> Result<PhaseBreakdown, String> {
+    let mut lines = text.lines();
+    let header = parse_header(lines.next().ok_or("empty trace file")?)?;
+    let mut records = Vec::new();
+    let mut horizon = SimTime::ZERO;
+    for (i, line) in lines.enumerate() {
+        let j = Json::parse(line).map_err(|e| format!("line {}: {e}", i + 2))?;
+        let t = SimTime::from_secs(j.f("t"));
+        horizon = horizon.max(t);
+        if j.s("cat") != Category::Request.name() {
+            continue;
+        }
+        let ev = match j.s("kind") {
+            "arrival" => TraceEvent::Arrival { model: j.us("model"), req: j.u("req") },
+            "admitted" => TraceEvent::Admitted {
+                model: j.us("model"),
+                req: j.u("req"),
+                inst: j.u("inst"),
+            },
+            "kv-wait-end" => TraceEvent::KvWaitEnd {
+                model: j.us("model"),
+                req: j.u("req"),
+                inst: j.u("inst"),
+                waited_s: j.f("waited_s"),
+            },
+            "first-token" => TraceEvent::FirstToken { model: j.us("model"), req: j.u("req") },
+            "handoff-done" => TraceEvent::HandoffDone {
+                model: j.us("model"),
+                req: j.u("req"),
+                inst: j.u("inst"),
+                stream_s: j.f("stream_s"),
+                networked: j.expect("networked").as_bool().unwrap_or(false),
+            },
+            "done" => TraceEvent::Done {
+                model: j.us("model"),
+                req: j.u("req"),
+                inst: j.u("inst"),
+                tokens: j.us("tokens"),
+            },
+            _ => continue, // queued / kv-wait-start / handoff-start: not needed
+        };
+        records.push(TraceRecord { t, seq: j.u("seq"), ev });
+    }
+    Ok(phase_breakdown(&SessionTrace { models: header, horizon, records }))
+}
+
+fn parse_header(line: &str) -> Result<Vec<String>, String> {
+    let j = Json::parse(line).map_err(|e| format!("header: {e}"))?;
+    if j.get("tag").and_then(Json::as_str) != Some(TRACE_TAG) {
+        return Err(format!("not a {TRACE_TAG} file (missing header tag)"));
+    }
+    let ver = j.get("schema_version").and_then(Json::as_u64).unwrap_or(0);
+    if ver != TRACE_SCHEMA_VERSION {
+        return Err(format!("schema_version {ver}, this binary reads {TRACE_SCHEMA_VERSION}"));
+    }
+    let models = j
+        .get("models")
+        .and_then(Json::as_arr)
+        .ok_or("header missing models array")?
+        .iter()
+        .map(|m| m.as_str().map(str::to_string).ok_or("non-string model name".to_string()))
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(models)
+}
+
+impl PhaseBreakdown {
+    /// Render the critical-path table: per-phase p50/p99 plus each
+    /// phase's share of tail (≥ p99) TTFT, and a headline naming the
+    /// phase that dominates p99 TTFT. One block per model.
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        for (m, name) in self.models.iter().enumerate() {
+            let reqs: Vec<&RequestPhases> =
+                self.requests.iter().filter(|r| r.model == m).collect();
+            out.push_str(&format!("model {name}: {} completed", reqs.len()));
+            if m == 0 && self.unfinished > 0 {
+                out.push_str(&format!(" ({} unfinished at horizon)", self.unfinished));
+            }
+            out.push('\n');
+            if reqs.is_empty() {
+                continue;
+            }
+            let mut ttft = Samples::from_vec(reqs.iter().map(|r| r.ttft_s()).collect());
+            let p99_ttft = ttft.p99();
+            // Tail set: requests at or above p99 TTFT drive the headline.
+            let tail: Vec<&&RequestPhases> =
+                reqs.iter().filter(|r| r.ttft_s() >= p99_ttft - 1e-12).collect();
+            let tail_mean = |f: fn(&RequestPhases) -> f64| {
+                tail.iter().map(|r| f(r)).sum::<f64>() / tail.len() as f64
+            };
+            let phases: [(&str, fn(&RequestPhases) -> f64, bool); 5] = [
+                ("queued", |r| r.queued_s, true),
+                ("kv-wait", |r| r.kv_wait_s, true),
+                ("prefill", |r| r.prefill_s, true),
+                ("handoff", |r| r.handoff_s, false),
+                ("decode", |r| r.decode_s, false),
+            ];
+            out.push_str("  phase     p50 (s)    p99 (s)    tail share of p99 TTFT\n");
+            for (label, get, in_ttft) in phases {
+                let mut samp = Samples::from_vec(reqs.iter().map(|r| get(r)).collect());
+                let share = if in_ttft && p99_ttft > 0.0 {
+                    format!("{:5.1}%", 100.0 * tail_mean(get) / p99_ttft)
+                } else {
+                    "     –".to_string()
+                };
+                out.push_str(&format!(
+                    "  {label:<9} {:<10.4} {:<10.4} {share}\n",
+                    samp.p50(),
+                    samp.p99(),
+                ));
+            }
+            let dominant = if tail_mean(|r| r.queued_s) >= tail_mean(|r| r.prefill_s) {
+                "queued"
+            } else {
+                "prefill"
+            };
+            out.push_str(&format!(
+                "  p99 TTFT {:.4} s — dominated by {dominant}\n",
+                p99_ttft
+            ));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// `trace --check`: JSONL schema gate
+// ---------------------------------------------------------------------------
+
+/// Per-kind required fields; mirrors the writer in `export::push_fields`
+/// and the `bench --scale --check` FIELDS gate in `eval::scale`.
+const KINDS: &[(&str, &str, &[&str])] = &[
+    ("arrival", "request", &["model", "req"]),
+    ("queued", "request", &["inst", "model", "req"]),
+    ("admitted", "request", &["inst", "model", "req"]),
+    ("kv-wait-start", "request", &["inst", "model", "req"]),
+    ("kv-wait-end", "request", &["inst", "model", "req", "waited_s"]),
+    ("first-token", "request", &["model", "req"]),
+    ("handoff-start", "request", &["model", "req", "src_node"]),
+    ("handoff-done", "request", &["inst", "model", "networked", "req", "stream_s"]),
+    ("done", "request", &["inst", "model", "req", "tokens"]),
+    ("scale-plan", "scaling", &["cold", "current", "desired", "model", "warm"]),
+    ("instance-up", "scaling", &["inst", "model", "node", "stages"]),
+    ("pipeline-activated", "scaling", &["inst", "model", "node", "stages"]),
+    ("instance-down", "scaling", &["inst", "model", "node", "reason"]),
+    ("recruit-cancelled", "scaling", &["model", "node"]),
+    ("node-failed", "scaling", &["node"]),
+    ("op-begin", "scaling", &["class", "dests", "model", "op"]),
+    ("op-done", "scaling", &["contended_s", "op"]),
+    ("op-replanned", "scaling", &["op"]),
+    ("flow-start", "fabric", &["block", "bytes", "dst", "op", "src"]),
+    ("flow-end", "fabric", &["block", "dst", "op"]),
+    ("flow-reshare", "fabric", &["block", "dst", "gbps", "op"]),
+    ("kv-pressure", "kv", &["inst", "model", "util"]),
+    ("kv-preempted", "kv", &["inst", "model", "req", "swapped"]),
+    ("kv-overcommit", "kv", &["blocks", "inst", "model"]),
+    ("mem-demoted", "memory", &["model_name", "node", "tier"]),
+    ("mem-promoted", "memory", &["model_name", "node"]),
+];
+
+/// Validate a JSONL event log: header tag + schema version, every line
+/// parses, timestamps are finite, non-negative and non-decreasing,
+/// sequence numbers are exactly line-ordered, and every event carries
+/// its kind's full field set. Returns the event count.
+pub fn check_jsonl(text: &str) -> Result<usize, String> {
+    let mut lines = text.lines();
+    parse_header(lines.next().ok_or("empty trace file")?)?;
+    let mut count = 0usize;
+    let mut last_t = f64::NEG_INFINITY;
+    for (i, line) in lines.enumerate() {
+        let ln = i + 2; // 1-based, after the header
+        let j = Json::parse(line).map_err(|e| format!("line {ln}: {e}"))?;
+        let t = j.get("t").and_then(Json::as_f64).ok_or(format!("line {ln}: missing t"))?;
+        if !t.is_finite() || t < 0.0 {
+            return Err(format!("line {ln}: bad timestamp {t}"));
+        }
+        if t < last_t {
+            return Err(format!("line {ln}: time went backwards ({t} < {last_t})"));
+        }
+        last_t = t;
+        let seq = j.get("seq").and_then(Json::as_u64).ok_or(format!("line {ln}: missing seq"))?;
+        if seq != i as u64 {
+            return Err(format!("line {ln}: seq {seq}, expected {i}"));
+        }
+        let kind = j.get("kind").and_then(Json::as_str).ok_or(format!("line {ln}: missing kind"))?;
+        let (_, cat, fields) = KINDS
+            .iter()
+            .find(|(k, _, _)| *k == kind)
+            .ok_or(format!("line {ln}: unknown kind `{kind}`"))?;
+        if j.get("cat").and_then(Json::as_str) != Some(cat) {
+            return Err(format!("line {ln}: kind `{kind}` must have cat `{cat}`"));
+        }
+        for f in *fields {
+            match j.get(f) {
+                None => return Err(format!("line {ln}: kind `{kind}` missing field `{f}`")),
+                Some(Json::Num(n)) if !n.is_finite() => {
+                    return Err(format!("line {ln}: field `{f}` not finite"));
+                }
+                Some(_) => {}
+            }
+        }
+        count += 1;
+    }
+    Ok(count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TraceConfig;
+    use crate::trace::{export, Tracer};
+
+    fn lifecycle_trace() -> SessionTrace {
+        let mut tr = Tracer::new(TraceConfig::default());
+        let t = SimTime::from_secs;
+        // req 1: clean lifecycle.
+        tr.emit(t(0.0), TraceEvent::Arrival { model: 0, req: 1 });
+        tr.emit(t(0.1), TraceEvent::Admitted { model: 0, req: 1, inst: 0 });
+        tr.emit(t(0.4), TraceEvent::FirstToken { model: 0, req: 1 });
+        tr.emit(t(1.4), TraceEvent::Done { model: 0, req: 1, inst: 0, tokens: 8 });
+        // req 2: KV wait, preemption + re-admission, disagg hand-off.
+        tr.emit(t(0.2), TraceEvent::Arrival { model: 0, req: 2 });
+        tr.emit(t(0.3), TraceEvent::KvWaitStart { model: 0, req: 2, inst: 0 });
+        tr.emit(t(0.7), TraceEvent::KvWaitEnd { model: 0, req: 2, inst: 0, waited_s: 0.4 });
+        tr.emit(t(0.7), TraceEvent::Admitted { model: 0, req: 2, inst: 0 });
+        tr.emit(t(0.9), TraceEvent::FirstToken { model: 0, req: 2 });
+        tr.emit(t(1.0), TraceEvent::KvPreempted { model: 0, req: 2, inst: 0, swapped: true });
+        tr.emit(t(1.2), TraceEvent::Admitted { model: 0, req: 2, inst: 0 });
+        tr.emit(t(1.5), TraceEvent::FirstToken { model: 0, req: 2 });
+        tr.emit(
+            t(1.6),
+            TraceEvent::HandoffDone { model: 0, req: 2, inst: 1, stream_s: 0.05, networked: true },
+        );
+        tr.emit(t(2.5), TraceEvent::Done { model: 0, req: 2, inst: 1, tokens: 8 });
+        // req 3: never finishes.
+        tr.emit(t(2.9), TraceEvent::Arrival { model: 0, req: 3 });
+        tr.finish(vec!["llama2-13b".into()], t(3.0))
+    }
+
+    #[test]
+    fn phases_reconstruct_and_reconcile() {
+        let bd = phase_breakdown(&lifecycle_trace());
+        assert_eq!(bd.requests.len(), 2);
+        assert_eq!(bd.unfinished, 1);
+        let r1 = &bd.requests[0];
+        assert!((r1.queued_s - 0.1).abs() < 1e-9);
+        assert!((r1.prefill_s - 0.3).abs() < 1e-9);
+        assert!((r1.decode_s - 1.0).abs() < 1e-9);
+        assert!((r1.ttft_s() - 0.4).abs() < 1e-9);
+        // req 2: first admit at 0.7, LAST first-token at 1.5 (re-admission).
+        let r2 = &bd.requests[1];
+        assert!((r2.queued_s - 0.5).abs() < 1e-9);
+        assert!((r2.kv_wait_s - 0.4).abs() < 1e-9);
+        assert!((r2.prefill_s - 0.8).abs() < 1e-9);
+        assert!((r2.decode_s - 1.0).abs() < 1e-9);
+        assert!((r2.handoff_s - 0.05).abs() < 1e-9);
+        assert!((r2.latency_s() - 2.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jsonl_roundtrip_matches_direct_breakdown() {
+        let trace = lifecycle_trace();
+        let text = export::jsonl(&trace);
+        let via_jsonl = phase_breakdown_from_jsonl(&text).unwrap();
+        assert_eq!(via_jsonl, phase_breakdown(&trace));
+    }
+
+    #[test]
+    fn table_prints_per_phase_p99() {
+        let bd = phase_breakdown(&lifecycle_trace());
+        let table = bd.table();
+        assert!(table.contains("model llama2-13b: 2 completed (1 unfinished at horizon)"));
+        for phase in ["queued", "kv-wait", "prefill", "handoff", "decode"] {
+            assert!(table.contains(phase), "missing phase row `{phase}`:\n{table}");
+        }
+        assert!(table.contains("p99 TTFT"));
+        assert!(table.contains("dominated by"));
+    }
+
+    #[test]
+    fn check_accepts_writer_output_and_rejects_tampering() {
+        let text = export::jsonl(&lifecycle_trace());
+        let n = check_jsonl(&text).unwrap();
+        assert_eq!(n, text.lines().count() - 1);
+        // Drop a required field.
+        let tampered = text.replacen("\"waited_s\":", "\"waited_x\":", 1);
+        assert!(check_jsonl(&tampered).unwrap_err().contains("waited_s"));
+        // Break the header tag.
+        let no_tag = text.replacen(TRACE_TAG, "other-tag", 1);
+        assert!(check_jsonl(&no_tag).is_err());
+        // Unknown kind.
+        let bad_kind = text.replacen("\"kind\":\"arrival\"", "\"kind\":\"arrivalx\"", 1);
+        assert!(check_jsonl(&bad_kind).unwrap_err().contains("unknown kind"));
+        // Not JSON at all.
+        assert!(check_jsonl("garbage\n").is_err());
+    }
+}

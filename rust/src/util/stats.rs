@@ -15,6 +15,16 @@ impl Samples {
         Self::default()
     }
 
+    /// Take ownership of a full sample vector and sort it **once**, so
+    /// every subsequent percentile query is a pure lookup. Prefer this
+    /// over `push`-loops when the values already live in a `Vec`: the
+    /// sort-on-demand path re-sorts after any mutation, and bulk
+    /// construction is the common case in the metrics layer.
+    pub fn from_vec(mut data: Vec<f64>) -> Self {
+        data.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Samples { data, sorted: true }
+    }
+
     pub fn push(&mut self, x: f64) {
         self.data.push(x);
         self.sorted = false;
@@ -240,6 +250,24 @@ mod tests {
         assert_eq!(s.p50(), 3.0);
         s.push(0.0);
         assert_eq!(s.min(), 0.0);
+    }
+
+    #[test]
+    fn percentiles_monotone_on_unsorted_input() {
+        // Micro-assert: p0 ≤ p50 ≤ p100 must hold no matter how scrambled
+        // the input order is — a regression here means ensure_sorted (or a
+        // from_vec construction) failed to actually sort.
+        let scrambled = vec![9.0, 0.5, 7.0, 3.0, 8.0, 1.0, 6.5, 2.0, 4.0, 5.0];
+        let mut pushed = Samples::new();
+        pushed.extend(&scrambled);
+        let mut bulk = Samples::from_vec(scrambled);
+        for s in [&mut pushed, &mut bulk] {
+            let (p0, p50, p100) = (s.percentile(0.0), s.p50(), s.percentile(100.0));
+            assert!(p0 <= p50 && p50 <= p100, "p0={p0} p50={p50} p100={p100}");
+            assert_eq!(p0, 0.5);
+            assert_eq!(p100, 9.0);
+        }
+        assert_eq!(pushed.p50(), bulk.p50());
     }
 
     #[test]

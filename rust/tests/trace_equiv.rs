@@ -1,0 +1,255 @@
+//! Flight-recorder contract tests: tracing must be a pure observer.
+//!
+//! * **Zero interference** — every cell of the eval matrix (scaling
+//!   backends × scaling policies, paged-KV on/off, disaggregation
+//!   on/off, node-failure injection) must produce a bit-identical
+//!   [`SessionReport`] with the recorder on and off. `SessionReport`
+//!   equality covers every per-request metric, lifecycle meter, and the
+//!   popped-event count, so any timing or scheduling perturbation from
+//!   tracing shows up here.
+//! * **Determinism** — two identical traced sessions must emit
+//!   byte-identical JSONL (and the log must pass `trace --check`).
+//! * **Reconciliation** — per-request phases reconstructed from the
+//!   trace must sum to the TTFT/latency the metrics pipeline recorded
+//!   independently.
+
+use std::collections::BTreeMap;
+
+use lambda_scale::config::{AutoscalerConfig, ClusterConfig, DisaggConfig, ScalerKind};
+use lambda_scale::coordinator::{scaler_from_config, ServingSession, SessionReport, SystemKind};
+use lambda_scale::model::ModelSpec;
+use lambda_scale::sim::time::SimTime;
+use lambda_scale::trace::{
+    check_jsonl, chrome_trace, jsonl, phase_breakdown, SessionTrace, TraceConfig,
+};
+use lambda_scale::util::json::Json;
+use lambda_scale::util::rng::Rng;
+use lambda_scale::workload::{burst_trace, poisson_trace};
+
+/// One eval-matrix cell, replayed with the flight recorder on or off.
+#[derive(Clone, Copy)]
+struct Cell {
+    system: SystemKind,
+    scaler: ScalerKind,
+    kv_block_tokens: usize,
+    disagg: bool,
+    /// `(node, at_s)` permanent failure, if any.
+    failure: Option<(usize, f64)>,
+}
+
+fn run_cell(cell: Cell, traced: bool) -> (SessionReport, Option<SessionTrace>) {
+    let mut cluster = ClusterConfig::testbed1();
+    cluster.n_nodes = 8;
+    // Deterministic per-cell trace: both replays see identical arrivals.
+    let mut rng = Rng::new(42);
+    let trace = poisson_trace(2.0, 40.0, "llama2-13b", 128, 48, &mut rng);
+    let scaler_cfg =
+        AutoscalerConfig { policy: cell.scaler, target_ttft_s: 1.5, ..Default::default() };
+    let mut b = ServingSession::builder()
+        .cluster(cluster)
+        .kv_block_tokens(cell.kv_block_tokens);
+    if traced {
+        b = b.flight_recorder(TraceConfig::default());
+    }
+    if cell.disagg {
+        b = b.disagg(DisaggConfig::default());
+    }
+    if let Some((node, at_s)) = cell.failure {
+        b = b.fail_node(node, at_s);
+    }
+    b.model(ModelSpec::llama2_13b())
+        .system(cell.system)
+        .scaler(scaler_from_config(&scaler_cfg))
+        .max_batch(4)
+        .keep_alive(5.0)
+        .initial_gpu_sources(1)
+        .initial_host_sources(2)
+        .trace(trace)
+        .build()
+        .run_traced()
+}
+
+fn assert_pure_observer(cell: Cell, label: &str) {
+    let (off, no_trace) = run_cell(cell, false);
+    let (on, trace) = run_cell(cell, true);
+    assert!(no_trace.is_none(), "{label}: recorder must stay off by default");
+    let trace = trace.unwrap_or_else(|| panic!("{label}: traced run must return a trace"));
+    assert!(
+        off.models[0].completed > 0,
+        "{label}: degenerate cell — nothing served, equivalence vacuous"
+    );
+    assert!(!trace.records.is_empty(), "{label}: traced run recorded nothing");
+    assert_eq!(off.events, on.events, "{label}: popped-event counts diverge under tracing");
+    assert_eq!(off, on, "{label}: SessionReport diverges when the recorder is on");
+}
+
+#[test]
+fn tracing_is_invisible_across_backends_and_scalers() {
+    for system in [
+        SystemKind::LambdaScale { k: 2 },
+        SystemKind::ServerlessLlm,
+        SystemKind::FaasNet,
+    ] {
+        for scaler in
+            [ScalerKind::ReactiveWindow, ScalerKind::SloAware, ScalerKind::PredictiveEwma]
+        {
+            let cell = Cell {
+                system,
+                scaler,
+                kv_block_tokens: 0,
+                disagg: false,
+                failure: None,
+            };
+            assert_pure_observer(cell, &format!("{system:?} × {scaler:?}"));
+        }
+    }
+}
+
+#[test]
+fn tracing_is_invisible_under_kv_disagg_and_failure() {
+    // The KV and disaggregation subsystems emit the densest event streams
+    // (pressure samples, preemptions, hand-off flows), and the failure arm
+    // exercises cancellation/re-plan emissions — none may perturb the run.
+    for (kv, disagg) in [(16, false), (0, true), (16, true)] {
+        for system in [SystemKind::LambdaScale { k: 2 }, SystemKind::ServerlessLlm] {
+            let cell = Cell {
+                system,
+                scaler: ScalerKind::ReactiveWindow,
+                kv_block_tokens: kv,
+                disagg,
+                failure: None,
+            };
+            assert_pure_observer(cell, &format!("{system:?} kv={kv} disagg={disagg}"));
+        }
+    }
+    let cell = Cell {
+        system: SystemKind::LambdaScale { k: 2 },
+        scaler: ScalerKind::SloAware,
+        kv_block_tokens: 16,
+        disagg: false,
+        failure: Some((2, 6.0)),
+    };
+    assert_pure_observer(cell, "LambdaScale kv=16 + node-2 failure");
+}
+
+// ---- determinism & export ------------------------------------------------
+
+/// The bursty λPipe session the export tests replay: a synchronized burst
+/// plus a trailing wave, paged KV on, so every event category fires.
+fn bursty_traced() -> (SessionReport, SessionTrace) {
+    let mut cluster = ClusterConfig::testbed1();
+    cluster.n_nodes = 8;
+    cluster.kv.block_tokens = 16;
+    let trace = {
+        let mut rng = Rng::new(7);
+        let mut t = burst_trace(60, 0.0, "llama2-13b", 128, 64, &mut rng);
+        let wave = burst_trace(30, 20.0, "llama2-13b", 128, 64, &mut rng);
+        t.merge(&wave, SimTime::ZERO);
+        t
+    };
+    let (report, st) = ServingSession::builder()
+        .cluster(cluster)
+        .flight_recorder(TraceConfig::default())
+        .model(ModelSpec::llama2_13b())
+        .system(SystemKind::LambdaScale { k: 2 })
+        .max_batch(8)
+        .trace(trace)
+        .build()
+        .run_traced();
+    (report, st.expect("flight recorder was enabled"))
+}
+
+#[test]
+fn identical_sessions_emit_byte_identical_jsonl() {
+    let (_, a) = bursty_traced();
+    let (_, b) = bursty_traced();
+    let (ja, jb) = (jsonl(&a), jsonl(&b));
+    assert_eq!(ja, jb, "identical sessions must serialize byte-identically");
+    let n = check_jsonl(&ja).expect("emitted JSONL must pass its own schema gate");
+    assert_eq!(n, a.records.len(), "check must count every record");
+}
+
+#[test]
+fn chrome_trace_is_valid_json_with_request_tracks() {
+    let (_, st) = bursty_traced();
+    let j = Json::parse(&chrome_trace(&st)).expect("chrome trace must parse");
+    let events = j.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert!(!events.is_empty());
+    // Both track families are present: per-node cluster threads and
+    // per-request async spans.
+    let phases: Vec<&str> =
+        events.iter().filter_map(|e| e.get("ph").and_then(Json::as_str)).collect();
+    for ph in ["M", "X", "b", "e", "i"] {
+        assert!(phases.contains(&ph), "missing chrome phase {ph:?}");
+    }
+}
+
+#[test]
+fn phase_sums_reconcile_with_request_metrics() {
+    let (report, st) = bursty_traced();
+    let bd = phase_breakdown(&st);
+    let m = report.into_single();
+    assert_eq!(
+        bd.requests.len(),
+        m.requests.len(),
+        "every completed request must reconstruct from the trace"
+    );
+    assert_eq!(bd.unfinished, 0);
+    let by_id: BTreeMap<u64, _> = m.requests.iter().map(|r| (r.id, r)).collect();
+    for p in &bd.requests {
+        let r = by_id[&p.req];
+        let ttft = r.ttft();
+        let latency = r.latency();
+        assert!(
+            (p.ttft_s() - ttft).abs() < 1e-9,
+            "req {}: trace TTFT {:.9} vs metrics {ttft:.9}",
+            p.req,
+            p.ttft_s()
+        );
+        assert!(
+            (p.latency_s() - latency).abs() < 1e-9,
+            "req {}: trace latency {:.9} vs metrics {latency:.9}",
+            p.req,
+            p.latency_s()
+        );
+        assert!(
+            (p.kv_wait_s - r.kv_wait_s).abs() < 1e-9,
+            "req {}: trace kv-wait {:.9} vs metrics {:.9}",
+            p.req,
+            p.kv_wait_s,
+            r.kv_wait_s
+        );
+    }
+    let table = bd.table();
+    for needle in ["queued", "kv-wait", "prefill", "handoff", "decode", "dominated by"] {
+        assert!(table.contains(needle), "report table missing {needle:?}: \n{table}");
+    }
+}
+
+#[test]
+fn category_filter_drops_other_categories() {
+    let mut cluster = ClusterConfig::testbed1();
+    cluster.n_nodes = 8;
+    let mut rng = Rng::new(11);
+    let trace = burst_trace(24, 0.0, "llama2-13b", 128, 48, &mut rng);
+    let cfg = TraceConfig::from_filter("request").expect("valid filter");
+    let (_, st) = ServingSession::builder()
+        .cluster(cluster)
+        .flight_recorder(cfg)
+        .model(ModelSpec::llama2_13b())
+        .system(SystemKind::LambdaScale { k: 2 })
+        .max_batch(8)
+        .trace(trace)
+        .build()
+        .run_traced();
+    let st = st.expect("flight recorder was enabled");
+    assert!(!st.records.is_empty());
+    for r in &st.records {
+        assert_eq!(
+            r.ev.category().name(),
+            "request",
+            "filter leaked a {} event",
+            r.ev.kind()
+        );
+    }
+}
