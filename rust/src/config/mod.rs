@@ -165,11 +165,24 @@ pub struct KvCacheConfig {
     /// Prompt tokens of prefill work admitted per iteration (chunked
     /// prefill budget).
     pub prefill_budget_tokens: usize,
+    /// Copy-on-write prefix sharing across requests that declare a
+    /// common prefix (`Request::prefix_group`): shared chunks are
+    /// attached by refcount instead of freshly acquired, prefill skips
+    /// shared-resident tokens, and follow-up turns route with session
+    /// affinity. **Off by default** — kvcache-mode runs replay
+    /// bit-identical to pre-sharing behavior. No effect while
+    /// `block_tokens == 0` (there are no blocks to share).
+    pub prefix_sharing: bool,
 }
 
 impl Default for KvCacheConfig {
     fn default() -> Self {
-        KvCacheConfig { block_tokens: 0, max_ctx_tokens: 4096, prefill_budget_tokens: 512 }
+        KvCacheConfig {
+            block_tokens: 0,
+            max_ctx_tokens: 4096,
+            prefill_budget_tokens: 512,
+            prefix_sharing: false,
+        }
     }
 }
 
@@ -476,6 +489,13 @@ impl ClusterConfig {
             cfg.kv.max_ctx_tokens = geti("max_ctx_tokens", cfg.kv.max_ctx_tokens)?;
             cfg.kv.prefill_budget_tokens =
                 geti("prefill_budget_tokens", cfg.kv.prefill_budget_tokens)?;
+            cfg.kv.prefix_sharing = match sec.get("prefix_sharing") {
+                None => cfg.kv.prefix_sharing,
+                Some(TomlValue::Bool(b)) => *b,
+                Some(v) => {
+                    return Err(format!("kvcache.prefix_sharing must be a bool, got {v:?}"))
+                }
+            };
         }
         if let Some(sec) = doc.get("compute") {
             cfg.compute.gpu_tflops = getf(sec, "gpu_tflops", cfg.compute.gpu_tflops)?;
@@ -608,15 +628,26 @@ mod tests {
 
     #[test]
     fn from_toml_reads_kvcache_section() {
-        let doc =
-            parse_toml("[kvcache]\nblock_tokens = 16\nprefill_budget_tokens = 256\n").unwrap();
+        let doc = parse_toml(
+            "[kvcache]\nblock_tokens = 16\nprefill_budget_tokens = 256\nprefix_sharing = true\n",
+        )
+        .unwrap();
         let cfg = ClusterConfig::from_toml(&doc).unwrap();
         assert_eq!(cfg.kv.block_tokens, 16);
         assert_eq!(cfg.kv.prefill_budget_tokens, 256);
+        assert!(cfg.kv.prefix_sharing);
         assert_eq!(cfg.kv.max_ctx_tokens, 4096, "untouched knob keeps its default");
-        // The subsystem stays off unless asked for.
+        // The subsystem stays off unless asked for — both knobs.
         let off = ClusterConfig::from_toml(&parse_toml("").unwrap()).unwrap();
         assert_eq!(off.kv.block_tokens, 0);
+        assert!(!off.kv.prefix_sharing);
+        let on_kv = ClusterConfig::from_toml(&parse_toml("[kvcache]\nblock_tokens = 16\n").unwrap())
+            .unwrap();
+        assert!(!on_kv.kv.prefix_sharing, "prefix sharing needs its own opt-in");
+        assert!(ClusterConfig::from_toml(
+            &parse_toml("[kvcache]\nprefix_sharing = 1\n").unwrap()
+        )
+        .is_err());
     }
 
     #[test]

@@ -35,7 +35,10 @@ use super::scaling::{NewInstance, ScalingOutcome, Source};
 use super::session::{ModelReport, ModelSession, SessionReport};
 use crate::config::{ClusterConfig, DisaggConfig};
 use crate::disagg::{plan_kv_stream, DecodeView, DisaggRouter, PrefillView, Role, TwoTierScaler};
-use crate::kvcache::{ContinuousScheduler, IterScratch, KvGeometry, KvPool, KvVictimAction, ReqView};
+use crate::kvcache::{
+    ContinuousScheduler, IterScratch, KvGeometry, KvPool, KvVictimAction, PrefixHit, PrefixTable,
+    ReqView,
+};
 use crate::memory::{Demotion, Locality, MemoryManager};
 use crate::metrics::RequestMetrics;
 use crate::multicast::{BlockId, NodeId};
@@ -65,12 +68,25 @@ struct ActiveReq {
     stall_work: f64,
     /// Tokens generated in *previous* admissions (survive preemption).
     decode_base: usize,
-    /// KV blocks currently held from the instance pool.
+    /// KV blocks currently held *privately* from the instance pool
+    /// (shared prefix chunks are owned by the instance's [`PrefixTable`]
+    /// and are not counted here).
     kv_blocks: usize,
     /// Planned work rate (units/s) for the current iteration.
     rate: f64,
     /// Whether the planned rate is decode (token-emitting) work.
     decoding: bool,
+    // ---- prefix-sharing bookkeeping (all zero when sharing is off,
+    // leaving every legacy code path untouched) -----------------------------
+    /// The request's prefix group (0 = none / sharing off).
+    shared_group: u64,
+    /// References held on the group's leading chunks (contiguous from
+    /// index 0; includes the CoW tail chunk when attached).
+    shared_chunks: u32,
+    /// Blocks *not* held privately because a shared chunk covers them —
+    /// `shared_chunks` normally, one less under CoW (the tail chunk is
+    /// read shared but still costs a private copy block).
+    shared_discount: u32,
 }
 
 impl ActiveReq {
@@ -90,6 +106,10 @@ struct InstKv {
     charges: Vec<(NodeId, f64, u64)>,
     /// Last sampled pool utilization (per-instance dedup of the series).
     last_util: f64,
+    /// Shared prefix chunks (`Some` only with `[kvcache] prefix_sharing`).
+    /// Dies with the instance: pool bytes are released wholesale, so the
+    /// table needs no per-chunk teardown.
+    prefix: Option<PrefixTable>,
 }
 
 struct Inst {
@@ -323,6 +343,10 @@ struct ModelRuntime {
     iter_scratch: IterScratch,
     /// Disaggregated prefill/decode state (`None` = colocated mode).
     disagg: Option<DisaggRuntime>,
+    /// Session → last routed instance (prefix sharing only): follow-up
+    /// turns prefer the instance already holding their session's prefix.
+    /// Stale entries (reclaimed instances) fall back to the policy pick.
+    session_inst: HashMap<u64, u64>,
 }
 
 impl ModelRuntime {
@@ -383,6 +407,7 @@ impl ModelRuntime {
             kv_sched,
             iter_scratch: IterScratch::default(),
             disagg,
+            session_inst: HashMap::new(),
         }
     }
 }
@@ -407,6 +432,31 @@ fn note_first_token(
     if let Some(tr) = tracer.as_mut() {
         tr.emit(now, TraceEvent::FirstToken { model: m, req: trace.requests[idx].id });
     }
+}
+
+/// One admission attempt against an instance pool: probe the prefix table
+/// for `group`'s leading resident run, then attach it (refcount bumps) and
+/// acquire the private remainder atomically — pool exhaustion rolls back
+/// every bump (the prefix module's contract), so a failed attempt leaves
+/// no references behind. Without a table (sharing off) this is exactly the
+/// legacy `try_acquire(total)`.
+fn kv_probe_attach(
+    kv: &mut InstKv,
+    group: u64,
+    n_full: u32,
+    want_tail: bool,
+    total: usize,
+) -> Option<(PrefixHit, usize)> {
+    let hit = match kv.prefix.as_ref() {
+        Some(t) if group != 0 => t.probe(group, n_full, want_tail),
+        _ => PrefixHit::default(),
+    };
+    let private = total.saturating_sub(hit.discount() as usize);
+    let ok = match kv.prefix.as_mut() {
+        Some(t) => t.try_attach(&mut kv.pool, group, hit, private),
+        None => kv.pool.try_acquire(private),
+    };
+    ok.then_some((hit, private))
 }
 
 /// The multi-model serving engine. Construct with [`ServingEngine::new`],
@@ -916,7 +966,8 @@ impl ServingEngine {
             blocks = 0;
             charges = members.iter().map(|&(n, f)| (n, f, 0)).collect();
         }
-        InstKv { pool: KvPool::new(blocks), key, charges, last_util: -1.0 }
+        let prefix = self.cluster.kv.prefix_sharing.then(PrefixTable::new);
+        InstKv { pool: KvPool::new(blocks), key, charges, last_util: -1.0, prefix }
     }
 
     /// Hand a dying instance's KV arena back to the manager. Always runs
@@ -1197,10 +1248,22 @@ impl ServingEngine {
         if self.models[m].disagg.is_some() {
             return self.route_disagg(now, m, idx);
         }
+        // Session affinity (prefix sharing only): prefer the instance the
+        // session last landed on — that is where its prefix chunks live.
+        let prefix_on = self.models[m].kv_geom.is_some() && self.cluster.kv.prefix_sharing;
         let md = &mut self.models[m];
         md.queued += 1;
-        match md.ms.router.route() {
+        let session = md.ms.trace.requests[idx].session_id;
+        let preferred = if prefix_on && session != 0 {
+            md.session_inst.get(&session).copied()
+        } else {
+            None
+        };
+        match md.ms.router.route_preferring(preferred) {
             Some(id) => {
+                if prefix_on && session != 0 {
+                    md.session_inst.insert(session, id);
+                }
                 md.reqs[idx].inst = Some(id);
                 // Enqueue at the request's arrival time, not `now`: rebalance
                 // and dissolve re-route requests through here, and restarting
@@ -1384,6 +1447,9 @@ impl ServingEngine {
                 kv_blocks: 0,
                 rate: 0.0,
                 decoding: false,
+                shared_group: 0,
+                shared_chunks: 0,
+                shared_discount: 0,
             });
             if let Some(tr) = self.tracer.as_mut() {
                 tr.emit(now, TraceEvent::Admitted { model: m, req: r.id, inst: id });
@@ -1406,17 +1472,27 @@ impl ServingEngine {
             md.ms.admission.admit(now, &inst.queue, inst.active.len(), md.ms.params.max_batch)
         };
         while slots > 0 {
-            // The head of the line and the blocks its context needs.
-            let (idx, need) = {
+            // The head of the line, the blocks its context needs, and its
+            // declared shared prefix (chunked to the block geometry).
+            let (idx, need, group, n_full, want_tail, shared_tokens) = {
                 let md = &self.models[m];
                 let Some(inst) = md.instances.get(&id) else { break };
                 let Some(head) = inst.queue.iter().next() else { break };
                 let idx = head.item;
                 let generated = md.reqs[idx].preempted.map_or(0, |p| p.generated);
-                let ctx = md.ms.trace.requests[idx].prompt_tokens + generated;
-                (idx, geom.blocks_for(ctx))
+                let r = &md.ms.trace.requests[idx];
+                let ctx = r.prompt_tokens + generated;
+                let sharing = inst.kv.as_ref().is_some_and(|kv| kv.prefix.is_some());
+                let group = if sharing { r.prefix_group } else { 0 };
+                let shared_tokens =
+                    if group != 0 { r.shared_prefix_tokens.min(r.prompt_tokens) } else { 0 };
+                let n_full = (shared_tokens / geom.block_tokens) as u32;
+                let want_tail = shared_tokens % geom.block_tokens > 0;
+                (idx, geom.blocks_for(ctx), group, n_full, want_tail, shared_tokens)
             };
-            if !self.kv_acquire_for_head(now, m, id, need) {
+            let Some((hit, private)) =
+                self.kv_admit_head(now, m, id, need, group, n_full, want_tail)
+            else {
                 let md = &mut self.models[m];
                 if md.reqs[idx].kv_blocked_since.is_none() {
                     md.reqs[idx].kv_blocked_since = Some(now);
@@ -1432,7 +1508,9 @@ impl ServingEngine {
                     }
                 }
                 break;
-            }
+            };
+            // Prefill skips tokens whose KV is shared-resident.
+            let skip = hit.skipped_tokens(geom.block_tokens, shared_tokens);
             slots -= 1;
             changed = true;
             let md = &mut self.models[m];
@@ -1462,23 +1540,27 @@ impl ServingEngine {
                 / batch as f64)
                 .max(1e-9);
             let (decode_base, stall_work) = match pre {
-                None => (0, r.prompt_tokens as f64 * md.prefill_ratio),
+                None => (0, (r.prompt_tokens - skip) as f64 * md.prefill_ratio),
                 // Displaced by a pipeline dissolve: KV was rebuilt inside
                 // the mode-switch stall; resume decoding directly.
                 Some(PreemptedReq { generated, action: None }) => (generated, 0.0),
                 Some(pr) => {
+                    // Shared-resident prefix tokens never left the
+                    // instance at preemption (their chunks stayed in the
+                    // table), so neither the recompute replay nor the
+                    // host swap covers them — both price `ctx - skip`.
                     let ctx = r.prompt_tokens + pr.generated;
                     match pr.action.unwrap() {
                         KvVictimAction::Recompute => {
                             // Replay prefill over prompt + generated: the
                             // recompute cost lands in this request's latency.
-                            let w = ctx as f64 * md.prefill_ratio;
+                            let w = (ctx - skip) as f64 * md.prefill_ratio;
                             st.kv.recompute_s += w / per_req_rate;
                             (pr.generated, w)
                         }
                         KvVictimAction::SwapToHost => {
                             let s = crate::kvcache::swap_cost_s(
-                                ctx,
+                                ctx - skip,
                                 &md.ms.params.spec,
                                 &self.cluster.network,
                             );
@@ -1488,6 +1570,9 @@ impl ServingEngine {
                     }
                 }
             };
+            if hit.chunks > 0 {
+                md.ms.metrics.record_kv_prefix_hit(hit.chunks as u64, skip as u64, hit.cow);
+            }
             let first_emitted = st.first_token.is_some();
             let mut remaining_out = r.output_tokens.saturating_sub(decode_base) as f64;
             // A prefill-pool instance serves only through the first token;
@@ -1504,9 +1589,12 @@ impl ServingEngine {
                 admitted: now,
                 stall_work,
                 decode_base,
-                kv_blocks: need,
+                kv_blocks: private,
                 rate: 0.0,
                 decoding: false,
+                shared_group: group,
+                shared_chunks: hit.chunks,
+                shared_discount: hit.discount(),
             });
             if let Some(tr) = self.tracer.as_mut() {
                 tr.emit(now, TraceEvent::Admitted { model: m, req: r.id, inst: id });
@@ -1515,32 +1603,74 @@ impl ServingEngine {
         changed
     }
 
-    /// Acquire `need` blocks for the queue head. An idle instance whose
-    /// pool can never seat the head grows the pool from manager headroom,
-    /// or — headroom exhausted — overflows with an explicit counter
-    /// rather than wedging the line forever.
-    fn kv_acquire_for_head(&mut self, now: SimTime, m: usize, id: u64, need: usize) -> bool {
+    /// Seat the queue head: probe the shared prefix table, attach the
+    /// resident leading run (refcount bumps, rolled back atomically on
+    /// pool exhaustion), and acquire private blocks for the remainder —
+    /// `total` context blocks minus the shared discount. Under pressure,
+    /// cached (refcount-zero) chunks are evicted youngest-first before
+    /// giving up. An idle instance whose pool can never seat the head
+    /// grows the pool from manager headroom, or — headroom exhausted —
+    /// overflows with an explicit counter rather than wedging the line
+    /// forever. Returns the committed hit and the private blocks taken;
+    /// `None` leaves the head waiting with no references leaked.
+    fn kv_admit_head(
+        &mut self,
+        now: SimTime,
+        m: usize,
+        id: u64,
+        total: usize,
+        group: u64,
+        n_full: u32,
+        want_tail: bool,
+    ) -> Option<(PrefixHit, usize)> {
         let must_force = {
             let md = &mut self.models[m];
-            let Some(inst) = md.instances.get_mut(&id) else { return false };
+            let Some(inst) = md.instances.get_mut(&id) else { return None };
             let kv = inst.kv.as_mut().expect("kvcache instance without a pool");
-            if kv.pool.try_acquire(need) {
-                return true;
+            if let Some(got) = kv_probe_attach(kv, group, n_full, want_tail, total) {
+                return Some(got);
             }
-            if !inst.active.is_empty() || need <= kv.pool.capacity() {
-                return false;
+            // Pool pressure: reclaim cached chunks youngest-first when
+            // that fully covers the shortfall, then retry (the fresh
+            // probe inside handles chunks of *this* group going away).
+            if let Some(tbl) = kv.prefix.as_mut() {
+                let short = total.saturating_sub(kv.pool.free());
+                if short > 0 && tbl.cached_blocks() >= short {
+                    let freed = tbl.evict_cached(short);
+                    kv.pool.release(freed);
+                    md.ms.metrics.record_kv_prefix_evicted(freed as u64);
+                    if let Some(got) = kv_probe_attach(kv, group, n_full, want_tail, total) {
+                        return Some(got);
+                    }
+                }
             }
-            need - kv.pool.capacity()
+            if !inst.active.is_empty() || total <= kv.pool.capacity() {
+                return None;
+            }
+            total - kv.pool.capacity()
         };
         if self.try_grow_kv(now, m, id, must_force) {
             let inst = self.models[m].instances.get_mut(&id).unwrap();
-            return inst.kv.as_mut().unwrap().pool.try_acquire(need);
+            let kv = inst.kv.as_mut().unwrap();
+            if let Some(got) = kv_probe_attach(kv, group, n_full, want_tail, total) {
+                return Some(got);
+            }
+            // Growth landed but the head still does not fit — fall through
+            // to the forced-overflow escape hatch below.
         }
         let md = &mut self.models[m];
         let inst = md.instances.get_mut(&id).unwrap();
         let kv = inst.kv.as_mut().unwrap();
+        let hit = match kv.prefix.as_ref() {
+            Some(t) if group != 0 => t.probe(group, n_full, want_tail),
+            _ => PrefixHit::default(),
+        };
+        let private = total.saturating_sub(hit.discount() as usize);
+        if hit.chunks > 0 {
+            kv.prefix.as_mut().unwrap().attach_refs(group, hit.chunks);
+        }
         let before = kv.pool.overcommit_blocks;
-        kv.pool.force_acquire(need);
+        kv.pool.force_acquire(private);
         let granted = kv.pool.overcommit_blocks - before;
         md.ms.metrics.record_kv_overcommit(granted);
         if granted > 0 {
@@ -1548,7 +1678,7 @@ impl ServingEngine {
                 tr.emit(now, TraceEvent::KvOvercommit { model: m, inst: id, blocks: granted });
             }
         }
-        true
+        Some((hit, private))
     }
 
     // ---- progress mechanics -------------------------------------------------
@@ -1575,7 +1705,9 @@ impl ServingEngine {
             return;
         }
         let mut decode_rate = 0.0;
-        for a in &mut inst.active {
+        let block_tokens = md.kv_geom.map_or(0, |g| g.block_tokens);
+        let Inst { active, kv, .. } = &mut *inst;
+        for a in active.iter_mut() {
             a.done += a.rate * dt;
             if a.decoding {
                 decode_rate += a.rate;
@@ -1591,6 +1723,34 @@ impl ServingEngine {
                     a.idx,
                     now,
                 );
+                // Prefill just completed: publish this request's full
+                // prefix chunks, *moving* their blocks from its private
+                // holding into the shared table. Publishing here — not
+                // at admission — keeps hits honest: no later request
+                // skips prefill against KV that was never computed.
+                // Chunks a racing peer published first dedup, and the
+                // redundant private blocks go straight back to the pool.
+                if a.shared_group != 0 && block_tokens > 0 {
+                    if let Some(k) = kv.as_mut() {
+                        if let Some(tbl) = k.prefix.as_mut() {
+                            let r = &md.ms.trace.requests[a.idx];
+                            let shared = r.shared_prefix_tokens.min(r.prompt_tokens);
+                            let n_full = (shared / block_tokens) as u32;
+                            if n_full > a.shared_discount {
+                                let out = tbl.publish(a.shared_group, a.shared_discount, n_full);
+                                let moved = (out.published + out.deduped) as usize;
+                                debug_assert!(a.kv_blocks >= moved);
+                                a.kv_blocks -= moved;
+                                a.shared_chunks += out.published + out.deduped;
+                                a.shared_discount = n_full;
+                                k.pool.release(out.deduped as usize);
+                                if out.published > 0 {
+                                    md.ms.metrics.record_kv_prefix_published(out.published as u64);
+                                }
+                            }
+                        }
+                    }
+                }
             }
         }
         // Only decode work emits tokens (prefill/stall work does not).
@@ -1607,10 +1767,18 @@ impl ServingEngine {
                 i += 1;
             }
         }
-        // Completed requests hand their KV blocks straight back.
+        // Completed requests hand their private KV blocks straight back
+        // and drop their shared-chunk references — chunks reaching
+        // refcount zero stay cached for later hits until pool pressure
+        // evicts them.
         if let Some(kv) = inst.kv.as_mut() {
             for f in &finished {
                 kv.pool.release(f.kv_blocks);
+                if f.shared_chunks > 0 {
+                    if let Some(t) = kv.prefix.as_mut() {
+                        t.detach(f.shared_group, f.shared_chunks);
+                    }
+                }
             }
         }
         let went_idle = inst.active.is_empty() && inst.queue.is_empty();
@@ -2015,7 +2183,9 @@ impl ServingEngine {
                 let mut found = None;
                 for (p, a) in inst.active.iter().enumerate().skip(i) {
                     let ctx = md.ms.trace.requests[a.idx].prompt_tokens + a.generated();
-                    let need = geom.blocks_for(ctx);
+                    // Shared chunks cover part of the context for free —
+                    // only the private remainder must be held.
+                    let need = geom.blocks_for(ctx).saturating_sub(a.shared_discount as usize);
                     if need > a.kv_blocks {
                         found = Some((p, need - a.kv_blocks));
                         break;
@@ -2034,6 +2204,22 @@ impl ServingEngine {
                     inst.active[pos].kv_blocks += deficit;
                     i = pos;
                     continue;
+                }
+                // Before preempting a peer, reclaim cached (unreferenced)
+                // prefix chunks — capacity that costs no running request
+                // anything. Referenced chunks are never touched.
+                if let Some(tbl) = kv.prefix.as_mut() {
+                    let short = deficit.saturating_sub(kv.pool.free());
+                    let freed = tbl.evict_cached(short);
+                    if freed > 0 {
+                        kv.pool.release(freed);
+                        md.ms.metrics.record_kv_prefix_evicted(freed as u64);
+                        if kv.pool.try_acquire(deficit) {
+                            inst.active[pos].kv_blocks += deficit;
+                            i = pos;
+                            continue;
+                        }
+                    }
                 }
                 if inst.active.len() == 1 {
                     // Record only what actually lands beyond capacity
@@ -2078,6 +2264,14 @@ impl ServingEngine {
         let a = inst.active.remove(pos);
         if let Some(kv) = inst.kv.as_mut() {
             kv.pool.release(a.kv_blocks);
+            // Drop the victim's shared-chunk references: the chunks stay
+            // cached (and are usually re-attached when it re-admits), but
+            // they must not be pinned by a request holding no KV.
+            if a.shared_chunks > 0 {
+                if let Some(t) = kv.prefix.as_mut() {
+                    t.detach(a.shared_group, a.shared_chunks);
+                }
+            }
         }
         // The fraction of an in-progress decode token already flowed into
         // the emission accumulator but is not preserved in `generated` —

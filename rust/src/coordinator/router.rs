@@ -100,6 +100,22 @@ impl Router {
         Some(id)
     }
 
+    /// Route with session affinity: when `preferred` names a still-live
+    /// instance (the one holding a session's KV prefix), charge it
+    /// directly — bypassing the policy — so follow-up turns land where
+    /// their prefix is resident. A dead or unknown preference falls back
+    /// cleanly to the ordinary policy pick (the prefix is recomputed on
+    /// whichever instance wins; never a panic).
+    pub fn route_preferring(&mut self, preferred: Option<u64>) -> Option<u64> {
+        if let Some(id) = preferred {
+            if let Some(l) = self.instances.get_mut(&id) {
+                l.outstanding += 1;
+                return Some(id);
+            }
+        }
+        self.route()
+    }
+
     /// Record a request finishing (or leaving) `id`.
     pub fn complete(&mut self, id: u64) {
         if let Some(l) = self.instances.get_mut(&id) {
@@ -182,6 +198,47 @@ mod tests {
         let a = r.route().unwrap();
         let b = r.route().unwrap();
         assert_ne!(a, b, "least-loaded must alternate over idle instances");
+    }
+
+    #[test]
+    fn affinity_overrides_every_policy() {
+        // A follow-up whose prefix is resident on instance 2 must land on
+        // 2 under each shipped policy, even when 2 is the *worst* pick.
+        let policies: Vec<Box<dyn crate::coordinator::policy::RoutingPolicy>> = vec![
+            Box::new(JoinShortestQueue),
+            Box::new(LeastLoaded),
+            Box::new(RoundRobin::default()),
+        ];
+        for p in policies {
+            let name = p.name();
+            let mut r = Router::with_policy(p);
+            r.add_instance(1, 1.0);
+            r.add_instance(2, 1.0);
+            // Load instance 2 so no policy would pick it on merit.
+            for _ in 0..5 {
+                r.route_preferring(Some(2));
+            }
+            assert_eq!(r.route_preferring(Some(2)), Some(2), "policy {name}");
+            assert_eq!(r.outstanding(2), 6, "affinity routes charge load like any other");
+        }
+    }
+
+    #[test]
+    fn affinity_falls_back_when_instance_gone() {
+        let mut r = Router::new();
+        r.add_instance(1, 1.0);
+        r.add_instance(2, 1.0);
+        r.route_preferring(Some(2));
+        // Instance 2 is reclaimed between turns: the stale preference
+        // must fall back to a policy pick, not panic or return None.
+        r.remove_instance(2);
+        assert_eq!(r.route_preferring(Some(2)), Some(1));
+        // No instances at all: clean None.
+        r.remove_instance(1);
+        assert_eq!(r.route_preferring(Some(2)), None);
+        // `None` preference is exactly `route()`.
+        r.add_instance(3, 1.0);
+        assert_eq!(r.route_preferring(None), Some(3));
     }
 
     #[test]

@@ -296,6 +296,14 @@ impl ServingSessionBuilder {
         self
     }
 
+    /// Enable copy-on-write prefix sharing in the paged KV cache (off by
+    /// default; needs `kv_block_tokens > 0` to have any effect).
+    /// Cluster-scoped; call after `.cluster(..)`.
+    pub fn kv_prefix_sharing(mut self, on: bool) -> Self {
+        self.cluster.kv.prefix_sharing = on;
+        self
+    }
+
     /// The model's request trace.
     pub fn trace(mut self, trace: Trace) -> Self {
         self.current().trace = trace;

@@ -37,7 +37,7 @@ use crate::model::ModelSpec;
 use crate::sim::time::SimTime;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use crate::workload::{burst_trace, poisson_trace, BurstGptGen, Trace};
+use crate::workload::{burst_trace, poisson_trace, BurstGptGen, MultiTurnGen, RagGen, Trace};
 use std::collections::BTreeMap;
 
 /// The shared-fabric probe rows: a two-tenant overlapping burst on a
@@ -96,6 +96,37 @@ pub struct DisaggReport {
     pub colocated_gpu_s: f64,
     /// Total metered GPU·s of the disaggregated run.
     pub disagg_gpu_s: f64,
+}
+
+/// The prefix-sharing probe row: a multi-turn + RAG trace (declared
+/// shared prefixes) replayed twice on the same KV-tight paged cluster —
+/// `[kvcache] prefix_sharing` off versus on — so the only difference is
+/// copy-on-write prefix reuse (see [`crate::kvcache::prefix`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PrefixReport {
+    /// p99 TTFT with sharing off (every prompt prefilled from scratch).
+    pub private_p99_ttft_s: f64,
+    /// p99 TTFT with sharing on.
+    pub shared_p99_ttft_s: f64,
+    /// `private / shared` — >1 means prefix reuse wins the tail.
+    pub ttft_speedup: f64,
+    /// Priced cost of the sharing-off run, USD.
+    pub private_cost_usd: f64,
+    /// Priced cost of the sharing-on run, USD.
+    pub shared_cost_usd: f64,
+    /// `shared / private` — <1 means sharing also cuts the bill.
+    pub norm_cost: f64,
+    /// Shared chunks attached at admission (sharing-on run) — refcount
+    /// bumps that replaced fresh block acquisitions.
+    pub prefix_hits: u64,
+    /// Prefill tokens skipped because their KV was shared-resident.
+    pub skipped_tokens: u64,
+    /// Chunks published into per-instance tables after prefill.
+    pub published_chunks: u64,
+    /// Copy-on-write tail attaches (prefix ends mid-block).
+    pub cow_copies: u64,
+    /// Cached (refcount-zero) chunks evicted under pool pressure.
+    pub evicted_chunks: u64,
 }
 
 /// Harness configuration: the cluster every cell runs on and the shared
@@ -196,6 +227,8 @@ pub struct EvalReport {
     pub contention: Option<ContentionReport>,
     /// Disaggregated-vs-colocated A/B on the long-prefill RAG trace.
     pub disagg: Option<DisaggReport>,
+    /// Prefix-sharing A/B on the multi-turn + RAG trace (KV-tight pool).
+    pub prefix: Option<PrefixReport>,
 }
 
 /// The trace matrix: deterministic per [`EvalConfig::seed`].
@@ -235,6 +268,41 @@ pub fn trace_matrix(cfg: &EvalConfig) -> Vec<(&'static str, Trace)> {
 pub fn rag_trace(cfg: &EvalConfig) -> Trace {
     let mut rng = Rng::new(cfg.seed.wrapping_add(200));
     poisson_trace(1.5, cfg.duration_s.min(90.0), &cfg.model.name, 1792, 48, &mut rng)
+}
+
+/// The annotated trace the prefix-sharing probe replays: RAG requests
+/// re-asking questions over a small shared document set, interleaved with
+/// multi-turn chat sessions whose growing histories nest. Both declare
+/// their shared prefixes (`prefix_group` / `shared_prefix_tokens`), with
+/// disjoint group namespaces. Sized for a KV-tight pool: prompts of a few
+/// hundred tokens, so a handful of requests exhaust ~2 GB of KV headroom.
+/// Deterministic per [`EvalConfig::seed`], capped at 60 s.
+pub fn prefix_trace(cfg: &EvalConfig) -> Trace {
+    let dur = cfg.duration_s.min(60.0);
+    let model = &cfg.model.name;
+    let mut rng = Rng::new(cfg.seed.wrapping_add(300));
+    let mut t = RagGen {
+        rps: 1.0,
+        n_docs: 2,
+        doc_tokens: 320,
+        question: 64,
+        avg_output: 48,
+        group_base: 1_000,
+    }
+    .generate(dur, model, &mut rng);
+    let mut rng2 = Rng::new(cfg.seed.wrapping_add(301));
+    let turns = MultiTurnGen {
+        session_rps: 0.5,
+        avg_turns: 4,
+        think_time_s: 6.0,
+        first_prompt: 192,
+        followup: 48,
+        avg_output: 64,
+        group_base: 2_000,
+    }
+    .generate(dur, model, &mut rng2);
+    t.merge(&turns, SimTime::ZERO);
+    t
 }
 
 /// Scaling backends every trace replays against: λPipe versus the two
@@ -433,6 +501,54 @@ pub fn run_disagg(cfg: &EvalConfig) -> DisaggReport {
     }
 }
 
+/// Run the prefix-sharing probe: replay [`prefix_trace`] twice on a
+/// KV-tight paged cluster (the GPU cap leaves ~2 GB of KV headroom next
+/// to the 13B weights) — `prefix_sharing` off, then on — and compare p99
+/// TTFT, cost, and the sharing counters.
+pub fn run_prefix(cfg: &EvalConfig) -> PrefixReport {
+    let trace = prefix_trace(cfg);
+    let run = |sharing: bool| {
+        let mut cluster = cfg.cluster.clone();
+        cluster.kv.block_tokens = 32;
+        cluster.kv.prefix_sharing = sharing;
+        ServingSession::builder()
+            .cluster(cluster)
+            .gpu_capacity_bytes(28_000_000_000)
+            .model(cfg.model.clone())
+            .system(SystemKind::LambdaScale { k: 2 })
+            .kv_max_ctx_tokens(2048)
+            .max_batch(cfg.max_batch)
+            .keep_alive(cfg.keep_alive_s)
+            .initial_gpu_sources(1)
+            .initial_host_sources(2)
+            .trace(trace.clone())
+            .run()
+            .into_single()
+    };
+    let private = run(false);
+    let shared = run(true);
+    let p99 = |m: &crate::metrics::MetricsCollector| {
+        let mut s = m.ttft_samples();
+        s.p99()
+    };
+    let (private_p99, shared_p99) = (p99(&private), p99(&shared));
+    let private_cost = private.cost(&cfg.cluster.cost).total_usd();
+    let shared_cost = shared.cost(&cfg.cluster.cost).total_usd();
+    PrefixReport {
+        private_p99_ttft_s: private_p99,
+        shared_p99_ttft_s: shared_p99,
+        ttft_speedup: private_p99 / shared_p99.max(1e-9),
+        private_cost_usd: private_cost,
+        shared_cost_usd: shared_cost,
+        norm_cost: shared_cost / private_cost.max(1e-12),
+        prefix_hits: shared.kv_prefix_hits,
+        skipped_tokens: shared.kv_prefix_skipped_tokens,
+        published_chunks: shared.kv_prefix_published,
+        cow_copies: shared.kv_cow_copies,
+        evicted_chunks: shared.kv_prefix_evictions,
+    }
+}
+
 /// Run the full matrix and normalize each trace's costs to its
 /// ServerlessLLM + reactive-window baseline cell.
 pub fn run_matrix(cfg: &EvalConfig) -> EvalReport {
@@ -463,6 +579,7 @@ pub fn run_matrix(cfg: &EvalConfig) -> EvalReport {
         cells,
         contention: Some(run_contention(cfg)),
         disagg: Some(run_disagg(cfg)),
+        prefix: Some(run_prefix(cfg)),
     }
 }
 
@@ -521,6 +638,24 @@ impl DisaggReport {
     }
 }
 
+impl PrefixReport {
+    fn to_json(&self) -> Json {
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        o.insert("private_p99_ttft_s".into(), Json::Num(self.private_p99_ttft_s));
+        o.insert("shared_p99_ttft_s".into(), Json::Num(self.shared_p99_ttft_s));
+        o.insert("ttft_speedup".into(), Json::Num(self.ttft_speedup));
+        o.insert("private_cost_usd".into(), Json::Num(self.private_cost_usd));
+        o.insert("shared_cost_usd".into(), Json::Num(self.shared_cost_usd));
+        o.insert("norm_cost".into(), Json::Num(self.norm_cost));
+        o.insert("prefix_hits".into(), Json::Num(self.prefix_hits as f64));
+        o.insert("skipped_tokens".into(), Json::Num(self.skipped_tokens as f64));
+        o.insert("published_chunks".into(), Json::Num(self.published_chunks as f64));
+        o.insert("cow_copies".into(), Json::Num(self.cow_copies as f64));
+        o.insert("evicted_chunks".into(), Json::Num(self.evicted_chunks as f64));
+        Json::Obj(o)
+    }
+}
+
 impl EvalReport {
     /// The scoreboard as the `BENCH_eval.json` document.
     pub fn to_json(&self) -> Json {
@@ -536,6 +671,9 @@ impl EvalReport {
         }
         if let Some(d) = &self.disagg {
             o.insert("disagg".into(), d.to_json());
+        }
+        if let Some(p) = &self.prefix {
+            o.insert("prefix".into(), p.to_json());
         }
         Json::Obj(o)
     }
@@ -628,6 +766,27 @@ impl EvalReport {
                 d.prefill_gpu_s,
                 d.decode_gpu_s,
                 d.colocated_gpu_s,
+            ));
+        }
+        if let Some(p) = &self.prefix {
+            s.push_str(&format!(
+                "\n## Copy-on-write prefix sharing (multi-turn + RAG trace, KV-tight pool)\n\n\
+                 Same paged cluster with ~2 GB of KV headroom, `prefix_sharing` off vs on: \
+                 p99 TTFT {:.3} s private vs {:.3} s shared ({:.2}× speedup), cost \
+                 ${:.4} vs ${:.4} ({:.3}× normalized). The shared run attached prefixes on \
+                 {} admissions, skipped {} prefill tokens, published {} chunks \
+                 ({} copy-on-write tails, {} cached chunks evicted under pressure).\n",
+                p.private_p99_ttft_s,
+                p.shared_p99_ttft_s,
+                p.ttft_speedup,
+                p.private_cost_usd,
+                p.shared_cost_usd,
+                p.norm_cost,
+                p.prefix_hits,
+                p.skipped_tokens,
+                p.published_chunks,
+                p.cow_copies,
+                p.evicted_chunks,
             ));
         }
         let find = |sys: &str, scaler: &str| {
@@ -730,6 +889,26 @@ mod tests {
             "disagg p99 TTFT {:.3} s must beat colocated {:.3} s",
             d.disagg_p99_ttft_s,
             d.colocated_p99_ttft_s
+        );
+    }
+
+    /// The prefix-sharing A/B: on the annotated multi-turn + RAG trace
+    /// with a KV-tight pool, sharing must actually engage (hits, skipped
+    /// prefill, published chunks) and strictly improve tail TTFT or
+    /// normalized cost over the private-prefill baseline.
+    #[test]
+    fn prefix_probe_beats_private_prefill_when_kv_tight() {
+        let cfg = tiny();
+        let p = run_prefix(&cfg);
+        assert!(p.prefix_hits > 0, "sharing never engaged");
+        assert!(p.skipped_tokens > 0, "no prefill work was skipped");
+        assert!(p.published_chunks > 0, "no chunks were published");
+        assert!(
+            p.ttft_speedup > 1.0 || p.norm_cost < 1.0,
+            "sharing must win tail TTFT ({:.3} s vs {:.3} s) or cost ({:.3}×)",
+            p.shared_p99_ttft_s,
+            p.private_p99_ttft_s,
+            p.norm_cost,
         );
     }
 

@@ -34,17 +34,29 @@
 //! a hand-off that lands on a full arena queues under the ordinary
 //! KV-gated admission rules.
 //!
+//! **Copy-on-write prefix sharing** ([`prefix`]): with
+//! `[kvcache] prefix_sharing = true`, requests that declare a shared
+//! prefix (`Request::prefix_group` / `shared_prefix_tokens`) attach
+//! refcounted block-aligned chunks from a per-instance [`PrefixTable`]
+//! instead of acquiring fresh blocks, skip prefill over shared-resident
+//! tokens, and copy-on-write past the shared boundary. Eviction reclaims
+//! only refcount-zero chunks, youngest-first.
+//!
 //! The whole subsystem is off by default: `kv_block_tokens = 0`
 //! ([`crate::config::KvCacheConfig`]) keeps the legacy fluid model and
-//! the seed figures bit-identical.
+//! the seed figures bit-identical, and `prefix_sharing = false` (also
+//! the default) keeps kvcache-mode runs bit-identical to pre-sharing
+//! behavior.
 // Pre-dates the crate-wide rustdoc gate; sweep pending.
 #![allow(missing_docs)]
 
 pub mod pool;
+pub mod prefix;
 pub mod sched;
 pub mod switch;
 
 pub use pool::KvPool;
+pub use prefix::{chunk_hash, PrefixHit, PrefixTable, PublishOutcome};
 pub use sched::{ContinuousScheduler, IterScratch, IterationPlan, ReqView};
 pub use switch::{
     swap_cost_s, AdaptiveKvSwitch, AlwaysRecompute, AlwaysSwapToHost, KvSwitchPolicy,

@@ -1,9 +1,12 @@
 //! Per-instance paged KV block pool.
 //!
 //! The pool itself is a block *counter* — every KV block of one instance
-//! is interchangeable, so there is no per-block identity to track (unlike
+//! is interchangeable, so the pool tracks no per-block identity (unlike
 //! the transfer-layer [`crate::memory::BlockPool`], whose slab ids model
-//! reuse). What matters is exact accounting: acquisition fails cleanly on
+//! reuse); block *identity* exists only one layer up, in the
+//! [`crate::kvcache::prefix::PrefixTable`], whose shared chunks each own
+//! one counted block here. What matters is exact accounting: acquisition
+//! fails cleanly on
 //! exhaustion, growth is explicit (the serving engine charges the
 //! [`crate::memory::MemoryManager`] before calling [`KvPool::grow`]), and
 //! the only way past capacity is [`KvPool::force_acquire`], which records

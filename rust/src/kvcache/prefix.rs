@@ -1,0 +1,406 @@
+//! Hash-identified, refcounted shared prefix chunks (vLLM-style prefix
+//! caching with copy-on-write at the shared boundary).
+//!
+//! A request's declared shared prefix (`Request::prefix_group` +
+//! `Request::shared_prefix_tokens`) is chunked into block-aligned pieces;
+//! each full chunk is identified by a 64-bit FNV-1a hash over
+//! `(group, chunk_index)` and lives in a per-instance [`PrefixTable`].
+//! Chunk blocks are *counted inside the owning pool's `used`* — a chunk
+//! takes one [`KvPool`] block when first published and returns it only
+//! when evicted, so capacity/utilization accounting is unchanged by
+//! sharing and conservation is checkable:
+//!
+//! ```text
+//! pool.used == Σ (per-request private blocks) + table.total_blocks()
+//! ```
+//!
+//! Lifecycle rules (enforced here, exercised by
+//! `rust/tests/kv_prefix_properties.rs`):
+//!
+//! * **Attach** — at admission, a request attaches the leading contiguous
+//!   run of already-resident chunks (refcount bump each, no fresh block),
+//!   and acquires private blocks for the remainder. The two steps are
+//!   all-or-nothing: pool exhaustion mid-admission rolls back every bump
+//!   already taken ([`PrefixTable::try_attach`]), so a failed admission
+//!   never leaks references.
+//! * **Publish** — only after prefill completes (first token) does a
+//!   request publish its own full prefix chunks, *moving* the backing
+//!   blocks from its private holding into the table. A chunk published
+//!   concurrently by a peer dedups: the redundant block goes back to the
+//!   pool. Publishing after prefill keeps hits honest — no request ever
+//!   skips prefill against KV that has not been computed yet.
+//! * **Copy-on-write** — a request whose declared prefix ends mid-block
+//!   may attach a peer's *full* chunk covering that region, skip the
+//!   covered tokens, and write its divergent tokens into a private copy
+//!   block. Shared chunks are never written: decode and divergent tokens
+//!   always land in private blocks, by construction.
+//! * **Evict** — a chunk whose refcount dropped to zero stays cached
+//!   (free hits for later requests) until pool pressure reclaims it,
+//!   youngest-first by creation order ([`PrefixTable::evict_cached`]).
+//!   A referenced chunk is never evicted.
+//!
+//! Chunk identity is a hash, so distinct `(group, index)` pairs can in
+//! principle collide; at 64 bits over the handful of groups a simulated
+//! instance sees, the collision probability is negligible, and a
+//! collision would alias two chunks (a modeling inaccuracy), never break
+//! block conservation.
+
+use super::KvPool;
+use std::collections::BTreeMap;
+
+/// FNV-1a over the little-endian bytes of `(group, idx)` — the chunk's
+/// identity in a [`PrefixTable`].
+pub fn chunk_hash(group: u64, idx: u32) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in group.to_le_bytes().into_iter().chain(idx.to_le_bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Result of probing a table for a request's declared prefix.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixHit {
+    /// Resident chunks attachable from index 0, contiguous. Under CoW
+    /// this includes the partially-covered tail chunk.
+    pub chunks: u32,
+    /// The last attached chunk is a copy-on-write tail: the request's
+    /// declared prefix ends inside it, so the request skips the covered
+    /// tokens but still holds a private copy block for divergent writes.
+    pub cow: bool,
+}
+
+impl PrefixHit {
+    /// Blocks the request does *not* need privately. The CoW tail chunk
+    /// is shared for reading but still costs a private copy block, so it
+    /// never counts toward the discount.
+    pub fn discount(&self) -> u32 {
+        self.chunks - self.cow as u32
+    }
+
+    /// Prefill tokens skipped because their KV is shared-resident.
+    /// `shared_tokens` is the declared prefix clamped to the prompt.
+    pub fn skipped_tokens(&self, block_tokens: usize, shared_tokens: usize) -> usize {
+        let covered = if self.cow {
+            // Full chunks plus the declared tail inside the CoW chunk.
+            shared_tokens
+        } else {
+            self.chunks as usize * block_tokens
+        };
+        covered.min(shared_tokens)
+    }
+}
+
+/// Outcome of publishing a range of chunks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PublishOutcome {
+    /// Chunks newly inserted (their backing block moved into the table).
+    pub published: u32,
+    /// Chunks a peer already published — the caller's redundant private
+    /// block must go back to the pool.
+    pub deduped: u32,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct ChunkState {
+    refs: u32,
+    /// Creation sequence number — eviction order (youngest first).
+    created: u64,
+}
+
+/// Per-instance table of shared prefix chunks. One chunk == one KV block
+/// of `block_tokens` tokens; the block is owned by the table (counted in
+/// the pool's `used`) from publication until eviction.
+#[derive(Clone, Debug, Default)]
+pub struct PrefixTable {
+    chunks: BTreeMap<u64, ChunkState>,
+    seq: u64,
+}
+
+impl PrefixTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resident chunks (referenced + cached) — each owns one pool block.
+    pub fn total_blocks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    /// Chunks with refcount zero (evictable under pressure).
+    pub fn cached_blocks(&self) -> usize {
+        self.chunks.values().filter(|c| c.refs == 0).count()
+    }
+
+    /// Sum of all chunk refcounts (conservation checks).
+    pub fn total_refs(&self) -> u64 {
+        self.chunks.values().map(|c| c.refs as u64).sum()
+    }
+
+    /// Refcount of one chunk (tests; 0 when absent).
+    pub fn refs(&self, group: u64, idx: u32) -> u32 {
+        self.chunks.get(&chunk_hash(group, idx)).map_or(0, |c| c.refs)
+    }
+
+    /// The leading contiguous run of resident chunks for a prefix of
+    /// `n_full` full chunks; when the whole run is resident and the
+    /// declared prefix ends mid-block (`want_tail`), the covering chunk
+    /// published by a longer-prefix peer attaches copy-on-write.
+    pub fn probe(&self, group: u64, n_full: u32, want_tail: bool) -> PrefixHit {
+        let mut run = 0u32;
+        while run < n_full && self.chunks.contains_key(&chunk_hash(group, run)) {
+            run += 1;
+        }
+        if run == n_full && want_tail && self.chunks.contains_key(&chunk_hash(group, n_full)) {
+            return PrefixHit { chunks: n_full + 1, cow: true };
+        }
+        PrefixHit { chunks: run, cow: false }
+    }
+
+    /// Combined admission: bump the refcount of the `hit.chunks` leading
+    /// chunks of `group` *and* acquire `private` fresh blocks from
+    /// `pool`. All-or-nothing: on pool exhaustion (or a chunk evicted
+    /// since the probe) every bump already taken is rolled back and
+    /// nothing is acquired.
+    pub fn try_attach(&mut self, pool: &mut KvPool, group: u64, hit: PrefixHit, private: usize) -> bool {
+        let mut bumped = 0u32;
+        while bumped < hit.chunks {
+            match self.chunks.get_mut(&chunk_hash(group, bumped)) {
+                Some(c) => c.refs += 1,
+                None => {
+                    // Stale hit (chunk evicted between probe and attach):
+                    // roll back and let the caller re-probe.
+                    self.rollback(group, bumped);
+                    return false;
+                }
+            }
+            bumped += 1;
+        }
+        if !pool.try_acquire(private) {
+            self.rollback(group, bumped);
+            return false;
+        }
+        true
+    }
+
+    /// Bump refcounts without touching the pool — the forced-admission
+    /// escape hatch, where the caller `force_acquire`s the private blocks
+    /// unconditionally. Chunks must be resident (a probe just found them).
+    pub fn attach_refs(&mut self, group: u64, chunks: u32) {
+        for idx in 0..chunks {
+            self.chunks
+                .get_mut(&chunk_hash(group, idx))
+                .expect("attach_refs on a non-resident chunk")
+                .refs += 1;
+        }
+    }
+
+    fn rollback(&mut self, group: u64, bumped: u32) {
+        for idx in 0..bumped {
+            if let Some(c) = self.chunks.get_mut(&chunk_hash(group, idx)) {
+                debug_assert!(c.refs > 0, "rollback past zero refcount");
+                c.refs = c.refs.saturating_sub(1);
+            }
+        }
+    }
+
+    /// Drop one reference on each of the `chunks` leading chunks (request
+    /// completed, was preempted, or left by hand-off). Chunks reaching
+    /// refcount zero stay cached — their blocks remain in the pool's
+    /// `used` until [`PrefixTable::evict_cached`] reclaims them.
+    pub fn detach(&mut self, group: u64, chunks: u32) {
+        self.rollback(group, chunks);
+    }
+
+    /// Publish chunks `from..to` of `group` after prefill: each chunk's
+    /// backing block moves from the caller's private holding into the
+    /// table (no pool traffic), except chunks a peer published first,
+    /// which dedup — the caller must `pool.release` one block per
+    /// [`PublishOutcome::deduped`] chunk and keeps a reference either way.
+    pub fn publish(&mut self, group: u64, from: u32, to: u32) -> PublishOutcome {
+        let mut out = PublishOutcome::default();
+        for idx in from..to {
+            match self.chunks.get_mut(&chunk_hash(group, idx)) {
+                Some(c) => {
+                    c.refs += 1;
+                    out.deduped += 1;
+                }
+                None => {
+                    self.seq += 1;
+                    self.chunks.insert(chunk_hash(group, idx), ChunkState { refs: 1, created: self.seq });
+                    out.published += 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Reclaim up to `want` blocks from cached (refcount-zero) chunks,
+    /// youngest-first by creation order, returning how many were freed.
+    /// The caller releases that many blocks back to the pool. Referenced
+    /// chunks are never touched.
+    pub fn evict_cached(&mut self, want: usize) -> usize {
+        if want == 0 {
+            return 0;
+        }
+        let mut cached: Vec<(u64, u64)> = self
+            .chunks
+            .iter()
+            .filter(|(_, c)| c.refs == 0)
+            .map(|(&h, c)| (c.created, h))
+            .collect();
+        // Youngest first: deep/leaf chunks go before hot prefix roots,
+        // which were created first and re-hit most often.
+        cached.sort_unstable_by(|a, b| b.cmp(a));
+        let n = want.min(cached.len());
+        for &(_, h) in cached.iter().take(n) {
+            self.chunks.remove(&h);
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table_with(group: u64, n: u32, pool: &mut KvPool) -> PrefixTable {
+        let mut t = PrefixTable::new();
+        // Simulate a finished peer: acquire privately, publish, detach.
+        assert!(pool.try_acquire(n as usize));
+        let out = t.publish(group, 0, n);
+        assert_eq!(out.published, n);
+        t.detach(group, n);
+        t
+    }
+
+    #[test]
+    fn probe_finds_leading_run_only() {
+        let mut pool = KvPool::new(16);
+        let mut t = table_with(7, 3, &mut pool);
+        assert_eq!(t.probe(7, 3, false), PrefixHit { chunks: 3, cow: false });
+        assert_eq!(t.probe(7, 5, false), PrefixHit { chunks: 3, cow: false });
+        assert_eq!(t.probe(8, 3, false), PrefixHit { chunks: 0, cow: false });
+        // Punch a hole at index 1: the run stops before it.
+        pool.try_acquire(1);
+        t.publish(9, 0, 1);
+        t.detach(9, 1);
+        let freed = t.evict_cached(4); // evicts youngest first
+        assert!(freed >= 1);
+        // Rebuild a holed table directly: chunks 0 and 2 only.
+        let mut holed = PrefixTable::new();
+        holed.publish(11, 0, 1);
+        let _ = holed.publish(11, 2, 3);
+        assert_eq!(holed.probe(11, 3, false).chunks, 1);
+    }
+
+    #[test]
+    fn cow_tail_attaches_only_past_full_run() {
+        let mut pool = KvPool::new(16);
+        let t = table_with(5, 4, &mut pool);
+        // Declared prefix = 2 full chunks + tail: chunk 2 is resident
+        // (published as a *full* chunk by the longer peer) ⇒ CoW.
+        assert_eq!(t.probe(5, 2, true), PrefixHit { chunks: 3, cow: true });
+        assert_eq!(t.probe(5, 2, true).discount(), 2);
+        // Tail wanted but the covering chunk is missing ⇒ plain full run.
+        assert_eq!(t.probe(5, 4, true), PrefixHit { chunks: 4, cow: false });
+    }
+
+    #[test]
+    fn skipped_tokens_counts_cow_tail() {
+        let full = PrefixHit { chunks: 2, cow: false };
+        assert_eq!(full.skipped_tokens(16, 40), 32);
+        let cow = PrefixHit { chunks: 3, cow: true };
+        assert_eq!(cow.skipped_tokens(16, 40), 40);
+        assert_eq!(cow.discount(), 2);
+    }
+
+    #[test]
+    fn attach_detach_refcounts() {
+        let mut pool = KvPool::new(16);
+        let mut t = table_with(1, 2, &mut pool);
+        let hit = t.probe(1, 2, false);
+        assert!(t.try_attach(&mut pool, 1, hit, 3));
+        assert_eq!(t.refs(1, 0), 1);
+        assert_eq!(t.refs(1, 1), 1);
+        assert_eq!(pool.used(), 2 + 3);
+        t.detach(1, 2);
+        assert_eq!(t.total_refs(), 0);
+        assert_eq!(t.cached_blocks(), 2, "detached chunks stay cached");
+        assert_eq!(pool.used(), 5, "detach does not touch the pool");
+    }
+
+    #[test]
+    fn exhaustion_rolls_back_partial_attach() {
+        // The satellite fix: pool exhaustion during a partially-attached
+        // prefix admission must leak no refcounts.
+        let mut pool = KvPool::new(4);
+        let mut t = table_with(3, 2, &mut pool); // 2 blocks used by chunks
+        let hit = t.probe(3, 2, false);
+        assert_eq!(hit.chunks, 2);
+        let used_before = pool.used();
+        // 3 private blocks needed, only 2 free ⇒ must fail atomically.
+        assert!(!t.try_attach(&mut pool, 3, hit, 3));
+        assert_eq!(t.refs(3, 0), 0, "leaked refcount on failed admission");
+        assert_eq!(t.refs(3, 1), 0, "leaked refcount on failed admission");
+        assert_eq!(pool.used(), used_before, "failed attach must not acquire");
+        // A smaller private need then succeeds with the same hit.
+        assert!(t.try_attach(&mut pool, 3, hit, 2));
+        assert_eq!(t.total_refs(), 2);
+    }
+
+    #[test]
+    fn stale_hit_rolls_back_and_fails() {
+        let mut pool = KvPool::new(8);
+        let mut t = table_with(2, 3, &mut pool);
+        // Evict the youngest chunk (index 2) to invalidate a 3-chunk hit.
+        let hit = t.probe(2, 3, false);
+        assert_eq!(t.evict_cached(1), 1);
+        pool.release(1);
+        assert!(!t.try_attach(&mut pool, 2, hit, 0));
+        assert_eq!(t.total_refs(), 0);
+        // Re-probe sees the shorter run.
+        assert_eq!(t.probe(2, 3, false).chunks, 2);
+    }
+
+    #[test]
+    fn publish_dedups_racing_peers() {
+        let mut pool = KvPool::new(8);
+        let mut t = PrefixTable::new();
+        assert!(pool.try_acquire(3)); // peer A holds 3 private prefix blocks
+        assert_eq!(t.publish(4, 0, 3), PublishOutcome { published: 3, deduped: 0 });
+        assert!(pool.try_acquire(3)); // peer B computed the same chunks
+        let out = t.publish(4, 0, 3);
+        assert_eq!(out, PublishOutcome { published: 0, deduped: 3 });
+        pool.release(out.deduped as usize); // B's redundant blocks return
+        assert_eq!(pool.used(), 3);
+        assert_eq!(t.refs(4, 0), 2, "both publishers hold references");
+    }
+
+    #[test]
+    fn eviction_is_youngest_first_and_spares_referenced() {
+        let mut pool = KvPool::new(16);
+        let mut t = PrefixTable::new();
+        pool.try_acquire(4);
+        t.publish(6, 0, 4); // creation order: 0, 1, 2, 3
+        t.detach(6, 2); // chunks 0..2 cached; 2..4 still referenced
+        assert_eq!(t.evict_cached(10), 2, "referenced chunks never evicted");
+        pool.release(2);
+        // The *older* cached chunk survives longer: re-cache and check order.
+        assert_eq!(t.probe(6, 4, false).chunks, 0, "run broken at index 0");
+        let mut t2 = PrefixTable::new();
+        pool.try_acquire(3);
+        t2.publish(9, 0, 3);
+        t2.detach(9, 3);
+        assert_eq!(t2.evict_cached(1), 1);
+        assert_eq!(t2.probe(9, 3, false).chunks, 2, "youngest (index 2) evicted first");
+    }
+
+    #[test]
+    fn chunk_hash_separates_groups_and_indices() {
+        assert_ne!(chunk_hash(1, 0), chunk_hash(1, 1));
+        assert_ne!(chunk_hash(1, 0), chunk_hash(2, 0));
+        assert_eq!(chunk_hash(3, 7), chunk_hash(3, 7));
+    }
+}

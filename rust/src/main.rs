@@ -3,7 +3,8 @@
 //! ```text
 //! lambda-scale figures [--only figNN]      regenerate paper figures
 //! lambda-scale session [--requests N] [--gpu-cap GB] [--host-cap GB]
-//!                      [--kv-block-tokens B] [--scaler P] [--slo-ttft S]
+//!                      [--kv-block-tokens B] [--kv-prefix-sharing]
+//!                      [--scaler P] [--slo-ttft S]
 //!                      [--disagg]           two-tenant ServingSession demo
 //!                                          (caps bound the shared MemoryManager;
 //!                                          --disagg splits prefill/decode pools)
@@ -18,7 +19,8 @@
 //!                                          → BENCH_scale.json + RESULTS.md section
 //!                                          (--check validates an existing file's schema)
 //! lambda-scale trace [--out DIR] [--filter request,scaling,fabric,kv,memory]
-//!                    [--requests N] [--seed S] [--kv-block-tokens B] [--disagg]
+//!                    [--requests N] [--seed S] [--kv-block-tokens B]
+//!                    [--kv-prefix-sharing] [--disagg]
 //!                                          run a traced bursty session → DIR/trace.json
 //!                                          (Perfetto) + DIR/events.jsonl
 //! lambda-scale trace report FILE           per-request phase breakdown of a JSONL log
@@ -144,6 +146,8 @@ fn main() {
             let mut cluster = ClusterConfig::testbed1();
             cluster.n_nodes = 12;
             cluster.kv.block_tokens = kv_block_tokens;
+            // CoW prefix sharing (off by default; needs --kv-block-tokens).
+            cluster.kv.prefix_sharing = args.iter().any(|a| a == "--kv-prefix-sharing");
             if disagg {
                 // Prefill/decode disaggregation (off by default): each
                 // tenant's instances split into dedicated pools with KV
@@ -324,8 +328,9 @@ fn main() {
             let seed: u64 = flag("--seed").and_then(|s| s.parse().ok()).unwrap_or(7);
             let kv: usize = flag("--kv-block-tokens").and_then(|s| s.parse().ok()).unwrap_or(16);
             let disagg = args.iter().any(|a| a == "--disagg");
+            let prefix = args.iter().any(|a| a == "--kv-prefix-sharing");
             let filter = flag("--filter");
-            run_trace(&out_dir, n, seed, kv, disagg, filter.as_deref());
+            run_trace(&out_dir, n, seed, kv, disagg, prefix, filter.as_deref());
         }
         "trace-gen" => {
             let out = flag("--out").unwrap_or_else(|| "/tmp/burstgpt.csv".into());
@@ -377,7 +382,8 @@ fn main() {
                  global flags: --verbose/-v (debug log), -q/--quiet (warnings only)\n\
                  \x20 figures   [--only figNN]              regenerate paper figures\n\
                  \x20 session   [--requests N] [--gpu-cap GB] [--host-cap GB]\n\
-                 \x20           [--kv-block-tokens B] [--scaler reactive|slo-aware|predictive]\n\
+                 \x20           [--kv-block-tokens B] [--kv-prefix-sharing]\n\
+                 \x20           [--scaler reactive|slo-aware|predictive]\n\
                  \x20           [--slo-ttft S] [--disagg]   two-tenant memory-contention demo\n\
                  \x20                                       (--disagg: prefill/decode pools)\n\
                  \x20 eval      [--duration S] [--seed N] [--slo-ttft S] [--config F]\n\
@@ -388,7 +394,7 @@ fn main() {
                  \x20 bench --scale [--smoke] [--seed S] [--out F] [--md F] [--check F]\n\
                  \x20                                       scaling sweep → BENCH_scale.json\n\
                  \x20 trace     [--out DIR] [--filter CATS] [--requests N] [--seed S]\n\
-                 \x20           [--kv-block-tokens B] [--disagg]\n\
+                 \x20           [--kv-block-tokens B] [--kv-prefix-sharing] [--disagg]\n\
                  \x20                                       flight-recorder run → DIR/trace.json\n\
                  \x20                                       (Perfetto) + DIR/events.jsonl\n\
                  \x20 trace report FILE                     phase breakdown of a JSONL log\n\
@@ -413,6 +419,7 @@ fn run_trace(
     seed: u64,
     kv_block_tokens: usize,
     disagg: bool,
+    prefix_sharing: bool,
     filter: Option<&str>,
 ) {
     use lambda_scale::trace::{chrome_trace, jsonl, phase_breakdown, TraceConfig};
@@ -430,6 +437,7 @@ fn run_trace(
     let mut cluster = ClusterConfig::testbed1();
     cluster.n_nodes = 8;
     cluster.kv.block_tokens = kv_block_tokens;
+    cluster.kv.prefix_sharing = prefix_sharing;
     if disagg {
         cluster.disagg = Some(DisaggConfig::default());
     }

@@ -98,6 +98,22 @@ pub struct MetricsCollector {
     /// kvcache: blocks served beyond pool capacity — always an explicit,
     /// counted overflow (the sole-resident escape hatch), never silent.
     pub kv_overcommit_blocks: u64,
+    /// Prefix sharing: chunks attached from a shared table at admission
+    /// (refcount bumps that replaced fresh block acquisitions).
+    pub kv_prefix_hits: u64,
+    /// Prefix sharing: prompt tokens whose prefill was skipped because
+    /// their KV was shared-resident.
+    pub kv_prefix_skipped_tokens: u64,
+    /// Prefix sharing: chunks newly published into a shared table after
+    /// prefill (blocks moved from private holdings).
+    pub kv_prefix_published: u64,
+    /// Prefix sharing: admissions that attached a copy-on-write tail — a
+    /// shared chunk read past the divergence point, with writes going to
+    /// a private copy block.
+    pub kv_cow_copies: u64,
+    /// Prefix sharing: cached (refcount-zero) chunks evicted under pool
+    /// pressure, youngest-first.
+    pub kv_prefix_evictions: u64,
     /// kvcache: (time, instance id, pool utilization 0..=1) samples at
     /// iteration boundaries. The engine records a sample only when an
     /// instance's utilization actually changed, so interleaved instances
@@ -294,6 +310,26 @@ impl MetricsCollector {
         self.kv_overcommit_blocks += blocks;
     }
 
+    /// Record one admission's prefix-sharing hit: `chunks` attached,
+    /// `skipped_tokens` of prefill avoided, CoW tail or not.
+    pub fn record_kv_prefix_hit(&mut self, chunks: u64, skipped_tokens: u64, cow: bool) {
+        self.kv_prefix_hits += chunks;
+        self.kv_prefix_skipped_tokens += skipped_tokens;
+        if cow {
+            self.kv_cow_copies += 1;
+        }
+    }
+
+    /// Record chunks newly published into a shared prefix table.
+    pub fn record_kv_prefix_published(&mut self, chunks: u64) {
+        self.kv_prefix_published += chunks;
+    }
+
+    /// Record cached prefix chunks evicted for pool pressure.
+    pub fn record_kv_prefix_evicted(&mut self, blocks: u64) {
+        self.kv_prefix_evictions += blocks;
+    }
+
     /// Record one mid-scale-up recruit revocation (shared fabric).
     pub fn record_transfer_cancel(&mut self) {
         self.transfer_cancels += 1;
@@ -420,6 +456,15 @@ mod tests {
         assert_eq!((c.kv_preemptions, c.kv_recomputes, c.kv_swaps), (3, 2, 1));
         c.record_kv_overcommit(5);
         assert_eq!(c.kv_overcommit_blocks, 5);
+        c.record_kv_prefix_hit(3, 48, false);
+        c.record_kv_prefix_hit(2, 40, true);
+        c.record_kv_prefix_published(4);
+        c.record_kv_prefix_evicted(2);
+        assert_eq!(c.kv_prefix_hits, 5);
+        assert_eq!(c.kv_prefix_skipped_tokens, 88);
+        assert_eq!(c.kv_cow_copies, 1);
+        assert_eq!(c.kv_prefix_published, 4);
+        assert_eq!(c.kv_prefix_evictions, 2);
         c.record_kv_util(SimTime::from_secs(1.0), 0, 0.5);
         c.record_kv_util(SimTime::from_secs(2.0), 1, 0.7);
         c.record_kv_util(SimTime::from_secs(3.0), 0, 0.9);

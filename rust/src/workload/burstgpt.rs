@@ -98,13 +98,13 @@ impl BurstGptGen {
             }
             let lam = self.intensity(t, &spikes, wobble_phase);
             if rng.f64() * lambda_max <= lam {
-                reqs.push(Request {
+                reqs.push(Request::new(
                     id,
-                    arrival: SimTime::from_secs(t),
-                    model: model.to_string(),
-                    prompt_tokens: sample_ln(self.avg_prompt, rng),
-                    output_tokens: sample_ln(self.avg_output, rng),
-                });
+                    SimTime::from_secs(t),
+                    model,
+                    sample_ln(self.avg_prompt, rng),
+                    sample_ln(self.avg_output, rng),
+                ));
                 id += 1;
             }
         }

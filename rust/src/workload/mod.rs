@@ -3,9 +3,11 @@
 //! real Azure trace is not redistributable), and CSV trace replay.
 
 pub mod burstgpt;
+pub mod sessions;
 pub mod trace;
 
 pub use burstgpt::BurstGptGen;
+pub use sessions::{AgenticGen, MultiTurnGen, RagGen};
 pub use trace::{Request, Trace};
 
 use crate::sim::time::SimTime;
@@ -28,13 +30,13 @@ pub fn poisson_trace(
         if t >= duration_s {
             break;
         }
-        reqs.push(Request {
+        reqs.push(Request::new(
             id,
-            arrival: SimTime::from_secs(t),
-            model: model.to_string(),
-            prompt_tokens: sample_tokens(avg_prompt, rng),
-            output_tokens: sample_tokens(avg_output, rng),
-        });
+            SimTime::from_secs(t),
+            model,
+            sample_tokens(avg_prompt, rng),
+            sample_tokens(avg_output, rng),
+        ));
         id += 1;
     }
     Trace { requests: reqs }
@@ -51,12 +53,14 @@ pub fn burst_trace(
     rng: &mut Rng,
 ) -> Trace {
     let requests = (0..n)
-        .map(|i| Request {
-            id: i as u64,
-            arrival: SimTime::from_secs(t0),
-            model: model.to_string(),
-            prompt_tokens: sample_tokens(avg_prompt, rng),
-            output_tokens: sample_tokens(avg_output, rng),
+        .map(|i| {
+            Request::new(
+                i as u64,
+                SimTime::from_secs(t0),
+                model,
+                sample_tokens(avg_prompt, rng),
+                sample_tokens(avg_output, rng),
+            )
         })
         .collect();
     Trace { requests }

@@ -1,0 +1,388 @@
+//! Session-structured workloads: multi-turn chat, RAG over shared
+//! documents, and agentic tool-call bursts.
+//!
+//! These are the traffic shapes that make prefix sharing matter
+//! (DeepServe's serving-at-scale mix): every generator annotates its
+//! requests with a `session_id` (routing affinity), a `prefix_group`
+//! (content identity of the shared prefix) and `shared_prefix_tokens`.
+//! The group contract required by the prefix table — within one group,
+//! every declared shared region is a prefix of every longer one — holds
+//! by construction: chat histories and agent scratchpads only append,
+//! and RAG requests in a group share one identical document prompt.
+//!
+//! All generators are deterministic per seed (same `Rng` seed ⇒
+//! byte-identical trace) and emit arrival-sorted traces with dense ids.
+
+use super::trace::{Request, Trace};
+use crate::sim::time::SimTime;
+use crate::util::rng::Rng;
+
+/// Log-normal token count around `mean` (heavy right tail, ≥ 1) — the
+/// same shape the Poisson/BurstGPT generators use.
+fn sample_ln(mean: usize, rng: &mut Rng) -> usize {
+    let sigma = 0.6f64;
+    let mu = (mean.max(1) as f64).ln() - sigma * sigma / 2.0;
+    rng.lognormal(mu, sigma).round().max(1.0) as usize
+}
+
+/// Sort by arrival and re-id densely in arrival order (the convention
+/// every shipped generator follows: ids increase with arrival).
+fn finish(mut reqs: Vec<Request>) -> Trace {
+    reqs.sort_by(|a, b| (a.arrival, a.id).cmp(&(b.arrival, b.id)));
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    Trace { requests: reqs }
+}
+
+/// Multi-turn chat sessions: sessions open as a Poisson process; each
+/// turn's prompt is the full conversation so far (previous prompt +
+/// previous answer) plus a fresh user message, and declares everything
+/// but the fresh message as shared prefix.
+#[derive(Clone, Debug)]
+pub struct MultiTurnGen {
+    /// New sessions per second.
+    pub session_rps: f64,
+    /// Mean turns per session (≥ 1 always emitted).
+    pub avg_turns: usize,
+    /// Mean seconds between a session's consecutive turns.
+    pub think_time_s: f64,
+    /// Mean tokens of the opening user message.
+    pub first_prompt: usize,
+    /// Mean tokens of each follow-up user message.
+    pub followup: usize,
+    /// Mean output tokens per turn.
+    pub avg_output: usize,
+    /// Namespace offset for session/group ids — keeps merged traces from
+    /// aliasing each other's prefixes (ids start at `group_base + 1`).
+    pub group_base: u64,
+}
+
+impl Default for MultiTurnGen {
+    fn default() -> Self {
+        MultiTurnGen {
+            session_rps: 0.5,
+            avg_turns: 4,
+            think_time_s: 10.0,
+            first_prompt: 256,
+            followup: 48,
+            avg_output: 96,
+            group_base: 0,
+        }
+    }
+}
+
+impl MultiTurnGen {
+    /// Generate a `duration_s` trace for `model`. Turns whose arrival
+    /// would land past the window are dropped (sessions truncate cleanly).
+    pub fn generate(&self, duration_s: f64, model: &str, rng: &mut Rng) -> Trace {
+        let mut reqs = Vec::new();
+        let mut t0 = 0.0;
+        let mut session = 0u64;
+        loop {
+            t0 += rng.exp(self.session_rps.max(1e-9));
+            if t0 >= duration_s {
+                break;
+            }
+            session += 1;
+            let sid = self.group_base + session;
+            let turns = (rng.exp(1.0 / self.avg_turns.max(1) as f64).ceil() as usize).max(1);
+            let mut t = t0;
+            let mut history = 0usize;
+            let mut prompt = sample_ln(self.first_prompt, rng);
+            for _ in 0..turns {
+                if t >= duration_s {
+                    break;
+                }
+                let output = sample_ln(self.avg_output, rng);
+                reqs.push(Request {
+                    id: reqs.len() as u64,
+                    arrival: SimTime::from_secs(t),
+                    model: model.to_string(),
+                    prompt_tokens: prompt,
+                    output_tokens: output,
+                    session_id: sid,
+                    prefix_group: sid,
+                    shared_prefix_tokens: history,
+                });
+                // Next turn: the whole conversation becomes shared prefix.
+                history = prompt + output;
+                prompt = history + sample_ln(self.followup, rng);
+                t += rng.exp(1.0 / self.think_time_s.max(1e-9));
+            }
+        }
+        finish(reqs)
+    }
+}
+
+/// RAG traffic: every request prepends one of `n_docs` long document
+/// prompts (identical across the group) to a short question. Requests
+/// over the same document share its whole prompt as prefix and carry the
+/// document id as session for affinity routing.
+#[derive(Clone, Debug)]
+pub struct RagGen {
+    /// Request rate (req/s) across all documents.
+    pub rps: f64,
+    /// Distinct documents in the corpus.
+    pub n_docs: usize,
+    /// Mean tokens of one document prompt (sampled once per document —
+    /// all requests over a document agree on its exact length).
+    pub doc_tokens: usize,
+    /// Mean tokens of the user question appended after the document.
+    pub question: usize,
+    /// Mean output tokens.
+    pub avg_output: usize,
+    /// Namespace offset for group ids (see [`MultiTurnGen::group_base`]).
+    pub group_base: u64,
+}
+
+impl Default for RagGen {
+    fn default() -> Self {
+        RagGen {
+            rps: 2.0,
+            n_docs: 4,
+            doc_tokens: 1536,
+            question: 64,
+            avg_output: 64,
+            group_base: 0,
+        }
+    }
+}
+
+impl RagGen {
+    /// Generate a `duration_s` trace for `model`.
+    pub fn generate(&self, duration_s: f64, model: &str, rng: &mut Rng) -> Trace {
+        let n_docs = self.n_docs.max(1);
+        let docs: Vec<usize> = (0..n_docs).map(|_| sample_ln(self.doc_tokens, rng)).collect();
+        let mut reqs = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t += rng.exp(self.rps.max(1e-9));
+            if t >= duration_s {
+                break;
+            }
+            let d = rng.below(n_docs as u64) as usize;
+            let gid = self.group_base + 1 + d as u64;
+            reqs.push(Request {
+                id: reqs.len() as u64,
+                arrival: SimTime::from_secs(t),
+                model: model.to_string(),
+                prompt_tokens: docs[d] + sample_ln(self.question, rng),
+                output_tokens: sample_ln(self.avg_output, rng),
+                session_id: gid,
+                prefix_group: gid,
+                shared_prefix_tokens: docs[d],
+            });
+        }
+        finish(reqs)
+    }
+}
+
+/// Agentic bursts: waves of agents spawn together (Poisson wave onsets);
+/// each agent runs a rapid chain of tool-call steps over a growing
+/// scratchpad — the multi-turn structure compressed into seconds, so the
+/// shared prefix is hot while it matters.
+#[derive(Clone, Debug)]
+pub struct AgenticGen {
+    /// Agent waves per hour.
+    pub waves_per_hour: f64,
+    /// Agents spawned per wave.
+    pub agents_per_wave: usize,
+    /// Tool-call steps per agent (exact — agents run to completion).
+    pub steps: usize,
+    /// Mean seconds between an agent's consecutive steps.
+    pub step_gap_s: f64,
+    /// Mean tokens of the agent's initial task prompt.
+    pub task_prompt: usize,
+    /// Mean tokens appended to the scratchpad per step (tool results).
+    pub tool_tokens: usize,
+    /// Mean output tokens per step.
+    pub avg_output: usize,
+    /// Namespace offset for session/group ids.
+    pub group_base: u64,
+}
+
+impl Default for AgenticGen {
+    fn default() -> Self {
+        AgenticGen {
+            waves_per_hour: 30.0,
+            agents_per_wave: 8,
+            steps: 5,
+            step_gap_s: 1.5,
+            task_prompt: 384,
+            tool_tokens: 128,
+            avg_output: 48,
+            group_base: 0,
+        }
+    }
+}
+
+impl AgenticGen {
+    /// Generate a `duration_s` trace for `model`.
+    pub fn generate(&self, duration_s: f64, model: &str, rng: &mut Rng) -> Trace {
+        let mut reqs = Vec::new();
+        let mut wave_t = 0.0;
+        let mut agent = 0u64;
+        loop {
+            wave_t += rng.exp(self.waves_per_hour.max(1e-9) / 3600.0);
+            if wave_t >= duration_s {
+                break;
+            }
+            for _ in 0..self.agents_per_wave {
+                agent += 1;
+                let sid = self.group_base + agent;
+                let mut t = wave_t + rng.uniform(0.0, 0.25); // near-simultaneous spawn
+                let mut history = 0usize;
+                let mut prompt = sample_ln(self.task_prompt, rng);
+                for _ in 0..self.steps.max(1) {
+                    if t >= duration_s {
+                        break;
+                    }
+                    let output = sample_ln(self.avg_output, rng);
+                    reqs.push(Request {
+                        id: reqs.len() as u64,
+                        arrival: SimTime::from_secs(t),
+                        model: model.to_string(),
+                        prompt_tokens: prompt,
+                        output_tokens: output,
+                        session_id: sid,
+                        prefix_group: sid,
+                        shared_prefix_tokens: history,
+                    });
+                    history = prompt + output;
+                    prompt = history + sample_ln(self.tool_tokens, rng);
+                    t += rng.exp(1.0 / self.step_gap_s.max(1e-9));
+                }
+            }
+        }
+        finish(reqs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_invariants(t: &Trace) {
+        assert!(!t.is_empty());
+        for (i, r) in t.requests.iter().enumerate() {
+            assert_eq!(r.id, i as u64, "ids dense in arrival order");
+            assert!(r.prompt_tokens >= 1 && r.output_tokens >= 1);
+            assert!(
+                r.shared_prefix_tokens <= r.prompt_tokens,
+                "declared prefix longer than the prompt: {} > {}",
+                r.shared_prefix_tokens,
+                r.prompt_tokens
+            );
+        }
+        for w in t.requests.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+    }
+
+    /// The prefix-table contract: within a group, declared shared regions
+    /// are nested. Every shipped generator builds groups whose content
+    /// only appends, so in arrival order a group's declared shared length
+    /// never shrinks — which is exactly nesting for append-only content.
+    fn check_group_nesting(t: &Trace) {
+        use std::collections::HashMap;
+        let mut last: HashMap<u64, usize> = HashMap::new();
+        for r in &t.requests {
+            if r.prefix_group == 0 {
+                continue;
+            }
+            let h = last.entry(r.prefix_group).or_insert(0);
+            assert!(
+                r.shared_prefix_tokens >= *h,
+                "shared region shrank in group {} ({} < {})",
+                r.prefix_group,
+                r.shared_prefix_tokens,
+                *h
+            );
+            *h = r.shared_prefix_tokens;
+        }
+    }
+
+    #[test]
+    fn multi_turn_histories_grow_and_nest() {
+        let gen = MultiTurnGen::default();
+        let t = gen.generate(600.0, "m", &mut Rng::new(11));
+        check_invariants(&t);
+        check_group_nesting(&t);
+        // Sessions produce follow-ups, and follow-ups declare prefixes.
+        assert!(t.requests.iter().any(|r| r.shared_prefix_tokens > 0));
+        // Within one session, arrivals order by turn and prompts grow.
+        use std::collections::HashMap;
+        let mut last: HashMap<u64, (SimTime, usize)> = HashMap::new();
+        for r in &t.requests {
+            if let Some(&(lt, lp)) = last.get(&r.session_id) {
+                assert!(r.arrival >= lt);
+                assert!(r.prompt_tokens > lp, "chat prompts only grow");
+                assert!(r.shared_prefix_tokens > 0, "follow-up turns share history");
+            }
+            last.insert(r.session_id, (r.arrival, r.prompt_tokens));
+        }
+    }
+
+    #[test]
+    fn rag_requests_share_whole_documents() {
+        let gen = RagGen { n_docs: 3, ..Default::default() };
+        let t = gen.generate(300.0, "m", &mut Rng::new(12));
+        check_invariants(&t);
+        check_group_nesting(&t);
+        // All requests in a group declare the identical document length.
+        use std::collections::HashMap;
+        let mut doc_len: HashMap<u64, usize> = HashMap::new();
+        for r in &t.requests {
+            assert!(r.prefix_group != 0);
+            assert!(r.shared_prefix_tokens > 0);
+            let l = doc_len.entry(r.prefix_group).or_insert(r.shared_prefix_tokens);
+            assert_eq!(*l, r.shared_prefix_tokens, "document length must be identical");
+        }
+        assert!(doc_len.len() <= 3);
+    }
+
+    #[test]
+    fn agentic_bursts_cluster_in_time() {
+        let gen = AgenticGen::default();
+        let t = gen.generate(1800.0, "m", &mut Rng::new(13));
+        check_invariants(&t);
+        check_group_nesting(&t);
+        // Burstiness: peak windowed rate well above the median.
+        let series = t.rps_series(10.0);
+        let peak = series.iter().map(|&(_, r)| r).fold(0.0f64, f64::max);
+        let mut v: Vec<f64> = series.iter().map(|&(_, r)| r).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = v[v.len() / 2];
+        assert!(peak >= 3.0 * median.max(0.05), "peak {peak} median {median}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mt = MultiTurnGen::default();
+        assert_eq!(mt.generate(300.0, "m", &mut Rng::new(5)), mt.generate(300.0, "m", &mut Rng::new(5)));
+        assert_ne!(mt.generate(300.0, "m", &mut Rng::new(5)), mt.generate(300.0, "m", &mut Rng::new(6)));
+        let rag = RagGen::default();
+        assert_eq!(rag.generate(300.0, "m", &mut Rng::new(5)), rag.generate(300.0, "m", &mut Rng::new(5)));
+        assert_ne!(rag.generate(300.0, "m", &mut Rng::new(5)), rag.generate(300.0, "m", &mut Rng::new(6)));
+        let ag = AgenticGen::default();
+        assert_eq!(ag.generate(900.0, "m", &mut Rng::new(5)), ag.generate(900.0, "m", &mut Rng::new(5)));
+        assert_ne!(ag.generate(900.0, "m", &mut Rng::new(5)), ag.generate(900.0, "m", &mut Rng::new(6)));
+    }
+
+    #[test]
+    fn group_base_namespaces_merged_traces() {
+        let a = MultiTurnGen { group_base: 0, ..Default::default() }.generate(120.0, "m", &mut Rng::new(7));
+        let b = MultiTurnGen { group_base: 1 << 32, ..Default::default() }.generate(120.0, "m", &mut Rng::new(7));
+        let ga: std::collections::HashSet<u64> = a.requests.iter().map(|r| r.prefix_group).collect();
+        let gb: std::collections::HashSet<u64> = b.requests.iter().map(|r| r.prefix_group).collect();
+        assert!(ga.is_disjoint(&gb), "group_base must prevent prefix aliasing");
+    }
+
+    #[test]
+    fn csv_roundtrips_with_annotations() {
+        let t = RagGen::default().generate(60.0, "m", &mut Rng::new(3));
+        let back = Trace::from_csv(&t.to_csv()).unwrap();
+        assert_eq!(t, back);
+    }
+}

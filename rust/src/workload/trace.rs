@@ -2,6 +2,13 @@
 //!
 //! CSV schema (header required):
 //! `id,arrival_s,model,prompt_tokens,output_tokens`
+//!
+//! Traces carrying session/prefix annotations (multi-turn, RAG, agentic
+//! workloads) use the extended schema
+//! `id,arrival_s,model,prompt_tokens,output_tokens,session_id,prefix_group,shared_prefix_tokens`;
+//! [`Trace::to_csv`] emits it only when some request actually sets one of
+//! the extra fields, so legacy traces stay byte-identical, and
+//! [`Trace::from_csv`] accepts both.
 
 use crate::sim::time::SimTime;
 
@@ -18,6 +25,47 @@ pub struct Request {
     pub prompt_tokens: usize,
     /// Output length in tokens.
     pub output_tokens: usize,
+    /// Conversation/session identity for routing affinity (0 = none):
+    /// with prefix sharing on, follow-up turns route to the instance
+    /// already holding the session's prefix.
+    pub session_id: u64,
+    /// Content identity of the request's shared prefix (0 = none).
+    /// Requests in one group must declare shared regions that are
+    /// prefixes of one another (growing chat histories, identical RAG
+    /// system prompts) — the prefix table chunks on `(group, index)`.
+    pub prefix_group: u64,
+    /// Leading prompt tokens covered by the group's shared prefix
+    /// (clamped to `prompt_tokens` on use; meaningless when
+    /// `prefix_group == 0`).
+    pub shared_prefix_tokens: usize,
+}
+
+impl Request {
+    /// An unannotated request (no session identity or shared prefix) —
+    /// the shape every pre-sharing generator produces.
+    pub fn new(
+        id: u64,
+        arrival: SimTime,
+        model: &str,
+        prompt_tokens: usize,
+        output_tokens: usize,
+    ) -> Request {
+        Request {
+            id,
+            arrival,
+            model: model.to_string(),
+            prompt_tokens,
+            output_tokens,
+            session_id: 0,
+            prefix_group: 0,
+            shared_prefix_tokens: 0,
+        }
+    }
+
+    /// Whether any session/prefix annotation is set (extended CSV schema).
+    fn annotated(&self) -> bool {
+        self.session_id != 0 || self.prefix_group != 0 || self.shared_prefix_tokens != 0
+    }
 }
 
 /// A time-ordered request trace.
@@ -77,34 +125,57 @@ impl Trace {
                 model: r.model.clone(),
                 prompt_tokens: r.prompt_tokens,
                 output_tokens: r.output_tokens,
+                session_id: r.session_id,
+                prefix_group: r.prefix_group,
+                shared_prefix_tokens: r.shared_prefix_tokens,
             });
         }
         self.sort();
     }
 
-    /// Serialize to the CSV schema in the module docs.
+    const HEADER: &'static str = "id,arrival_s,model,prompt_tokens,output_tokens";
+    const HEADER_EXT: &'static str =
+        "id,arrival_s,model,prompt_tokens,output_tokens,session_id,prefix_group,shared_prefix_tokens";
+
+    /// Serialize to the CSV schema in the module docs: the legacy
+    /// 5-column form when no request carries session/prefix annotations
+    /// (byte-identical to pre-sharing output), the extended form
+    /// otherwise.
     pub fn to_csv(&self) -> String {
-        let mut s = String::from("id,arrival_s,model,prompt_tokens,output_tokens\n");
+        let ext = self.requests.iter().any(Request::annotated);
+        let mut s = String::from(if ext { Self::HEADER_EXT } else { Self::HEADER });
+        s.push('\n');
         for r in &self.requests {
             s.push_str(&format!(
-                "{},{:.6},{},{},{}\n",
+                "{},{:.6},{},{},{}",
                 r.id,
                 r.arrival.as_secs(),
                 r.model,
                 r.prompt_tokens,
                 r.output_tokens
             ));
+            if ext {
+                s.push_str(&format!(
+                    ",{},{},{}",
+                    r.session_id, r.prefix_group, r.shared_prefix_tokens
+                ));
+            }
+            s.push('\n');
         }
         s
     }
 
-    /// Parse the CSV schema in the module docs (sorts by arrival).
+    /// Parse either CSV schema in the module docs (sorts by arrival).
+    /// Legacy 5-column rows get zeroed session/prefix fields.
     pub fn from_csv(text: &str) -> Result<Trace, String> {
         let mut lines = text.lines();
         let header = lines.next().ok_or("empty trace file")?;
-        if header.trim() != "id,arrival_s,model,prompt_tokens,output_tokens" {
-            return Err(format!("unexpected header: {header}"));
-        }
+        let ext = match header.trim() {
+            h if h == Self::HEADER => false,
+            h if h == Self::HEADER_EXT => true,
+            _ => return Err(format!("unexpected header: {header}")),
+        };
+        let n_fields = if ext { 8 } else { 5 };
         let mut requests = Vec::new();
         for (i, line) in lines.enumerate() {
             let line = line.trim();
@@ -112,17 +183,27 @@ impl Trace {
                 continue;
             }
             let f: Vec<&str> = line.split(',').collect();
-            if f.len() != 5 {
-                return Err(format!("line {}: expected 5 fields, got {}", i + 2, f.len()));
+            if f.len() != n_fields {
+                return Err(format!(
+                    "line {}: expected {n_fields} fields, got {}",
+                    i + 2,
+                    f.len()
+                ));
             }
+            let parse_at = |j: usize, what: &str| -> Result<usize, String> {
+                f[j].parse().map_err(|e| format!("line {}: {what}: {e}", i + 2))
+            };
             requests.push(Request {
                 id: f[0].parse().map_err(|e| format!("line {}: id: {e}", i + 2))?,
                 arrival: SimTime::from_secs(
                     f[1].parse::<f64>().map_err(|e| format!("line {}: arrival: {e}", i + 2))?,
                 ),
                 model: f[2].to_string(),
-                prompt_tokens: f[3].parse().map_err(|e| format!("line {}: prompt: {e}", i + 2))?,
-                output_tokens: f[4].parse().map_err(|e| format!("line {}: output: {e}", i + 2))?,
+                prompt_tokens: parse_at(3, "prompt")?,
+                output_tokens: parse_at(4, "output")?,
+                session_id: if ext { parse_at(5, "session")? as u64 } else { 0 },
+                prefix_group: if ext { parse_at(6, "prefix_group")? as u64 } else { 0 },
+                shared_prefix_tokens: if ext { parse_at(7, "shared_prefix")? } else { 0 },
             });
         }
         let mut t = Trace { requests };
@@ -146,12 +227,25 @@ impl Trace {
 mod tests {
     use super::*;
 
+    fn req(id: u64, arrival: f64, model: &str, prompt: usize, output: usize) -> Request {
+        Request {
+            id,
+            arrival: SimTime::from_secs(arrival),
+            model: model.into(),
+            prompt_tokens: prompt,
+            output_tokens: output,
+            session_id: 0,
+            prefix_group: 0,
+            shared_prefix_tokens: 0,
+        }
+    }
+
     fn sample() -> Trace {
         Trace {
             requests: vec![
-                Request { id: 0, arrival: SimTime::from_secs(0.5), model: "a".into(), prompt_tokens: 10, output_tokens: 5 },
-                Request { id: 1, arrival: SimTime::from_secs(1.5), model: "b".into(), prompt_tokens: 20, output_tokens: 8 },
-                Request { id: 2, arrival: SimTime::from_secs(1.6), model: "a".into(), prompt_tokens: 30, output_tokens: 2 },
+                req(0, 0.5, "a", 10, 5),
+                req(1, 1.5, "b", 20, 8),
+                req(2, 1.6, "a", 30, 2),
             ],
         }
     }
@@ -160,6 +254,20 @@ mod tests {
     fn csv_roundtrip() {
         let t = sample();
         let csv = t.to_csv();
+        assert!(csv.starts_with(Trace::HEADER), "unannotated trace keeps the legacy header");
+        assert!(!csv.contains("session_id"));
+        let back = Trace::from_csv(&csv).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn csv_roundtrip_extended() {
+        let mut t = sample();
+        t.requests[1].session_id = 42;
+        t.requests[1].prefix_group = 7;
+        t.requests[1].shared_prefix_tokens = 12;
+        let csv = t.to_csv();
+        assert!(csv.starts_with(Trace::HEADER_EXT), "annotations switch to the extended header");
         let back = Trace::from_csv(&csv).unwrap();
         assert_eq!(t, back);
     }
@@ -169,6 +277,22 @@ mod tests {
         assert!(Trace::from_csv("").is_err());
         assert!(Trace::from_csv("bad,header\n").is_err());
         assert!(Trace::from_csv("id,arrival_s,model,prompt_tokens,output_tokens\n1,2,3\n").is_err());
+        // Extended header demands all 8 fields.
+        assert!(Trace::from_csv(&format!("{}\n1,2,m,3,4\n", Trace::HEADER_EXT)).is_err());
+        // Legacy header rejects extended rows.
+        assert!(Trace::from_csv(&format!("{}\n1,2,m,3,4,5,6,7\n", Trace::HEADER)).is_err());
+    }
+
+    #[test]
+    fn merge_preserves_annotations() {
+        let mut a = sample();
+        let mut b = sample();
+        b.requests[0].session_id = 9;
+        b.requests[0].prefix_group = 3;
+        b.requests[0].shared_prefix_tokens = 8;
+        a.merge(&b, SimTime::from_secs(10.0));
+        let moved = a.requests.iter().find(|r| r.session_id == 9).unwrap();
+        assert_eq!((moved.prefix_group, moved.shared_prefix_tokens), (3, 8));
     }
 
     #[test]

@@ -1,0 +1,332 @@
+//! Property-test hardening of the KV/memory invariants under copy-on-write
+//! prefix sharing.
+//!
+//! Two layers:
+//!
+//! * **Model-level interleavings** — randomized admit / publish / decode /
+//!   preempt / complete / evict sequences driven straight against a
+//!   [`PrefixTable`] + [`KvPool`] pair, asserting after every step the
+//!   conservation law the whole subsystem rests on:
+//!
+//!   ```text
+//!   pool.used == Σ (per-request private blocks) + table.total_blocks()
+//!   ```
+//!
+//!   plus refcount conservation (table refs == Σ per-request attached
+//!   chunks), that no referenced chunk is ever evicted, that decode never
+//!   touches shared chunks (copy-on-write by construction), and that a
+//!   failed admission — pool exhaustion mid-attach — rolls back atomically.
+//!
+//! * **Off-mode replay equivalence** — with `prefix_sharing = false`, an
+//!   annotated trace (session ids, prefix groups, shared token counts) must
+//!   produce a `SessionReport` bit-identical to the same trace with every
+//!   annotation stripped, across backends × scalers × kvcache/disagg cells:
+//!   the feature off means the annotations are invisible, end to end.
+
+use lambda_scale::config::{AutoscalerConfig, ClusterConfig, DisaggConfig, ScalerKind};
+use lambda_scale::coordinator::{scaler_from_config, ServingSession, SessionReport, SystemKind};
+use lambda_scale::kvcache::{KvPool, PrefixHit, PrefixTable};
+use lambda_scale::model::ModelSpec;
+use lambda_scale::sim::time::SimTime;
+use lambda_scale::util::minicheck::check;
+use lambda_scale::util::rng::Rng;
+use lambda_scale::workload::{MultiTurnGen, RagGen, Request, Trace};
+
+// ---- model-level interleavings -------------------------------------------
+
+/// One in-flight request's view of its KV holdings.
+#[derive(Clone, Copy, Debug)]
+struct Live {
+    group: u64,
+    /// Full chunks the declared prefix spans.
+    n_full: u32,
+    /// Chunks this request holds references on (contiguous from index 0).
+    attached: u32,
+    /// Blocks covered by shared chunks (excluded from `private`).
+    discount: u32,
+    /// Blocks held privately from the pool.
+    private: usize,
+    /// Whether the post-prefill publish step has run.
+    published: bool,
+}
+
+/// The conservation law plus refcount accounting, checked after every op.
+fn assert_invariants(pool: &KvPool, table: &PrefixTable, live: &[Live]) {
+    let private_sum: usize = live.iter().map(|l| l.private).sum();
+    assert_eq!(
+        pool.used(),
+        private_sum + table.total_blocks(),
+        "conservation: pool.used must equal Σ private + table blocks"
+    );
+    let attached_sum: u64 = live.iter().map(|l| l.attached as u64).sum();
+    assert_eq!(
+        table.total_refs(),
+        attached_sum,
+        "refcount conservation: table refs must equal Σ attached chunks"
+    );
+    // No chunk a live request references may have been freed: every
+    // attached index must still be resident with a positive refcount.
+    for l in live {
+        for idx in 0..l.attached {
+            assert!(
+                table.refs(l.group, idx) > 0,
+                "chunk ({}, {idx}) freed while referenced",
+                l.group
+            );
+        }
+    }
+}
+
+#[test]
+fn property_conservation_under_random_interleavings() {
+    check("kv prefix conservation", 150, |rng| {
+        let cap = rng.range(8, 64) as usize;
+        let mut pool = KvPool::new(cap);
+        let mut table = PrefixTable::new();
+        let mut live: Vec<Live> = Vec::new();
+        for _ in 0..rng.range(30, 200) {
+            match rng.below(10) {
+                // Admission: probe + attach + acquire, all-or-nothing.
+                0..=3 => {
+                    let group = 1 + rng.below(3);
+                    let n_full = rng.below(5) as u32;
+                    let want_tail = rng.below(2) == 1;
+                    let extra = 1 + rng.below(3) as usize;
+                    let total = n_full as usize + want_tail as usize + extra;
+                    let hit = table.probe(group, n_full, want_tail);
+                    let private = total - hit.discount() as usize;
+                    let used_before = pool.used();
+                    let refs_before = table.total_refs();
+                    if table.try_attach(&mut pool, group, hit, private) {
+                        live.push(Live {
+                            group,
+                            n_full,
+                            attached: hit.chunks,
+                            discount: hit.discount(),
+                            private,
+                            published: hit.discount() >= n_full,
+                        });
+                    } else {
+                        // The satellite fix: a failed admission must roll
+                        // back every refcount bump and acquire nothing.
+                        assert_eq!(pool.used(), used_before, "failed attach acquired blocks");
+                        assert_eq!(table.total_refs(), refs_before, "failed attach leaked refs");
+                    }
+                }
+                // Prefill completes: move full prefix chunks into the table.
+                4..=5 => {
+                    if let Some(l) =
+                        live.iter_mut().filter(|l| !l.published).nth(rng.below(4) as usize)
+                    {
+                        let out = table.publish(l.group, l.discount, l.n_full);
+                        let moved = (out.published + out.deduped) as usize;
+                        assert!(l.private >= moved, "publish moved more than private holding");
+                        l.private -= moved;
+                        l.attached += out.published + out.deduped;
+                        l.discount = l.n_full;
+                        l.published = true;
+                        pool.release(out.deduped as usize);
+                    }
+                }
+                // Decode: grow the private holding. Shared chunks are
+                // never written — attach counts must not move.
+                6 => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len() as u64) as usize;
+                        let attached_before = live[i].attached;
+                        let table_refs = table.total_refs();
+                        if pool.try_acquire(1) {
+                            live[i].private += 1;
+                        }
+                        assert_eq!(live[i].attached, attached_before, "decode wrote a shared chunk");
+                        assert_eq!(table.total_refs(), table_refs, "decode changed table refs");
+                    }
+                }
+                // Preempt / complete: release private, drop references.
+                7..=8 => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len() as u64) as usize;
+                        let l = live.swap_remove(i);
+                        pool.release(l.private);
+                        table.detach(l.group, l.attached);
+                    }
+                }
+                // Pressure: evict cached chunks (never referenced ones).
+                _ => {
+                    let freed = table.evict_cached(rng.below(6) as usize);
+                    pool.release(freed);
+                }
+            }
+            assert_invariants(&pool, &table, &live);
+        }
+        // Drain: after every request leaves, only cached chunks remain,
+        // and evicting them all returns the pool to empty.
+        for l in live.drain(..) {
+            pool.release(l.private);
+            table.detach(l.group, l.attached);
+        }
+        assert_eq!(table.total_refs(), 0);
+        let freed = table.evict_cached(usize::MAX);
+        pool.release(freed);
+        assert_eq!(table.total_blocks(), 0);
+        assert_eq!(pool.used(), 0, "blocks leaked across the full lifecycle");
+    });
+}
+
+/// CoW accounting: a hit whose tail chunk is copy-on-write discounts one
+/// block fewer than it attaches, and skipped tokens cover the declared
+/// prefix exactly — for every geometry.
+#[test]
+fn property_cow_discount_and_skip() {
+    check("cow discount/skip", 200, |rng| {
+        let block_tokens = 1 + rng.below(64) as usize;
+        let shared_tokens = rng.below(2048) as usize;
+        let n_full = (shared_tokens / block_tokens) as u32;
+        let want_tail = shared_tokens % block_tokens > 0;
+        let mut pool = KvPool::new(4096);
+        let mut table = PrefixTable::new();
+        // A longer-prefix peer published chunks covering the declared
+        // prefix, including the block the tail falls in.
+        let peer_chunks = n_full + want_tail as u32;
+        assert!(pool.try_acquire(peer_chunks as usize));
+        table.publish(9, 0, peer_chunks);
+        let hit = table.probe(9, n_full, want_tail);
+        assert_eq!(hit.chunks, peer_chunks, "whole declared prefix must attach");
+        assert_eq!(hit.cow, want_tail);
+        assert_eq!(hit.discount(), n_full, "the CoW tail never discounts a block");
+        assert_eq!(
+            hit.skipped_tokens(block_tokens, shared_tokens),
+            shared_tokens,
+            "a full hit skips exactly the declared prefix"
+        );
+        // A partial run skips only whole resident chunks.
+        let partial = PrefixHit { chunks: n_full.min(1), cow: false };
+        assert!(partial.skipped_tokens(block_tokens, shared_tokens) <= shared_tokens);
+    });
+}
+
+// ---- off-mode replay equivalence -----------------------------------------
+
+/// A short annotated trace: RAG groups + multi-turn sessions.
+fn annotated_trace() -> Trace {
+    let mut t = RagGen {
+        rps: 1.5,
+        n_docs: 2,
+        doc_tokens: 192,
+        question: 48,
+        avg_output: 32,
+        group_base: 100,
+    }
+    .generate(30.0, "llama2-13b", &mut Rng::new(17));
+    let turns = MultiTurnGen {
+        session_rps: 0.6,
+        avg_turns: 3,
+        think_time_s: 4.0,
+        first_prompt: 128,
+        followup: 32,
+        avg_output: 48,
+        group_base: 500,
+    }
+    .generate(30.0, "llama2-13b", &mut Rng::new(18));
+    t.merge(&turns, SimTime::ZERO);
+    t
+}
+
+/// The same trace with every sharing annotation zeroed — what a
+/// pre-prefix-sharing build would have seen.
+fn stripped(t: &Trace) -> Trace {
+    Trace {
+        requests: t
+            .requests
+            .iter()
+            .map(|r| Request::new(r.id, r.arrival, &r.model, r.prompt_tokens, r.output_tokens))
+            .collect(),
+    }
+}
+
+fn run_cell(
+    trace: &Trace,
+    system: SystemKind,
+    scaler: ScalerKind,
+    kv_block_tokens: usize,
+    disagg: bool,
+    prefix_sharing: bool,
+) -> SessionReport {
+    let mut cluster = ClusterConfig::testbed1();
+    cluster.n_nodes = 8;
+    cluster.kv.prefix_sharing = prefix_sharing;
+    let scaler_cfg =
+        AutoscalerConfig { policy: scaler, target_ttft_s: 1.5, ..Default::default() };
+    let mut b = ServingSession::builder()
+        .cluster(cluster)
+        .kv_block_tokens(kv_block_tokens);
+    if disagg {
+        b = b.disagg(DisaggConfig::default());
+    }
+    b.model(ModelSpec::llama2_13b())
+        .system(system)
+        .scaler(scaler_from_config(&scaler_cfg))
+        .max_batch(4)
+        .keep_alive(5.0)
+        .initial_gpu_sources(1)
+        .initial_host_sources(2)
+        .trace(trace.clone())
+        .run()
+}
+
+/// With `prefix_sharing = false`, annotations must be invisible: every
+/// backend × scaler cell replays the stripped trace bit-identically.
+#[test]
+fn sharing_off_ignores_annotations_across_backends_and_scalers() {
+    let annotated = annotated_trace();
+    let plain = stripped(&annotated);
+    assert!(annotated.requests.iter().any(|r| r.prefix_group != 0), "trace must be annotated");
+    for system in
+        [SystemKind::LambdaScale { k: 2 }, SystemKind::ServerlessLlm, SystemKind::FaasNet]
+    {
+        for scaler in
+            [ScalerKind::ReactiveWindow, ScalerKind::SloAware, ScalerKind::PredictiveEwma]
+        {
+            let a = run_cell(&annotated, system, scaler, 16, false, false);
+            let b = run_cell(&plain, system, scaler, 16, false, false);
+            assert!(a.models[0].completed > 0, "{system:?}×{scaler:?}: degenerate cell");
+            assert_eq!(a, b, "{system:?}×{scaler:?}: sharing-off replay diverged");
+        }
+    }
+}
+
+/// The same equivalence through the disaggregated and legacy-fluid paths,
+/// plus the `prefix_sharing = true` + `kv_block_tokens = 0` corner: the
+/// flag without the paged subsystem must change nothing either.
+#[test]
+fn sharing_off_ignores_annotations_in_disagg_and_fluid_modes() {
+    let annotated = annotated_trace();
+    let plain = stripped(&annotated);
+    for (kv, disagg, sharing) in [(16, true, false), (0, false, false), (0, false, true)] {
+        let a = run_cell(&annotated, SystemKind::LambdaScale { k: 2 }, ScalerKind::ReactiveWindow, kv, disagg, sharing);
+        let b = run_cell(&plain, SystemKind::LambdaScale { k: 2 }, ScalerKind::ReactiveWindow, kv, disagg, sharing);
+        assert!(a.models[0].completed > 0, "kv={kv} disagg={disagg}: degenerate cell");
+        assert_eq!(a, b, "kv={kv} disagg={disagg} sharing={sharing}: replay diverged");
+    }
+}
+
+/// Sharing-off runs must keep every prefix counter at zero — the metrics
+/// surface is as silent as the block accounting.
+#[test]
+fn sharing_off_keeps_prefix_counters_zero() {
+    let annotated = annotated_trace();
+    let m = run_cell(
+        &annotated,
+        SystemKind::LambdaScale { k: 2 },
+        ScalerKind::ReactiveWindow,
+        16,
+        false,
+        false,
+    )
+    .into_single();
+    assert_eq!(m.kv_prefix_hits, 0);
+    assert_eq!(m.kv_prefix_skipped_tokens, 0);
+    assert_eq!(m.kv_prefix_published, 0);
+    assert_eq!(m.kv_cow_copies, 0);
+    assert_eq!(m.kv_prefix_evictions, 0);
+}

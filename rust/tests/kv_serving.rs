@@ -20,13 +20,7 @@ use lambda_scale::workload::{burst_trace, Request, Trace};
 fn exact_burst(n: usize, prompt: usize, output: usize) -> Trace {
     Trace {
         requests: (0..n)
-            .map(|i| Request {
-                id: i as u64,
-                arrival: SimTime::ZERO,
-                model: "llama2-13b".into(),
-                prompt_tokens: prompt,
-                output_tokens: output,
-            })
+            .map(|i| Request::new(i as u64, SimTime::ZERO, "llama2-13b", prompt, output))
             .collect(),
     }
 }

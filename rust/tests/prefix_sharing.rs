@@ -1,0 +1,150 @@
+//! End-to-end integration of copy-on-write prefix sharing: the annotated
+//! session workloads (multi-turn chat, RAG, agentic bursts) served with
+//! `[kvcache] prefix_sharing = true`, checking request/token conservation,
+//! determinism, sharing engagement, session-affinity routing, and the
+//! reclaimed-instance fallback.
+
+use lambda_scale::config::ClusterConfig;
+use lambda_scale::coordinator::policy::{LeastLoaded, RoundRobin, RoutingPolicy};
+use lambda_scale::coordinator::{ServingSession, SessionReport, SystemKind};
+use lambda_scale::model::ModelSpec;
+use lambda_scale::sim::time::SimTime;
+use lambda_scale::util::rng::Rng;
+use lambda_scale::workload::{AgenticGen, MultiTurnGen, RagGen, Trace};
+
+/// All three session workloads merged into one annotated trace, disjoint
+/// group namespaces.
+fn session_trace(duration_s: f64) -> Trace {
+    let model = "llama2-13b";
+    let mut t = RagGen {
+        rps: 1.2,
+        n_docs: 2,
+        doc_tokens: 256,
+        question: 48,
+        avg_output: 32,
+        group_base: 1_000,
+    }
+    .generate(duration_s, model, &mut Rng::new(31));
+    let turns = MultiTurnGen {
+        session_rps: 0.5,
+        avg_turns: 4,
+        think_time_s: 5.0,
+        first_prompt: 160,
+        followup: 40,
+        avg_output: 48,
+        group_base: 2_000,
+    }
+    .generate(duration_s, model, &mut Rng::new(32));
+    t.merge(&turns, SimTime::ZERO);
+    let agents = AgenticGen {
+        waves_per_hour: 120.0,
+        agents_per_wave: 3,
+        steps: 3,
+        step_gap_s: 2.0,
+        task_prompt: 192,
+        tool_tokens: 64,
+        avg_output: 32,
+        group_base: 3_000,
+    }
+    .generate(duration_s, model, &mut Rng::new(33));
+    t.merge(&agents, SimTime::ZERO);
+    t
+}
+
+fn run_shared(trace: &Trace, router: Option<Box<dyn RoutingPolicy>>, keep_alive: f64) -> SessionReport {
+    let mut cluster = ClusterConfig::testbed1();
+    cluster.n_nodes = 8;
+    cluster.kv.prefix_sharing = true;
+    let mut b = ServingSession::builder()
+        .cluster(cluster)
+        .kv_block_tokens(16)
+        .model(ModelSpec::llama2_13b())
+        .system(SystemKind::LambdaScale { k: 2 });
+    if let Some(r) = router {
+        b = b.router(r);
+    }
+    b.max_batch(4)
+        .keep_alive(keep_alive)
+        .initial_gpu_sources(1)
+        .initial_host_sources(2)
+        .trace(trace.clone())
+        .run()
+}
+
+/// Request and token conservation end-to-end: every annotated request is
+/// served exactly once, and the tokens metered per request match the
+/// trace's declared outputs — prefix reuse changes *when* work happens,
+/// never *what* is owed.
+#[test]
+fn session_workloads_conserve_requests_and_tokens_with_sharing_on() {
+    let trace = session_trace(30.0);
+    let m = run_shared(&trace, None, 5.0).into_single();
+    assert_eq!(m.requests.len(), trace.len(), "every request must complete exactly once");
+    let mut served: Vec<u64> = m.requests.iter().map(|r| r.id).collect();
+    served.sort_unstable();
+    let mut expected: Vec<u64> = trace.requests.iter().map(|r| r.id).collect();
+    expected.sort_unstable();
+    assert_eq!(served, expected, "served ids must be exactly the trace ids");
+    let metered: usize = m.requests.iter().map(|r| r.output_tokens).sum();
+    let owed: usize = trace.requests.iter().map(|r| r.output_tokens).sum();
+    assert_eq!(metered, owed, "output tokens must be conserved end to end");
+    assert!(m.kv_prefix_hits > 0, "the session trace must exercise sharing");
+    assert!(m.kv_prefix_published > 0, "prefill completions must publish chunks");
+    assert!(m.kv_prefix_skipped_tokens > 0, "hits must skip prefill work");
+}
+
+/// The whole sharing path is deterministic: same trace, same report.
+#[test]
+fn sharing_on_replays_deterministically() {
+    let trace = session_trace(25.0);
+    let a = run_shared(&trace, None, 5.0);
+    let b = run_shared(&trace, None, 5.0);
+    assert_eq!(a, b, "sharing-on replay must be bit-identical");
+}
+
+/// Session affinity: under each shipped routing policy, follow-up requests
+/// of a session land where their prefix chunks are resident — observable
+/// as prefix hits, since chunk tables are strictly per-instance.
+#[test]
+fn follow_up_turns_hit_resident_prefixes_under_each_policy() {
+    let trace = session_trace(25.0);
+    let routers: Vec<Option<Box<dyn RoutingPolicy>>> = vec![
+        None, // default join-shortest-queue
+        Some(Box::new(LeastLoaded)),
+        Some(Box::new(RoundRobin::default())),
+    ];
+    for router in routers {
+        let name = router.as_ref().map_or("jsq-default", |r| r.name());
+        let m = run_shared(&trace, router, 5.0).into_single();
+        assert_eq!(m.requests.len(), trace.len(), "{name}: requests lost");
+        assert!(
+            m.kv_prefix_hits > 0,
+            "{name}: affinity routing must land follow-ups on resident prefixes"
+        );
+    }
+}
+
+/// The fallback: with an aggressive reclaim window, instances holding a
+/// session's chunks die between turns. Stale affinity entries must fall
+/// back to a policy pick and recompute — every request still completes,
+/// nothing panics, and accounting stays exact.
+#[test]
+fn stale_affinity_falls_back_cleanly_after_reclaim() {
+    // Sparse sessions with long think times: instances go idle and are
+    // reclaimed (keep-alive 1 s) before the next turn arrives.
+    let trace = MultiTurnGen {
+        session_rps: 0.2,
+        avg_turns: 4,
+        think_time_s: 8.0,
+        first_prompt: 160,
+        followup: 40,
+        avg_output: 32,
+        group_base: 7_000,
+    }
+    .generate(40.0, "llama2-13b", &mut Rng::new(41));
+    let m = run_shared(&trace, None, 1.0).into_single();
+    assert_eq!(m.requests.len(), trace.len(), "reclaim fallback lost requests");
+    let metered: usize = m.requests.iter().map(|r| r.output_tokens).sum();
+    let owed: usize = trace.requests.iter().map(|r| r.output_tokens).sum();
+    assert_eq!(metered, owed, "fallback recompute must not change token accounting");
+}
