@@ -1,0 +1,346 @@
+//! A hand-rolled, token-level Rust lexer for the simlint pass.
+//!
+//! The offline build vendors no parser crates (`syn` is out of reach), and
+//! the determinism rules only need token streams with line numbers — not a
+//! full AST. The lexer therefore does the one job that regexes cannot:
+//! correctly skipping comments, string/char literals, and lifetimes so the
+//! rule matchers never fire inside them. Line comments are kept (with
+//! their line numbers) because `// simlint: allow(..)` suppressions live
+//! there.
+//!
+//! Handled: nested `/* */` block comments, `//` line comments, string
+//! escapes, raw strings (`r"…"`, `r#"…"#`, any `#` depth), byte strings,
+//! char literals vs. lifetimes, and the two/three-character operators the
+//! rules must see as single tokens (`==`, `!=`, `::`, `..=`, …).
+
+/// What kind of lexeme a [`Tok`] is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`for`, `HashMap`, `iter`, …).
+    Ident,
+    /// Punctuation / operator, possibly multi-character (`==`, `::`, `{`).
+    Punct,
+    /// Numeric literal (lexed loosely; rules never inspect digits).
+    Num,
+    /// Lifetime (`'a`) — distinct from char literals.
+    Lifetime,
+    /// String, byte-string, or char literal (contents discarded).
+    Literal,
+}
+
+/// One token with its 1-indexed source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    /// The token text (empty for [`TokKind::Literal`]).
+    pub text: String,
+    /// 1-indexed line the token starts on.
+    pub line: u32,
+    /// Lexeme class.
+    pub kind: TokKind,
+}
+
+/// A `//` line comment (text after the slashes, line 1-indexed).
+#[derive(Clone, Debug)]
+pub struct Comment {
+    /// 1-indexed line the comment starts on.
+    pub line: u32,
+    /// Comment text after the `//` marker.
+    pub text: String,
+}
+
+/// Lexer output: the token stream plus every line comment.
+#[derive(Clone, Debug, Default)]
+pub struct Lexed {
+    /// All non-comment tokens in source order.
+    pub toks: Vec<Tok>,
+    /// All `//` comments in source order.
+    pub comments: Vec<Comment>,
+}
+
+/// Multi-character operators lexed as a single [`TokKind::Punct`] token,
+/// longest first.
+const OPS: &[&str] = &[
+    "..=", "...", "::", "==", "!=", "<=", ">=", "=>", "->", "..", "&&", "||", "+=", "-=", "*=",
+    "/=", "%=", "^=", "|=", "&=", "<<", ">>",
+];
+
+/// Lex `src` into tokens and comments. Never fails: unterminated literals
+/// simply consume the rest of the input (good enough for a linter that
+/// only runs on code the compiler already accepted).
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let n = chars.len();
+
+    let is_ident_start = |c: char| c.is_alphabetic() || c == '_';
+    let is_ident = |c: char| c.is_alphanumeric() || c == '_';
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            out.comments.push(Comment { line, text: chars[start..j].iter().collect() });
+            i = j;
+            continue;
+        }
+        // Block comment (Rust block comments nest).
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if chars[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if chars[j] == '/' && chars.get(j + 1) == Some(&'*') {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && chars.get(j + 1) == Some(&'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+            continue;
+        }
+        // Raw (and byte) strings: r"…", r#"…"#, br#"…"#, b"…".
+        if (c == 'r' || c == 'b') && raw_or_byte_string(&chars, i) {
+            let lit_line = line;
+            i = skip_string_like(&chars, i, &mut line);
+            out.toks.push(Tok { text: String::new(), line: lit_line, kind: TokKind::Literal });
+            continue;
+        }
+        // Plain string literal.
+        if c == '"' {
+            let lit_line = line;
+            i = skip_quoted(&chars, i + 1, '"', &mut line);
+            out.toks.push(Tok { text: String::new(), line: lit_line, kind: TokKind::Literal });
+            continue;
+        }
+        // Lifetime or char literal.
+        if c == '\'' {
+            // Lifetime: 'ident not followed by a closing quote.
+            if chars.get(i + 1).is_some_and(|&c2| is_ident_start(c2)) {
+                let mut j = i + 1;
+                while j < n && is_ident(chars[j]) {
+                    j += 1;
+                }
+                if chars.get(j) != Some(&'\'') {
+                    out.toks.push(Tok {
+                        text: chars[i..j].iter().collect(),
+                        line,
+                        kind: TokKind::Lifetime,
+                    });
+                    i = j;
+                    continue;
+                }
+            }
+            let lit_line = line;
+            i = skip_quoted(&chars, i + 1, '\'', &mut line);
+            out.toks.push(Tok { text: String::new(), line: lit_line, kind: TokKind::Literal });
+            continue;
+        }
+        // Identifier / keyword.
+        if is_ident_start(c) {
+            let mut j = i;
+            while j < n && is_ident(chars[j]) {
+                j += 1;
+            }
+            out.toks.push(Tok { text: chars[i..j].iter().collect(), line, kind: TokKind::Ident });
+            i = j;
+            continue;
+        }
+        // Number (loose: the rules never inspect digits).
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && (is_ident(chars[j]) || chars[j] == '.') {
+                // `0..n` range: do not swallow `..` into the number.
+                if chars[j] == '.' && chars.get(j + 1) == Some(&'.') {
+                    break;
+                }
+                j += 1;
+            }
+            out.toks.push(Tok { text: chars[i..j].iter().collect(), line, kind: TokKind::Num });
+            i = j;
+            continue;
+        }
+        // Multi-character operator, longest match first.
+        let mut matched = false;
+        for op in OPS {
+            let len = op.chars().count();
+            if i + len <= n && chars[i..i + len].iter().collect::<String>() == **op {
+                out.toks.push(Tok { text: (*op).to_string(), line, kind: TokKind::Punct });
+                i += len;
+                matched = true;
+                break;
+            }
+        }
+        if matched {
+            continue;
+        }
+        out.toks.push(Tok { text: c.to_string(), line, kind: TokKind::Punct });
+        i += 1;
+    }
+    out
+}
+
+/// Whether position `i` (at `r` or `b`) starts a raw or byte string/char.
+fn raw_or_byte_string(chars: &[char], i: usize) -> bool {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+        if chars.get(j) == Some(&'\'') {
+            return true; // byte char b'…'
+        }
+    }
+    if chars.get(j) == Some(&'r') {
+        j += 1;
+    }
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    chars.get(j) == Some(&'"') && j > i
+}
+
+/// Skip a raw/byte string starting at `i` (`r`/`b`); returns the index
+/// past the closing delimiter. Updates `line`.
+fn skip_string_like(chars: &[char], i: usize, line: &mut u32) -> usize {
+    let n = chars.len();
+    let mut j = i;
+    let mut raw = false;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) == Some(&'r') {
+        raw = true;
+        j += 1;
+    }
+    let mut hashes = 0usize;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'\'') {
+        return skip_quoted(chars, j + 1, '\'', line);
+    }
+    debug_assert_eq!(chars.get(j), Some(&'"'));
+    j += 1;
+    if !raw {
+        return skip_quoted(chars, j, '"', line);
+    }
+    // Raw string: no escapes; ends at `"` followed by `hashes` hashes.
+    while j < n {
+        if chars[j] == '\n' {
+            *line += 1;
+            j += 1;
+            continue;
+        }
+        if chars[j] == '"' {
+            let mut k = j + 1;
+            let mut seen = 0usize;
+            while seen < hashes && chars.get(k) == Some(&'#') {
+                seen += 1;
+                k += 1;
+            }
+            if seen == hashes {
+                return k;
+            }
+        }
+        j += 1;
+    }
+    j
+}
+
+/// Skip an escaped quoted literal whose body starts at `i`; returns the
+/// index past the closing `quote`. Updates `line`.
+fn skip_quoted(chars: &[char], i: usize, quote: char, line: &mut u32) -> usize {
+    let n = chars.len();
+    let mut j = i;
+    while j < n {
+        match chars[j] {
+            '\\' => j += 2,
+            '\n' => {
+                *line += 1;
+                j += 1;
+            }
+            c if c == quote => return j + 1,
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_skipped() {
+        let src = r##"
+            let x = "HashMap.iter() inside a string"; // HashMap in comment
+            /* block HashMap /* nested */ still comment */
+            let y = r#"raw "HashMap" body"#;
+            map.iter();
+        "##;
+        let ids = idents(src);
+        assert_eq!(ids, vec!["let", "x", "let", "y", "map", "iter"]);
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let lx = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert!(lx.toks.iter().any(|t| t.kind == TokKind::Lifetime && t.text == "'a"));
+        assert_eq!(lx.toks.iter().filter(|t| t.kind == TokKind::Literal).count(), 1);
+    }
+
+    #[test]
+    fn line_numbers_and_ops() {
+        let lx = lex("a\n== b\n!= c");
+        let eq = lx.toks.iter().find(|t| t.text == "==").unwrap();
+        let ne = lx.toks.iter().find(|t| t.text == "!=").unwrap();
+        assert_eq!(eq.line, 2);
+        assert_eq!(ne.line, 3);
+    }
+
+    #[test]
+    fn comments_carry_text_and_line() {
+        let lx = lex("x();\n// simlint: allow(D001) — keyed only\ny();");
+        assert_eq!(lx.comments.len(), 1);
+        assert_eq!(lx.comments[0].line, 2);
+        assert!(lx.comments[0].text.contains("simlint: allow(D001)"));
+    }
+
+    #[test]
+    fn range_numbers_do_not_swallow_dots() {
+        let lx = lex("for i in 0..n {}");
+        let texts: Vec<String> = lx.toks.iter().map(|t| t.text.clone()).collect();
+        assert!(texts.contains(&"0".to_string()));
+        assert!(texts.contains(&"..".to_string()));
+    }
+}

@@ -1,0 +1,615 @@
+//! simlint: a repo-specific static-analysis pass that proves the
+//! determinism contract.
+//!
+//! The simulator's headline guarantee — same seed, same workload,
+//! bit-identical `SessionReport` — is easy to break silently: one
+//! `HashMap` iteration feeding the event queue, one `Instant::now()` in a
+//! cost model, one exact `f64` comparison on a timestamp. The type system
+//! cannot see any of these, so this module encodes them as lintable
+//! token-stream patterns (see [`rules`]) and `lambda-scale lint` runs
+//! them over `rust/src/**` in CI.
+//!
+//! Design constraints, in order: no new dependencies (the offline build
+//! vendors no parser crates, so [`lexer`] is hand-rolled), findings must
+//! be suppressible *in place* with a written justification, and the
+//! suppressions themselves must be linted for staleness so the escape
+//! hatch cannot rot. The flow for one file is:
+//!
+//! 1. [`lexer::lex`] — tokens + line comments, literals/comments stripped.
+//! 2. [`rules::scan`] — raw findings, `#[cfg(test)]` items excluded.
+//! 3. Suppression comments (`// simlint: allow(RULE) — reason`) mark
+//!    findings on their own or the following line as suppressed; unused
+//!    suppressions become `S001`, malformed ones `S002`.
+//! 4. A checked-in [`Baseline`] (`lint.baseline.json`) grandfathers
+//!    audited legacy findings per `(file, rule)` count; counts that
+//!    exceed reality become `S003` so the baseline can only shrink.
+//!
+//! `lint --check` exits nonzero if any unsuppressed finding remains, and
+//! round-trips its own `--json` output through [`check_lint_json`] (the
+//! same schema-guard pattern `eval::scale::check_report` uses for
+//! `BENCH_scale.json`).
+
+pub mod lexer;
+pub mod rules;
+
+use crate::util::json::{self, Json};
+use rules::{rule_info, RawFinding};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One diagnostic, after suppression and baseline handling.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Rule code (one of [`rules::RULES`]).
+    pub rule: &'static str,
+    /// File the finding is in (normalized to `/` separators).
+    pub file: String,
+    /// 1-indexed line (0 for whole-file meta findings like `S003`).
+    pub line: u32,
+    /// What matched, specifically.
+    pub message: String,
+    /// The rule's fix-it hint.
+    pub hint: &'static str,
+    /// Excused by an inline `// simlint: allow(..)` comment.
+    pub suppressed: bool,
+    /// Excused by a `lint.baseline.json` entry.
+    pub baselined: bool,
+}
+
+impl Finding {
+    /// Whether this finding still counts against `--check`.
+    pub fn is_live(&self) -> bool {
+        !self.suppressed && !self.baselined
+    }
+}
+
+/// The result of linting a file tree.
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+    /// All findings, sorted by `(file, line, rule)`.
+    pub findings: Vec<Finding>,
+}
+
+impl LintReport {
+    /// Findings that are neither suppressed nor baselined.
+    pub fn unsuppressed(&self) -> usize {
+        self.findings.iter().filter(|f| f.is_live()).count()
+    }
+
+    fn sort(&mut self) {
+        self.findings.sort_by(|a, b| {
+            (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+        });
+    }
+
+    /// Machine-readable report (the `lint --json` schema; see
+    /// `docs/EVALUATION.md` and [`check_lint_json`]).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("schema_version", json::num(1.0)),
+            ("tool", json::s("simlint")),
+            ("files_scanned", json::num(self.files_scanned as f64)),
+            ("total", json::num(self.findings.len() as f64)),
+            ("unsuppressed", json::num(self.unsuppressed() as f64)),
+            (
+                "findings",
+                json::arr(self.findings.iter().map(|f| {
+                    json::obj(vec![
+                        ("rule", json::s(f.rule)),
+                        ("file", json::s(&f.file)),
+                        ("line", json::num(f.line as f64)),
+                        ("message", json::s(&f.message)),
+                        ("hint", json::s(f.hint)),
+                        ("suppressed", Json::Bool(f.suppressed)),
+                        ("baselined", Json::Bool(f.baselined)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Human-readable rendering (one finding per stanza plus a summary).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            let tag = if f.suppressed {
+                " (suppressed)"
+            } else if f.baselined {
+                " (baselined)"
+            } else {
+                ""
+            };
+            let _ = writeln!(out, "{}: {}:{}: {}{tag}", f.rule, f.file, f.line, f.message);
+            if f.is_live() {
+                let _ = writeln!(out, "  hint: {}", f.hint);
+            }
+        }
+        let _ = writeln!(
+            out,
+            "simlint: {} file(s), {} finding(s), {} unsuppressed",
+            self.files_scanned,
+            self.findings.len(),
+            self.unsuppressed()
+        );
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Suppressions
+// ---------------------------------------------------------------------------
+
+/// Separators accepted between `allow(..)` and the justification.
+const REASON_SEPS: &[char] = &['\u{2014}', '\u{2013}', '-', ':', ' ', '\t'];
+
+#[derive(Debug)]
+enum Suppression {
+    /// `allow(rules)` with a justification; `matched` flips when it
+    /// excuses at least one finding.
+    Valid { line: u32, codes: Vec<String>, matched: bool },
+    /// Anything that says `simlint:` but does not parse.
+    Malformed { line: u32, why: String },
+}
+
+/// Parse one line comment as a suppression candidate. Only plain `//`
+/// comments qualify: doc comments (`///`, `//!`) lex with a leading `/`
+/// or `!` in their text, so prose *about* the syntax never matches.
+fn parse_suppression(line: u32, text: &str) -> Option<Suppression> {
+    let t = text.trim_start();
+    if !t.starts_with("simlint:") {
+        return None;
+    }
+    let rest = t["simlint:".len()..].trim_start();
+    let Some(body) = rest.strip_prefix("allow") else {
+        return Some(Suppression::Malformed {
+            line,
+            why: "expected `allow(RULE, ..)` after `simlint:`".to_string(),
+        });
+    };
+    let body = body.trim_start();
+    let Some(open) = body.strip_prefix('(') else {
+        return Some(Suppression::Malformed {
+            line,
+            why: "expected `(` after `allow`".to_string(),
+        });
+    };
+    let Some(close) = open.find(')') else {
+        return Some(Suppression::Malformed { line, why: "unclosed `allow(`".to_string() });
+    };
+    let mut codes = Vec::new();
+    for code in open[..close].split(',') {
+        let code = code.trim();
+        match rule_info(code) {
+            Some(_) if !code.starts_with('S') => codes.push(code.to_string()),
+            Some(_) => {
+                return Some(Suppression::Malformed {
+                    line,
+                    why: format!("`{code}` is a suppression-hygiene rule and cannot be allowed"),
+                })
+            }
+            None => {
+                return Some(Suppression::Malformed {
+                    line,
+                    why: format!("unknown rule `{code}`"),
+                })
+            }
+        }
+    }
+    if codes.is_empty() {
+        return Some(Suppression::Malformed { line, why: "empty rule list".to_string() });
+    }
+    let reason = open[close + 1..].trim_matches(REASON_SEPS);
+    if reason.is_empty() {
+        return Some(Suppression::Malformed {
+            line,
+            why: "missing justification after `allow(..)`".to_string(),
+        });
+    }
+    Some(Suppression::Valid { line, codes, matched: false })
+}
+
+// ---------------------------------------------------------------------------
+// Per-file analysis
+// ---------------------------------------------------------------------------
+
+/// Lint one file's source. `path` only steers rule scoping (critical
+/// module / hot loop detection) — nothing is read from disk. The baseline
+/// is applied later, tree-wide, by [`run`].
+pub fn analyze_source(path: &str, src: &str) -> Vec<Finding> {
+    let lx = lexer::lex(src);
+    let raw = rules::scan(path, &lx);
+    let tests = rules::test_ranges(&lx);
+    let mut sups: Vec<Suppression> = lx
+        .comments
+        .iter()
+        .filter(|c| !rules::in_ranges(&tests, c.line))
+        .filter_map(|c| parse_suppression(c.line, &c.text))
+        .collect();
+
+    let file = path.replace('\\', "/");
+    let mk = |rule: &'static str, line: u32, message: String| Finding {
+        rule,
+        file: file.clone(),
+        line,
+        message,
+        hint: rule_info(rule).expect("rule in catalog").hint,
+        suppressed: false,
+        baselined: false,
+    };
+
+    let mut out: Vec<Finding> = Vec::new();
+    for RawFinding { rule, line, message } in raw {
+        let mut f = mk(rule, line, message);
+        for s in sups.iter_mut() {
+            if let Suppression::Valid { line: sl, codes, matched } = s {
+                if (*sl == f.line || *sl + 1 == f.line) && codes.iter().any(|c| c == f.rule) {
+                    f.suppressed = true;
+                    *matched = true;
+                }
+            }
+        }
+        out.push(f);
+    }
+    for s in &sups {
+        match s {
+            Suppression::Valid { line, codes, matched: false } => {
+                out.push(mk(
+                    "S001",
+                    *line,
+                    format!("stale suppression: allow({}) matched no finding", codes.join(", ")),
+                ));
+            }
+            Suppression::Malformed { line, why } => {
+                out.push(mk("S002", *line, format!("malformed suppression: {why}")));
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Baseline
+// ---------------------------------------------------------------------------
+
+/// One grandfathered `(file, rule)` bucket with its audit note.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BaselineEntry {
+    /// File the findings live in (normalized separators).
+    pub file: String,
+    /// Rule code being grandfathered.
+    pub rule: String,
+    /// How many findings are excused (oldest-by-line first).
+    pub count: u64,
+    /// Why these findings are acceptable — required, like suppressions.
+    pub reason: String,
+}
+
+/// The checked-in `lint.baseline.json`: audited legacy findings that are
+/// excused by count rather than inline comments (used for `P001`, where
+/// dozens of historically-audited `unwrap()`s would otherwise drown the
+/// hot-loop files in suppression comments).
+#[derive(Clone, Debug, Default)]
+pub struct Baseline {
+    /// Entries, kept sorted by `(file, rule)`.
+    pub entries: Vec<BaselineEntry>,
+}
+
+impl Baseline {
+    /// Parse the baseline file format. Rejects unknown rules and empty
+    /// reasons so a hand-edited baseline cannot silently widen.
+    pub fn parse(text: &str) -> Result<Baseline, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        if j.get("schema_version").and_then(Json::as_u64) != Some(1) {
+            return Err("baseline: schema_version must be 1".to_string());
+        }
+        if j.get("tool").and_then(Json::as_str) != Some("simlint") {
+            return Err("baseline: tool must be \"simlint\"".to_string());
+        }
+        let mut entries = Vec::new();
+        for e in j.get("entries").and_then(Json::as_arr).ok_or("baseline: missing entries[]")? {
+            let file = e.get("file").and_then(Json::as_str).ok_or("entry missing file")?;
+            let rule = e.get("rule").and_then(Json::as_str).ok_or("entry missing rule")?;
+            let count = e.get("count").and_then(Json::as_u64).ok_or("entry missing count")?;
+            let reason = e.get("reason").and_then(Json::as_str).ok_or("entry missing reason")?;
+            if rule_info(rule).is_none() || rule.starts_with('S') {
+                return Err(format!("baseline: `{rule}` is not a baselinable rule"));
+            }
+            if reason.trim().is_empty() {
+                return Err(format!("baseline: empty reason for {file}/{rule}"));
+            }
+            if count == 0 {
+                return Err(format!("baseline: zero count for {file}/{rule} — delete the entry"));
+            }
+            entries.push(BaselineEntry {
+                file: file.replace('\\', "/"),
+                rule: rule.to_string(),
+                count,
+                reason: reason.to_string(),
+            });
+        }
+        entries.sort_by(|a, b| (&a.file, &a.rule).cmp(&(&b.file, &b.rule)));
+        Ok(Baseline { entries })
+    }
+
+    /// Serialize back to the on-disk format.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("schema_version", json::num(1.0)),
+            ("tool", json::s("simlint")),
+            (
+                "entries",
+                json::arr(self.entries.iter().map(|e| {
+                    json::obj(vec![
+                        ("file", json::s(&e.file)),
+                        ("rule", json::s(&e.rule)),
+                        ("count", json::num(e.count as f64)),
+                        ("reason", json::s(&e.reason)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Rebuild the baseline from a report's live findings, preserving the
+    /// audit reason of any surviving `(file, rule)` bucket. New buckets
+    /// get a placeholder reason that a human must replace.
+    pub fn refreshed(&self, rep: &LintReport) -> Baseline {
+        let mut counts: BTreeMap<(String, String), u64> = BTreeMap::new();
+        for f in rep.findings.iter().filter(|f| !f.suppressed && !f.rule.starts_with('S')) {
+            *counts.entry((f.file.clone(), f.rule.to_string())).or_insert(0) += 1;
+        }
+        let entries = counts
+            .into_iter()
+            .map(|((file, rule), count)| {
+                let reason = self
+                    .entries
+                    .iter()
+                    .find(|e| e.file == file && e.rule == rule)
+                    .map(|e| e.reason.clone())
+                    .unwrap_or_else(|| "TODO: audit and justify".to_string());
+                BaselineEntry { file, rule, count, reason }
+            })
+            .collect();
+        Baseline { entries }
+    }
+
+    /// Mark up to `count` live findings per entry as baselined
+    /// (oldest-by-line first, so new findings surface last and loud), and
+    /// emit `S003` for entries whose count exceeds what was found.
+    pub fn apply(&self, rep: &mut LintReport) {
+        for e in &self.entries {
+            let mut remaining = e.count;
+            for f in rep.findings.iter_mut() {
+                if remaining > 0 && f.file == e.file && f.rule == e.rule && !f.suppressed {
+                    f.baselined = true;
+                    remaining -= 1;
+                }
+            }
+            if remaining > 0 {
+                rep.findings.push(Finding {
+                    rule: "S003",
+                    file: e.file.clone(),
+                    line: 0,
+                    message: format!(
+                        "baseline records {} {} finding(s) but only {} remain — shrink it",
+                        e.count,
+                        e.rule,
+                        e.count - remaining
+                    ),
+                    hint: rule_info("S003").expect("S003 in catalog").hint,
+                    suppressed: false,
+                    baselined: false,
+                });
+            }
+        }
+        rep.sort();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tree walk
+// ---------------------------------------------------------------------------
+
+/// All `.rs` files under `root`, sorted (the walk itself must be
+/// deterministic — `read_dir` order is not).
+pub fn collect_rs_files(root: &Path) -> io::Result<Vec<PathBuf>> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+        let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+        entries.sort_by_key(|e| e.file_name());
+        for e in entries {
+            let p = e.path();
+            if p.is_dir() {
+                walk(&p, out)?;
+            } else if p.extension().is_some_and(|x| x == "rs") {
+                out.push(p);
+            }
+        }
+        Ok(())
+    }
+    let mut out = Vec::new();
+    walk(root, &mut out)?;
+    out.sort();
+    Ok(out)
+}
+
+/// Lint every `.rs` file under `root` and apply `baseline` if given.
+pub fn run(root: &Path, baseline: Option<&Baseline>) -> io::Result<LintReport> {
+    let files = collect_rs_files(root)?;
+    let mut rep = LintReport { files_scanned: files.len(), findings: Vec::new() };
+    for p in &files {
+        let src = fs::read_to_string(p)?;
+        let path_str = p.to_string_lossy().replace('\\', "/");
+        rep.findings.extend(analyze_source(&path_str, &src));
+    }
+    if let Some(b) = baseline {
+        b.apply(&mut rep);
+    }
+    rep.sort();
+    Ok(rep)
+}
+
+// ---------------------------------------------------------------------------
+// JSON schema guard
+// ---------------------------------------------------------------------------
+
+/// Validate a `lint --json` document against the documented schema
+/// (docs/EVALUATION.md). `--check` round-trips its own output through
+/// this, mirroring `eval::scale::check_report` for `BENCH_scale.json`.
+pub fn check_lint_json(text: &str) -> Result<(), String> {
+    let j = Json::parse(text).map_err(|e| e.to_string())?;
+    if j.get("schema_version").and_then(Json::as_u64) != Some(1) {
+        return Err("schema_version must be 1".to_string());
+    }
+    if j.get("tool").and_then(Json::as_str) != Some("simlint") {
+        return Err("tool must be \"simlint\"".to_string());
+    }
+    j.get("files_scanned").and_then(Json::as_u64).ok_or("missing files_scanned")?;
+    let findings = j.get("findings").and_then(Json::as_arr).ok_or("missing findings[]")?;
+    let total = j.get("total").and_then(Json::as_u64).ok_or("missing total")?;
+    if total as usize != findings.len() {
+        return Err(format!("total={} but findings[] has {}", total, findings.len()));
+    }
+    let mut live = 0u64;
+    for (i, f) in findings.iter().enumerate() {
+        let rule = f
+            .get("rule")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("findings[{i}]: missing rule"))?;
+        if rule_info(rule).is_none() {
+            return Err(format!("findings[{i}]: unknown rule `{rule}`"));
+        }
+        for key in ["file", "message", "hint"] {
+            let v = f
+                .get(key)
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("findings[{i}]: missing {key}"))?;
+            if v.is_empty() && key != "hint" {
+                return Err(format!("findings[{i}]: empty {key}"));
+            }
+        }
+        f.get("line")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| format!("findings[{i}]: missing line"))?;
+        let sup = f
+            .get("suppressed")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| format!("findings[{i}]: missing suppressed"))?;
+        let base = f
+            .get("baselined")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| format!("findings[{i}]: missing baselined"))?;
+        if !sup && !base {
+            live += 1;
+        }
+    }
+    let unsup = j.get("unsuppressed").and_then(Json::as_u64).ok_or("missing unsuppressed")?;
+    if unsup != live {
+        return Err(format!("unsuppressed={unsup} inconsistent with findings ({live} live)"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const HASH_LOOP: &str = r#"
+struct S { m: HashMap<u32, u32> }
+impl S {
+    fn f(&self) -> u32 {
+        let mut t = 0;
+        for (k, v) in &self.m {
+            t += k + v;
+        }
+        t
+    }
+}
+"#;
+
+    #[test]
+    fn d001_fires_and_suppression_excuses_it() {
+        let fs = analyze_source("rust/src/sim/x.rs", HASH_LOOP);
+        assert!(fs.iter().any(|f| f.rule == "D001" && !f.suppressed), "{fs:?}");
+
+        let suppressed = HASH_LOOP.replace(
+            "for (k, v)",
+            "// simlint: allow(D001) — order folded into a sum\n        for (k, v)",
+        );
+        let fs = analyze_source("rust/src/sim/x.rs", &suppressed);
+        assert!(fs.iter().any(|f| f.rule == "D001" && f.suppressed), "{fs:?}");
+        assert!(!fs.iter().any(|f| f.rule == "S001"), "{fs:?}");
+    }
+
+    #[test]
+    fn stale_and_malformed_suppressions_are_flagged() {
+        let src = "// simlint: allow(D002) — nothing here uses clocks\nfn f() {}\n\
+                   // simlint: allow(D001)\nfn g() {}\n";
+        let fs = analyze_source("rust/src/sim/x.rs", src);
+        assert!(fs.iter().any(|f| f.rule == "S001" && f.line == 1), "{fs:?}");
+        assert!(fs.iter().any(|f| f.rule == "S002" && f.line == 3), "{fs:?}");
+    }
+
+    #[test]
+    fn noncritical_files_are_exempt_from_d_rules() {
+        let fs = analyze_source("rust/src/util/x.rs", HASH_LOOP);
+        assert!(fs.is_empty(), "{fs:?}");
+    }
+
+    #[test]
+    fn baseline_grandfathers_and_detects_staleness() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let mut rep = LintReport {
+            files_scanned: 1,
+            findings: analyze_source("rust/src/sim/fabric.rs", src),
+        };
+        assert_eq!(rep.unsuppressed(), 1);
+        let b = Baseline::parse(
+            r#"{"schema_version":1,"tool":"simlint","entries":[
+                {"file":"rust/src/sim/fabric.rs","rule":"P001","count":2,"reason":"audited"}]}"#,
+        )
+        .unwrap();
+        b.apply(&mut rep);
+        // One finding grandfathered, but count=2 > found=1 → S003.
+        assert!(rep.findings.iter().any(|f| f.rule == "P001" && f.baselined), "{rep:?}");
+        assert!(rep.findings.iter().any(|f| f.rule == "S003"), "{rep:?}");
+    }
+
+    #[test]
+    fn json_report_round_trips_the_schema_guard() {
+        let rep = LintReport {
+            files_scanned: 3,
+            findings: analyze_source("rust/src/sim/x.rs", HASH_LOOP),
+        };
+        let text = rep.to_json().to_string();
+        check_lint_json(&text).unwrap();
+        // A corrupted count must be rejected.
+        let bad = text.replace("\"total\":1", "\"total\":7");
+        assert!(check_lint_json(&bad).is_err());
+    }
+
+    #[test]
+    fn baseline_refresh_preserves_reasons() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        let rep = LintReport {
+            files_scanned: 1,
+            findings: analyze_source("rust/src/sim/fabric.rs", src),
+        };
+        let old = Baseline::parse(
+            r#"{"schema_version":1,"tool":"simlint","entries":[
+                {"file":"rust/src/sim/fabric.rs","rule":"P001","count":9,"reason":"audited 2026-08"}]}"#,
+        )
+        .unwrap();
+        let new = old.refreshed(&rep);
+        assert_eq!(new.entries.len(), 1);
+        assert_eq!(new.entries[0].count, 1);
+        assert_eq!(new.entries[0].reason, "audited 2026-08");
+        // And the refreshed baseline parses back.
+        Baseline::parse(&new.to_json().to_string()).unwrap();
+    }
+}

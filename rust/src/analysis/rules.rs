@@ -1,0 +1,547 @@
+//! The simlint rule matchers.
+//!
+//! Every rule is a token-stream pattern over [`Lexed`] output — no type
+//! information, so each matcher documents its heuristic and its known
+//! blind spots (see `docs/ANALYSIS.md`). False positives are expected to
+//! be rare and are handled by inline `// simlint: allow(..)` suppressions
+//! with written justifications; false negatives are the price of not
+//! having `syn` in the vendored dependency closure.
+
+use super::lexer::{Lexed, Tok, TokKind};
+use std::collections::BTreeMap;
+
+/// Static metadata for one rule.
+#[derive(Clone, Copy, Debug)]
+pub struct RuleInfo {
+    /// Stable rule code (`D001`, …) used in suppressions and baselines.
+    pub code: &'static str,
+    /// One-line description of the contract the rule protects.
+    pub summary: &'static str,
+    /// Fix-it hint attached to every finding of this rule.
+    pub hint: &'static str,
+}
+
+/// The rule catalog. `S…` codes are meta-rules emitted by the driver for
+/// suppression hygiene; everything else is matched here.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        code: "D001",
+        summary: "unordered HashMap/HashSet iteration in a determinism-critical module",
+        hint: "iterate a BTreeMap/BTreeSet, or collect and sort_unstable() immediately; \
+               if order provably cannot reach scheduling or metrics, suppress with a reason",
+    },
+    RuleInfo {
+        code: "D002",
+        summary: "wall-clock or entropy source in simulator code",
+        hint: "simulation time comes from SimTime and randomness from util::rng::Rng(seed); \
+               wall-clock belongs only in util::bench / eval harness timing",
+    },
+    RuleInfo {
+        code: "D003",
+        summary: "direct f64 ==/!= on a second-valued sim quantity",
+        hint: "use sim::time::secs_eq / approx_eq (SECS_EPS) instead of exact float equality",
+    },
+    RuleInfo {
+        code: "P001",
+        summary: "unwrap()/expect() in the engine/fabric hot loop",
+        hint: "prefer let-else or ok_or with a structured error; audited sites are \
+               grandfathered per-file in lint.baseline.json",
+    },
+    RuleInfo {
+        code: "O001",
+        summary: "tracer emission not guarded by `if let Some(..)`",
+        hint: "wrap the emission in `if let Some(tr) = self.tracer.as_mut()` so a disabled \
+               recorder costs nothing (the zero-cost-when-off contract)",
+    },
+    RuleInfo {
+        code: "S001",
+        summary: "stale suppression: `simlint: allow(..)` matched no finding",
+        hint: "the code it excused is gone or fixed — delete the suppression comment",
+    },
+    RuleInfo {
+        code: "S002",
+        summary: "malformed suppression or missing justification",
+        hint: "write `// simlint: allow(RULE) — reason` with a non-empty reason",
+    },
+    RuleInfo {
+        code: "S003",
+        summary: "stale baseline entry: fewer findings than lint.baseline.json records",
+        hint: "re-run `lambda-scale lint --update-baseline` to shrink the grandfathered count",
+    },
+];
+
+/// Look up a rule's metadata by code.
+pub fn rule_info(code: &str) -> Option<&'static RuleInfo> {
+    RULES.iter().find(|r| r.code == code)
+}
+
+/// A rule match before suppression/baseline handling.
+#[derive(Clone, Debug)]
+pub struct RawFinding {
+    /// Rule code (always one of [`RULES`]).
+    pub rule: &'static str,
+    /// 1-indexed source line.
+    pub line: u32,
+    /// Human-readable description of this specific match.
+    pub message: String,
+}
+
+/// Determinism-critical module prefixes (relative to `rust/src/`).
+const CRITICAL: &[&str] =
+    &["sim/", "coordinator/", "kvcache/", "disagg/", "multicast/", "pipeline/", "memory/"];
+
+/// Whether `path` is inside a determinism-critical module.
+pub fn is_critical(path: &str) -> bool {
+    let p = path.replace('\\', "/");
+    CRITICAL.iter().any(|m| p.contains(&format!("src/{m}")))
+}
+
+/// Whether `path` is part of the scheduling hot loop (P001 scope).
+pub fn is_hot_loop(path: &str) -> bool {
+    let p = path.replace('\\', "/");
+    p.ends_with("sim/fabric.rs") || p.ends_with("coordinator/engine.rs")
+}
+
+/// Line ranges (inclusive) of `#[cfg(test)]`-gated items. Rules do not
+/// fire inside them: tests may sort, time, and unwrap freely.
+pub fn test_ranges(lx: &Lexed) -> Vec<(u32, u32)> {
+    let t = &lx.toks;
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 6 < t.len() {
+        let is_attr = t[i].text == "#"
+            && t[i + 1].text == "["
+            && t[i + 2].text == "cfg"
+            && t[i + 3].text == "("
+            && t[i + 4].text == "test"
+            && t[i + 5].text == ")"
+            && t[i + 6].text == "]";
+        if !is_attr {
+            i += 1;
+            continue;
+        }
+        let start_line = t[i].line;
+        // Find the gated item's opening `{` (skipping further attributes);
+        // a `;` first means a braceless item — nothing to exclude.
+        let mut j = i + 7;
+        let mut end = None;
+        while j < t.len() {
+            match t[j].text.as_str() {
+                ";" => break,
+                "{" => {
+                    end = Some(match_brace(t, j));
+                    break;
+                }
+                _ => j += 1,
+            }
+        }
+        if let Some(close) = end {
+            out.push((start_line, t[close.min(t.len() - 1)].line));
+            i = close;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Index of the `}` matching the `{` at `open` (or the last token).
+fn match_brace(t: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    for (j, tok) in t.iter().enumerate().skip(open) {
+        match tok.text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+    }
+    t.len() - 1
+}
+
+/// Whether `line` falls in any of the (inclusive) `ranges`.
+pub fn in_ranges(ranges: &[(u32, u32)], line: u32) -> bool {
+    ranges.iter().any(|&(a, b)| line >= a && line <= b)
+}
+
+/// Run every rule matcher over one lexed file. Findings inside
+/// `#[cfg(test)]` items are already filtered out.
+pub fn scan(path: &str, lx: &Lexed) -> Vec<RawFinding> {
+    let mut out = Vec::new();
+    let tests = test_ranges(lx);
+    if is_critical(path) {
+        d001(lx, &mut out);
+        d002(lx, &mut out);
+        d003(lx, &mut out);
+        o001(lx, &mut out);
+    }
+    if is_hot_loop(path) {
+        p001(lx, &mut out);
+    }
+    out.retain(|f| !in_ranges(&tests, f.line));
+    out.sort_by_key(|f| (f.line, f.rule));
+    out
+}
+
+// ---- D001: unordered hash iteration ---------------------------------------
+
+/// Iteration methods whose order is the hasher's, not the program's.
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "drain",
+    "retain",
+];
+
+/// Collect identifiers declared with a `HashMap`/`HashSet` type in this
+/// file: struct fields and annotated bindings (`name: HashMap<..>`) and
+/// inferred bindings (`let name = HashMap::new()`). Heuristic: the name,
+/// not the binding site, is tracked — a second binding of the same name
+/// with a different type in the same file would alias it.
+fn hash_names(lx: &Lexed) -> BTreeMap<String, &'static str> {
+    let t = &lx.toks;
+    let mut names = BTreeMap::new();
+    let hash_kind = |s: &str| match s {
+        "HashMap" => Some("HashMap"),
+        "HashSet" => Some("HashSet"),
+        _ => None,
+    };
+    // Skip an optional `std :: collections ::` path prefix.
+    let skip_path = |mut j: usize| -> usize {
+        while j + 1 < t.len()
+            && t[j].kind == TokKind::Ident
+            && t[j + 1].text == "::"
+            && hash_kind(&t[j].text).is_none()
+        {
+            j += 2;
+        }
+        j
+    };
+    for i in 0..t.len() {
+        if t[i].kind != TokKind::Ident {
+            continue;
+        }
+        // `name : [path] HashMap <`
+        if i + 2 < t.len() && t[i + 1].text == ":" {
+            let j = skip_path(i + 2);
+            if let Some(k) = t.get(j).and_then(|x| hash_kind(&x.text)) {
+                if t.get(j + 1).is_some_and(|x| x.text == "<") {
+                    names.insert(t[i].text.clone(), k);
+                }
+            }
+        }
+        // `let [mut] name = [path] HashMap ::`
+        if t[i].text == "let" {
+            let mut j = i + 1;
+            if t.get(j).is_some_and(|x| x.text == "mut") {
+                j += 1;
+            }
+            if t.get(j).is_some_and(|x| x.kind == TokKind::Ident)
+                && t.get(j + 1).is_some_and(|x| x.text == "=")
+            {
+                let p = skip_path(j + 2);
+                if let Some(k) = t.get(p).and_then(|x| hash_kind(&x.text)) {
+                    if t.get(p + 1).is_some_and(|x| x.text == "::") {
+                        names.insert(t[j].text.clone(), k);
+                    }
+                }
+            }
+        }
+    }
+    names
+}
+
+/// Whether a finding at `line` feeds an ordered sink: a `sort*` call or an
+/// ordered collection (`BTreeMap`/`BTreeSet`/`BinaryHeap`) named within
+/// the next three lines. This is the "immediately sorted or collected
+/// into an ordered container" escape — deliberately narrow so that
+/// anything cleverer needs a written suppression.
+fn ordered_sink_nearby(lx: &Lexed, line: u32) -> bool {
+    lx.toks.iter().filter(|t| t.line >= line && t.line <= line + 3).any(|t| {
+        t.kind == TokKind::Ident
+            && (t.text.starts_with("sort")
+                || t.text == "BTreeMap"
+                || t.text == "BTreeSet"
+                || t.text == "BinaryHeap")
+    })
+}
+
+fn d001(lx: &Lexed, out: &mut Vec<RawFinding>) {
+    let names = hash_names(lx);
+    if names.is_empty() {
+        return;
+    }
+    let t = &lx.toks;
+    // Method-call form: `name . iter (` etc.
+    for i in 0..t.len() {
+        if t[i].kind != TokKind::Ident {
+            continue;
+        }
+        let Some(kind) = names.get(&t[i].text) else { continue };
+        let m = match (t.get(i + 1), t.get(i + 2), t.get(i + 3)) {
+            (Some(dot), Some(m), Some(paren))
+                if dot.text == "."
+                    && m.kind == TokKind::Ident
+                    && paren.text == "("
+                    && ITER_METHODS.contains(&m.text.as_str()) =>
+            {
+                m.text.clone()
+            }
+            _ => continue,
+        };
+        if ordered_sink_nearby(lx, t[i].line) {
+            continue;
+        }
+        out.push(RawFinding {
+            rule: "D001",
+            line: t[i].line,
+            message: format!("unordered {kind} iteration: `{}.{m}()`", t[i].text),
+        });
+    }
+    // For-loop form: `for PAT in [&][mut] name {` (no method call).
+    let mut i = 0usize;
+    while i < t.len() {
+        if t[i].text != "for" || t[i].kind != TokKind::Ident {
+            i += 1;
+            continue;
+        }
+        // Find `in` at pattern depth 0.
+        let mut depth = 0i32;
+        let mut j = i + 1;
+        let mut found_in = None;
+        while j < t.len() && j < i + 40 {
+            match t[j].text.as_str() {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                "in" if depth == 0 && t[j].kind == TokKind::Ident => {
+                    found_in = Some(j);
+                    break;
+                }
+                "{" | ";" => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let Some(in_idx) = found_in else {
+            i += 1;
+            continue;
+        };
+        // Expression tokens up to the body `{`.
+        let mut k = in_idx + 1;
+        let mut expr: Vec<&Tok> = Vec::new();
+        let mut simple = true;
+        while k < t.len() && t[k].text != "{" {
+            if !(t[k].kind == TokKind::Ident || t[k].text == "&" || t[k].text == ".") {
+                simple = false;
+            }
+            expr.push(&t[k]);
+            k += 1;
+        }
+        if simple {
+            if let Some(last) = expr.last() {
+                if let Some(kind) = names.get(&last.text) {
+                    if !ordered_sink_nearby(lx, last.line) {
+                        out.push(RawFinding {
+                            rule: "D001",
+                            line: last.line,
+                            message: format!(
+                                "unordered {kind} iteration: `for .. in {}`",
+                                last.text
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        i = k.max(i + 1);
+    }
+}
+
+// ---- D002: wall-clock / entropy -------------------------------------------
+
+fn d002(lx: &Lexed, out: &mut Vec<RawFinding>) {
+    let t = &lx.toks;
+    for i in 0..t.len() {
+        if t[i].kind != TokKind::Ident {
+            continue;
+        }
+        let hit = match t[i].text.as_str() {
+            "Instant" | "SystemTime" => {
+                t.get(i + 1).is_some_and(|x| x.text == "::")
+                    && t.get(i + 2).is_some_and(|x| x.text == "now")
+            }
+            "thread_rng" | "RandomState" => true,
+            _ => false,
+        };
+        if hit {
+            out.push(RawFinding {
+                rule: "D002",
+                line: t[i].line,
+                message: format!("wall-clock/entropy source `{}` in sim code", t[i].text),
+            });
+        }
+    }
+}
+
+// ---- D003: f64 equality on second-valued quantities ------------------------
+
+/// Whether an identifier names a second-valued `f64` by this repo's
+/// conventions (`*_s`, `*_secs`, `*_seconds`, or an `as_secs()` call).
+fn secondish(name: &str) -> bool {
+    name.ends_with("_s") || name.ends_with("_secs") || name.ends_with("_seconds")
+}
+
+fn d003(lx: &Lexed, out: &mut Vec<RawFinding>) {
+    let t = &lx.toks;
+    for i in 0..t.len() {
+        if t[i].kind != TokKind::Punct || (t[i].text != "==" && t[i].text != "!=") {
+            continue;
+        }
+        // Left side: `…foo_s ==` or `…as_secs() ==`.
+        let left = match t.get(i.wrapping_sub(1)) {
+            Some(p) if p.kind == TokKind::Ident && secondish(&p.text) => true,
+            Some(p)
+                if p.text == ")"
+                    && i >= 3
+                    && t[i - 2].text == "("
+                    && t[i - 3].text == "as_secs" =>
+            {
+                true
+            }
+            _ => false,
+        };
+        // Right side: first ident within a short window, or as_secs().
+        let right = t
+            .iter()
+            .skip(i + 1)
+            .take(5)
+            .any(|x| x.kind == TokKind::Ident && (secondish(&x.text) || x.text == "as_secs"));
+        if left || right {
+            out.push(RawFinding {
+                rule: "D003",
+                line: t[i].line,
+                message: format!(
+                    "exact f64 `{}` on a second-valued quantity (use the epsilon helpers)",
+                    t[i].text
+                ),
+            });
+        }
+    }
+}
+
+// ---- P001: unwrap/expect in the hot loop -----------------------------------
+
+fn p001(lx: &Lexed, out: &mut Vec<RawFinding>) {
+    let t = &lx.toks;
+    for i in 0..t.len() {
+        if t[i].text != "."
+            || !t.get(i + 1).is_some_and(|x| {
+                x.kind == TokKind::Ident && (x.text == "unwrap" || x.text == "expect")
+            })
+            || !t.get(i + 2).is_some_and(|x| x.text == "(")
+        {
+            continue;
+        }
+        out.push(RawFinding {
+            rule: "P001",
+            line: t[i + 1].line,
+            message: format!("`.{}()` in the scheduling hot loop", t[i + 1].text),
+        });
+    }
+}
+
+// ---- O001: unguarded tracer emission ---------------------------------------
+
+/// Token-index ranges in which tracer emission is legitimately guarded.
+fn guard_ranges(lx: &Lexed) -> Vec<(usize, usize)> {
+    let t = &lx.toks;
+    let mut out = Vec::new();
+    let mentions_tracer = |a: usize, b: usize| {
+        t[a..b.min(t.len())].iter().any(|x| {
+            x.kind == TokKind::Ident && (x.text == "tracer" || x.text == "recorder")
+        })
+    };
+    for i in 0..t.len() {
+        // `if let Some ( .. ) = <expr mentioning tracer/recorder> {`
+        if t[i].text == "if"
+            && t.get(i + 1).is_some_and(|x| x.text == "let")
+            && t.get(i + 2).is_some_and(|x| x.text == "Some")
+        {
+            let mut j = i + 3;
+            while j < t.len() && t[j].text != "=" && t[j].text != "{" {
+                j += 1;
+            }
+            if t.get(j).is_some_and(|x| x.text == "=") {
+                let rhs_start = j + 1;
+                let mut k = rhs_start;
+                while k < t.len() && t[k].text != "{" {
+                    k += 1;
+                }
+                if k < t.len() && mentions_tracer(rhs_start, k) {
+                    out.push((k, match_brace(t, k)));
+                }
+            }
+        }
+        // `tracer/recorder … map (` — closure-style guard.
+        if t[i].kind == TokKind::Ident && (t[i].text == "tracer" || t[i].text == "recorder") {
+            for j in i + 1..(i + 8).min(t.len()) {
+                if t[j].kind == TokKind::Ident
+                    && t[j].text == "map"
+                    && t.get(j + 1).is_some_and(|x| x.text == "(")
+                {
+                    out.push((j + 1, match_paren(t, j + 1)));
+                    break;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Index of the `)` matching the `(` at `open` (or the last token).
+fn match_paren(t: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    for (j, tok) in t.iter().enumerate().skip(open) {
+        match tok.text.as_str() {
+            "(" => depth += 1,
+            ")" => {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+    }
+    t.len() - 1
+}
+
+fn o001(lx: &Lexed, out: &mut Vec<RawFinding>) {
+    let t = &lx.toks;
+    let guards = guard_ranges(lx);
+    for i in 0..t.len() {
+        if t[i].text != "."
+            || !t.get(i + 1).is_some_and(|x| x.kind == TokKind::Ident && x.text == "emit")
+            || !t.get(i + 2).is_some_and(|x| x.text == "(")
+        {
+            continue;
+        }
+        if guards.iter().any(|&(a, b)| i > a && i < b) {
+            continue;
+        }
+        out.push(RawFinding {
+            rule: "O001",
+            line: t[i + 1].line,
+            message: "tracer emission outside an `if let Some(..)` guard".to_string(),
+        });
+    }
+}

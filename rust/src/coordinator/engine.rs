@@ -46,7 +46,7 @@ use crate::pipeline::execution::ExecPipeline;
 use crate::pipeline::mode_switch::plan_switch_pipeline;
 use crate::sim::event::{EventQueue, TimerId};
 use crate::sim::fabric::{Fabric, FabricEvent, FabricOp, FabricUpdate, FlowClass, OpId};
-use crate::sim::time::SimTime;
+use crate::sim::time::{approx_eq, SimTime, SECS_EPS};
 use crate::sim::transfer::Tier;
 use crate::trace::{Category, SessionTrace, TraceEvent, Tracer};
 use std::collections::{BTreeMap, HashMap, HashSet};
@@ -303,7 +303,7 @@ struct ModelRuntime {
     /// (per-tenant, so two tenants serving the same spec keep distinct
     /// copies, exactly like the pre-manager per-model warm sets).
     mem_key: String,
-    instances: HashMap<u64, Inst>,
+    instances: BTreeMap<u64, Inst>,
     next_inst_id: u64,
     /// Global queue when no instance exists yet.
     unrouted: std::collections::VecDeque<usize>,
@@ -386,7 +386,7 @@ impl ModelRuntime {
             ms,
             backend_name,
             mem_key,
-            instances: HashMap::new(),
+            instances: BTreeMap::new(),
             next_inst_id: 0,
             unrouted: std::collections::VecDeque::new(),
             reqs: vec![ReqState::default(); n_reqs],
@@ -1739,7 +1739,7 @@ impl ServingEngine {
                             if n_full > a.shared_discount {
                                 let out = tbl.publish(a.shared_group, a.shared_discount, n_full);
                                 let moved = (out.published + out.deduped) as usize;
-                                debug_assert!(a.kv_blocks >= moved);
+                                crate::invariant!(a.kv_blocks >= moved);
                                 a.kv_blocks -= moved;
                                 a.shared_chunks += out.published + out.deduped;
                                 a.shared_discount = n_full;
@@ -1998,11 +1998,13 @@ impl ServingEngine {
         );
         self.kv_ops.insert(op, m);
         if let Some(tr) = self.tracer.as_mut() {
+            // simlint: allow(D001) — plan.needs is a Vec aliasing the KvOp HashSet field name
             let dests = plan.needs.iter().map(|&(n, _)| n).collect::<HashSet<_>>().len();
             tr.emit(now, TraceEvent::OpBegin { model: m, op, class: "kv", dests });
         }
         self.models[m].disagg.as_mut().unwrap().streams.insert(
             op,
+            // simlint: allow(D001) — plan.needs is a Vec aliasing the KvOp HashSet field name
             KvStream { idx, decode_inst: target, needs: plan.needs.iter().copied().collect() },
         );
         self.handle_fabric_update(now, upd);
@@ -2330,7 +2332,7 @@ impl ServingEngine {
     /// `max_batch` concurrent decodes).
     fn demand(&mut self, now: SimTime, m: usize) -> (usize, usize) {
         let loading = self.loading_nodes[m];
-        debug_assert_eq!(
+        crate::invariant_eq!(
             loading,
             self.node_state.iter().filter(|s| **s == NodeUse::Loading(m)).count(),
             "incremental loading-node counter diverged"
@@ -2340,7 +2342,7 @@ impl ServingEngine {
         }
         let md = &mut self.models[m];
         let queued = md.queued;
-        debug_assert_eq!(
+        crate::invariant_eq!(
             queued,
             md.unrouted.len() + md.instances.values().map(|i| i.queue.len()).sum::<usize>(),
             "incremental queued counter diverged"
@@ -2610,6 +2612,7 @@ impl ServingEngine {
         // back (mirrors the static path).
         let mut referenced: HashSet<NodeId> = HashSet::new();
         referenced.extend(sched.immediate.iter().copied());
+        // simlint: allow(D001) — sched.local_on_complete is a Vec, not the LiveOp set
         referenced.extend(sched.local_on_complete.iter().copied());
         referenced.extend(sched.dest_locals.iter().copied());
         referenced.extend(sched.recruits.iter().copied());
@@ -2678,6 +2681,7 @@ impl ServingEngine {
                 model: m,
                 switch_stall_s: sched.switch_stall_s,
                 dest_locals: sched.dest_locals,
+                // simlint: allow(D001) — sched.local_on_complete is a Vec (LiveSchedule)
                 local_on_complete: sched.local_on_complete.into_iter().collect(),
                 pipelines,
                 spawned_pipes: Vec::new(),
@@ -2727,13 +2731,13 @@ impl ServingEngine {
                     continue;
                 }
                 covered[m] = true;
-                if (gbps - self.fab_util_last[m]).abs() > 1e-9 {
+                if !approx_eq(gbps, self.fab_util_last[m], SECS_EPS) {
                     self.fab_util_last[m] = gbps;
                     self.models[m].ms.metrics.record_fabric_util(now, gbps);
                 }
             }
             for m in 0..self.fab_util_last.len() {
-                if !covered[m] && self.fab_util_last[m].abs() > 1e-9 {
+                if !covered[m] && !approx_eq(self.fab_util_last[m], 0.0, SECS_EPS) {
                     self.fab_util_last[m] = 0.0;
                     self.models[m].ms.metrics.record_fabric_util(now, 0.0);
                 }

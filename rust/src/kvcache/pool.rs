@@ -63,7 +63,7 @@ impl KvPool {
 
     /// Return `n` blocks to the pool.
     pub fn release(&mut self, n: usize) {
-        debug_assert!(n <= self.used, "released {n} blocks with only {} in use", self.used);
+        crate::invariant!(n <= self.used, "released {n} blocks with only {} in use", self.used);
         self.used = self.used.saturating_sub(n);
     }
 

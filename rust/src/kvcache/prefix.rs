@@ -199,7 +199,7 @@ impl PrefixTable {
     fn rollback(&mut self, group: u64, bumped: u32) {
         for idx in 0..bumped {
             if let Some(c) = self.chunks.get_mut(&chunk_hash(group, idx)) {
-                debug_assert!(c.refs > 0, "rollback past zero refcount");
+                crate::invariant!(c.refs > 0, "rollback past zero refcount");
                 c.refs = c.refs.saturating_sub(1);
             }
         }

@@ -45,6 +45,8 @@
 //! * [`figures`] — one generator per paper figure (benches + CLI call these).
 //! * [`eval`] — the `lambda-scale eval` SLO/cost scoreboard (backends ×
 //!   scaling policies × traces).
+//! * [`analysis`] — simlint, the in-tree static-analysis pass that
+//!   enforces the determinism contract (`lambda-scale lint`).
 
 // Enforced rustdoc: every public item must be documented. CI runs
 // `cargo doc --no-deps` with `RUSTDOCFLAGS="-D warnings"`; layers that
@@ -52,6 +54,7 @@
 // their sweep lands.
 #![warn(missing_docs)]
 
+pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod disagg;

@@ -26,13 +26,20 @@
 //! lambda-scale trace report FILE           per-request phase breakdown of a JSONL log
 //! lambda-scale trace --check FILE          validate a JSONL log's schema
 //! lambda-scale trace-gen --out FILE        emit a BurstGPT-like CSV trace
+//! lambda-scale lint [--check] [--json] [--root DIR] [--baseline FILE]
+//!                   [--update-baseline] [--validate FILE]
+//!                                          simlint: determinism-contract static
+//!                                          analysis over rust/src (docs/ANALYSIS.md);
+//!                                          --check exits nonzero on unsuppressed
+//!                                          findings, --validate checks a --json file
 //! lambda-scale serve [--artifacts DIR]     serve a demo generation on real PJRT
 //! lambda-scale info                        print testbed presets + model zoo
 //! ```
 //!
 //! Global flags: `--verbose`/`-v` (debug-level stderr log), `-q`/`--quiet`
-//! (warnings and errors only). Progress goes to stderr through
-//! `util::logging`; stdout stays machine-clean.
+//! (warnings and errors only), `--paranoid` (evaluate conservation
+//! invariants even in release builds — see `util::invariants`). Progress
+//! goes to stderr through `util::logging`; stdout stays machine-clean.
 //!
 //! (No clap offline — a small hand-rolled parser below.)
 
@@ -55,6 +62,9 @@ fn main() {
         logging::set_level(Level::Debug);
     } else if args.iter().any(|a| a == "-q" || a == "--quiet") {
         logging::set_level(Level::Warn);
+    }
+    if args.iter().any(|a| a == "--paranoid") {
+        lambda_scale::util::invariants::set_paranoid(true);
     }
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     let flag = |name: &str| -> Option<String> {
@@ -343,6 +353,77 @@ fn main() {
             trace.save(&out).expect("writing trace");
             println!("wrote {} requests ({duration}s) to {out}", trace.len());
         }
+        "lint" => {
+            use lambda_scale::analysis::{self, Baseline};
+            // `lint --validate FILE` checks an existing --json document
+            // against the schema (the BENCH_scale.json guard pattern).
+            if let Some(path) = flag("--validate") {
+                let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+                    log_error!("reading {path}: {e}");
+                    std::process::exit(1);
+                });
+                match analysis::check_lint_json(&text) {
+                    Ok(()) => println!("{path}: schema OK"),
+                    Err(e) => {
+                        log_error!("{path}: {e}");
+                        std::process::exit(1);
+                    }
+                }
+                return;
+            }
+            let root = flag("--root").unwrap_or_else(|| "rust/src".into());
+            let bl_path = flag("--baseline").unwrap_or_else(|| "lint.baseline.json".into());
+            // A missing baseline file just means "no grandfathered
+            // findings"; an unparsable one is a hard error.
+            let baseline = match std::fs::read_to_string(&bl_path) {
+                Ok(text) => match Baseline::parse(&text) {
+                    Ok(b) => Some(b),
+                    Err(e) => {
+                        log_error!("{bl_path}: {e}");
+                        std::process::exit(2);
+                    }
+                },
+                Err(_) => None,
+            };
+            let update = args.iter().any(|a| a == "--update-baseline");
+            // When refreshing, lint without the baseline so the new
+            // counts reflect what is actually in the tree.
+            let applied = if update { None } else { baseline.as_ref() };
+            let rep = match analysis::run(std::path::Path::new(&root), applied) {
+                Ok(r) => r,
+                Err(e) => {
+                    log_error!("lint: {root}: {e}");
+                    std::process::exit(1);
+                }
+            };
+            if update {
+                let b = baseline.unwrap_or_default().refreshed(&rep);
+                if let Err(e) = std::fs::write(&bl_path, format!("{}\n", b.to_json())) {
+                    log_error!("writing {bl_path}: {e}");
+                    std::process::exit(1);
+                }
+                println!("wrote {bl_path} ({} entries)", b.entries.len());
+                return;
+            }
+            let check = args.iter().any(|a| a == "--check");
+            let text = rep.to_json().to_string();
+            if check {
+                // CI mode always round-trips its own JSON through the
+                // schema guard, so the documented schema cannot drift.
+                if let Err(e) = analysis::check_lint_json(&text) {
+                    log_error!("lint --json self-check failed: {e}");
+                    std::process::exit(1);
+                }
+            }
+            if args.iter().any(|a| a == "--json") {
+                println!("{text}");
+            } else {
+                print!("{}", rep.render());
+            }
+            if check && rep.unsuppressed() > 0 {
+                std::process::exit(1);
+            }
+        }
         "serve" => {
             let dir = flag("--artifacts").unwrap_or_else(|| "artifacts".into());
             let prompt = flag("--prompt").unwrap_or_else(|| "hello world".into());
@@ -378,8 +459,9 @@ fn main() {
         _ => {
             eprintln!(
                 "λScale — fast model scaling for serverless LLM inference\n\n\
-                 usage: lambda-scale <figures|session|eval|bench|trace|trace-gen|serve|info> [flags]\n\
-                 global flags: --verbose/-v (debug log), -q/--quiet (warnings only)\n\
+                 usage: lambda-scale <figures|session|eval|bench|trace|trace-gen|lint|serve|info> [flags]\n\
+                 global flags: --verbose/-v (debug log), -q/--quiet (warnings only),\n\
+                 \x20 --paranoid (check conservation invariants in release builds)\n\
                  \x20 figures   [--only figNN]              regenerate paper figures\n\
                  \x20 session   [--requests N] [--gpu-cap GB] [--host-cap GB]\n\
                  \x20           [--kv-block-tokens B] [--kv-prefix-sharing]\n\
@@ -400,6 +482,10 @@ fn main() {
                  \x20 trace report FILE                     phase breakdown of a JSONL log\n\
                  \x20 trace --check FILE                    validate a JSONL log's schema\n\
                  \x20 trace-gen [--out F] [--duration S]    emit a BurstGPT-like CSV trace\n\
+                 \x20 lint      [--check] [--json] [--root DIR] [--baseline F]\n\
+                 \x20           [--update-baseline] [--validate F]\n\
+                 \x20                                       determinism-contract static analysis\n\
+                 \x20                                       (rule catalog: docs/ANALYSIS.md)\n\
                  \x20 serve     [--artifacts D] [--prompt P] [--tokens N]\n\
                  \x20 info                                  testbed presets + model zoo\n\n\
                  examples: quickstart, multicast_demo, spike_serving, trace_replay,\n\

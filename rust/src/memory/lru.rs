@@ -3,7 +3,7 @@
 //! the serving simulation.
 
 use crate::sim::time::SimTime;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 #[derive(Clone, Debug)]
 struct Entry {
@@ -27,12 +27,12 @@ pub enum InsertError {
 pub struct LruCache<K: std::hash::Hash + Eq + Clone + Ord> {
     capacity: u64,
     used: u64,
-    entries: HashMap<K, Entry>,
+    entries: BTreeMap<K, Entry>,
 }
 
 impl<K: std::hash::Hash + Eq + Clone + Ord> LruCache<K> {
     pub fn new(capacity: u64) -> Self {
-        LruCache { capacity, used: 0, entries: HashMap::new() }
+        LruCache { capacity, used: 0, entries: BTreeMap::new() }
     }
 
     pub fn contains(&self, k: &K) -> bool {

@@ -139,7 +139,7 @@ impl MemoryManager {
             self.gpu_ready[node].remove(&e);
             demotions.extend(self.demote_to_host(node, e, now));
         }
-        debug_assert!(self.invariants_ok());
+        crate::invariant!(self.invariants_ok());
         Ok(demotions)
     }
 
@@ -170,7 +170,7 @@ impl MemoryManager {
         self.nodes[node].unpin_gpu(model);
         self.nodes[node].evict_gpu(model);
         let demotions = self.demote_to_host(node, model.to_string(), now);
-        debug_assert!(self.invariants_ok());
+        crate::invariant!(self.invariants_ok());
         demotions
     }
 
@@ -218,7 +218,7 @@ impl MemoryManager {
             self.gpu_ready[node].remove(&e);
             demotions.extend(self.demote_to_host(node, e, now));
         }
-        debug_assert!(self.invariants_ok());
+        crate::invariant!(self.invariants_ok());
         Ok(demotions)
     }
 
@@ -243,7 +243,7 @@ impl MemoryManager {
                     self.gpu_ready[node].remove(&e);
                     demotions.extend(self.demote_to_host(node, e, now));
                 }
-                debug_assert!(self.invariants_ok());
+                crate::invariant!(self.invariants_ok());
                 Ok(demotions)
             }
             Err(e) => {
@@ -253,7 +253,7 @@ impl MemoryManager {
                     .try_load_gpu(key, old, now)
                     .expect("restoring prior KV arena size");
                 self.nodes[node].pin_gpu(key);
-                debug_assert!(self.invariants_ok());
+                crate::invariant!(self.invariants_ok());
                 Err(e)
             }
         }
@@ -266,7 +266,7 @@ impl MemoryManager {
         self.gpu_ready[node].remove(key);
         self.nodes[node].unpin_gpu(key);
         self.nodes[node].evict_gpu(key);
-        debug_assert!(self.invariants_ok());
+        crate::invariant!(self.invariants_ok());
     }
 
     /// Admit a warm host-memory copy (initial host sources, prefetch).
@@ -281,7 +281,7 @@ impl MemoryManager {
         let bytes = self.bytes_of(model);
         let evicted = self.nodes[node].try_load_host(model, bytes, now)?;
         let out = evicted.into_iter().map(|e| self.landing_tier(node, e)).collect();
-        debug_assert!(self.invariants_ok());
+        crate::invariant!(self.invariants_ok());
         Ok(out)
     }
 

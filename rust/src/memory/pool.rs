@@ -86,8 +86,8 @@ impl BlockPool {
     /// Return a slab to the pool. Fallback allocations are simply dropped.
     pub fn release(&mut self, slab: Slab) {
         if slab.from_pool {
-            debug_assert!(slab.id < self.total);
-            debug_assert!(!self.free.contains(&slab.id), "double release of slab {}", slab.id);
+            crate::invariant!(slab.id < self.total);
+            crate::invariant!(!self.free.contains(&slab.id), "double release of slab {}", slab.id);
             self.free.push(slab.id);
         }
     }

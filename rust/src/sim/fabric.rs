@@ -96,8 +96,8 @@ struct OpState {
     opts: TransferOpts,
     queues: BTreeMap<NodeId, VecDeque<SendIntent>>,
     pending_loads: BTreeMap<NodeId, (Medium, f64)>,
-    tier: HashMap<(NodeId, BlockId), Tier>,
-    arrived: HashMap<NodeId, HashSet<BlockId>>,
+    tier: BTreeMap<(NodeId, BlockId), Tier>,
+    arrived: BTreeMap<NodeId, HashSet<BlockId>>,
     busy: HashMap<NodeId, [bool; N_PORTS]>,
     gate: SimTime,
     gate_open: bool,
@@ -284,8 +284,8 @@ impl Fabric {
             assert!(it.block < n_blocks, "block id out of range: {it:?}");
             queues.entry(it.src).or_default().push_back(it);
         }
-        let mut tier: HashMap<(NodeId, BlockId), Tier> = HashMap::new();
-        let mut arrived: HashMap<NodeId, HashSet<BlockId>> = HashMap::new();
+        let mut tier: BTreeMap<(NodeId, BlockId), Tier> = BTreeMap::new();
+        let mut arrived: BTreeMap<NodeId, HashSet<BlockId>> = BTreeMap::new();
         for (n, b, t) in spec.initial {
             tier.insert((n, b), t);
             if t == Tier::Gpu {
@@ -539,6 +539,7 @@ impl Fabric {
                             continue;
                         }
                         start_at.push(qi);
+                        // simlint: allow(D001) — `seen` is [bool; 3]; all() is order-free
                         if seen.iter().all(|&s| s) {
                             break;
                         }
@@ -843,7 +844,53 @@ impl Fabric {
             }
         }
         self.realloc(now);
+        self.check_conservation();
         self.schedule_wakeup(now, upd);
+    }
+
+    /// Flow-accounting conservation: every live flow belongs to a live
+    /// operation, each operation's `in_flight` counter equals its live
+    /// flow count, no node holds more than `n_blocks` arrivals, and
+    /// contended flow-seconds never run backwards past what was already
+    /// reported. Evaluated under
+    /// [`paranoid`](crate::util::invariants::paranoid) — always in debug
+    /// builds, opt-in via `--paranoid` in release.
+    fn check_conservation(&self) {
+        if !crate::util::invariants::paranoid() {
+            return;
+        }
+        let mut per_op: BTreeMap<OpId, usize> = BTreeMap::new();
+        for fl in self.flows.values() {
+            assert!(self.ops.contains_key(&fl.op), "flow references drained op {}", fl.op);
+            assert!(
+                fl.remaining_s.is_finite() && fl.remaining_s >= 0.0,
+                "flow of op {} has invalid remaining work {}",
+                fl.op,
+                fl.remaining_s
+            );
+            *per_op.entry(fl.op).or_insert(0) += 1;
+        }
+        for (&id, op) in self.ops.iter() {
+            assert_eq!(
+                op.in_flight,
+                per_op.get(&id).copied().unwrap_or(0),
+                "op {id}: in_flight counter diverged from live flows"
+            );
+            for (n, held) in &op.arrived {
+                assert!(
+                    held.len() <= op.n_blocks,
+                    "op {id}: node {n} holds {} of {} blocks",
+                    held.len(),
+                    op.n_blocks
+                );
+            }
+            assert!(
+                op.contended_s >= op.contended_reported - 1e-9,
+                "op {id}: contended seconds ran backwards ({} reported, {} accrued)",
+                op.contended_reported,
+                op.contended_s
+            );
+        }
     }
 
     fn schedule_wakeup(&mut self, now: SimTime, upd: &mut FabricUpdate) {

@@ -46,6 +46,24 @@ impl SimTime {
     }
 }
 
+/// Comparison tolerance for second-valued `f64`s derived from [`SimTime`]:
+/// one nanosecond, the clock's own resolution.
+pub const SECS_EPS: f64 = 1e-9;
+
+/// Approximate equality with an explicit tolerance — the sanctioned way to
+/// compare derived `f64` quantities (seconds, rates, utilizations) for
+/// change detection. Direct `==`/`!=` on second-valued floats is a simlint
+/// D003 finding; route comparisons through this or [`secs_eq`] instead.
+pub fn approx_eq(a: f64, b: f64, eps: f64) -> bool {
+    (a - b).abs() <= eps
+}
+
+/// Approximate equality of two second-valued `f64`s at [`SECS_EPS`]
+/// (nanosecond) resolution.
+pub fn secs_eq(a: f64, b: f64) -> bool {
+    approx_eq(a, b, SECS_EPS)
+}
+
 impl Add for SimTime {
     type Output = SimTime;
     fn add(self, rhs: SimTime) -> SimTime {

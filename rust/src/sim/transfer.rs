@@ -24,7 +24,7 @@
 use super::event::EventQueue;
 use super::time::SimTime;
 use crate::config::NetworkConfig;
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 
 /// Simulation endpoint (a GPU; one per node on Testbed1).
 pub type NodeId = usize;
@@ -120,7 +120,7 @@ pub struct CompletedTransfer {
 #[derive(Clone, Debug, Default)]
 pub struct TransferLog {
     /// When each (node, block) became available in GPU memory.
-    pub arrivals: HashMap<(NodeId, BlockId), SimTime>,
+    pub arrivals: BTreeMap<(NodeId, BlockId), SimTime>,
     pub transfers: Vec<CompletedTransfer>,
     /// Completion time of the last transfer.
     pub finish: SimTime,

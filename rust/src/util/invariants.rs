@@ -1,0 +1,87 @@
+//! Runtime-checkable conservation invariants.
+//!
+//! The simulator's correctness rests on a handful of conservation laws —
+//! KV-pool block counts, prefix-table refcounts, fabric flow accounting,
+//! memory-manager byte accounting. Historically each was a scattered
+//! `debug_assert!`, which meant release-mode eval runs (the only runs big
+//! enough to hit rare interleavings) never checked them at all.
+//!
+//! This module centralizes the switch: [`invariant!`](crate::invariant) and
+//! [`invariant_eq!`](crate::invariant_eq) behave exactly like
+//! `debug_assert!` / `debug_assert_eq!` in debug builds, are compiled to a
+//! single relaxed atomic load in release builds, and can be enabled at
+//! runtime in release mode with the `--paranoid` CLI flag (or
+//! [`set_paranoid`]) so long eval runs can opt into full checking.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Release-mode opt-in: when set, [`paranoid`] returns `true` and every
+/// `invariant!` site checks its condition even in optimized builds.
+static PARANOID: AtomicBool = AtomicBool::new(false);
+
+/// Enable (or disable) release-mode invariant checking. Wired to the
+/// `--paranoid` global CLI flag; safe to call from tests.
+pub fn set_paranoid(on: bool) {
+    PARANOID.store(on, Ordering::Relaxed);
+}
+
+/// Whether invariant conditions are evaluated: always in debug builds,
+/// opt-in via [`set_paranoid`] in release builds.
+pub fn paranoid() -> bool {
+    cfg!(debug_assertions) || PARANOID.load(Ordering::Relaxed)
+}
+
+/// A conservation check: `assert!` that is always on in debug builds and
+/// opt-in (via `--paranoid` / [`set_paranoid`]) in release builds.
+///
+/// The condition is not evaluated unless checking is enabled, so the
+/// guarded expression may be arbitrarily expensive (full-table scans).
+#[macro_export]
+macro_rules! invariant {
+    ($($arg:tt)*) => {
+        if $crate::util::invariants::paranoid() {
+            assert!($($arg)*);
+        }
+    };
+}
+
+/// Equality form of [`invariant!`](crate::invariant): `assert_eq!` that is
+/// always on in debug builds and opt-in in release builds.
+#[macro_export]
+macro_rules! invariant_eq {
+    ($($arg:tt)*) => {
+        if $crate::util::invariants::paranoid() {
+            assert_eq!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paranoid_toggles_release_checking() {
+        // In test (debug) builds `paranoid()` is always true; the runtime
+        // toggle must at minimum round-trip its flag.
+        set_paranoid(true);
+        assert!(paranoid());
+        set_paranoid(false);
+        assert!(cfg!(debug_assertions) || !paranoid());
+    }
+
+    #[test]
+    fn invariant_passes_on_true_condition() {
+        let two = std::hint::black_box(2);
+        invariant!(two == 2, "arithmetic holds");
+        invariant_eq!(two, 2, "equality holds");
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "conservation broken")]
+    fn invariant_fires_in_debug() {
+        let broken = std::hint::black_box(false);
+        invariant!(broken, "conservation broken");
+    }
+}

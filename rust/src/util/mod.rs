@@ -8,6 +8,7 @@
 #![allow(missing_docs)]
 
 pub mod bench;
+pub mod invariants;
 pub mod json;
 pub mod logging;
 pub mod minicheck;

@@ -1,0 +1,110 @@
+//! The simlint analyzer's own test suite: fixture files with expected
+//! diagnostics, and the repo-clean gate.
+//!
+//! Fixtures live in `rust/tests/simlint_fixtures/` and are analyzed as
+//! text — they are never compiled, so they can contain deliberately bad
+//! code. A `//~ RULE` marker (optionally `//~ RULE suppressed`) on a line
+//! expects exactly that diagnostic there; `//~^` anchors the expectation
+//! one line up (for lines that already carry a suppression comment).
+//! Each fixture's filename picks its virtual path — `p001*` maps to the
+//! hot-loop file, `clean_noncritical*` to `util/`, everything else to
+//! `sim/` — because rule scoping is path-driven.
+//!
+//! The repo-clean test runs the real analyzer over `rust/src` with the
+//! checked-in `lint.baseline.json` and requires zero unsuppressed
+//! findings: the same gate CI enforces via `lambda-scale lint --check`.
+
+use lambda_scale::analysis::{analyze_source, check_lint_json, run, Baseline};
+use std::fs;
+use std::path::Path;
+
+/// Map a fixture filename to the virtual source path it is analyzed
+/// under (rule scoping is path-driven).
+fn virtual_path(name: &str) -> String {
+    if name.starts_with("p001") {
+        "rust/src/coordinator/engine.rs".to_string()
+    } else if name.starts_with("clean_noncritical") {
+        format!("rust/src/util/{name}")
+    } else {
+        format!("rust/src/sim/{name}")
+    }
+}
+
+/// Parse `//~ RULE [suppressed]` / `//~^ RULE [suppressed]` expectation
+/// markers out of a fixture. Returns sorted `(line, rule, suppressed)`.
+fn expectations(src: &str) -> Vec<(u32, String, bool)> {
+    let mut out = Vec::new();
+    for (i, line) in src.lines().enumerate() {
+        let Some(pos) = line.find("//~") else { continue };
+        let rest = &line[pos + 3..];
+        let ups = rest.chars().take_while(|&c| c == '^').count();
+        let mut parts = rest[ups..].split_whitespace();
+        let rule = parts.next().expect("rule code after the tilde marker").to_string();
+        let suppressed = parts.next() == Some("suppressed");
+        out.push(((i + 1 - ups) as u32, rule, suppressed));
+    }
+    out.sort();
+    out
+}
+
+#[test]
+fn fixtures_match_expected_diagnostics() {
+    let dir = Path::new("rust/tests/simlint_fixtures");
+    let mut paths: Vec<_> =
+        fs::read_dir(dir).expect("fixture dir").map(|e| e.expect("entry").path()).collect();
+    paths.sort();
+    let mut checked = 0usize;
+    for p in paths {
+        if p.extension().map_or(true, |e| e != "rs") {
+            continue;
+        }
+        let name = p.file_name().expect("file name").to_string_lossy().to_string();
+        let src = fs::read_to_string(&p).expect("fixture readable");
+        let mut got: Vec<(u32, String, bool)> = analyze_source(&virtual_path(&name), &src)
+            .into_iter()
+            .map(|f| (f.line, f.rule.to_string(), f.suppressed))
+            .collect();
+        got.sort();
+        assert_eq!(got, expectations(&src), "diagnostics mismatch in fixture {name}");
+        checked += 1;
+    }
+    assert!(checked >= 7, "expected the full fixture set, found {checked}");
+}
+
+#[test]
+fn every_rule_has_a_firing_fixture() {
+    // Guards against a rule silently matching nothing: each non-meta rule
+    // must be exercised by at least one fixture expectation.
+    let dir = Path::new("rust/tests/simlint_fixtures");
+    let mut seen: Vec<String> = Vec::new();
+    for e in fs::read_dir(dir).expect("fixture dir") {
+        let p = e.expect("entry").path();
+        if p.extension().map_or(true, |e| e != "rs") {
+            continue;
+        }
+        let src = fs::read_to_string(&p).expect("fixture readable");
+        seen.extend(expectations(&src).into_iter().map(|(_, r, _)| r));
+    }
+    for rule in ["D001", "D002", "D003", "P001", "O001", "S001", "S002"] {
+        assert!(seen.iter().any(|r| r == rule), "no fixture exercises {rule}");
+    }
+}
+
+#[test]
+fn repo_is_lint_clean_under_the_checked_in_baseline() {
+    let baseline = Baseline::parse(
+        &fs::read_to_string("lint.baseline.json").expect("checked-in baseline"),
+    )
+    .expect("baseline parses");
+    let rep = run(Path::new("rust/src"), Some(&baseline)).expect("lint run");
+    let live: Vec<String> = rep
+        .findings
+        .iter()
+        .filter(|f| f.is_live())
+        .map(|f| format!("{}: {}:{}: {}", f.rule, f.file, f.line, f.message))
+        .collect();
+    assert!(live.is_empty(), "unsuppressed findings:\n{}", live.join("\n"));
+    // The CI gate also validates its own JSON against the documented
+    // schema; keep that round-trip covered here.
+    check_lint_json(&rep.to_json().to_string()).expect("schema round-trip");
+}

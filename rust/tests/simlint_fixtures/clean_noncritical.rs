@@ -1,0 +1,19 @@
+//! Negative fixture: the same patterns that fire in sim/coordinator code
+//! are fine in non-critical modules (virtual path rust/src/util/…).
+//! Analyzed as text by rust/tests/simlint.rs; never compiled.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+fn bench_harness(samples: &HashMap<String, f64>) -> f64 {
+    let t0 = Instant::now();
+    let mut total = 0.0;
+    for v in samples.values() {
+        total += v;
+    }
+    total + t0.elapsed().as_secs_f64()
+}
+
+fn loose(opt: Option<u32>) -> u32 {
+    opt.unwrap()
+}

@@ -1,0 +1,68 @@
+//! D001 fixture: unordered HashMap/HashSet iteration in a critical module.
+//! Analyzed as text by rust/tests/simlint.rs (virtual path rust/src/sim/…);
+//! never compiled. Tilde markers flag the expected diagnostics.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+struct State {
+    map: HashMap<u64, u32>,
+    set: HashSet<u32>,
+}
+
+impl State {
+    fn loop_over_map(&self) -> u64 {
+        let mut total = 0;
+        for (k, v) in &self.map { //~ D001
+            total += k + u64::from(*v);
+        }
+        total
+    }
+
+    fn key_sum(&self) -> u64 {
+        self.map.keys().sum() //~ D001
+    }
+
+    fn drain_unordered(&mut self) -> Vec<u32> {
+        let out: Vec<u32> = self.set.drain().collect(); //~ D001
+        out
+    }
+
+    fn retain_positive(&mut self) {
+        self.map.retain(|_, v| *v > 0); //~ D001
+    }
+
+    // Waived: the iteration feeds a sort on the next line.
+    fn sorted_keys(&self) -> Vec<u64> {
+        let mut ks: Vec<u64> = self.map.keys().copied().collect();
+        ks.sort_unstable();
+        ks
+    }
+
+    // Waived: collected straight into an ordered container.
+    fn as_ordered(&self) -> BTreeMap<u64, u32> {
+        self.map.iter().map(|(&k, &v)| (k, v)).collect::<BTreeMap<_, _>>()
+    }
+
+    // Clean: ordered container iteration never fires.
+    fn ordered(&self) -> u64 {
+        let m: BTreeMap<u64, u32> = BTreeMap::new();
+        m.values().map(|&v| u64::from(v)).sum()
+    }
+
+    // Clean: keyed access is not iteration.
+    fn lookup(&self, k: u64) -> Option<u32> {
+        self.map.get(&k).copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn test_code_may_iterate_hashes() {
+        let s = State { map: HashMap::new(), set: HashSet::new() };
+        for (_k, _v) in &s.map {}
+        let _: Vec<u32> = s.set.iter().copied().collect();
+    }
+}

@@ -1,0 +1,33 @@
+//! D002 fixture: wall-clock and entropy sources in a critical module.
+//! Analyzed as text by rust/tests/simlint.rs (virtual path rust/src/sim/…);
+//! never compiled.
+
+use std::time::{Instant, SystemTime};
+
+fn wall_clock_reads() {
+    let started = Instant::now(); //~ D002
+    let epoch = SystemTime::now(); //~ D002
+    drop((started, epoch));
+}
+
+fn entropy_sources() {
+    let rng = thread_rng(); //~ D002
+    let hasher = RandomState::new(); //~ D002
+    drop((rng, hasher));
+}
+
+// Clean: naming the types without the entropy/clock entry points is fine.
+fn duration_math(a: std::time::Duration, b: std::time::Duration) -> std::time::Duration {
+    a + b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tests_may_time_themselves() {
+        let t0 = Instant::now();
+        assert!(t0.elapsed().as_nanos() < u128::MAX);
+    }
+}

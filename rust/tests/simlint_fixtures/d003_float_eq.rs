@@ -1,0 +1,32 @@
+//! D003 fixture: exact f64 equality on second-valued sim quantities.
+//! Analyzed as text by rust/tests/simlint.rs (virtual path rust/src/sim/…);
+//! never compiled.
+
+struct Window {
+    start_s: f64,
+    limit_s: f64,
+}
+
+impl Window {
+    fn exact_equality(&self, other: &Window) -> bool {
+        self.start_s == other.start_s //~ D003
+    }
+
+    fn exact_inequality(&self, deadline_s: f64) -> bool {
+        deadline_s != self.limit_s //~ D003
+    }
+
+    fn on_as_secs(&self, t: SimTime, cut: f64) -> bool {
+        t.as_secs() == cut //~ D003
+    }
+
+    // Clean: the epsilon helpers are the sanctioned comparison.
+    fn with_epsilon(&self, other: &Window) -> bool {
+        approx_eq(self.start_s, other.start_s, 1e-9)
+    }
+
+    // Clean: integer and non-second floats compare exactly.
+    fn counts(&self, n_blocks: usize, total: usize) -> bool {
+        n_blocks == total
+    }
+}

@@ -1,0 +1,27 @@
+//! O001 fixture: tracer emission outside an `if let Some(..)` guard.
+//! Analyzed as text by rust/tests/simlint.rs (virtual path rust/src/sim/…);
+//! never compiled.
+
+struct Engine {
+    tracer: Option<Tracer>,
+}
+
+impl Engine {
+    // Clean: the canonical guard — emission costs nothing when disabled.
+    fn guarded(&mut self, now: u64) {
+        if let Some(tr) = self.tracer.as_mut() {
+            tr.emit(now);
+        }
+    }
+
+    // Clean: closure-style guard on the Option.
+    fn map_guarded(&mut self, now: u64) {
+        self.tracer.as_mut().map(|t| t.emit(now));
+    }
+
+    // Flagged: the Option was unwrapped somewhere upstream; the
+    // zero-cost-when-off contract is no longer visible at the call site.
+    fn unguarded(tr: &mut Tracer, now: u64) {
+        tr.emit(now); //~ O001
+    }
+}

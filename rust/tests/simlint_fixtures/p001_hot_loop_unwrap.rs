@@ -1,0 +1,27 @@
+//! P001 fixture: unwrap()/expect() in the scheduling hot loop. Analyzed
+//! as text by rust/tests/simlint.rs with the virtual path
+//! rust/src/coordinator/engine.rs (the rule only fires in the hot-loop
+//! files); never compiled.
+
+use std::collections::BTreeMap;
+
+fn first_value(m: &BTreeMap<u64, u32>) -> u32 {
+    *m.get(&0).unwrap() //~ P001
+}
+
+fn required(slot: Option<u32>) -> u32 {
+    slot.expect("slot was reserved") //~ P001
+}
+
+// Clean: structured handling instead of panicking.
+fn checked(m: &BTreeMap<u64, u32>) -> Option<u32> {
+    m.get(&1).copied()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap() {
+        assert_eq!(Some(1).unwrap(), 1);
+    }
+}

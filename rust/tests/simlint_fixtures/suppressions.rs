@@ -1,0 +1,34 @@
+//! Suppression fixture: valid same-line and next-line suppressions,
+//! stale suppressions (S001), and malformed ones (S002). Analyzed as
+//! text by rust/tests/simlint.rs (virtual path rust/src/sim/…); never
+//! compiled.
+
+use std::collections::HashMap;
+
+struct S {
+    m: HashMap<u32, u32>,
+}
+
+impl S {
+    fn same_line(&self) -> u32 {
+        self.m.values().copied().max().unwrap_or(0) // simlint: allow(D001) — max() is order-free
+        //~^ D001 suppressed
+    }
+
+    fn next_line(&self) -> usize {
+        // simlint: allow(D001) — count() is order-free
+        self.m.keys().count() //~ D001 suppressed
+    }
+}
+
+// simlint: allow(D002) — nothing below touches a clock
+//~^ S001
+fn stale() {}
+
+// simlint: allow(D001)
+//~^ S002
+fn missing_reason() {}
+
+// simlint: allow(D999) — no such rule code
+//~^ S002
+fn unknown_rule() {}
